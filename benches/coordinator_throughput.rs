@@ -1,0 +1,126 @@
+//! Coordinator throughput: serving engine end-to-end + host-side pieces.
+//!
+//! (a) serving tokens/s for dense vs DTRNet at several batch fills — the
+//!     paper's "efficiency gains scale with sequence length / batching"
+//!     story measured on this testbed;
+//! (b) microbenches of the pure-host components (batcher, KV pool,
+//!     routing stats) proving the coordinator is not the bottleneck
+//!     (§Perf L3 target).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::{Batcher, KvPool, Request, RoutingStats, ServeEngine};
+use dtrnet::runtime::{Engine, Tensor};
+use dtrnet::util::bench::{bench, print_table, write_results};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+fn serving(engine: &Engine) -> Result<Json> {
+    let mut out = Json::obj();
+    let mut rows = Vec::new();
+    for tag in ["tiny_dense", "tiny_dtr_bilayer"] {
+        for n_req in [1usize, 4, 8] {
+            let decode = format!("{tag}_serve_decode_b4m512");
+            let init = engine.load(&format!("{tag}_init"))?;
+            let params = init.call_literals(&[Tensor::scalar_i32(0).to_literal()?])?;
+            let mut srv = ServeEngine::new(engine, &decode, params, 16)?;
+            let mut rng = Rng::new(2);
+            let now = Instant::now();
+            for i in 0..n_req {
+                srv.submit(Request {
+                    id: i as u64,
+                    prompt: (0..32).map(|_| rng.below(256) as i32).collect(),
+                    max_new_tokens: 48,
+                    temperature: 0.0,
+                    arrival: now,
+                });
+            }
+            let rep = srv.run_to_completion(1_000_000)?;
+            rows.push(vec![
+                tag.to_string(),
+                n_req.to_string(),
+                format!("{:.1}", rep.tokens_per_s),
+                format!("{:.2}", rep.decode_step_ms_p50),
+                format!("{:.2}", rep.ttft_ms_p50),
+            ]);
+            out.set(
+                &format!("{tag}_r{n_req}"),
+                Json::from_pairs(vec![
+                    ("tokens_per_s", Json::Num(rep.tokens_per_s)),
+                    ("step_ms_p50", Json::Num(rep.decode_step_ms_p50)),
+                    ("ttft_ms_p50", Json::Num(rep.ttft_ms_p50)),
+                ]),
+            );
+        }
+    }
+    print_table(
+        "serving throughput (decode B=4 slots)",
+        &["model", "reqs", "tok/s", "step ms", "ttft ms"],
+        &rows,
+    );
+    Ok(out)
+}
+
+fn host_micro() -> Json {
+    let mut out = Json::obj();
+    // batcher admit/advance cycle
+    let m = bench("batcher_admit_advance_1k_reqs", 2, 20, || {
+        let mut b = Batcher::new(8, 2048);
+        let now = Instant::now();
+        for i in 0..1000u64 {
+            b.submit(Request {
+                id: i,
+                prompt: vec![1, 2, 3, 4],
+                max_new_tokens: 4,
+                temperature: 0.0,
+                arrival: now,
+            });
+        }
+        while !b.idle() {
+            b.admit();
+            for s in 0..8 {
+                if b.active[s].is_some() {
+                    b.advance(s, 1, now);
+                }
+            }
+        }
+        assert_eq!(b.completed.len(), 1000);
+    });
+    out.set("batcher", m.to_json());
+
+    // KV pool append/release
+    let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
+    let m = bench("kv_pool_100k_appends", 2, 10, || {
+        let mut p = KvPool::new(&cfg, 8, 16, usize::MAX / 2);
+        let routed = [true, false, true, false, true, true];
+        for i in 0..100_000 {
+            p.append(i % 8, &routed);
+        }
+        for s in 0..8 {
+            p.release(s);
+        }
+    });
+    out.set("kv_pool", m.to_json());
+
+    // routing stats ingestion (fwd-eval path)
+    let route = vec![1.0f32; 4 * 6 * 128];
+    let m = bench("routing_stats_record_4x6x128", 2, 200, || {
+        let mut s = RoutingStats::new(6);
+        s.record_route_tensor(&route, 4, 6, 128);
+    });
+    out.set("routing_stats", m.to_json());
+    out
+}
+
+fn main() -> Result<()> {
+    let mut results = Json::obj();
+    results.set("host_micro", host_micro());
+    match Engine::new(&dtrnet::artifacts_dir()) {
+        Ok(engine) => results.set("serving", serving(&engine)?),
+        Err(e) => println!("[coordinator_throughput] no artifacts: {e:#}"),
+    }
+    write_results("coordinator_throughput.json", results);
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Fig. 3 — long-context extrapolation: ppl vs sequence length.
+//!
+//! Trains each variant briefly at seq 128, then evaluates answer-span
+//! perplexity on needle/copy tasks at 2×–16× the training horizon through
+//! the `long{S}` fwd artifacts (which bake YaRN-style RoPE scaling, as the
+//! paper applies YaRN ×10 for its 20k evaluation). The reproduction
+//! target is the *shape*: DTRNet stays below MoD/D-LLM as length grows.
+
+use anyhow::Result;
+
+use dtrnet::config::TrainConfig;
+use dtrnet::coordinator::Trainer;
+use dtrnet::data::{corpus, longctx, Dataset};
+use dtrnet::runtime::Engine;
+use dtrnet::util::bench::{print_table, write_results};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+const LENGTHS: [usize; 4] = [256, 512, 1024, 2048];
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("DTRNET_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let n_items: usize = std::env::var("DTRNET_BENCH_ITEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let engine = Engine::new(&dtrnet::artifacts_dir())?;
+
+    let mut results = Json::obj();
+    results.set("lengths", Json::arr_f64(&LENGTHS.map(|n| n as f64)));
+    let mut rows = Vec::new();
+    for tag in ["tiny_dense", "tiny_dtr_bilayer", "tiny_mod", "tiny_dllm"] {
+        // brief training at seq 128 (identical across variants)
+        let tcfg = TrainConfig {
+            steps,
+            peak_lr: 1e-3,
+            log_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&engine, tag, 0)?;
+        let mut rng = Rng::new(7);
+        let data = Dataset::new(
+            corpus::markov_corpus(&mut rng, 256, 200 * trainer.seq, 12),
+            trainer.seq,
+        );
+        trainer.run(&tcfg, &data, None)?;
+
+        let mut ppls = Vec::new();
+        for &len in &LENGTHS {
+            let artifact = format!("{tag}_long{len}_fwd");
+            let mut task_rng = Rng::new(100 + len as u64);
+            let items: Vec<_> = (0..n_items)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        longctx::needle_task(&mut task_rng, 256, len, 16)
+                    } else {
+                        longctx::copy_task(&mut task_rng, 256, len, 32)
+                    }
+                })
+                .collect();
+            let ppl =
+                dtrnet::eval::span_perplexity(&engine, &artifact, trainer.params(), &items)?;
+            ppls.push(ppl);
+        }
+        println!(
+            "[fig3] {tag:<18} span-ppl {:?}",
+            ppls.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+        rows.push(
+            std::iter::once(tag.to_string())
+                .chain(ppls.iter().map(|p| format!("{p:.1}")))
+                .collect::<Vec<_>>(),
+        );
+        results.set(tag, Json::arr_f64(&ppls));
+    }
+    print_table(
+        &format!("Fig. 3 — answer-span ppl vs length ({steps} train steps)"),
+        &["model", "256", "512", "1024", "2048"],
+        &rows,
+    );
+    write_results("fig3_longctx.json", results);
+    Ok(())
+}

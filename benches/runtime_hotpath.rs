@@ -1,0 +1,97 @@
+//! Runtime hot-path microbenchmarks (the §Perf L3 profile).
+//!
+//! Times the building blocks the coordinator composes: literal packing,
+//! artifact execution (fwd / train_step / decode), and the end-to-end
+//! decode iteration — isolating coordinator overhead from XLA compute so
+//! the perf pass can see which side owns each millisecond.
+
+use anyhow::Result;
+
+use dtrnet::runtime::{Engine, Tensor};
+use dtrnet::util::bench::{bench_for, write_results, Measurement};
+use dtrnet::util::json::Json;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(&dtrnet::artifacts_dir())?;
+    let mut ms: Vec<Measurement> = Vec::new();
+
+    // -- literal packing overhead (pure coordinator cost)
+    let big = Tensor::f32(vec![6, 4, 512, 4, 32], vec![0.0; 6 * 4 * 512 * 4 * 32]);
+    ms.push(bench_for("pack_literal_12MB", 0.5, || {
+        let _ = big.to_literal().unwrap();
+    }));
+    let lit = big.to_literal()?;
+    ms.push(bench_for("unpack_literal_12MB", 0.5, || {
+        let _ = Tensor::from_literal(&lit).unwrap();
+    }));
+
+    // -- xs fwd execution (B=2, S=64)
+    let init = engine.load("xs_dtr_bilayer_init")?;
+    let params = init.call_literals(&[Tensor::scalar_i32(0).to_literal()?])?;
+    let fwd = engine.load("xs_dtr_bilayer_fwd_b2s64")?;
+    let tok = Tensor::i32(vec![2, 64], vec![1; 128]).to_literal()?;
+    ms.push(bench_for("xs_fwd_b2s64", 1.0, || {
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&tok);
+        let _ = fwd.call_literals_ref(&inputs).unwrap();
+    }));
+
+    // -- tiny fwd (B=4, S=128): the table-1 eval path
+    let init_t = engine.load("tiny_dtr_bilayer_init")?;
+    let params_t = init_t.call_literals(&[Tensor::scalar_i32(0).to_literal()?])?;
+    let fwd_t = engine.load("tiny_dtr_bilayer_fwd_b4s128")?;
+    let tok_t = Tensor::i32(vec![4, 128], vec![1; 512]).to_literal()?;
+    ms.push(bench_for("tiny_fwd_b4s128", 1.5, || {
+        let mut inputs: Vec<&xla::Literal> = params_t.iter().collect();
+        inputs.push(&tok_t);
+        let _ = fwd_t.call_literals_ref(&inputs).unwrap();
+    }));
+
+    // -- tiny train step (fwd+bwd+AdamW, B=4 S=128)
+    let tinit = engine.load("tiny_dtr_bilayer_train_init")?;
+    let state = tinit.call_literals(&[Tensor::scalar_i32(0).to_literal()?])?;
+    let tstep = engine.load("tiny_dtr_bilayer_train_step")?;
+    let step_l = Tensor::scalar_f32(1.0).to_literal()?;
+    let lr_l = Tensor::scalar_f32(1e-3).to_literal()?;
+    let seed_l = Tensor::scalar_i32(0).to_literal()?;
+    ms.push(bench_for("tiny_train_step_b4s128", 2.0, || {
+        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+        inputs.push(&tok_t);
+        inputs.push(&step_l);
+        inputs.push(&lr_l);
+        inputs.push(&seed_l);
+        let _ = tstep.call_literals_ref(&inputs).unwrap();
+    }));
+
+    // -- serving decode step (B=4, M=512) with resident cache literals
+    let dec = engine.load("tiny_dtr_bilayer_serve_decode_b4m512")?;
+    let spec = &dec.spec;
+    let nparams = spec.nparams.unwrap();
+    let cache_shape = spec.inputs[nparams].shape.clone();
+    let ck = Tensor::zeros_f32(cache_shape.clone()).to_literal()?;
+    let cv = Tensor::zeros_f32(cache_shape.clone()).to_literal()?;
+    let lens = Tensor::zeros_i32(vec![cache_shape[0], cache_shape[1]]).to_literal()?;
+    let toks = Tensor::i32(vec![4], vec![1, 2, 3, 4]).to_literal()?;
+    let pos = Tensor::i32(vec![4], vec![0, 0, 0, 0]).to_literal()?;
+    ms.push(bench_for("tiny_decode_step_b4m512", 1.5, || {
+        let mut inputs: Vec<&xla::Literal> = params_t.iter().collect();
+        inputs.push(&ck);
+        inputs.push(&cv);
+        inputs.push(&lens);
+        inputs.push(&toks);
+        inputs.push(&pos);
+        let _ = dec.call_literals_ref(&inputs).unwrap();
+    }));
+
+    // -- compile cost report (one-time, amortized)
+    println!("\ncompile times (one-time): fwd {:.2}s train {:.2}s decode {:.2}s",
+             fwd_t.compile_s, tstep.compile_s, dec.compile_s);
+
+    let out = Json::Obj(
+        ms.iter()
+            .map(|m| (m.name.clone(), m.to_json()))
+            .collect(),
+    );
+    write_results("runtime_hotpath.json", out);
+    Ok(())
+}

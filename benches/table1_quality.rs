@@ -1,0 +1,150 @@
+//! Tables 1–6 — quality at matched compute across the architecture matrix.
+//!
+//! Trains every variant the paper compares (dense, DTRNet Bi/Tri/LaterHalf,
+//! DTRNet-Skip, MoD k=0.7/0.125, D-LLM Ω=0.85/0.55, expert-choice routing,
+//! bypass-without-VO) under identical data/steps/schedule, then evaluates:
+//!   * text ppl   — embedded-corpus held-out (the WIKI column's proxy)
+//!   * lm ppl     — synthetic Markov held-out (the LMBD column's proxy)
+//!   * FLOPs ratio — analytic model fed with the *measured* routing
+//!     fractions (paper's "matched FLOPs" axis)
+//!   * attn%      — mean attention routing over DTR layers (Fig. 5 number)
+//!
+//! Steps default to a smoke-scale 60 (≈8 min wall on 1 CPU core for the
+//! full 11-variant matrix); the EXPERIMENTS.md reference run used
+//! `DTRNET_BENCH_STEPS=300`. Quality *ordering* is the reproduction
+//! target, not absolute perplexities (see DESIGN.md §Substitutions).
+
+use anyhow::Result;
+
+use dtrnet::config::{LayerKind, TrainConfig};
+use dtrnet::coordinator::Trainer;
+use dtrnet::data::{corpus, Dataset};
+use dtrnet::model::flops;
+use dtrnet::runtime::Engine;
+use dtrnet::tokenizer::{ByteTokenizer, Tokenizer};
+use dtrnet::util::bench::{print_table, write_results};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+struct Row {
+    tag: &'static str,
+    flops_ratio: f64,
+    text_ppl: f64,
+    lm_ppl: f64,
+    attn_pct: f64,
+    final_loss: f64,
+}
+
+fn run_variant(engine: &Engine, tag: &'static str, steps: usize) -> Result<Row> {
+    let tcfg = TrainConfig {
+        steps,
+        peak_lr: 1e-3,
+        seed: 0,
+        log_every: usize::MAX, // quiet
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(engine, tag, 0)?;
+    let seq = trainer.seq;
+
+    // identical data across variants: markov LM + embedded text mixture
+    let mut rng = Rng::new(7);
+    let lm = Dataset::new(corpus::markov_corpus(&mut rng, 256, 300 * seq, 12), seq);
+    let text = Dataset::new(ByteTokenizer.encode(&corpus::embedded_corpus()), seq);
+    let (lm_train, lm_eval) = lm.split(0.1);
+    let (_, text_eval) = text.split(0.3);
+
+    let report = trainer.run(&tcfg, &lm_train, None)?;
+
+    let fwd = format!("{tag}_fwd_b4s128");
+    let lm_res = dtrnet::eval::perplexity(engine, &fwd, trainer.params(), &lm_eval, 6)?;
+    let text_res = dtrnet::eval::perplexity(engine, &fwd, trainer.params(), &text_eval, 4)?;
+
+    // measured routing fractions → matched-FLOPs axis
+    let cfg = &engine.manifest.get(&fwd)?.config;
+    let fracs = lm_res.routing.fractions();
+    let ratio = flops::flops_ratio_vs_dense(cfg, seq, Some(&fracs));
+    let dtr_layers: Vec<usize> = cfg
+        .layer_kinds()
+        .iter()
+        .enumerate()
+        .filter(|(_, k)| !matches!(k, LayerKind::Dense))
+        .map(|(i, _)| i)
+        .collect();
+    let attn_pct = lm_res.routing.mean_fraction(&dtr_layers) * 100.0;
+    println!(
+        "[table1] {tag:<24} loss {:.3} lm_ppl {:.2} text_ppl {:.2} flops {:.3} attn {:.0}%",
+        report.final_loss, lm_res.ppl, text_res.ppl, ratio, attn_pct
+    );
+    Ok(Row {
+        tag,
+        flops_ratio: ratio,
+        text_ppl: text_res.ppl,
+        lm_ppl: lm_res.ppl,
+        attn_pct,
+        final_loss: report.final_loss,
+    })
+}
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("DTRNET_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let engine = Engine::new(&dtrnet::artifacts_dir())?;
+
+    // Table 1 main rows + Table 2/3/4/5/6 ablations.
+    let tags: &[&'static str] = &[
+        "tiny_dense",
+        "tiny_dtr_bilayer",
+        "tiny_dtr_trilayer",
+        "tiny_dtr_laterhalf",
+        "tiny_dtr_skip",       // Table 4
+        "tiny_mod",            // k = 0.7
+        "tiny_dllm",           // Ω = 0.85
+        "tiny_dtr_bilayer_ec", // Table 2: expert-choice
+        "tiny_dtr_bilayer_novo", // Table 6: bypass w/o W^V W^O
+        "tiny_mod_k125",       // Table 5
+        "tiny_dllm_o55",       // Table 5
+    ];
+    let mut rows = Vec::new();
+    let mut out = Json::obj();
+    for &tag in tags {
+        match run_variant(&engine, tag, steps) {
+            Ok(r) => {
+                out.set(
+                    tag,
+                    Json::from_pairs(vec![
+                        ("flops_ratio", Json::Num(r.flops_ratio)),
+                        ("text_ppl", Json::Num(r.text_ppl)),
+                        ("lm_ppl", Json::Num(r.lm_ppl)),
+                        ("attn_pct", Json::Num(r.attn_pct)),
+                        ("final_loss", Json::Num(r.final_loss)),
+                        ("steps", Json::Num(steps as f64)),
+                    ]),
+                );
+                rows.push(r);
+            }
+            Err(e) => println!("[table1] {tag} skipped: {e:#}"),
+        }
+    }
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tag.to_string(),
+                format!("{:.3}", r.flops_ratio),
+                format!("{:.2}", r.text_ppl),
+                format!("{:.2}", r.lm_ppl),
+                format!("{:.0}%", r.attn_pct),
+                format!("{:.3}", r.final_loss),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Table 1/2/3/4/5/6 — quality @ {steps} steps (tiny scale)"),
+        &["model", "FLOPs", "TEXT ppl", "LM ppl", "attn%", "loss"],
+        &table,
+    );
+    write_results("table1_quality.json", out);
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load the DTRNet artifacts, run a forward pass, inspect
+//! routing — the 60-second tour of the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use dtrnet::coordinator::RoutingStats;
+use dtrnet::model::{flops, memory};
+use dtrnet::runtime::{Engine, Tensor};
+
+fn main() -> Result<()> {
+    // 1. Open the artifact registry (built once by `make artifacts`;
+    //    Python never runs again after that).
+    let engine = Engine::new(&dtrnet::artifacts_dir())?;
+    println!("platform: {}", engine.platform());
+
+    // 2. Initialize DTRNet-BiLayer parameters on-device (the init artifact
+    //    is itself an XLA computation — seeded, deterministic).
+    let tag = "xs_dtr_bilayer";
+    let init = engine.load(&format!("{tag}_init"))?;
+    let params = init.call_literals(&[Tensor::scalar_i32(42).to_literal()?])?;
+    println!("initialized {} parameter tensors", params.len());
+
+    // 3. Forward a batch of token ids and read the routing telemetry.
+    let fwd = engine.load(&format!("{tag}_fwd_b2s64"))?;
+    let cfg = fwd.spec.config.clone();
+    let tokens: Vec<i32> = (0..2 * 64).map(|i| (i * 7 % 256) as i32).collect();
+    let tok = Tensor::i32(vec![2, 64], tokens).to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok);
+    let outs = fwd.call_literals_ref(&inputs)?;
+    let logits = Tensor::from_literal(&outs[0])?;
+    let route = Tensor::from_literal(&outs[1])?;
+    println!("logits shape {:?}", logits.shape);
+
+    let mut stats = RoutingStats::new(cfg.n_layers);
+    stats.record_route_tensor(route.as_f32(), 2, cfg.n_layers, 64);
+    println!("layout {}   attention fractions per layer:", cfg.layout_string());
+    for (l, f) in stats.fractions().iter().enumerate() {
+        println!("  layer {l}: {:5.1}% of tokens attended", f * 100.0);
+    }
+
+    // 4. The paper's analytical models (Figs. 4 & 6) at paper scale.
+    let paper = dtrnet::config::ModelConfig::preset(
+        "smollm-1b3",
+        dtrnet::config::Variant::DtrBilayer,
+    );
+    println!(
+        "\nsmollm-1b3 DTRNet-BiLayer @20k tokens: FLOPs ratio {:.3} (paper: 0.785), \
+         KV memory ratio {:.3}",
+        flops::flops_ratio_vs_dense(&paper, 20480, None),
+        memory::kv_bytes(&paper, 20480, None).ratio()
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

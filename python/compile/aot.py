@@ -1,0 +1,347 @@
+"""AOT lowering: JAX entry points → HLO *text* artifacts + manifest.json.
+
+This is the only place Python touches the pipeline; after ``make
+artifacts`` the Rust binary is self-contained. Interchange is HLO text —
+NOT ``.serialize()`` — because the image's xla_extension 0.5.1 rejects
+jax≥0.5 protos with 64-bit instruction ids; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts per (preset, variant[, ablation]):
+  init / train_init  — seeded parameter (+ Adam moment) initialization
+  fwd                — batched forward: logits + routing telemetry
+  train_step         — fused fwd+bwd+clip+AdamW (lr is an input)
+  decode             — batched 1-token decode w/ compacted KV cache update
+  prefill            — single-sequence prefill → compacted cache
+  probe              — layerwise cosine-similarity matrix (paper Fig. 1)
+
+Manifest schema (consumed by rust/src/runtime/manifest.rs):
+  {"artifacts": [{name, file, kind, tag, config, batch, seq, max_kv,
+                  params: [{path, shape, dtype}], inputs: [...],
+                  outputs: [...]}, ...]}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from . import decode as D
+
+
+# --------------------------------------------------------------------------
+# HLO text emission
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _iospec(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [{"shape": list(l.shape), "dtype": str(l.dtype)} for l in leaves]
+
+
+# --------------------------------------------------------------------------
+# Entry-point builders. Each returns (flat_fn, example_args, io_metadata).
+
+
+def build_init(cfg):
+    def fn(seed):
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        return tuple(l for _, l in M.flatten_params(params))
+    return fn, (jnp.int32(0),)
+
+
+def build_train_init(cfg):
+    def fn(seed):
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        m, v = T.init_opt_state(params)
+        leaves = lambda p: tuple(l for _, l in M.flatten_params(p))
+        return leaves(params) + leaves(m) + leaves(v)
+    return fn, (jnp.int32(0),)
+
+
+def build_fwd(cfg, batch, seq, use_pallas=True):
+    nparams = len(M.flatten_params(M.init_params(cfg, jax.random.PRNGKey(0))))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, args[:nparams])
+        tokens = args[nparams]
+        logits, aux = M.forward(cfg, params, tokens, train=False,
+                                use_pallas=use_pallas)
+        # route/g_attn: [B, L, n] → attn fraction per layer for Fig. 5
+        attn_frac = aux["route"].mean(axis=(0, 2))
+        return logits, aux["route"], aux["g_attn"], attn_frac
+    return fn, nparams, (batch, seq)
+
+
+def build_train_step(cfg, batch, seq):
+    p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+    nparams = len(M.flatten_params(p0))
+
+    def fn(*args):
+        i = 0
+        params = M.unflatten_params(cfg, args[i:i + nparams]); i += nparams
+        m = M.unflatten_params(cfg, args[i:i + nparams]); i += nparams
+        v = M.unflatten_params(cfg, args[i:i + nparams]); i += nparams
+        tokens, step, lr, seed = args[i], args[i + 1], args[i + 2], args[i + 3]
+        np_, nm, nv, metrics = T.train_step(cfg, params, m, v, tokens,
+                                            step, lr, seed)
+        leaves = lambda p: tuple(l for _, l in M.flatten_params(p))
+        return leaves(np_) + leaves(nm) + leaves(nv) + metrics
+    return fn, nparams, (batch, seq)
+
+
+def build_decode(cfg, batch, max_kv):
+    nparams = len(M.flatten_params(M.init_params(cfg, jax.random.PRNGKey(0))))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, args[:nparams])
+        ck, cv, lens, tokens, pos = args[nparams:nparams + 5]
+        return D.decode_step(cfg, params, ck, cv, lens, tokens, pos)
+    return fn, nparams, (batch, max_kv)
+
+
+def build_prefill(cfg, seq):
+    nparams = len(M.flatten_params(M.init_params(cfg, jax.random.PRNGKey(0))))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, args[:nparams])
+        tokens = args[nparams]
+        return D.prefill(cfg, params, tokens)
+    return fn, nparams, seq
+
+
+def build_probe(cfg, batch, seq):
+    """Fig. 1: mean cosine similarity between layer embeddings."""
+    nparams = len(M.flatten_params(M.init_params(cfg, jax.random.PRNGKey(0))))
+
+    def fn(*args):
+        params = M.unflatten_params(cfg, args[:nparams])
+        tokens = args[nparams]
+
+        def one(t):
+            _, aux = M.forward_seq(cfg, params, t, train=False,
+                                   use_pallas=False, collect_hidden=True)
+            return aux["hidden"]  # [L+1, n, d]
+        hidden = jax.vmap(one)(tokens)  # [B, L+1, n, d]
+        hn = hidden / (jnp.linalg.norm(hidden, axis=-1, keepdims=True) + 1e-9)
+        B, n = tokens.shape
+        sim = jnp.einsum("blnd,bmnd->lm", hn, hn) / (B * n)
+        return (sim,)
+    return fn, nparams, (batch, seq)
+
+
+# --------------------------------------------------------------------------
+# Artifact emission
+
+
+def emit(out_dir, manifest, name, kind, cfg, fn, example_args, extra=None):
+    # Resumable: skip artifacts that already exist with a manifest entry
+    # (make artifacts is re-entrant; --force via DTRNET_AOT_FORCE=1).
+    existing = {a["name"] for a in manifest["artifacts"]}
+    if (name in existing
+            and os.path.exists(os.path.join(out_dir, f"{name}.hlo.txt"))
+            and not os.environ.get("DTRNET_AOT_FORCE")):
+        print(f"  skip {name} (exists)")
+        return
+    # keep_unused: the manifest promises a stable positional signature, so
+    # parameters that a particular variant doesn't read (e.g. the Gumbel
+    # seed outside D-LLM) must still exist in the lowered module.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+    entry = {
+        "name": name,
+        "file": fname,
+        "kind": kind,
+        "config": cfg.to_dict(),
+        "params": [{"path": p, "shape": list(l.shape), "dtype": str(l.dtype)}
+                   for p, l in M.flatten_params(p0)],
+        "inputs": _iospec(example_args),
+        "outputs": _iospec(jax.eval_shape(fn, *example_args)),
+    }
+    entry.update(extra or {})
+    manifest["artifacts"] = [a for a in manifest["artifacts"] if a["name"] != name]
+    manifest["artifacts"].append(entry)
+    # Incremental manifest write: a killed/partial run stays consistent.
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB, "
+          f"{len(entry['inputs'])} in / {len(entry['outputs'])} out)", flush=True)
+
+
+def emit_set(out_dir, manifest, tag, cfg, *, fwd=None, train=None,
+             decode=None, prefill_seq=None, probe=None, init=True,
+             use_pallas_fwd=True):
+    """Emit the artifact family for one model config under name prefix tag."""
+    print(f"[aot] {tag}  variant={cfg.variant} layers="
+          f"{''.join(M.layer_kinds(cfg))}")
+    if init:
+        fn, args = build_init(cfg)
+        emit(out_dir, manifest, f"{tag}_init", "init", cfg, fn, args)
+    if train is not None:
+        b, s = train
+        fn, args = build_train_init(cfg)
+        emit(out_dir, manifest, f"{tag}_train_init", "train_init", cfg, fn, args)
+        fn, nparams, _ = build_train_step(cfg, b, s)
+        p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+        leaves = [l for _, l in M.flatten_params(p0)]
+        ex = ([_spec(l) for l in leaves] * 3 +
+              [jax.ShapeDtypeStruct((b, s), jnp.int32),
+               jax.ShapeDtypeStruct((), jnp.float32),
+               jax.ShapeDtypeStruct((), jnp.float32),
+               jax.ShapeDtypeStruct((), jnp.int32)])
+        emit(out_dir, manifest, f"{tag}_train_step", "train_step", cfg, fn, ex,
+             extra={"batch": b, "seq": s, "nparams": nparams})
+    if fwd is not None:
+        b, s = fwd
+        fn, nparams, _ = build_fwd(cfg, b, s, use_pallas=use_pallas_fwd)
+        p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+        ex = ([_spec(l) for _, l in M.flatten_params(p0)] +
+              [jax.ShapeDtypeStruct((b, s), jnp.int32)])
+        emit(out_dir, manifest, f"{tag}_fwd_b{b}s{s}", "fwd", cfg, fn, ex,
+             extra={"batch": b, "seq": s, "nparams": nparams})
+    if decode is not None:
+        b, mx = decode
+        fn, nparams, _ = build_decode(cfg, b, mx)
+        p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+        L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        ex = ([_spec(l) for _, l in M.flatten_params(p0)] +
+              [jax.ShapeDtypeStruct((L, b, mx, H, hd), jnp.float32),
+               jax.ShapeDtypeStruct((L, b, mx, H, hd), jnp.float32),
+               jax.ShapeDtypeStruct((L, b), jnp.int32),
+               jax.ShapeDtypeStruct((b,), jnp.int32),
+               jax.ShapeDtypeStruct((b,), jnp.int32)])
+        emit(out_dir, manifest, f"{tag}_decode_b{b}m{mx}", "decode", cfg, fn,
+             ex, extra={"batch": b, "max_kv": mx, "nparams": nparams})
+    if prefill_seq is not None:
+        fn, nparams, _ = build_prefill(cfg, prefill_seq)
+        p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+        ex = ([_spec(l) for _, l in M.flatten_params(p0)] +
+              [jax.ShapeDtypeStruct((prefill_seq,), jnp.int32)])
+        emit(out_dir, manifest, f"{tag}_prefill_s{prefill_seq}", "prefill",
+             cfg, fn, ex, extra={"seq": prefill_seq, "nparams": nparams})
+    if probe is not None:
+        b, s = probe
+        fn, nparams, _ = build_probe(cfg, b, s)
+        p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+        ex = ([_spec(l) for _, l in M.flatten_params(p0)] +
+              [jax.ShapeDtypeStruct((b, s), jnp.int32)])
+        emit(out_dir, manifest, f"{tag}_probe", "probe", cfg, fn, ex,
+             extra={"batch": b, "seq": s, "nparams": nparams})
+
+
+# --------------------------------------------------------------------------
+# Suites
+
+
+def suite_test(out_dir, manifest):
+    """xs-scale artifacts for cargo/pytest integration tests (fast)."""
+    for variant in ["dense", "dtr_bilayer"]:
+        cfg = M.make_config("xs", variant)
+        emit_set(out_dir, manifest, f"xs_{variant}", cfg,
+                 fwd=(2, 64), train=(2, 64), decode=(2, 96),
+                 prefill_seq=32, probe=(2, 64))
+
+
+def suite_standard(out_dir, manifest):
+    """tiny-scale artifacts: the Table-1/2/3/4/5/6 training matrix plus
+    decode/probe for the serving + analysis paths."""
+    b, s = 4, 128
+    # Table 1 main rows + Table 3/4 ablation rows
+    for variant in ["dense", "dtr_bilayer", "dtr_trilayer", "dtr_laterhalf",
+                    "dtr_skip", "mod", "dllm"]:
+        cfg = M.make_config("tiny", variant)
+        emit_set(out_dir, manifest, f"tiny_{variant}", cfg,
+                 fwd=(b, s), train=(b, s))
+    # Table 2: expert-choice routing ablation
+    cfg = M.make_config("tiny", "dtr_bilayer", routing="expert")
+    emit_set(out_dir, manifest, "tiny_dtr_bilayer_ec", cfg,
+             fwd=(b, s), train=(b, s))
+    # Table 6: bypass without W^V W^O
+    cfg = M.make_config("tiny", "dtr_bilayer", bypass_vo=False)
+    emit_set(out_dir, manifest, "tiny_dtr_bilayer_novo", cfg,
+             fwd=(b, s), train=(b, s))
+    # Table 5: original capacity variants
+    cfg = M.make_config("tiny", "mod", mod_capacity=0.125)
+    emit_set(out_dir, manifest, "tiny_mod_k125", cfg, fwd=(b, s), train=(b, s))
+    cfg = M.make_config("tiny", "dllm", dllm_omega=0.55)
+    emit_set(out_dir, manifest, "tiny_dllm_o55", cfg, fwd=(b, s), train=(b, s))
+    # Serving path: decode + prefill for the headline variant and dense
+    for variant in ["dense", "dtr_bilayer"]:
+        cfg = M.make_config("tiny", variant)
+        emit_set(out_dir, manifest, f"tiny_{variant}_serve", cfg,
+                 decode=(4, 512), prefill_seq=128, init=False)
+    # Fig. 1 probe on the dense model
+    cfg = M.make_config("tiny", "dense")
+    emit_set(out_dir, manifest, "tiny_dense_probe", cfg, probe=(2, 128),
+             init=False)
+
+
+def suite_longctx(out_dir, manifest):
+    """Fig. 3 artifacts: fwd at growing sequence lengths with RoPE scaling
+    (YaRN-style position compression) beyond the 128-token train horizon."""
+    for variant in ["dense", "dtr_bilayer", "mod", "dllm"]:
+        for s in [256, 512, 1024, 2048]:
+            scale = max(1.0, s / 128.0)
+            cfg = M.make_config("tiny", variant, rope_scale=scale)
+            tag = f"tiny_{variant}_long{s}"
+            fn, nparams, _ = build_fwd(cfg, 1, s, use_pallas=True)
+            p0 = M.init_params(cfg, jax.random.PRNGKey(0))
+            ex = ([_spec(l) for _, l in M.flatten_params(p0)] +
+                  [jax.ShapeDtypeStruct((1, s), jnp.int32)])
+            emit(out_dir, manifest, f"{tag}_fwd", "fwd", cfg, fn,
+                 ex, extra={"batch": 1, "seq": s, "nparams": nparams})
+
+
+SUITES = {
+    "test": suite_test,
+    "standard": suite_standard,
+    "longctx": suite_longctx,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--suites", default="test,standard,longctx",
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for s in args.suites.split(","):
+        SUITES[s](args.out_dir, manifest)
+    # dedupe by name, last wins
+    seen = {}
+    for a in manifest["artifacts"]:
+        seen[a["name"]] = a
+    manifest["artifacts"] = list(seen.values())
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""L2: batched autoregressive decode step with routing-aware KV cache.
+
+This is where the paper's Fig. 6 memory claim becomes real: the cache is
+*compacted per layer* — a token appends k/v at layer l only when that
+layer routed it to attention (dense layers always do; DTR/MoD/D-LLM layers
+only for selected tokens). Each layer's cache therefore holds only the
+~10% of tokens that were routed, and the Rust paged pool (L3) mirrors the
+per-layer lengths to allocate pages on demand.
+
+Shapes (all static — HLO requirement):
+  cache_k, cache_v : [L, B, M, H, hd]   M = max cached entries per layer
+  lens             : [L, B] i32          compacted lengths
+  tokens           : [B] i32             current token ids
+  positions        : [B] i32             absolute positions (RoPE)
+
+The decode step returns updated cache/lens plus per-layer routing
+decisions so L3 can account pages and Fig.-5 statistics.
+
+Attention here is a cache matvec (one query against ≤M compacted keys) —
+a VPU-bound op with no n² term; the Pallas flash kernel is for the
+training/prefill shapes, so this path uses plain jnp on purpose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import ref
+
+NEG_INF = -1e30
+
+
+def _decode_attn(cfg, lp, u, q_pos, ck, cv, lens, delta):
+    """One-query attention over the (already updated) compacted cache.
+
+    u: [B, d]; ck/cv: [B, Mx, H, hd]; lens: [B] (entries valid AFTER this
+    token's append, i.e. includes self when routed); delta: [B].
+    Returns attn_out [B, d] (zeros where delta=0 — callers select).
+    """
+    B, d = u.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    Mx = ck.shape[1]
+    q = jax.vmap(lambda uu, pp: M._rope(cfg, (uu[None, :] @ lp["wq"])
+                                        .reshape(1, H, hd), pp[None]))(
+        u, q_pos)[:, 0]                                   # [B, H, hd]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhd,bmhd->bhm", q, ck) * scale        # [B, H, Mx]
+    valid = (jnp.arange(Mx)[None, :] < lens[:, None])     # [B, Mx]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    w = jnp.exp(s)
+    w = w / (w.sum(axis=-1, keepdims=True) + 1e-30)
+    ctx = jnp.einsum("bhm,bmhd->bhd", w, cv)              # [B, H, hd]
+    return ctx.reshape(B, d) @ lp["wo"]
+
+
+def decode_step(cfg: M.ModelConfig, params, cache_k, cache_v, lens,
+                tokens, positions):
+    """One decode step for a batch of B independent sequences.
+
+    Returns (logits [B, V], new_cache_k, new_cache_v, new_lens,
+    routed [L, B], g_attn [L, B]).
+    """
+    kinds = M.layer_kinds(cfg)
+    L = cfg.n_layers
+    B = tokens.shape[0]
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    Mx = cache_k.shape[2]
+
+    x = params["tok_embed"][tokens]                       # [B, d]
+    new_ck, new_cv, new_lens = [], [], []
+    routed_all, gattn_all = [], []
+
+    for l, (kind, lp) in enumerate(zip(kinds, params["layers"])):
+        u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+
+        # --- routing decision (token-choice: decode is causal by nature)
+        if kind == "T":
+            delta = jnp.ones((B,), jnp.float32)
+            g0 = jnp.ones((B,), jnp.float32)
+            gate = None
+        elif kind == "D":
+            g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+            g0 = g[:, 0]
+            if cfg.variant == "dtr_skip":
+                delta = jnp.zeros((B,), jnp.float32)
+            else:
+                delta = (g[:, 0] > g[:, 1]).astype(jnp.float32)
+            gate = None
+        elif kind == "M":
+            p_cls = jax.nn.sigmoid((u @ lp["cls_w"])[:, 0])
+            r = (u @ lp["r_w"])[:, 0]
+            delta = (p_cls > 0.5).astype(jnp.float32)
+            gate = jax.nn.sigmoid(r)
+            g0 = p_cls
+        else:  # D-LLM
+            g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+            delta = (g[:, 0] > g[:, 1]).astype(jnp.float32)
+            delta = jnp.maximum(delta, (positions < 2).astype(jnp.float32))
+            gate = None
+            g0 = g[:, 0]
+
+        # --- KV append (only committed where routed)
+        k_new = jax.vmap(lambda uu, pp: M._rope(
+            cfg, (uu[None, :] @ lp["wk"]).reshape(1, H, hd), pp[None]))(
+            u, positions)[:, 0]                           # [B, H, hd]
+        v_new = (u @ lp["wv"]).reshape(B, H, hd)
+        write_idx = jnp.minimum(lens[l], Mx - 1)          # L3 guards overflow
+
+        # Scatter-free masked write (§Perf L2): vmapped dynamic_update_slice
+        # lowers to an XLA scatter, which the CPU backend executes as a
+        # scalar loop (measured 2.9× slower end-to-end). A one-hot
+        # multiply-add is fully vectorized, and folding the routing
+        # decision into the mask removes the full-cache select as well.
+        onehot = (jnp.arange(Mx)[None, :] == write_idx[:, None]).astype(
+            jnp.float32) * delta[:, None]                 # [B, Mx]
+        m4 = onehot[:, :, None, None]
+        ck_l = cache_k[l] * (1.0 - m4) + k_new[:, None] * m4
+        cv_l = cache_v[l] * (1.0 - m4) + v_new[:, None] * m4
+        lens_l = lens[l] + delta.astype(jnp.int32)
+        att_len = jnp.where(delta > 0.5, lens_l, lens[l])
+
+        # --- layer update
+        attn_out = _decode_attn(cfg, lp, u, positions, ck_l, cv_l,
+                                att_len, delta)
+        if kind == "T":
+            h = x + attn_out
+            y = h + M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+        elif kind == "D":
+            g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+            byp = ref.bypass_ref(u, lp["wv"], lp["wo"]) if cfg.bypass_vo else u
+            mixed = jnp.where(delta[:, None] > 0.5,
+                              g[:, 0:1] * attn_out,
+                              g[:, 1:2] * byp)
+            h = x + mixed
+            y = h + M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+        elif kind == "M":
+            w_ = (delta * gate)[:, None]
+            h = x + w_ * attn_out
+            y = h + w_ * M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"],
+                                                    cfg.rmsnorm_eps))
+        else:  # D-LLM whole-block gate
+            w_ = delta[:, None]
+            h = x + w_ * attn_out
+            y = h + w_ * M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"],
+                                                    cfg.rmsnorm_eps))
+        x = y
+        new_ck.append(ck_l)
+        new_cv.append(cv_l)
+        new_lens.append(lens_l)
+        routed_all.append(delta)
+        gattn_all.append(g0)
+
+    x = ref.rmsnorm_ref(x, params["out_norm"], cfg.rmsnorm_eps)
+    logits = x @ params["unembed"]
+    return (logits, jnp.stack(new_ck), jnp.stack(new_cv),
+            jnp.stack(new_lens), jnp.stack(routed_all), jnp.stack(gattn_all))
+
+
+def prefill(cfg: M.ModelConfig, params, tokens):
+    """Single-sequence prefill: run the training-shape forward and compact
+    each layer's routed k/v to the cache layout.
+
+    tokens: [S] int32 → (cache_k [L, S, H, hd], cache_v, lens [L],
+    last_logits [V], routed [L, S]).  The cache is sized S here; L3 copies
+    into its paged pool (only `lens[l]` entries are meaningful).
+    """
+    kinds = M.layer_kinds(cfg)
+    S = tokens.shape[0]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["tok_embed"][tokens]
+    cks, cvs, lens, routes = [], [], [], []
+    for l, (kind, lp) in enumerate(zip(kinds, params["layers"])):
+        u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+        if kind == "T":
+            delta = jnp.ones((S,), jnp.float32)
+            attn_out, k, v = M._attention_kv(cfg, lp, u, positions, delta, False)
+            h = x + attn_out
+        elif kind == "D":
+            g, delta = M._dtr_route(cfg, lp, u, False)
+            attn_out, k, v = M._attention_kv(cfg, lp, u, positions, delta, False)
+            byp = ref.bypass_ref(u, lp["wv"], lp["wo"]) if cfg.bypass_vo else u
+            mixed = jnp.where(delta[:, None] > 0.5,
+                              g[:, 0:1] * attn_out, g[:, 1:2] * byp)
+            h = x + mixed
+        elif kind == "M":
+            p_cls = jax.nn.sigmoid((u @ lp["cls_w"])[:, 0])
+            r = (u @ lp["r_w"])[:, 0]
+            delta = (p_cls > 0.5).astype(jnp.float32)
+            gate = jax.nn.sigmoid(r)
+            attn_out, k, v = M._attention_kv(cfg, lp, u, positions, delta, False)
+            h = x + (delta * gate)[:, None] * attn_out
+        else:
+            g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+            delta = (g[:, 0] > g[:, 1]).astype(jnp.float32)
+            delta = jnp.maximum(delta, (positions < 2).astype(jnp.float32))
+            attn_out, k, v = M._attention_kv(cfg, lp, u, positions, delta, False)
+            h = x + delta[:, None] * attn_out
+
+        if kind in ("T", "D"):
+            y = h + M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+        else:
+            w_ = delta[:, None] * (gate[:, None] if kind == "M" else 1.0)
+            y = h + w_ * M._mlp(lp, ref.rmsnorm_ref(h, lp["norm2"],
+                                                    cfg.rmsnorm_eps))
+        x = y
+
+        # Compact routed tokens to the front, preserving order (stable sort
+        # on 1-delta). Non-routed slots beyond lens[l] are junk by contract.
+        order = jnp.argsort(1.0 - delta, stable=True)
+        cks.append(k[order])
+        cvs.append(v[order])
+        lens.append(delta.sum().astype(jnp.int32))
+        routes.append(delta)
+
+    x = ref.rmsnorm_ref(x, params["out_norm"], cfg.rmsnorm_eps)
+    logits = x @ params["unembed"]
+    return (jnp.stack(cks), jnp.stack(cvs), jnp.stack(lens),
+            logits[-1], jnp.stack(routes))

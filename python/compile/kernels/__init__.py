@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for DTRNet (interpret-mode; see DESIGN.md).
+
+Public surface:
+  router(x, w1, w2)                 -> (g [n,2], delta [n])      Eq. 1-2
+  bypass(x, wv, wo)                 -> [n, d]                    Eq. 5
+  routed_attention(q, k, v, delta)  -> [h, n, hd]                Eq. 4+6
+  dense_attention(q, k, v)          -> [h, n, hd]
+plus `ref` — the pure-jnp oracles every kernel is tested against.
+"""
+
+from .router import router
+from .bypass import bypass
+from .routed_attention import routed_attention, dense_attention
+from . import ref
+
+__all__ = ["router", "bypass", "routed_attention", "dense_attention", "ref"]

@@ -1,0 +1,46 @@
+"""Pallas kernel: DTRNet linear-path (bypass) update — ``x W^V W^O``.
+
+Paper Eq. 5: bypassed tokens receive a token-local update through the
+*shared* value and output projections ("self-attention without
+interaction"). This is the kernel that makes 90% of tokens linear-cost.
+
+TPU mapping: the token axis is tiled in BLOCK_N rows; W^V and W^O are
+[d, d] and are streamed tile-by-tile along the contraction axis so the
+VMEM working set stays at 2·BLOCK_N·d + 2·BLOCK_D·d floats. Both matmuls
+hit the MXU; the intermediate ``x W^V`` tile never leaves VMEM (this
+fusion — not materializing xW^V to HBM — is the point of the kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bypass_kernel(x_ref, wv_ref, wo_ref, o_ref):
+    x = x_ref[...]  # [bn, d]
+    t = x @ wv_ref[...]  # [bn, d]  — stays in VMEM
+    o_ref[...] = t @ wo_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def bypass(x, wv, wo, *, block_n: int = 128):
+    """Fused ``(x @ wv) @ wo`` over token tiles. x: [n, d] → [n, d]."""
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _bypass_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, wv, wo)

@@ -1,0 +1,124 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness spec).
+
+Every Pallas kernel in this package has a reference implementation here,
+written in straightforward jnp with no fusion/tiling tricks. pytest
+(``python/tests/test_kernels.py``) asserts allclose between each kernel and
+its oracle across a hypothesis-driven sweep of shapes/dtypes/seeds.
+
+Shapes use the conventions of the paper (DTRNet, Sharma et al. 2025):
+  n   — sequence length            d  — model dim
+  h   — number of heads            hd — head dim (d = h * hd)
+All reference functions are batch-free ([n, d] inputs); the L2 model vmaps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def router_ref(x, w1, w2):
+    """DTRNet token router (paper Eq. 1).
+
+    ``G_i = softmax(SiLU(x_i W1) W2)`` with W1: [d, d/2], W2: [d/2, 2].
+    Returns soft scores g: [n, 2] — column 0 = attention path, 1 = bypass.
+    """
+    hidden = silu(x @ w1)
+    logits = hidden @ w2
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def route_decision_ref(g):
+    """Hard token-choice routing (paper Eq. 2): delta_i = 1[g_attn > g_bypass]."""
+    return (g[:, 0] > g[:, 1]).astype(jnp.float32)
+
+
+def bypass_ref(x, wv, wo):
+    """Linear-path update (paper Eq. 5 core): ``x W^V W^O`` — self-attention
+    without interaction (a token attends only to itself)."""
+    return (x @ wv) @ wo
+
+
+def rope_ref(x, positions, theta: float = 10000.0):
+    """Rotary position embedding over the last dim of [n, h, hd]."""
+    n, h, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [n, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def routed_attention_ref(q, k, v, delta, scale=None):
+    """Routed multi-head attention (paper Eq. 4 + sparse-equivalence Eq. 6).
+
+    q, k, v: [n, h, hd] (already RoPE'd); delta: [n] in {0,1}.
+    Attention is causal AND restricted to the routed-token submask
+    ``M = delta · deltaᵀ``; the diagonal is always allowed so that softmax
+    rows of non-routed queries stay finite (their output is discarded by
+    the caller's path select).
+    Returns [n, h, hd] — the pre-W^O context vectors.
+    """
+    n, h, hd = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale  # [h, n, n]
+    causal = jnp.tril(jnp.ones((n, n), dtype=bool))
+    routed = (delta[:, None] > 0.5) & (delta[None, :] > 0.5)
+    allowed = causal & (routed | jnp.eye(n, dtype=bool))
+    logits = jnp.where(allowed[None, :, :], logits, NEG_INF)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    w = jnp.exp(logits)
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", w, v)
+
+
+def dense_attention_ref(q, k, v, scale=None):
+    """Plain causal MHA — the dense-baseline path (delta = all-ones)."""
+    n = q.shape[0]
+    return routed_attention_ref(q, k, v, jnp.ones((n,), jnp.float32), scale)
+
+
+def swiglu_mlp_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP (SmolLM/LLaMA family): ``(SiLU(xWg) * xWu) Wd``."""
+    return (silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * weight
+
+
+def dtr_token_update_ref(x, w1, w2, wq, wk, wv, wo, positions, n_heads,
+                         theta: float = 10000.0, bypass_vo: bool = True):
+    """Full DTR layer token-mixing sublayer (router + both paths + select).
+
+    Input x is the *normalized* residual stream ([n, d]); returns
+    (update [n, d], g [n, 2], delta [n]).  Mirrors paper Eqs. 1–5: routed
+    tokens get ``g_attn · Attn(x)``, bypassed get ``g_bypass · x W^V W^O``.
+    """
+    n, d = x.shape
+    hd = d // n_heads
+    g = router_ref(x, w1, w2)
+    delta = route_decision_ref(g)
+
+    q = rope_ref((x @ wq).reshape(n, n_heads, hd), positions, theta)
+    k = rope_ref((x @ wk).reshape(n, n_heads, hd), positions, theta)
+    v = (x @ wv).reshape(n, n_heads, hd)
+    ctx = routed_attention_ref(q, k, v, delta).reshape(n, d)
+    attn_out = ctx @ wo
+
+    byp = bypass_ref(x, wv, wo) if bypass_vo else x
+    out = jnp.where(delta[:, None] > 0.5,
+                    g[:, 0:1] * attn_out,
+                    g[:, 1:2] * byp)
+    return out, g, delta

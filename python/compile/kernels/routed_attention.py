@@ -1,0 +1,108 @@
+"""Pallas kernel: routed causal flash-attention (paper Eq. 4 + Eq. 6).
+
+FlashAttention-style online-softmax attention restricted to the routed
+token submask ``M = delta · deltaᵀ`` (plus causal mask, plus the diagonal
+so non-routed rows stay finite — their output is discarded by the layer's
+path select).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper packs selected
+tokens with FlashAttention-2's ``flash_attn_varlen_func`` on GPU. The TPU
+analogue implemented here is *block-sparse masking*: the grid iterates
+(head, q-block) and the kernel streams k/v-blocks HBM→VMEM, skipping the
+entire MXU matmul for k-blocks that (a) lie strictly above the causal
+diagonal or (b) contain no routed token when the q-block also has no
+routed token. Online softmax keeps the working set at
+O(BLOCK_Q·BLOCK_K + BLOCK_Q·hd) VMEM per step.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _routed_attn_kernel(q_ref, k_ref, v_ref, delta_ref, o_ref, *,
+                        block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(1)  # q-block index within this head
+    q = q_ref[0]  # [bq, hd]
+    dq = delta_ref[...]  # [n] routing decisions (whole sequence, small)
+    n = dq.shape[0]
+    hd = q.shape[-1]
+
+    q_start = qi * block_q
+    q_pos = q_start + jax.lax.iota(jnp.int32, block_q)  # absolute q rows
+    dq_tile = jax.lax.dynamic_slice(dq, (q_start,), (block_q,))  # [bq]
+
+    num_kb = pl.cdiv(n, block_k)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_start = j * block_k
+        k = jax.lax.dynamic_slice(k_ref[0], (k_start, 0), (block_k, hd))
+        v = jax.lax.dynamic_slice(v_ref[0], (k_start, 0), (block_k, hd))
+        dk_tile = jax.lax.dynamic_slice(dq, (k_start,), (block_k,))
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+
+        s = (q @ k.T) * scale  # [bq, bk] — MXU matmul
+        causal = q_pos[:, None] >= k_pos[None, :]
+        routed = (dq_tile[:, None] > 0.5) & (dk_tile[None, :] > 0.5)
+        diag = q_pos[:, None] == k_pos[None, :]
+        allowed = causal & (routed | diag)
+        s = jnp.where(allowed, s, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))  # [bq]
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    # Causal: k-blocks strictly above this q-block's last row contribute
+    # nothing; loop only over j <= last needed block (block-level skipping,
+    # the TPU analogue of FA2's threadblock early-exit).
+    last_kb = (q_start + block_q - 1) // block_k + 1
+    acc, m_i, l_i = jax.lax.fori_loop(0, last_kb, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def routed_attention(q, k, v, delta, *, block_q: int = 128, block_k: int = 128):
+    """Routed causal attention. q/k/v: [h, n, hd] (RoPE applied by caller);
+    delta: [n] in {0,1}. Returns [h, n, hd] context (pre-W^O)."""
+    h, n, hd = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    assert n % block_q == 0 and n % block_k == 0
+    scale = 1.0 / (hd ** 0.5)
+    grid = (h, n // block_q)
+    kernel = functools.partial(
+        _routed_attn_kernel, block_q=block_q, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, n, hd), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, n, hd), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((n,), lambda hh, qq: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, hd), q.dtype),
+        interpret=True,
+    )(q, k, v, delta)
+
+
+def dense_attention(q, k, v, **kw):
+    """Dense causal attention = routed attention with all tokens routed."""
+    n = q.shape[1]
+    return routed_attention(q, k, v, jnp.ones((n,), q.dtype), **kw)

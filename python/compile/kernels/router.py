@@ -1,0 +1,64 @@
+"""Pallas kernel: DTRNet token router (paper Eq. 1-2).
+
+Computes, for a tile of tokens, the two-way routing distribution
+``G = softmax(SiLU(x W1) W2)`` and the hard decision ``delta``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): tokens are tiled along
+the sequence axis in BLOCK_N chunks; W1 ([d, d/2]) and W2 ([d/2, 2]) are
+small enough to live in VMEM for every realistic d (d=2048 → 2 MiB + 8 KiB
+in f32), so each grid step does two MXU matmuls over the resident weights.
+``interpret=True`` everywhere in this repo: the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret mode lowers to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, w1_ref, w2_ref, g_ref, delta_ref):
+    x = x_ref[...]  # [bn, d]
+    h = x @ w1_ref[...]
+    h = h * (1.0 / (1.0 + jnp.exp(-h)))  # SiLU on the VPU
+    logits = h @ w2_ref[...]  # [bn, 2]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    g = e / jnp.sum(e, axis=-1, keepdims=True)
+    g_ref[...] = g
+    delta_ref[...] = (g[:, 0] > g[:, 1]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def router(x, w1, w2, *, block_n: int = 128):
+    """Routing scores + hard decisions for all tokens.
+
+    x: [n, d]; w1: [d, d/2]; w2: [d/2, 2]  →  (g [n, 2], delta [n]).
+    n must be a multiple of block_n (callers pad; the L2 model always
+    runs power-of-two sequence lengths).
+    """
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _router_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, w1.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((w1.shape[1], 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 2), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=True,
+    )(x, w1, w2)

@@ -1,0 +1,474 @@
+"""L2: the DTRNet model family in JAX (build-time only; lowered to HLO).
+
+Implements the full architecture space of the paper (Sharma et al., 2025):
+
+  dense          — SmolLM-style baseline (pre-norm RMSNorm, RoPE, SwiGLU)
+  dtr_bilayer    — T-D-T-D-…-T   (paper's best, Table 1/3)
+  dtr_trilayer   — T-D-D-T-…-T   (Table 1/3)
+  dtr_laterhalf  — T…T D…D T     (Table 3)
+  dtr_6t         — 2+2+2 dense anchors, DTR elsewhere (Table 3)
+  dtr_skip       — BiLayer with routers forced to bypass (Table 4)
+  mod            — Mixture-of-Depths baseline, expert-choice top-k,
+                   alternating layers, aux inference classifier (Table 1/5)
+  dllm           — D-LLM baseline, per-layer token-choice whole-block skip,
+                   Gumbel-ST training, first 2 layers dense, first 2 tokens
+                   always executed (Table 1/5)
+
+Routing ablations: ``routing='expert'`` (Table 2) and ``bypass_vo=False``
+(Table 6) are config switches.
+
+Training uses the pure-jnp oracle path (differentiable); inference
+artifacts use the Pallas kernels (kernels are allclose-tested against the
+oracles, so the two paths are interchangeable numerics-wise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from . import kernels
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------------
+# Config
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 6
+    n_heads: int = 4
+    d_ff: int = 352
+    max_seq: int = 128
+    variant: str = "dtr_bilayer"
+    routing: str = "token"          # token | expert    (Table 2)
+    bypass_vo: bool = True          # False = Table 6 ablation
+    expert_capacity: float = 0.25   # DTR expert-choice capacity
+    mod_capacity: float = 0.7       # MoD top-k ratio   (Table 5: 0.125/0.7)
+    dllm_omega: float = 0.85        # D-LLM usage target (Table 5: 0.55/0.85)
+    lambda_reg: float = 8e-4        # Eq. 7 lambda
+    rope_theta: float = 10000.0
+    rope_scale: float = 1.0         # >1 = YaRN-style extrapolation factor
+    rmsnorm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# Preset configs. smollm-360m / smollm-1b3 mirror the paper's training setup
+# and are config-only on this testbed (see DESIGN.md §Substitutions).
+PRESETS: Dict[str, dict] = {
+    "xs": dict(vocab_size=256, d_model=64, n_layers=4, n_heads=4, d_ff=176,
+               max_seq=64),
+    "tiny": dict(vocab_size=256, d_model=128, n_layers=6, n_heads=4, d_ff=352,
+                 max_seq=128),
+    "small": dict(vocab_size=256, d_model=256, n_layers=8, n_heads=8, d_ff=704,
+                  max_seq=256),
+    "smollm-360m": dict(vocab_size=32000, d_model=960, n_layers=32, n_heads=15,
+                        d_ff=2560, max_seq=2048),
+    "smollm-1b3": dict(vocab_size=32000, d_model=2048, n_layers=24, n_heads=32,
+                       d_ff=5632, max_seq=2048),
+}
+
+
+def make_config(preset: str, variant: str, **overrides) -> ModelConfig:
+    kw = dict(PRESETS[preset])
+    kw.update(overrides)
+    return ModelConfig(name=preset, variant=variant, **kw)
+
+
+# --------------------------------------------------------------------------
+# Layer layout (paper §Architectural Design Choices + Appendix A2)
+
+
+def layer_kinds(cfg: ModelConfig) -> List[str]:
+    """Per-layer kind: 'T' dense transformer, 'D' DTR, 'M' MoD, 'L' D-LLM."""
+    L = cfg.n_layers
+    v = cfg.variant
+    if v == "dense":
+        return ["T"] * L
+    if v in ("dtr_bilayer", "dtr_skip"):
+        # T-D-T-D-…-T: first/last dense, alternate in between.
+        kinds = ["D" if i % 2 == 1 else "T" for i in range(L)]
+    elif v == "dtr_trilayer":
+        # T-D-D-T-D-D-…: dense anchor every third layer.
+        kinds = ["T" if i % 3 == 0 else "D" for i in range(L)]
+    elif v == "dtr_laterhalf":
+        kinds = ["T"] * (L // 2) + ["D"] * (L - L // 2)
+    elif v == "dtr_6t":
+        kinds = ["D"] * L
+        anchors = [0, 1, L // 2 - 1, L // 2, L - 2, L - 1]
+        for a in anchors:
+            kinds[a] = "T"
+    elif v == "mod":
+        # MoD block after each transformer layer (paper's bi-layer config).
+        kinds = ["M" if i % 2 == 1 else "T" for i in range(L)]
+    elif v == "dllm":
+        # First two layers dense, all subsequent layers D-LLM blocks.
+        kinds = ["T", "T"] + ["L"] * (L - 2)
+    else:
+        raise ValueError(f"unknown variant {v!r}")
+    kinds[0] = "T"
+    kinds[-1] = "T"
+    return kinds[:L]
+
+
+# --------------------------------------------------------------------------
+# Parameter init & flattening
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """LLaMA-style init: N(0, 0.02), output projections scaled by 1/sqrt(2L)."""
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    kinds = layer_kinds(cfg)
+    n_keys = 3 + cfg.n_layers * 12
+    ks = iter(jax.random.split(key, n_keys))
+    std = 0.02
+    out_std = std / (2 * cfg.n_layers) ** 0.5
+
+    def mat(k, shape, s=std):
+        return (jax.random.normal(k, shape, jnp.float32) * s)
+
+    params: Params = {
+        "tok_embed": mat(next(ks), (V, d)),
+        "unembed": mat(next(ks), (d, V)),
+        "out_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for kind in kinds:
+        lp = {
+            "norm1": jnp.ones((d,), jnp.float32),
+            "norm2": jnp.ones((d,), jnp.float32),
+            "wq": mat(next(ks), (d, d)),
+            "wk": mat(next(ks), (d, d)),
+            "wv": mat(next(ks), (d, d)),
+            "wo": mat(next(ks), (d, d), out_std),
+            "w_gate": mat(next(ks), (d, ff)),
+            "w_up": mat(next(ks), (d, ff)),
+            "w_down": mat(next(ks), (ff, d), out_std),
+        }
+        if kind in ("D", "L"):
+            lp["r_w1"] = mat(next(ks), (d, d // 2))
+            lp["r_w2"] = mat(next(ks), (d // 2, 2))
+        elif kind == "M":
+            lp["r_w"] = mat(next(ks), (d, 1))
+            lp["cls_w"] = mat(next(ks), (d, 1))
+        params["layers"].append(lp)
+    return params
+
+
+def flatten_params(params: Params):
+    """Deterministic (path, leaf) list — the layout contract with Rust.
+
+    Order: tok_embed, unembed, out_norm, then per layer in index order with
+    sorted key order inside each layer dict.
+    """
+    out = []
+    out.append(("tok_embed", params["tok_embed"]))
+    out.append(("unembed", params["unembed"]))
+    out.append(("out_norm", params["out_norm"]))
+    for i, lp in enumerate(params["layers"]):
+        for k in sorted(lp.keys()):
+            out.append((f"layers.{i}.{k}", lp[k]))
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, leaves) -> Params:
+    """Inverse of flatten_params given leaves in the same order."""
+    kinds = layer_kinds(cfg)
+    it = iter(leaves)
+    params: Params = {
+        "tok_embed": next(it), "unembed": next(it), "out_norm": next(it),
+        "layers": [],
+    }
+    base = ["norm1", "norm2", "w_down", "w_gate", "w_up", "wk", "wo", "wq", "wv"]
+    for kind in kinds:
+        keys = base + (["r_w1", "r_w2"] if kind in ("D", "L")
+                       else ["cls_w", "r_w"] if kind == "M" else [])
+        lp = {k: next(it) for k in sorted(keys)}
+        params["layers"].append(lp)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Sub-modules (single sequence [n, d]; batch handled by vmap in forward)
+
+
+def _kth_largest(x, k: int):
+    """k-th largest value of a 1-D vector, as sort + one-hot contraction.
+
+    Deliberately avoids both `lax.top_k` (lowers to a `topk` HLO op whose
+    `largest` attribute the image's XLA 0.5.1 text parser rejects) and
+    sorted-vector indexing (lowers to a batched gather this jaxlib build
+    rejects under vmap). sort + mask-multiply-sum uses only universally
+    parseable ops.
+    """
+    n = x.shape[0]
+    # stop_gradient: the threshold is a non-differentiable selection
+    # boundary, and sort's VJP is itself a batched gather (same jaxlib bug).
+    s = jnp.sort(jax.lax.stop_gradient(x))  # ascending
+    mask = (jnp.arange(n) == n - k).astype(x.dtype)
+    return (s * mask).sum()
+
+
+def _rope(cfg, x, positions):
+    # rope_scale implements position-interpolation extrapolation (YaRN-lite):
+    # positions are compressed by 1/scale before the rotary embedding.
+    pos = positions.astype(jnp.float32) / cfg.rope_scale
+    return ref.rope_ref(x, pos, cfg.rope_theta)
+
+
+def _attention_kv(cfg, lp, u, positions, delta, use_pallas: bool):
+    """Routed/dense causal MHA on normalized stream u: [n, d].
+
+    Returns (out [n, d], k [n, H, hd], v [n, H, hd]) — k/v are the exact
+    tensors a decode-time KV cache would hold (k already RoPE'd), so the
+    prefill path in decode.py shares this code instead of re-deriving it.
+    """
+    n, d = u.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = _rope(cfg, (u @ lp["wq"]).reshape(n, H, hd), positions)
+    k = _rope(cfg, (u @ lp["wk"]).reshape(n, H, hd), positions)
+    v = (u @ lp["wv"]).reshape(n, H, hd)
+    if use_pallas:
+        ctx = kernels.routed_attention(
+            q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2),
+            delta).transpose(1, 0, 2)
+    else:
+        ctx = ref.routed_attention_ref(q, k, v, delta)
+    return ctx.reshape(n, d) @ lp["wo"], k, v
+
+
+def _attention(cfg, lp, u, positions, delta, use_pallas: bool):
+    return _attention_kv(cfg, lp, u, positions, delta, use_pallas)[0]
+
+
+def _mlp(lp, x):
+    return ref.swiglu_mlp_ref(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _dtr_route(cfg, lp, u, use_pallas: bool):
+    """Router scores + hard decision; token-choice (Eq. 2) or expert-choice
+    (Appendix A1: top expert_capacity fraction by g_attn)."""
+    if use_pallas:
+        g, delta_tc = kernels.router(u, lp["r_w1"], lp["r_w2"])
+    else:
+        g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+        delta_tc = ref.route_decision_ref(g)
+    if cfg.variant == "dtr_skip":
+        return g, jnp.zeros_like(delta_tc)
+    if cfg.routing == "expert":
+        n = u.shape[0]
+        k = max(1, int(round(cfg.expert_capacity * n)))
+        thresh = _kth_largest(g[:, 0], k)
+        return g, (g[:, 0] >= thresh).astype(g.dtype)
+    return g, delta_tc
+
+
+def _layer_T(cfg, lp, x, positions, use_pallas):
+    n = x.shape[0]
+    ones = jnp.ones((n,), x.dtype)
+    u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+    h = x + _attention(cfg, lp, u, positions, ones, use_pallas)
+    y = h + _mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+    return y, {"route": ones, "g_attn": ones}
+
+
+def _layer_D(cfg, lp, x, positions, use_pallas):
+    """DTR layer (paper Fig. 2): router → {quadratic, linear} path, shared
+    W^V/W^O/MLP; soft-score output weighting (train==inference semantics)."""
+    u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+    g, delta = _dtr_route(cfg, lp, u, use_pallas)
+    attn_out = _attention(cfg, lp, u, positions, delta, use_pallas)
+    if cfg.bypass_vo:
+        byp = (kernels.bypass(u, lp["wv"], lp["wo"]) if use_pallas
+               else ref.bypass_ref(u, lp["wv"], lp["wo"]))
+    else:
+        byp = u
+    mixed = jnp.where(delta[:, None] > 0.5,
+                      g[:, 0:1] * attn_out,
+                      g[:, 1:2] * byp)
+    h = x + mixed
+    y = h + _mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+    return y, {"route": delta, "g_attn": g[:, 0]}
+
+
+def _layer_M(cfg, lp, x, positions, use_pallas, train: bool):
+    """MoD block: expert-choice top-k during training; causal classifier
+    (sigmoid(u·cls_w) > 0.5) at inference. Skipped tokens: pure residual."""
+    n = x.shape[0]
+    u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+    r = (u @ lp["r_w"])[:, 0]                      # router scalar
+    p_cls = jax.nn.sigmoid((u @ lp["cls_w"])[:, 0])  # inference classifier
+    if train:
+        k = max(1, int(round(cfg.mod_capacity * n)))
+        thresh = _kth_largest(r, k)
+        sel = (r >= thresh).astype(x.dtype)
+    else:
+        sel = (p_cls > 0.5).astype(x.dtype)
+    gate = jax.nn.sigmoid(r)                       # soft weight for gradients
+    h = x + sel[:, None] * gate[:, None] * _attention(
+        cfg, lp, u, positions, sel, use_pallas)
+    mlp_out = _mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+    y = h + sel[:, None] * gate[:, None] * mlp_out
+    return y, {"route": sel, "g_attn": gate, "mod_r": r, "mod_p": p_cls}
+
+
+def _layer_L(cfg, lp, x, positions, use_pallas, train: bool, gkey):
+    """D-LLM block: 2-layer MLP gate, Gumbel-ST sample during training,
+    deterministic threshold at inference; whole-block skip; first two
+    tokens always executed (paper's D-LLM setup)."""
+    n = x.shape[0]
+    u = ref.rmsnorm_ref(x, lp["norm1"], cfg.rmsnorm_eps)
+    g = ref.router_ref(u, lp["r_w1"], lp["r_w2"])
+    if train:
+        gumbel = -jnp.log(-jnp.log(
+            jax.random.uniform(gkey, g.shape, jnp.float32, 1e-6, 1.0 - 1e-6)))
+        zl = jnp.log(g + 1e-9) + gumbel
+        hard = (zl[:, 0] > zl[:, 1]).astype(x.dtype)
+    else:
+        hard = (g[:, 0] > g[:, 1]).astype(x.dtype)
+    forced = (positions - positions[0] < 2).astype(x.dtype)  # first 2 tokens
+    hard = jnp.maximum(hard, forced)
+    # Straight-through: hard decision forward, soft gate gradient.
+    exec_w = hard + g[:, 0] - jax.lax.stop_gradient(g[:, 0])
+    blk_attn = _attention(cfg, lp, u, positions, hard, use_pallas)
+    h = x + exec_w[:, None] * blk_attn
+    mlp_out = _mlp(lp, ref.rmsnorm_ref(h, lp["norm2"], cfg.rmsnorm_eps))
+    y = h + exec_w[:, None] * mlp_out
+    return y, {"route": hard, "g_attn": g[:, 0]}
+
+
+# --------------------------------------------------------------------------
+# Forward
+
+
+def forward_seq(cfg: ModelConfig, params: Params, tokens, *, train: bool,
+                use_pallas: bool, rng_key=None, collect_hidden: bool = False):
+    """Single-sequence forward. tokens: [n] int32 → (logits [n, V], aux).
+
+    aux: route [L, n], g_attn [L, n], plus mod/dllm extras and optionally
+    hidden [L+1, n, d] for the Fig.-1 cosine probe.
+    """
+    kinds = layer_kinds(cfg)
+    n = tokens.shape[0]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    x = params["tok_embed"][tokens]
+    routes, gattns, extras = [], [], {"mod_r": [], "mod_p": []}
+    hidden = [x] if collect_hidden else None
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    lkeys = jax.random.split(rng_key, cfg.n_layers)
+    for i, (kind, lp) in enumerate(zip(kinds, params["layers"])):
+        if kind == "T":
+            x, aux = _layer_T(cfg, lp, x, positions, use_pallas)
+        elif kind == "D":
+            x, aux = _layer_D(cfg, lp, x, positions, use_pallas)
+        elif kind == "M":
+            x, aux = _layer_M(cfg, lp, x, positions, use_pallas, train)
+            extras["mod_r"].append(aux["mod_r"])
+            extras["mod_p"].append(aux["mod_p"])
+        else:
+            x, aux = _layer_L(cfg, lp, x, positions, use_pallas, train, lkeys[i])
+        routes.append(aux["route"])
+        gattns.append(aux["g_attn"])
+        if collect_hidden:
+            hidden.append(x)
+    x = ref.rmsnorm_ref(x, params["out_norm"], cfg.rmsnorm_eps)
+    logits = x @ params["unembed"]
+    out_aux = {
+        "route": jnp.stack(routes),      # [L, n]
+        "g_attn": jnp.stack(gattns),     # [L, n]
+    }
+    if extras["mod_r"]:
+        out_aux["mod_r"] = jnp.stack(extras["mod_r"])
+        out_aux["mod_p"] = jnp.stack(extras["mod_p"])
+    if collect_hidden:
+        out_aux["hidden"] = jnp.stack(hidden)  # [L+1, n, d]
+    return logits, out_aux
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, train: bool = False,
+            use_pallas: bool = False, rng_key=None):
+    """Batched forward. tokens: [B, n] → (logits [B, n, V], aux batched)."""
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    keys = jax.random.split(rng_key, tokens.shape[0])
+    return jax.vmap(
+        lambda t, k: forward_seq(cfg, params, t, train=train,
+                                 use_pallas=use_pallas, rng_key=k)
+    )(tokens, keys)
+
+
+# --------------------------------------------------------------------------
+# Losses (paper Eq. 7 + baseline aux objectives)
+
+
+def routing_penalty(cfg: ModelConfig, aux) -> jnp.ndarray:
+    """Eq. 7 regularizer, per-token normalized (see DESIGN.md):
+    ``sum_l alpha_l * mean_i g_attn_i`` with alpha_l = f_l / sum f, alpha
+    treated as a constant (stop-grad) load weight. Only DTR layers count."""
+    kinds = layer_kinds(cfg)
+    dtr = jnp.asarray([1.0 if k == "D" else 0.0 for k in kinds])
+    route = aux["route"].mean(axis=(0, 2))   # [L] mean load per layer (batch)
+    g = aux["g_attn"].mean(axis=(0, 2))      # [L] mean attention mass
+    f = route * dtr
+    alpha = jax.lax.stop_gradient(f / (f.sum() + 1e-9))
+    return (alpha * g * dtr).sum()
+
+
+def dllm_aux_loss(cfg: ModelConfig, aux) -> jnp.ndarray:
+    """Usage-target penalty: mean_l (usage_l - Omega)^2 over D-LLM layers."""
+    kinds = layer_kinds(cfg)
+    mask = jnp.asarray([1.0 if k == "L" else 0.0 for k in kinds])
+    usage = aux["g_attn"].mean(axis=(0, 2))  # soft usage per layer
+    per = (usage - cfg.dllm_omega) ** 2 * mask
+    return per.sum() / (mask.sum() + 1e-9)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens, rng_key,
+            use_pallas: bool = False):
+    """Composite training loss. tokens: [B, n] int32.
+
+    Returns (loss, metrics dict) where metrics includes ce, aux penalty and
+    per-layer attention load (paper Fig. 5 during training).
+    """
+    logits, aux = forward(cfg, params, tokens, train=True,
+                          use_pallas=use_pallas, rng_key=rng_key)
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+
+    kinds = layer_kinds(cfg)
+    if cfg.variant.startswith("dtr"):
+        pen = cfg.lambda_reg * routing_penalty(cfg, aux)
+    elif cfg.variant == "mod":
+        # classifier BCE against the expert-choice selection
+        msel = jax.lax.stop_gradient(
+            jnp.stack([aux["route"][:, i] for i, k in enumerate(kinds) if k == "M"],
+                      axis=1))  # [B, nM, n]
+        p = jnp.clip(aux["mod_p"], 1e-6, 1 - 1e-6)  # vmap'd: already [B, nM, n]
+        pen = -(msel * jnp.log(p) + (1 - msel) * jnp.log(1 - p)).mean()
+    elif cfg.variant == "dllm":
+        pen = dllm_aux_loss(cfg, aux)
+    else:
+        pen = jnp.asarray(0.0)
+
+    loss = ce + pen
+    attn_frac = aux["route"].mean(axis=(0, 2))  # [L]
+    return loss, {"ce": ce, "penalty": pen, "attn_frac": attn_frac}

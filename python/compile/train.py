@@ -1,0 +1,81 @@
+"""L2: fused AdamW training step (paper §Training Setup) — AOT entry point.
+
+One HLO module computes: forward + backward of the composite loss (CE +
+Eq. 7 routing penalty / baseline aux), global-norm gradient clipping at
+0.1, and the AdamW update (weight decay 0.01 on matrices only). The
+learning rate is an *input* so the Rust coordinator owns the cosine/warmup
+schedule without recompiling.
+
+Hyperparameters follow the paper: AdamW, peak lr 3e-4 (driven by L3),
+weight decay 0.01, grad clip 0.1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+WEIGHT_DECAY = 0.01
+GRAD_CLIP = 0.1
+
+
+def init_opt_state(params):
+    """Adam moments, zero-initialized, same pytree as params."""
+    zeros = lambda p: jnp.zeros_like(p)
+    return jax.tree_util.tree_map(zeros, params), \
+        jax.tree_util.tree_map(zeros, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def train_step(cfg: M.ModelConfig, params, m, v, tokens, step, lr, seed):
+    """One optimizer step.
+
+    params/m/v: pytrees; tokens: [B, n] int32; step: f32 scalar (1-based,
+    for bias correction); lr: f32 scalar; seed: i32 scalar (D-LLM Gumbel
+    sampling — folded with step so every step resamples).
+
+    Returns (new_params, new_m, new_v, metrics) with metrics =
+    (loss, ce, penalty, grad_norm, attn_frac [L]).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step.astype(jnp.int32))
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, tokens, key), has_aux=True)(params)
+
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, GRAD_CLIP / (gn + 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - BETA1 ** step
+    b2c = 1.0 - BETA2 ** step
+
+    def upd(p, g, mi, vi):
+        mi = BETA1 * mi + (1 - BETA1) * g
+        vi = BETA2 * vi + (1 - BETA2) * g * g
+        mhat = mi / b1c
+        vhat = vi / b2c
+        delta = mhat / (jnp.sqrt(vhat) + EPS)
+        # decoupled weight decay on matrices only (norm gains exempt)
+        wd = WEIGHT_DECAY if p.ndim >= 2 else 0.0
+        return p - lr * (delta + wd * p), mi, vi
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    new = [upd(p, g, mi, vi) for p, g, mi, vi
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in new])
+    out_metrics = (loss, metrics["ce"], metrics["penalty"], gn,
+                   metrics["attn_frac"])
+    return new_params, new_m, new_v, out_metrics

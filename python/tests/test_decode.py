@@ -1,0 +1,148 @@
+"""Decode/prefill consistency: the serving path must match the training
+forward exactly (the paper's token-choice routing makes this possible —
+Appendix A1's argument for token-choice over expert-choice)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M, decode as D
+
+jax.config.update("jax_platform_name", "cpu")
+
+VARIANTS = ["dense", "dtr_bilayer", "dtr_skip", "mod", "dllm"]
+
+
+def setup(variant, seed=0):
+    cfg = M.make_config("xs", variant)
+    p = M.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (32,), 0,
+                              cfg.vocab_size)
+    return cfg, p, toks
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_prefill_matches_forward_logits(variant):
+    cfg, p, toks = setup(variant)
+    logits_full, _ = M.forward_seq(cfg, p, toks, train=False, use_pallas=False)
+    _, _, _, last_lg, _ = D.prefill(cfg, p, toks)
+    np.testing.assert_allclose(np.asarray(last_lg),
+                               np.asarray(logits_full[-1]), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_decode_continues_prefill(variant):
+    cfg, p, toks = setup(variant)
+    S = toks.shape[0]
+    half = S // 2
+    logits_full, aux = M.forward_seq(cfg, p, toks, train=False, use_pallas=False)
+    ck, cv, lens, _, _ = D.prefill(cfg, p, toks[:half])
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    Mx = S + 4
+    CK = jnp.zeros((L, 1, Mx, H, hd)).at[:, 0, :half].set(ck)
+    CV = jnp.zeros((L, 1, Mx, H, hd)).at[:, 0, :half].set(cv)
+    LENS = lens[:, None]
+    outs = []
+    for t in range(half, S):
+        lg, CK, CV, LENS, routed, g0 = D.decode_step(
+            cfg, p, CK, CV, LENS, toks[t:t + 1], jnp.array([t], jnp.int32))
+        outs.append(lg[0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs)),
+                               np.asarray(logits_full[half:]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_routing_matches_forward_routing():
+    cfg, p, toks = setup("dtr_bilayer")
+    S = toks.shape[0]
+    _, aux = M.forward_seq(cfg, p, toks, train=False, use_pallas=False)
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    Mx = S + 4
+    CK = jnp.zeros((L, 1, Mx, H, hd))
+    CV = jnp.zeros((L, 1, Mx, H, hd))
+    LENS = jnp.zeros((L, 1), jnp.int32)
+    for t in range(S):
+        lg, CK, CV, LENS, routed, _ = D.decode_step(
+            cfg, p, CK, CV, LENS, toks[t:t + 1], jnp.array([t], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(routed[:, 0]),
+                                      np.asarray(aux["route"][:, t]))
+
+
+def test_kv_lens_track_routing():
+    # paper Fig. 6 mechanism: per-layer cache length == #routed tokens
+    cfg, p, toks = setup("dtr_bilayer")
+    S = toks.shape[0]
+    _, aux = M.forward_seq(cfg, p, toks, train=False, use_pallas=False)
+    ck, cv, lens, _, routed = D.prefill(cfg, p, toks)
+    expect = np.asarray(aux["route"]).sum(axis=1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(lens), expect)
+    # DTR layers cache strictly fewer tokens than dense layers at init
+    kinds = M.layer_kinds(cfg)
+    for i, k in enumerate(kinds):
+        if k == "T":
+            assert int(lens[i]) == S
+
+
+def test_batched_decode_isolates_sequences():
+    # two identical sequences in different slots must produce identical
+    # logits, regardless of what the other slot does
+    cfg, p, toks = setup("dtr_bilayer")
+    L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    Mx = 16
+    B = 2
+    CK = jnp.zeros((L, B, Mx, H, hd))
+    CV = jnp.zeros((L, B, Mx, H, hd))
+    LENS = jnp.zeros((L, B), jnp.int32)
+    seq_a = toks[:8]
+    seq_b = toks[8:16]
+    # feed slot0=a, slot1=b
+    lgs = []
+    for t in range(8):
+        lg, CK, CV, LENS, _, _ = D.decode_step(
+            cfg, p, CK, CV, LENS,
+            jnp.array([seq_a[t], seq_b[t]], jnp.int32),
+            jnp.array([t, t], jnp.int32))
+        lgs.append(lg)
+    # now replay with slot1=a as well; slot0 logits must be unchanged
+    CK2 = jnp.zeros((L, B, Mx, H, hd))
+    CV2 = jnp.zeros((L, B, Mx, H, hd))
+    LENS2 = jnp.zeros((L, B), jnp.int32)
+    for t in range(8):
+        lg2, CK2, CV2, LENS2, _, _ = D.decode_step(
+            cfg, p, CK2, CV2, LENS2,
+            jnp.array([seq_a[t], seq_a[t]], jnp.int32),
+            jnp.array([t, t], jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg2[0]), np.asarray(lgs[t][0]),
+                                   rtol=1e-5, atol=1e-5)
+        # and both slots see identical inputs → identical outputs
+        np.testing.assert_allclose(np.asarray(lg2[0]), np.asarray(lg2[1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_decreases_loss():
+    from compile import train as T
+    cfg = M.make_config("xs", "dtr_bilayer")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    m, v = T.init_opt_state(params)
+    # learnable data: repeated pattern
+    base = jnp.tile(jnp.arange(16, dtype=jnp.int32), 8)[:64]
+    toks = jnp.stack([base, base])
+    losses = []
+    for s in range(1, 21):
+        params, m, v, (loss, ce, pen, gn, frac) = T.train_step(
+            cfg, params, m, v, toks, jnp.float32(s), jnp.float32(3e-3),
+            jnp.int32(0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_grad_clip_bounds_update():
+    from compile import train as T
+    cfg = M.make_config("xs", "dense")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    m, v = T.init_opt_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 256)
+    _, _, _, (_, _, _, gn, _) = T.train_step(
+        cfg, params, m, v, toks, jnp.float32(1), jnp.float32(3e-4), jnp.int32(0))
+    assert float(gn) > 0.0

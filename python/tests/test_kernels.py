@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes/dtypes/seeds; every kernel must match its ref
+within float32 tolerances across the whole sweep.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# router
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_router_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d)
+    w1 = rand(rng, d, d // 2, scale=0.1)
+    w2 = rand(rng, d // 2, 2, scale=0.1)
+    g, delta = kernels.router(x, w1, w2, block_n=32)
+    gr = ref.router_ref(x, w1, w2)
+    dr = ref.route_decision_ref(gr)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(dr))
+
+
+def test_router_scores_are_distribution():
+    rng = np.random.default_rng(0)
+    x, w1, w2 = rand(rng, 64, 32), rand(rng, 32, 16), rand(rng, 16, 2)
+    g, _ = kernels.router(x, w1, w2)
+    np.testing.assert_allclose(np.asarray(g).sum(-1), 1.0, rtol=1e-5)
+    assert (np.asarray(g) >= 0).all()
+
+
+def test_router_block_size_invariance():
+    rng = np.random.default_rng(1)
+    x, w1, w2 = rand(rng, 128, 32), rand(rng, 32, 16), rand(rng, 16, 2)
+    g32, _ = kernels.router(x, w1, w2, block_n=32)
+    g128, _ = kernels.router(x, w1, w2, block_n=128)
+    np.testing.assert_allclose(g32, g128, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bypass
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bypass_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, wv, wo = rand(rng, n, d), rand(rng, d, d, scale=0.1), rand(rng, d, d, scale=0.1)
+    out = kernels.bypass(x, wv, wo, block_n=32)
+    np.testing.assert_allclose(out, ref.bypass_ref(x, wv, wo), rtol=1e-4, atol=1e-5)
+
+
+def test_bypass_is_tokenwise():
+    # bypass must not mix tokens: changing token j leaves token i unchanged
+    rng = np.random.default_rng(2)
+    x, wv, wo = rand(rng, 64, 32), rand(rng, 32, 32), rand(rng, 32, 32)
+    out1 = np.asarray(kernels.bypass(x, wv, wo))
+    x2 = x.at[10].set(0.0)
+    out2 = np.asarray(kernels.bypass(x2, wv, wo))
+    np.testing.assert_allclose(out1[:10], out2[:10], rtol=1e-6)
+    np.testing.assert_allclose(out1[11:], out2[11:], rtol=1e-6)
+    assert not np.allclose(out1[10], out2[10])
+
+
+# ---------------------------------------------------------------------------
+# routed attention
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([64, 128]),
+    h=st.sampled_from([1, 4]),
+    hd=st.sampled_from([8, 16]),
+    p_route=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routed_attention_matches_ref(n, h, hd, p_route, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, h, n, hd) for _ in range(3))
+    delta = jnp.asarray(rng.random(n) < p_route, jnp.float32)
+    out = kernels.routed_attention(q, k, v, delta, block_q=32, block_k=32)
+    outr = ref.routed_attention_ref(
+        q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2), delta
+    ).transpose(1, 0, 2)
+    np.testing.assert_allclose(out, outr, rtol=2e-4, atol=2e-5)
+
+
+def test_dense_attention_equals_all_routed():
+    rng = np.random.default_rng(3)
+    q, k, v = (rand(rng, 2, 64, 16) for _ in range(3))
+    a = kernels.dense_attention(q, k, v, block_q=32, block_k=32)
+    b = kernels.routed_attention(q, k, v, jnp.ones((64,), jnp.float32),
+                                 block_q=32, block_k=32)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_routed_attention_is_causal():
+    # future keys must not influence a routed query
+    rng = np.random.default_rng(4)
+    q, k, v = (rand(rng, 1, 64, 8) for _ in range(3))
+    delta = jnp.ones((64,), jnp.float32)
+    out1 = np.asarray(kernels.routed_attention(q, k, v, delta, block_q=32, block_k=32))
+    k2 = k.at[:, 40:].set(0.0)
+    v2 = v.at[:, 40:].set(0.0)
+    out2 = np.asarray(kernels.routed_attention(q, k2, v2, delta, block_q=32, block_k=32))
+    np.testing.assert_allclose(out1[:, :40], out2[:, :40], rtol=1e-5, atol=1e-6)
+
+
+def test_routed_attention_masks_bypassed_keys():
+    # a bypassed token's K/V must not affect routed queries (Eq. 6)
+    rng = np.random.default_rng(5)
+    q, k, v = (rand(rng, 1, 64, 8) for _ in range(3))
+    delta = jnp.ones((64,), jnp.float32).at[7].set(0.0)
+    out1 = np.asarray(kernels.routed_attention(q, k, v, delta, block_q=32, block_k=32))
+    k2 = k.at[:, 7].set(99.0)
+    v2 = v.at[:, 7].set(99.0)
+    out2 = np.asarray(kernels.routed_attention(q, k2, v2, delta, block_q=32, block_k=32))
+    rows = [i for i in range(64) if i != 7]
+    np.testing.assert_allclose(out1[:, rows], out2[:, rows], rtol=1e-5, atol=1e-6)
+
+
+def test_block_shape_invariance():
+    rng = np.random.default_rng(6)
+    q, k, v = (rand(rng, 2, 128, 16) for _ in range(3))
+    delta = jnp.asarray(rng.integers(0, 2, 128), jnp.float32)
+    a = kernels.routed_attention(q, k, v, delta, block_q=32, block_k=64)
+    b = kernels.routed_attention(q, k, v, delta, block_q=128, block_k=32)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# rope / norms (oracle self-consistency)
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 32, 2, 16)
+    pos = jnp.arange(32)
+    y = ref.rope_ref(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(8)
+    x = rand(rng, 4, 2, 16)
+    y = ref.rope_ref(x, jnp.zeros(4, jnp.int32))
+    np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    # RoPE inner products depend only on relative offsets
+    rng = np.random.default_rng(9)
+    q = rand(rng, 8, 1, 16)
+    k = rand(rng, 8, 1, 16)
+    p1 = jnp.arange(8)
+    p2 = jnp.arange(8) + 100
+    q1, k1 = ref.rope_ref(q, p1), ref.rope_ref(k, p1)
+    q2, k2 = ref.rope_ref(q, p2), ref.rope_ref(k, p2)
+    s1 = np.einsum("qhd,khd->qk", np.asarray(q1), np.asarray(k1))
+    s2 = np.einsum("qhd,khd->qk", np.asarray(q2), np.asarray(k2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-4)
+
+
+def test_rmsnorm_unit_rms():
+    rng = np.random.default_rng(10)
+    x = rand(rng, 16, 32, scale=5.0)
+    y = np.asarray(ref.rmsnorm_ref(x, jnp.ones(32)))
+    rms = np.sqrt((y**2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

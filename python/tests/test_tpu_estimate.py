@@ -1,0 +1,67 @@
+"""Tests for the L1 TPU performance-estimation model (§Perf analytics)."""
+
+import pytest
+
+from compile.kernels import tpu_estimate as te
+
+
+def test_vmem_fits_for_shipped_block_sizes():
+    # the defaults shipped in the kernels (block 128) must fit VMEM at
+    # paper scale (d=2048, n=2048, hd=128)
+    assert te.estimate_router(2048, 2048, 128).fits_vmem
+    assert te.estimate_bypass(2048, 2048, 128).fits_vmem
+    assert te.estimate_routed_attention(2048, 16, 128, 128, 128).fits_vmem
+
+
+def test_vmem_grows_with_block():
+    a = te.estimate_routed_attention(2048, 16, 128, 64, 64)
+    b = te.estimate_routed_attention(2048, 16, 128, 512, 512)
+    assert b.vmem_bytes > a.vmem_bytes
+
+
+def test_bypass_streams_weights_at_scale():
+    # at paper scale the schedule must stream weight tiles, not hold the
+    # 2×[2048,2048] matrices resident (32 MiB > VMEM)
+    e = te.estimate_bypass(4096, 2048, 128)
+    resident = 2 * 2048 * 2048 * 4
+    assert e.vmem_bytes < resident
+    assert e.fits_vmem
+    # d=2048 aligned to MXU → full utilization proxy
+    assert e.mxu_utilization == 1.0
+    # at tiny scale the resident path is cheaper and is what ships
+    tiny = te.estimate_bypass(128, 128, 128)
+    assert tiny.vmem_bytes <= 4 * (128 * 128 + 2 * 128 * 128 + 2 * 128 * 128)
+
+
+def test_routing_reduces_attention_flops_quadratically():
+    dense = te.estimate_routed_attention(4096, 16, 128, 128, 128, routed_frac=1.0)
+    routed = te.estimate_routed_attention(4096, 16, 128, 128, 128, routed_frac=0.1)
+    assert routed.flops == pytest.approx(dense.flops * 0.01, rel=1e-6)
+    assert routed.hbm_bytes < dense.hbm_bytes
+
+
+def test_misaligned_dims_lower_mxu():
+    good = te.estimate_routed_attention(2048, 16, 128, 128, 128)
+    bad = te.estimate_routed_attention(2048, 16, 64, 128, 128)  # hd=64
+    assert bad.mxu_utilization < good.mxu_utilization
+
+
+def test_roofline_bounded_by_peak():
+    for bq in (64, 128, 256):
+        e = te.estimate_routed_attention(8192, 16, 128, bq, 128)
+        assert e.roofline_tflops() <= te.MXU_FLOPS / 1e12 + 1e-9
+
+
+def test_sweep_prefers_fitting_schedules():
+    rows = te.sweep_block_sizes()
+    fits = [e.fits_vmem for _, _, e in rows]
+    # all fitting schedules rank before non-fitting ones
+    first_nonfit = fits.index(False) if False in fits else len(fits)
+    assert all(fits[:first_nonfit])
+    assert not any(fits[first_nonfit:])
+
+
+def test_bypass_is_compute_bound_at_scale():
+    # the point of fusing x·W^V·W^O: stays in the MXU-bound regime
+    e = te.estimate_bypass(4096, 2048, 256)
+    assert e.arithmetic_intensity > 100

@@ -1,0 +1,375 @@
+//! Typed configuration: model presets, layer layouts, train/serve settings.
+//!
+//! Mirrors `python/compile/model.py` exactly — `layer_kinds` here and
+//! `layer_kinds` there must agree (tested in `rust/tests/` against the
+//! manifest, which records the Python-side layout per artifact).
+
+use crate::util::json::Json;
+
+/// Which block occupies a layer slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Dense transformer layer (full attention + MLP for every token).
+    Dense,
+    /// DTRNet layer: router → quadratic (attention) or linear (bypass) path.
+    Dtr,
+    /// Mixture-of-Depths block (expert-choice top-k; skipped = residual).
+    Mod,
+    /// D-LLM block (token-choice whole-block skip).
+    Dllm,
+}
+
+impl LayerKind {
+    pub fn letter(self) -> char {
+        match self {
+            LayerKind::Dense => 'T',
+            LayerKind::Dtr => 'D',
+            LayerKind::Mod => 'M',
+            LayerKind::Dllm => 'L',
+        }
+    }
+}
+
+/// Architecture variant (paper Tables 1/3/4/5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Dense,
+    DtrBilayer,
+    DtrTrilayer,
+    DtrLaterhalf,
+    Dtr6T,
+    DtrSkip,
+    Mod,
+    Dllm,
+}
+
+impl Variant {
+    pub fn from_str(s: &str) -> Option<Variant> {
+        Some(match s {
+            "dense" => Variant::Dense,
+            "dtr_bilayer" => Variant::DtrBilayer,
+            "dtr_trilayer" => Variant::DtrTrilayer,
+            "dtr_laterhalf" => Variant::DtrLaterhalf,
+            "dtr_6t" => Variant::Dtr6T,
+            "dtr_skip" => Variant::DtrSkip,
+            "mod" => Variant::Mod,
+            "dllm" => Variant::Dllm,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Variant::Dense => "dense",
+            Variant::DtrBilayer => "dtr_bilayer",
+            Variant::DtrTrilayer => "dtr_trilayer",
+            Variant::DtrLaterhalf => "dtr_laterhalf",
+            Variant::Dtr6T => "dtr_6t",
+            Variant::DtrSkip => "dtr_skip",
+            Variant::Mod => "mod",
+            Variant::Dllm => "dllm",
+        }
+    }
+
+    pub fn is_dtr(self) -> bool {
+        matches!(
+            self,
+            Variant::DtrBilayer
+                | Variant::DtrTrilayer
+                | Variant::DtrLaterhalf
+                | Variant::Dtr6T
+                | Variant::DtrSkip
+        )
+    }
+}
+
+/// Model hyperparameters (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub variant: Variant,
+    /// Expected attention-routing fraction for DTR layers after training
+    /// (paper: ~0.10). Used by the analytical FLOPs/memory models; measured
+    /// values from artifacts override it where available.
+    pub dtr_attn_frac: f64,
+    pub mod_capacity: f64,
+    pub dllm_omega: f64,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str, variant: Variant) -> ModelConfig {
+        let (vocab, d, l, h, ff, seq) = match name {
+            "xs" => (256, 64, 4, 4, 176, 64),
+            "tiny" => (256, 128, 6, 4, 352, 128),
+            "small" => (256, 256, 8, 8, 704, 256),
+            // Paper-scale configs (config-only on this testbed; the
+            // analytical FLOPs/memory models run at these scales).
+            "smollm-360m" => (32000, 960, 32, 15, 2560, 2048),
+            "smollm-1b3" => (32000, 2048, 24, 32, 5632, 2048),
+            other => panic!("unknown preset {other:?}"),
+        };
+        ModelConfig {
+            name: name.to_string(),
+            vocab_size: vocab,
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: ff,
+            max_seq: seq,
+            variant,
+            dtr_attn_frac: 0.10,
+            mod_capacity: 0.7,
+            dllm_omega: 0.85,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-layer block kinds — MUST match python `model.layer_kinds`.
+    pub fn layer_kinds(&self) -> Vec<LayerKind> {
+        let l = self.n_layers;
+        let mut kinds: Vec<LayerKind> = match self.variant {
+            Variant::Dense => vec![LayerKind::Dense; l],
+            Variant::DtrBilayer | Variant::DtrSkip => (0..l)
+                .map(|i| {
+                    if i % 2 == 1 {
+                        LayerKind::Dtr
+                    } else {
+                        LayerKind::Dense
+                    }
+                })
+                .collect(),
+            Variant::DtrTrilayer => (0..l)
+                .map(|i| {
+                    if i % 3 == 0 {
+                        LayerKind::Dense
+                    } else {
+                        LayerKind::Dtr
+                    }
+                })
+                .collect(),
+            Variant::DtrLaterhalf => (0..l)
+                .map(|i| {
+                    if i < l / 2 {
+                        LayerKind::Dense
+                    } else {
+                        LayerKind::Dtr
+                    }
+                })
+                .collect(),
+            Variant::Dtr6T => {
+                let mut k = vec![LayerKind::Dtr; l];
+                for a in [0, 1, l / 2 - 1, l / 2, l - 2, l - 1] {
+                    k[a] = LayerKind::Dense;
+                }
+                k
+            }
+            Variant::Mod => (0..l)
+                .map(|i| {
+                    if i % 2 == 1 {
+                        LayerKind::Mod
+                    } else {
+                        LayerKind::Dense
+                    }
+                })
+                .collect(),
+            Variant::Dllm => (0..l)
+                .map(|i| if i < 2 { LayerKind::Dense } else { LayerKind::Dllm })
+                .collect(),
+        };
+        kinds[0] = LayerKind::Dense;
+        kinds[l - 1] = LayerKind::Dense;
+        // python applies the first/last override AFTER the pattern too,
+        // except for mod/dllm whose kinds[0] is already dense; keep exact
+        // parity by re-applying unconditionally (matches model.py).
+        if self.variant == Variant::Mod || self.variant == Variant::Dllm {
+            kinds[0] = LayerKind::Dense;
+            kinds[l - 1] = LayerKind::Dense;
+        }
+        kinds
+    }
+
+    pub fn layout_string(&self) -> String {
+        self.layer_kinds().iter().map(|k| k.letter()).collect()
+    }
+
+    /// Expected fraction of tokens routed through attention at layer `i`
+    /// (1.0 for dense layers). Drives the analytical models.
+    pub fn attn_frac(&self, i: usize) -> f64 {
+        match self.layer_kinds()[i] {
+            LayerKind::Dense => 1.0,
+            LayerKind::Dtr => {
+                if self.variant == Variant::DtrSkip {
+                    0.0
+                } else {
+                    self.dtr_attn_frac
+                }
+            }
+            LayerKind::Mod => self.mod_capacity,
+            LayerKind::Dllm => self.dllm_omega,
+        }
+    }
+
+    /// Parameter count (exact, mirrors init_params shapes).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let mut n = self.vocab_size * d * 2 + d; // embed + unembed + out_norm
+        for k in self.layer_kinds() {
+            n += 2 * d; // norms
+            n += 4 * d * d; // wq wk wv wo
+            n += 3 * d * ff; // gate up down
+            match k {
+                LayerKind::Dtr | LayerKind::Dllm => n += d * (d / 2) + (d / 2) * 2,
+                LayerKind::Mod => n += 2 * d,
+                LayerKind::Dense => {}
+            }
+        }
+        n
+    }
+
+    pub fn from_manifest(cfg: &Json) -> ModelConfig {
+        let variant = Variant::from_str(cfg.get("variant").and_then(|v| v.as_str()).unwrap())
+            .expect("bad variant in manifest");
+        ModelConfig {
+            name: cfg
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("custom")
+                .to_string(),
+            vocab_size: cfg.get("vocab_size").and_then(|v| v.as_usize()).unwrap(),
+            d_model: cfg.get("d_model").and_then(|v| v.as_usize()).unwrap(),
+            n_layers: cfg.get("n_layers").and_then(|v| v.as_usize()).unwrap(),
+            n_heads: cfg.get("n_heads").and_then(|v| v.as_usize()).unwrap(),
+            d_ff: cfg.get("d_ff").and_then(|v| v.as_usize()).unwrap(),
+            max_seq: cfg.get("max_seq").and_then(|v| v.as_usize()).unwrap(),
+            variant,
+            dtr_attn_frac: 0.10,
+            mod_capacity: cfg
+                .get("mod_capacity")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.7),
+            dllm_omega: cfg.get("dllm_omega").and_then(|v| v.as_f64()).unwrap_or(0.85),
+        }
+    }
+}
+
+/// Training-run settings (the L3 trainer owns the schedule).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub peak_lr: f64,
+    pub warmup_ratio: f64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            steps: 200,
+            batch: 4,
+            seq: 128,
+            peak_lr: 3e-4,
+            warmup_ratio: 0.1,
+            seed: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Cosine schedule with linear warmup (paper §Training Setup).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let warmup = (self.steps as f64 * self.warmup_ratio).max(1.0);
+        let s = step as f64;
+        if s < warmup {
+            self.peak_lr * s / warmup
+        } else {
+            let t = (s - warmup) / (self.steps as f64 - warmup).max(1.0);
+            0.5 * self.peak_lr * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos())
+        }
+    }
+}
+
+/// Serving-engine settings.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_kv: usize,
+    pub kv_page_size: usize,
+    pub max_seq_len: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 4,
+            max_kv: 512,
+            kv_page_size: 16,
+            max_seq_len: 512,
+            queue_depth: 256,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_match_paper_patterns() {
+        let c = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        assert_eq!(c.layout_string(), "TDTDTT"); // L=6, first/last forced T
+        let c = ModelConfig::preset("tiny", Variant::DtrTrilayer);
+        assert_eq!(c.layout_string(), "TDDTDT");
+        let c = ModelConfig::preset("tiny", Variant::Dllm);
+        assert_eq!(c.layout_string(), "TTLLLT");
+        let c = ModelConfig::preset("tiny", Variant::Mod);
+        assert_eq!(c.layout_string(), "TMTMTT");
+    }
+
+    #[test]
+    fn param_count_plausible() {
+        let c = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        let n = c.param_count();
+        assert!(n > 1_000_000 && n < 3_000_000, "n={n}");
+        // dense variant has fewer params (no routers)
+        let d = ModelConfig::preset("tiny", Variant::Dense);
+        assert!(d.param_count() < n);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let t = TrainConfig {
+            steps: 100,
+            peak_lr: 1.0,
+            warmup_ratio: 0.1,
+            ..Default::default()
+        };
+        assert!(t.lr_at(0) < 1e-9);
+        assert!((t.lr_at(10) - 1.0).abs() < 1e-9);
+        assert!(t.lr_at(55) < 1.0);
+        assert!(t.lr_at(100) < 0.01);
+    }
+
+    #[test]
+    fn attn_frac_by_kind() {
+        let c = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        assert_eq!(c.attn_frac(0), 1.0);
+        assert!((c.attn_frac(1) - 0.10).abs() < 1e-12);
+        let s = ModelConfig::preset("tiny", Variant::DtrSkip);
+        assert_eq!(s.attn_frac(1), 0.0);
+    }
+}

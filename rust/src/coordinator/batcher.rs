@@ -1,0 +1,211 @@
+//! Continuous batching: request queue + decode-slot management.
+//!
+//! The decode artifact has a fixed batch width B (slots). The batcher
+//! admits queued requests into free slots between decode steps — the
+//! vLLM-style iteration-level scheduling the paper's serving analysis
+//! assumes — and recycles slots on completion. Inactive slots decode a pad
+//! token whose outputs are discarded.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub arrival: Instant,
+}
+
+/// Lifecycle state of an admitted request.
+#[derive(Debug)]
+pub struct RequestState {
+    pub req: Request,
+    pub slot: usize,
+    /// Tokens generated so far (excludes prompt).
+    pub generated: Vec<i32>,
+    /// Next prompt token index still to be fed (prefill-by-decode).
+    pub prompt_cursor: usize,
+    /// Absolute position of the next token fed to the model.
+    pub position: usize,
+    pub first_token_at: Option<Instant>,
+    pub admitted_at: Instant,
+}
+
+impl RequestState {
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_cursor < self.req.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.req.max_new_tokens
+    }
+
+    /// The token to feed at the next decode step.
+    pub fn next_input(&self) -> i32 {
+        if self.in_prefill() {
+            self.req.prompt[self.prompt_cursor]
+        } else {
+            *self.generated.last().unwrap_or(&0)
+        }
+    }
+}
+
+/// Slot-based continuous batcher.
+pub struct Batcher {
+    n_slots: usize,
+    queue: VecDeque<Request>,
+    pub active: Vec<Option<RequestState>>,
+    pub completed: Vec<RequestState>,
+    max_queue: usize,
+}
+
+impl Batcher {
+    pub fn new(n_slots: usize, max_queue: usize) -> Batcher {
+        Batcher {
+            n_slots,
+            queue: VecDeque::new(),
+            active: (0..n_slots).map(|_| None).collect(),
+            completed: Vec::new(),
+            max_queue,
+        }
+    }
+
+    /// Enqueue; returns false if the queue is full (backpressure).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.max_queue {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Fill free slots from the queue; returns newly admitted slot ids.
+    pub fn admit(&mut self) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        for slot in 0..self.n_slots {
+            if self.active[slot].is_none() {
+                if let Some(req) = self.queue.pop_front() {
+                    self.active[slot] = Some(RequestState {
+                        req,
+                        slot,
+                        generated: Vec::new(),
+                        prompt_cursor: 0,
+                        position: 0,
+                        first_token_at: None,
+                        admitted_at: Instant::now(),
+                    });
+                    admitted.push(slot);
+                }
+            }
+        }
+        admitted
+    }
+
+    /// Apply one decode-step result for `slot`: the sampled token (only
+    /// meaningful when the slot finished prefill). Advances cursors;
+    /// retires the request when done. Returns true if the slot completed.
+    pub fn advance(&mut self, slot: usize, sampled: i32, now: Instant) -> bool {
+        let Some(st) = self.active[slot].as_mut() else {
+            return false;
+        };
+        if st.in_prefill() {
+            st.prompt_cursor += 1;
+            st.position += 1;
+            // Transition: the step that consumed the last prompt token also
+            // produced the first generated token.
+            if !st.in_prefill() {
+                st.first_token_at = Some(now);
+                st.generated.push(sampled);
+            }
+        } else {
+            st.generated.push(sampled);
+            st.position += 1;
+        }
+        if st.done() {
+            let st = self.active[slot].take().unwrap();
+            self.completed.push(st);
+            return true;
+        }
+        false
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.n_active() == 0 && self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt_len as i32).collect(),
+            max_new_tokens: gen,
+            temperature: 0.0,
+            arrival: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn admits_into_free_slots() {
+        let mut b = Batcher::new(2, 10);
+        for i in 0..3 {
+            assert!(b.submit(req(i, 4, 2)));
+        }
+        let admitted = b.admit();
+        assert_eq!(admitted, vec![0, 1]);
+        assert_eq!(b.n_active(), 2);
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn lifecycle_prefill_then_generate() {
+        let mut b = Batcher::new(1, 10);
+        b.submit(req(1, 3, 2));
+        b.admit();
+        let now = Instant::now();
+        // 3 prefill steps; last one yields first generated token
+        assert!(!b.advance(0, 100, now));
+        assert!(!b.advance(0, 101, now));
+        assert!(!b.advance(0, 102, now)); // first gen token
+        // one more generated token → done
+        assert!(b.advance(0, 103, now));
+        assert_eq!(b.completed.len(), 1);
+        assert_eq!(b.completed[0].generated, vec![102, 103]);
+        assert!(b.active[0].is_none());
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut b = Batcher::new(1, 2);
+        assert!(b.submit(req(1, 1, 1)));
+        assert!(b.submit(req(2, 1, 1)));
+        assert!(!b.submit(req(3, 1, 1)));
+    }
+
+    #[test]
+    fn slot_recycled_after_completion() {
+        let mut b = Batcher::new(1, 10);
+        b.submit(req(1, 1, 1));
+        b.submit(req(2, 1, 1));
+        b.admit();
+        let now = Instant::now();
+        assert!(b.advance(0, 7, now)); // prompt len 1 → this is the gen token...
+        b.admit();
+        assert_eq!(b.n_active(), 1);
+        assert_eq!(b.active[0].as_ref().unwrap().req.id, 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 coordinator — the paper-facing system.
+//!
+//! * [`trainer`] — training orchestrator: drives the fused `train_step`
+//!   artifact, owns the LR schedule and logging, evaluates checkpoints.
+//! * [`kv_cache`] — routing-aware paged KV-cache pool: pages are allocated
+//!   per (sequence, layer) only when that layer routed the token to
+//!   attention — the mechanism behind the paper's Fig. 6 memory savings.
+//! * [`batcher`] — continuous batching: slot assignment, admission,
+//!   completion recycling.
+//! * [`serve`] — the serving engine: decode loop over the batched decode
+//!   artifact, sampling, routing-stats collection, latency metrics.
+//! * [`stats`] — routing statistics (Fig. 5 telemetry).
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod sampling;
+pub mod serve;
+pub mod stats;
+pub mod trainer;
+pub mod workload;
+
+pub use batcher::{Batcher, Request, RequestState};
+pub use kv_cache::{KvPool, PoolStats};
+pub use sampling::{sample, SamplingParams};
+pub use serve::{ServeEngine, ServeReport};
+pub use stats::RoutingStats;
+pub use trainer::{TrainReport, Trainer};
+pub use workload::{generate as generate_workload, WorkloadSpec};

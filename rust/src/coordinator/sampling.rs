@@ -1,0 +1,227 @@
+//! Token sampling policies for the serving engine.
+//!
+//! Greedy, temperature, top-k, nucleus (top-p), and repetition penalty —
+//! the standard decode-time controls a deployable engine needs. All
+//! sampling is driven by the engine's seeded [`Rng`] so serving runs are
+//! reproducible.
+
+use crate::util::rng::Rng;
+
+/// Decode-time sampling configuration (per request).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// 0 = disabled; otherwise keep only the k highest logits.
+    pub top_k: usize,
+    /// 1.0 = disabled; otherwise nucleus sampling mass.
+    pub top_p: f32,
+    /// 1.0 = disabled; >1 divides logits of already-generated tokens.
+    pub repetition_penalty: f32,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+        }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams::default()
+    }
+
+    pub fn temperature(t: f32) -> SamplingParams {
+        SamplingParams {
+            temperature: t,
+            ..Default::default()
+        }
+    }
+}
+
+/// Sample one token id from `logits` under `params`. `history` feeds the
+/// repetition penalty (pass `&[]` to disable).
+pub fn sample(logits: &[f32], params: &SamplingParams, history: &[i32], rng: &mut Rng) -> i32 {
+    let v = logits.len();
+    let mut work: Vec<f32> = logits.to_vec();
+
+    // repetition penalty (CTRL-style: divide positive logits, multiply
+    // negative ones, for every token already generated)
+    if params.repetition_penalty != 1.0 {
+        for &t in history {
+            let t = t as usize;
+            if t < v {
+                if work[t] > 0.0 {
+                    work[t] /= params.repetition_penalty;
+                } else {
+                    work[t] *= params.repetition_penalty;
+                }
+            }
+        }
+    }
+
+    if params.temperature <= 0.0 {
+        return argmax(&work) as i32;
+    }
+    for x in work.iter_mut() {
+        *x /= params.temperature;
+    }
+
+    // top-k filter
+    let mut candidates: Vec<usize> = (0..v).collect();
+    if params.top_k > 0 && params.top_k < v {
+        candidates.sort_by(|&a, &b| work[b].partial_cmp(&work[a]).unwrap());
+        candidates.truncate(params.top_k);
+    }
+
+    // softmax over candidates
+    let m = candidates
+        .iter()
+        .map(|&i| work[i])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<(usize, f64)> = candidates
+        .iter()
+        .map(|&i| (i, ((work[i] - m) as f64).exp()))
+        .collect();
+    let z: f64 = probs.iter().map(|(_, p)| p).sum();
+    for (_, p) in probs.iter_mut() {
+        *p /= z;
+    }
+
+    // nucleus filter: keep the smallest prefix (by prob) reaching top_p
+    if params.top_p < 1.0 {
+        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut acc = 0.0;
+        let mut cut = probs.len();
+        for (i, (_, p)) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= params.top_p as f64 {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        let z: f64 = probs.iter().map(|(_, p)| p).sum();
+        for (_, p) in probs.iter_mut() {
+            *p /= z;
+        }
+    }
+
+    // inverse-CDF draw
+    let mut u = rng.f64();
+    for (i, p) in &probs {
+        u -= p;
+        if u <= 0.0 {
+            return *i as i32;
+        }
+    }
+    probs.last().map(|(i, _)| *i as i32).unwrap_or(0)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn peaked(v: usize, peak: usize) -> Vec<f32> {
+        let mut l = vec![0.0f32; v];
+        l[peak] = 8.0;
+        l
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = peaked(16, 5);
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &[], &mut rng), 5);
+    }
+
+    #[test]
+    fn temperature_sampling_mostly_picks_peak() {
+        let mut rng = Rng::new(1);
+        let logits = peaked(16, 3);
+        let p = SamplingParams::temperature(1.0);
+        let hits = (0..200)
+            .filter(|_| sample(&logits, &p, &[], &mut rng) == 3)
+            .count();
+        assert!(hits > 150, "hits={hits}");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(2);
+        let mut logits = vec![0.0f32; 16];
+        logits[0] = 3.0;
+        logits[1] = 2.9;
+        let p = SamplingParams {
+            temperature: 2.0,
+            top_k: 2,
+            ..Default::default()
+        };
+        for _ in 0..100 {
+            let t = sample(&logits, &p, &[], &mut rng);
+            assert!(t == 0 || t == 1, "got {t}");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut rng = Rng::new(3);
+        let mut logits = vec![-5.0f32; 64];
+        logits[7] = 5.0; // ~all mass on 7
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_p: 0.5,
+            ..Default::default()
+        };
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, &p, &[], &mut rng), 7);
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_discourages_history() {
+        let mut rng = Rng::new(4);
+        let mut logits = vec![0.0f32; 8];
+        logits[2] = 1.0;
+        logits[5] = 0.9;
+        let p = SamplingParams {
+            temperature: 0.0,
+            repetition_penalty: 3.0,
+            ..Default::default()
+        };
+        // without history, 2 wins; with 2 in history, 5 wins
+        assert_eq!(sample(&logits, &p, &[], &mut rng), 2);
+        assert_eq!(sample(&logits, &p, &[2], &mut rng), 5);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 8,
+            top_p: 0.9,
+            ..Default::default()
+        };
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| sample(&logits, &p, &[], &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

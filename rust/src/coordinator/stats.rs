@@ -1,0 +1,108 @@
+//! Routing statistics collector (paper Fig. 5 telemetry).
+//!
+//! Accumulates, per layer, how many tokens were routed to attention vs
+//! bypassed — fed by the serving engine (decode `routed` outputs) and the
+//! eval harness (fwd `route` outputs).
+
+use crate::util::json::Json;
+
+/// Per-layer routing counters.
+#[derive(Debug, Clone)]
+pub struct RoutingStats {
+    pub attended: Vec<u64>,
+    pub total: Vec<u64>,
+}
+
+impl RoutingStats {
+    pub fn new(n_layers: usize) -> RoutingStats {
+        RoutingStats {
+            attended: vec![0; n_layers],
+            total: vec![0; n_layers],
+        }
+    }
+
+    /// Record a batch of routing decisions: `routed[l][b]`-style flat input
+    /// of layer-major decisions for `n` tokens.
+    pub fn record_layer(&mut self, layer: usize, attended: u64, total: u64) {
+        self.attended[layer] += attended;
+        self.total[layer] += total;
+    }
+
+    /// Record from a fwd artifact `route` tensor laid out [B, L, n].
+    pub fn record_route_tensor(&mut self, route: &[f32], batch: usize, n_layers: usize, n: usize) {
+        assert_eq!(route.len(), batch * n_layers * n);
+        for b in 0..batch {
+            for l in 0..n_layers {
+                let off = (b * n_layers + l) * n;
+                let att = route[off..off + n].iter().filter(|&&x| x > 0.5).count();
+                self.record_layer(l, att as u64, n as u64);
+            }
+        }
+    }
+
+    /// Fraction of tokens routed to attention at each layer (Fig. 5 y-axis).
+    pub fn fractions(&self) -> Vec<f64> {
+        self.attended
+            .iter()
+            .zip(&self.total)
+            .map(|(&a, &t)| if t == 0 { 0.0 } else { a as f64 / t as f64 })
+            .collect()
+    }
+
+    /// Mean attention fraction across layers of a given subset (e.g. only
+    /// DTR layers — the paper's "~10% of tokens" number).
+    pub fn mean_fraction(&self, layers: &[usize]) -> f64 {
+        if layers.is_empty() {
+            return 0.0;
+        }
+        layers.iter().map(|&l| self.fractions()[l]).sum::<f64>() / layers.len() as f64
+    }
+
+    pub fn merge(&mut self, other: &RoutingStats) {
+        for l in 0..self.attended.len() {
+            self.attended[l] += other.attended[l];
+            self.total[l] += other.total[l];
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("fractions", Json::arr_f64(&self.fractions())),
+            (
+                "attended",
+                Json::Arr(self.attended.iter().map(|&a| Json::Num(a as f64)).collect()),
+            ),
+            (
+                "total",
+                Json::Arr(self.total.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_from_tensor() {
+        let mut s = RoutingStats::new(2);
+        // B=1, L=2, n=4: layer0 all attended, layer1 one of four.
+        let route = vec![1., 1., 1., 1., 1., 0., 0., 0.];
+        s.record_route_tensor(&route, 1, 2, 4);
+        let f = s.fractions();
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[1], 0.25);
+        assert_eq!(s.mean_fraction(&[1]), 0.25);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RoutingStats::new(1);
+        a.record_layer(0, 1, 4);
+        let mut b = RoutingStats::new(1);
+        b.record_layer(0, 3, 4);
+        a.merge(&b);
+        assert_eq!(a.fractions()[0], 0.5);
+    }
+}

@@ -1,0 +1,246 @@
+//! Training orchestrator: drives the fused `train_step` artifact.
+//!
+//! Owns everything the paper's §Training Setup puts host-side: the cosine
+//! LR schedule with warmup, data batching, seeding, step loop, metric
+//! logging (JSONL) and periodic held-out evaluation. Parameters and Adam
+//! moments stay as XLA literals between steps (no host round-trip of the
+//! weights on the hot path).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::metrics::JsonlWriter;
+use crate::runtime::{Engine, Executable, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Outcome of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub tag: String,
+    pub steps: usize,
+    pub losses: Vec<f64>,
+    pub ce_losses: Vec<f64>,
+    pub penalties: Vec<f64>,
+    pub final_loss: f64,
+    /// Mean attention fraction per layer over the last 10% of steps.
+    pub attn_frac: Vec<f64>,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("tag", Json::Str(self.tag.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("attn_frac", Json::arr_f64(&self.attn_frac)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("losses", Json::arr_f64(&self.losses)),
+        ])
+    }
+}
+
+/// Drives `{tag}_train_init` + `{tag}_train_step` artifacts.
+pub struct Trainer {
+    tag: String,
+    step_exe: Arc<Executable>,
+    /// params ++ m ++ v, in manifest flat order, resident as literals.
+    state: Vec<xla::Literal>,
+    nparams: usize,
+    pub batch: usize,
+    pub seq: usize,
+    n_layers: usize,
+}
+
+impl Trainer {
+    /// Initialize from artifacts: runs `{tag}_train_init(seed)`.
+    pub fn new(engine: &Engine, tag: &str, seed: i32) -> Result<Trainer> {
+        let init = engine
+            .load(&format!("{tag}_train_init"))
+            .with_context(|| format!("load {tag}_train_init"))?;
+        let step_exe = engine.load(&format!("{tag}_train_step"))?;
+        let spec = &step_exe.spec;
+        let nparams = spec.nparams.context("train_step missing nparams")?;
+        let batch = spec.batch.context("train_step missing batch")?;
+        let seq = spec.seq.context("train_step missing seq")?;
+        let state = init.call_literals(&[Tensor::scalar_i32(seed).to_literal()?])?;
+        anyhow::ensure!(
+            state.len() == 3 * nparams,
+            "train_init returned {} leaves, want {}",
+            state.len(),
+            3 * nparams
+        );
+        let n_layers = spec.config.n_layers;
+        Ok(Trainer {
+            tag: tag.to_string(),
+            step_exe,
+            state,
+            nparams,
+            batch,
+            seq,
+            n_layers,
+        })
+    }
+
+    /// One optimizer step on `tokens` ([batch*seq] i32, row-major).
+    /// Returns (loss, ce, penalty, grad_norm, attn_frac).
+    pub fn step(
+        &mut self,
+        tokens: &[i32],
+        step_no: usize,
+        lr: f64,
+        seed: i32,
+    ) -> Result<(f64, f64, f64, f64, Vec<f64>)> {
+        anyhow::ensure!(tokens.len() == self.batch * self.seq);
+        let tok = Tensor::i32(vec![self.batch, self.seq], tokens.to_vec()).to_literal()?;
+        let step_lit = Tensor::scalar_f32(step_no as f32).to_literal()?;
+        let lr_lit = Tensor::scalar_f32(lr as f32).to_literal()?;
+        let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
+
+        // state ++ [tokens, step, lr, seed] — literals are borrowed by
+        // execute, so pass references without cloning weights.
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&tok);
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&seed_lit);
+        let mut outs = self.step_exe.call_literals_ref(&inputs)?;
+
+        // Outputs: 3*nparams state ++ [loss, ce, penalty, gnorm, attn_frac].
+        anyhow::ensure!(outs.len() == 3 * self.nparams + 5);
+        let metrics = outs.split_off(3 * self.nparams);
+        self.state = outs;
+        let loss = Tensor::from_literal(&metrics[0])?.scalar() as f64;
+        let ce = Tensor::from_literal(&metrics[1])?.scalar() as f64;
+        let pen = Tensor::from_literal(&metrics[2])?.scalar() as f64;
+        let gnorm = Tensor::from_literal(&metrics[3])?.scalar() as f64;
+        let frac = Tensor::from_literal(&metrics[4])?
+            .as_f32()
+            .iter()
+            .map(|&f| f as f64)
+            .collect();
+        Ok((loss, ce, pen, gnorm, frac))
+    }
+
+    /// Full training loop per `TrainConfig` over `data`.
+    pub fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &Dataset,
+        log: Option<&JsonlWriter>,
+    ) -> Result<TrainReport> {
+        let mut rng = Rng::new(cfg.seed);
+        let t0 = Instant::now();
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut ces = Vec::with_capacity(cfg.steps);
+        let mut pens = Vec::with_capacity(cfg.steps);
+        let mut fracs_tail: Vec<Vec<f64>> = Vec::new();
+        let tail_from = cfg.steps - (cfg.steps / 10).max(1);
+        for s in 1..=cfg.steps {
+            let tokens = data.sample_batch(&mut rng, self.batch);
+            let lr = cfg.lr_at(s);
+            let (loss, ce, pen, gnorm, frac) =
+                self.step(&tokens, s, lr, cfg.seed as i32)?;
+            losses.push(loss);
+            ces.push(ce);
+            pens.push(pen);
+            if s >= tail_from {
+                fracs_tail.push(frac.clone());
+            }
+            if s % cfg.log_every == 0 || s == cfg.steps {
+                println!(
+                    "[train {}] step {s}/{} loss {loss:.4} ce {ce:.4} pen {pen:.5} \
+                     gnorm {gnorm:.3} lr {lr:.2e} frac {:?}",
+                    self.tag,
+                    cfg.steps,
+                    frac.iter().map(|f| (f * 100.0).round() / 100.0).collect::<Vec<_>>()
+                );
+            }
+            if let Some(w) = log {
+                w.write(&Json::from_pairs(vec![
+                    ("step", Json::Num(s as f64)),
+                    ("loss", Json::Num(loss)),
+                    ("ce", Json::Num(ce)),
+                    ("penalty", Json::Num(pen)),
+                    ("grad_norm", Json::Num(gnorm)),
+                    ("lr", Json::Num(lr)),
+                    ("attn_frac", Json::arr_f64(&frac)),
+                ]));
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut attn_frac = vec![0.0; self.n_layers];
+        for f in &fracs_tail {
+            for (i, v) in f.iter().enumerate() {
+                attn_frac[i] += v / fracs_tail.len() as f64;
+            }
+        }
+        Ok(TrainReport {
+            tag: self.tag.clone(),
+            steps: cfg.steps,
+            final_loss: *losses.last().unwrap_or(&f64::NAN),
+            losses,
+            ce_losses: ces,
+            penalties: pens,
+            attn_frac,
+            wall_s: wall,
+            tokens_per_s: (cfg.steps * self.batch * self.seq) as f64 / wall,
+        })
+    }
+
+    /// The current parameter literals (flat manifest order) — feed these to
+    /// fwd/decode artifacts of the same tag for evaluation/serving.
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.state[..self.nparams]
+    }
+
+    /// Clone parameters out (literal deep copy via host roundtrip).
+    pub fn export_params(&self) -> Result<Vec<Tensor>> {
+        self.state[..self.nparams]
+            .iter()
+            .map(Tensor::from_literal)
+            .collect()
+    }
+
+    /// Save trained parameters to a DTCK checkpoint (manifest-validated).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let ck = crate::runtime::Checkpoint::from_literals(
+            &self.step_exe.spec.params,
+            &self.state[..self.nparams],
+        )?;
+        ck.save(path)?;
+        println!("[ckpt] saved {} tensors to {}", ck.entries.len(), path.display());
+        Ok(())
+    }
+
+    /// Restore parameters from a checkpoint (Adam moments reset to zero —
+    /// matching the paper's from-scratch pretraining setup, checkpoints
+    /// are for train→serve handoff, not resume).
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let ck = crate::runtime::Checkpoint::load(path)?;
+        let lits = ck.to_literals(&self.step_exe.spec.params)?;
+        for (i, l) in lits.into_iter().enumerate() {
+            self.state[i] = l;
+        }
+        Ok(())
+    }
+}
+
+/// Load checkpointed parameters as literals for a given artifact's layout
+/// (serving-side handoff: `ServeEngine::new(engine, artifact, params, …)`).
+pub fn load_params_for(
+    engine: &Engine,
+    artifact: &str,
+    path: &std::path::Path,
+) -> Result<Vec<xla::Literal>> {
+    let exe = engine.load(artifact)?;
+    let ck = crate::runtime::Checkpoint::load(path)?;
+    ck.to_literals(&exe.spec.params)
+}

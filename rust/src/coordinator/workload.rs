@@ -1,0 +1,129 @@
+//! Serving workload generation: request arrival processes + length
+//! distributions for throughput/latency benchmarking.
+//!
+//! Models the standard serving-benchmark shape (Poisson arrivals,
+//! heavy-tailed prompt/output lengths) so `coordinator_throughput` and the
+//! serving examples exercise realistic queueing rather than lockstep
+//! batches. Deterministic per seed.
+
+use std::time::Instant;
+
+use super::batcher::Request;
+use crate::util::rng::Rng;
+
+/// Workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    /// Mean requests/second of the Poisson arrival process.
+    pub arrival_rate: f64,
+    pub prompt_len_mean: usize,
+    pub prompt_len_max: usize,
+    pub gen_len_mean: usize,
+    pub gen_len_max: usize,
+    pub temperature: f32,
+    pub vocab: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: 16,
+            arrival_rate: 50.0,
+            prompt_len_mean: 32,
+            prompt_len_max: 96,
+            gen_len_mean: 32,
+            gen_len_max: 96,
+            temperature: 0.0,
+            vocab: 256,
+        }
+    }
+}
+
+/// A request with its (relative) arrival offset in seconds.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub offset_s: f64,
+    pub request: Request,
+}
+
+/// Geometric-ish heavy-tailed length: exp draw clipped to [1, max].
+fn length(rng: &mut Rng, mean: usize, max: usize) -> usize {
+    (rng.exp(1.0 / mean as f64).round() as usize).clamp(1, max)
+}
+
+/// Generate the full trace. Arrival offsets are cumulative exponential
+/// inter-arrival times (Poisson process at `arrival_rate`).
+pub fn generate(spec: &WorkloadSpec, seed: u64) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(seed);
+    let now = Instant::now();
+    let mut t = 0.0f64;
+    (0..spec.n_requests)
+        .map(|i| {
+            t += rng.exp(spec.arrival_rate);
+            let plen = length(&mut rng, spec.prompt_len_mean, spec.prompt_len_max);
+            let glen = length(&mut rng, spec.gen_len_mean, spec.gen_len_max);
+            TimedRequest {
+                offset_s: t,
+                request: Request {
+                    id: i as u64,
+                    prompt: (0..plen).map(|_| rng.below(spec.vocab as u64) as i32).collect(),
+                    max_new_tokens: glen,
+                    temperature: spec.temperature,
+                    arrival: now,
+                },
+            }
+        })
+        .collect()
+}
+
+/// Total decode steps a trace needs on an ideal engine (prefill+gen),
+/// for utilization accounting in benches.
+pub fn ideal_token_steps(trace: &[TimedRequest]) -> usize {
+    trace
+        .iter()
+        .map(|t| t.request.prompt.len() + t.request.max_new_tokens)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_bounded() {
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec, 42);
+        let b = generate(&spec, 42);
+        assert_eq!(a.len(), spec.n_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert_eq!(x.offset_s, y.offset_s);
+            assert!(x.request.prompt.len() <= spec.prompt_len_max);
+            assert!(x.request.max_new_tokens <= spec.gen_len_max);
+            assert!(x.request.prompt.iter().all(|&t| (t as usize) < spec.vocab));
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let trace = generate(&WorkloadSpec::default(), 1);
+        for w in trace.windows(2) {
+            assert!(w[1].offset_s >= w[0].offset_s);
+        }
+    }
+
+    #[test]
+    fn mean_lengths_in_ballpark() {
+        let spec = WorkloadSpec {
+            n_requests: 2000,
+            prompt_len_mean: 40,
+            prompt_len_max: 400,
+            ..Default::default()
+        };
+        let trace = generate(&spec, 7);
+        let mean: f64 = trace.iter().map(|t| t.request.prompt.len() as f64).sum::<f64>()
+            / trace.len() as f64;
+        assert!((mean - 40.0).abs() < 5.0, "mean={mean}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Evaluation harnesses: perplexity, routing fractions, long-context spans,
+//! cosine-similarity probe, synthetic zero-shot tasks — everything the
+//! paper's tables/figures report.
+
+pub mod tasks;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::RoutingStats;
+use crate::data::longctx::LongCtxItem;
+use crate::data::Dataset;
+use crate::runtime::{Engine, Tensor};
+
+/// Cross-entropy (nats/token) of logits over next-token targets.
+///
+/// `logits`: [B, S, V] row-major; `tokens`: [B, S]. Positions 0..S-1
+/// predict tokens 1..S. `span`: optional (start, end) restriction on the
+/// *target* index range (long-context answer spans).
+pub fn cross_entropy(
+    logits: &[f32],
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    span: Option<(usize, usize)>,
+) -> f64 {
+    let (lo, hi) = span.unwrap_or((1, seq));
+    let lo = lo.max(1);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..batch {
+        for t in lo..hi {
+            let target = tokens[b * seq + t];
+            let row = &logits[(b * seq + t - 1) * vocab..(b * seq + t) * vocab];
+            // log-softmax
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logz: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln()
+                + m as f64;
+            total += logz - row[target as usize] as f64;
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+/// Result of a forward-eval pass.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub ce_nats: f64,
+    pub ppl: f64,
+    pub routing: RoutingStats,
+    pub n_tokens: usize,
+}
+
+/// Perplexity of `params` (flat literals) on `data` via a fwd artifact.
+pub fn perplexity(
+    engine: &Engine,
+    artifact: &str,
+    params: &[xla::Literal],
+    data: &Dataset,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let exe = engine.load(artifact)?;
+    let spec = &exe.spec;
+    let batch = spec.batch.context("fwd missing batch")?;
+    let seq = spec.seq.context("fwd missing seq")?;
+    let vocab = spec.config.vocab_size;
+    let n_layers = spec.config.n_layers;
+
+    let mut total_ce = 0.0;
+    let mut n_batches = 0usize;
+    let mut routing = RoutingStats::new(n_layers);
+    for tokens in data.eval_batches(batch).take(max_batches) {
+        let tok_lit = Tensor::i32(vec![batch, seq], tokens.clone()).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&tok_lit);
+        let outs = exe.call_literals_ref(&inputs)?;
+        // outputs: logits, route [B,L,S], g_attn, attn_frac
+        let logits = Tensor::from_literal(&outs[0])?;
+        let route = Tensor::from_literal(&outs[1])?;
+        total_ce += cross_entropy(logits.as_f32(), &tokens, batch, seq, vocab, None);
+        routing.record_route_tensor(route.as_f32(), batch, n_layers, seq);
+        n_batches += 1;
+    }
+    anyhow::ensure!(n_batches > 0, "no eval batches");
+    let ce = total_ce / n_batches as f64;
+    Ok(EvalResult {
+        ce_nats: ce,
+        ppl: ce.exp(),
+        routing,
+        n_tokens: n_batches * batch * (seq - 1),
+    })
+}
+
+/// Span-restricted perplexity for long-context items (Fig. 3 metric).
+/// The artifact must be a fwd with batch=1 and seq == item length.
+pub fn span_perplexity(
+    engine: &Engine,
+    artifact: &str,
+    params: &[xla::Literal],
+    items: &[LongCtxItem],
+) -> Result<f64> {
+    let exe = engine.load(artifact)?;
+    let spec = &exe.spec;
+    let seq = spec.seq.context("fwd missing seq")?;
+    let vocab = spec.config.vocab_size;
+    let mut total = 0.0;
+    for item in items {
+        anyhow::ensure!(item.tokens.len() == seq, "item length != artifact seq");
+        let tokens: Vec<i32> = item.tokens.iter().map(|&t| t as i32).collect();
+        let tok_lit = Tensor::i32(vec![1, seq], tokens.clone()).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&tok_lit);
+        let outs = exe.call_literals_ref(&inputs)?;
+        let logits = Tensor::from_literal(&outs[0])?;
+        total += cross_entropy(
+            logits.as_f32(),
+            &tokens,
+            1,
+            seq,
+            vocab,
+            Some((item.answer_start, item.answer_end)),
+        );
+    }
+    Ok((total / items.len() as f64).exp())
+}
+
+/// Fig. 1 cosine-similarity matrix from a probe artifact: returns the
+/// [L+1, L+1] row-major similarity matrix.
+pub fn cosine_probe(
+    engine: &Engine,
+    artifact: &str,
+    params: &[xla::Literal],
+    tokens: &[i32],
+) -> Result<Tensor> {
+    let exe = engine.load(artifact)?;
+    let spec = &exe.spec;
+    let batch = spec.batch.context("probe missing batch")?;
+    let seq = spec.seq.context("probe missing seq")?;
+    anyhow::ensure!(tokens.len() == batch * seq);
+    let tok_lit = Tensor::i32(vec![batch, seq], tokens.to_vec()).to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok_lit);
+    let outs = exe.call_literals_ref(&inputs)?;
+    Tensor::from_literal(&outs[0])
+}
+
+/// Adjacent-layer similarity summary of a probe matrix (the paper's
+/// "S_{i,i+1} ≈ 0.98 for inner layers" observation).
+pub fn adjacent_similarity(sim: &Tensor) -> Vec<f64> {
+    let l = sim.shape[0];
+    (0..l - 1).map(|i| sim.at(&[i, i + 1]) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_of_uniform_logits_is_log_v() {
+        let (b, s, v) = (1, 4, 8);
+        let logits = vec![0.0f32; b * s * v];
+        let tokens = vec![3i32; b * s];
+        let ce = cross_entropy(&logits, &tokens, b, s, v, None);
+        assert!((ce - (v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_rewards_correct_logits() {
+        let (b, s, v) = (1, 3, 4);
+        let mut logits = vec![0.0f32; b * s * v];
+        let tokens = vec![0, 1, 2];
+        // position 0 predicts token 1, position 1 predicts token 2
+        logits[0 * v + 1] = 10.0;
+        logits[1 * v + 2] = 10.0;
+        let ce = cross_entropy(&logits, &tokens, b, s, v, None);
+        assert!(ce < 0.01, "ce={ce}");
+    }
+
+    #[test]
+    fn span_restricts_targets() {
+        let (b, s, v) = (1, 6, 4);
+        let mut logits = vec![0.0f32; b * s * v];
+        let tokens = vec![0, 1, 2, 3, 0, 1];
+        // make only the span targets (positions 4..6) predictable
+        logits[3 * v + 0] = 10.0;
+        logits[4 * v + 1] = 10.0;
+        let full = cross_entropy(&logits, &tokens, b, s, v, None);
+        let span = cross_entropy(&logits, &tokens, b, s, v, Some((4, 6)));
+        assert!(span < 0.01 && full > span);
+    }
+}

@@ -1,0 +1,59 @@
+//! # DTRNet — Dynamic Token Routing Network
+//!
+//! Rust coordinator (L3) for the three-layer reproduction of
+//! *"DTRNet: Dynamic Token Routing Network to Reduce Quadratic Costs in
+//! Transformers"* (Sharma et al., 2025).
+//!
+//! The compute graphs (L2 JAX model + L1 Pallas kernels) are AOT-lowered to
+//! HLO text by `python/compile/aot.py` and executed here through the PJRT C
+//! API (`xla` crate). Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//! - [`util`] — offline-environment substrates: JSON, PRNG, CLI, threadpool.
+//! - [`config`] — typed model/train/serve configs + paper presets.
+//! - [`tokenizer`] — byte tokenizer + trainable byte-pair encoding.
+//! - [`data`] — synthetic corpora, tiny-corpus loader, batch pipeline.
+//! - [`model`] — host-side analytics: layer layout, FLOPs (Fig. 4) and
+//!   KV-memory (Fig. 6) models.
+//! - [`runtime`] — PJRT artifact registry: load, compile, execute.
+//! - [`coordinator`] — the system contribution: training orchestrator,
+//!   serving engine with continuous batching and the routing-aware paged
+//!   KV-cache pool.
+//! - [`eval`] — perplexity / routing-stats / cosine-probe harnesses.
+//! - [`metrics`] — counters, histograms, JSONL emission.
+//! - [`testing`] — in-repo property-testing harness (proptest is
+//!   unavailable offline; see DESIGN.md §Substitutions).
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod testing;
+pub mod tokenizer;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Artifact directory: `$DTRNET_ARTIFACTS`, else the nearest ancestor of the
+/// cwd containing `artifacts/manifest.json` (lets tests/benches run from any
+/// workspace subdir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DTRNET_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

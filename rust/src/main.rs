@@ -1,0 +1,227 @@
+//! `dtrnet` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         — platform + artifact inventory
+//!   train   --tag tiny_dtr_bilayer --steps 200 [--corpus markov|text]
+//!   eval    --tag tiny_dtr_bilayer — perplexity + routing stats
+//!   serve   --tag tiny_dtr_bilayer --requests 8 — continuous-batch demo
+//!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
+//!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
+//!   probe   — Fig. 1 cosine-similarity matrix (needs probe artifact)
+
+use anyhow::{bail, Result};
+
+use dtrnet::config::{ModelConfig, TrainConfig, Variant};
+use dtrnet::coordinator::{Request, ServeEngine, Trainer};
+use dtrnet::data::{corpus, Dataset};
+use dtrnet::model::{flops, memory};
+use dtrnet::runtime::Engine;
+use dtrnet::tokenizer::{ByteTokenizer, Tokenizer};
+use dtrnet::util::bench::print_table;
+use dtrnet::util::cli::Args;
+use dtrnet::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "train" => train(&args),
+        "eval" => eval(&args),
+        "serve" => serve(&args),
+        "flops" => flops_cmd(&args),
+        "kvmem" => kvmem_cmd(&args),
+        other => bail!("unknown command {other:?} (try info/train/eval/serve/flops/kvmem)"),
+    }
+}
+
+fn engine() -> Result<Engine> {
+    Engine::new(&dtrnet::artifacts_dir())
+}
+
+fn info() -> Result<()> {
+    let e = engine()?;
+    println!("dtrnet {} — platform {}", dtrnet::version(), e.platform());
+    println!("artifacts ({}):", e.manifest.artifacts.len());
+    for a in &e.manifest.artifacts {
+        println!(
+            "  {:<36} kind={:<11} layout={} in/out={}/{}",
+            a.name,
+            a.kind,
+            a.config.layout_string(),
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn make_dataset(args: &Args, seq: usize) -> Dataset {
+    match args.get_or("corpus", "markov") {
+        "text" => {
+            let text = corpus::embedded_corpus();
+            let toks = ByteTokenizer.encode(&text);
+            Dataset::new(toks, seq)
+        }
+        _ => {
+            let mut rng = Rng::new(args.get_u64("data-seed", 7));
+            Dataset::new(corpus::markov_corpus(&mut rng, 256, 600 * seq, 12), seq)
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let e = engine()?;
+    let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
+    let tcfg = TrainConfig {
+        steps: args.get_usize("steps", 200),
+        peak_lr: args.get_f64("lr", 3e-4),
+        seed: args.get_u64("seed", 0),
+        log_every: args.get_usize("log-every", 10),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&e, &tag, tcfg.seed as i32)?;
+    let data = make_dataset(args, trainer.seq);
+    let (train_data, eval_data) = data.split(0.1);
+    let report = trainer.run(&tcfg, &train_data, None)?;
+    println!(
+        "[done] {} final_loss={:.4} tokens/s={:.0} attn_frac={:?}",
+        report.tag, report.final_loss, report.tokens_per_s, report.attn_frac
+    );
+    if let Some(path) = args.get("save") {
+        trainer.save_checkpoint(std::path::Path::new(path))?;
+    }
+    // quick held-out eval if a fwd artifact exists
+    let fwd_name = e
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "fwd" && a.name.starts_with(&tag))
+        .map(|a| a.name.clone());
+    if let Some(fwd) = fwd_name {
+        let r = dtrnet::eval::perplexity(&e, &fwd, trainer.params(), &eval_data, 8)?;
+        println!("[eval] held-out ppl {:.2} routing {:?}", r.ppl, r.routing.fractions());
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let e = engine()?;
+    let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
+    let fwd = e
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "fwd" && a.name.starts_with(&tag))
+        .map(|a| a.name.clone())
+        .ok_or_else(|| anyhow::anyhow!("no fwd artifact for {tag}"))?;
+    // Use fresh init params (untrained) unless a training run is chained.
+    let init = e.load(&format!("{tag}_init"))?;
+    let params = init.call_literals(&[dtrnet::runtime::Tensor::scalar_i32(
+        args.get_usize("seed", 0) as i32,
+    )
+    .to_literal()?])?;
+    let seq = e.manifest.get(&fwd)?.seq.unwrap();
+    let data = make_dataset(args, seq);
+    let r = dtrnet::eval::perplexity(&e, &fwd, &params, &data, args.get_usize("batches", 4))?;
+    println!(
+        "ppl {:.3} over {} tokens; attention fractions {:?}",
+        r.ppl,
+        r.n_tokens,
+        r.routing.fractions()
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let e = engine()?;
+    let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
+    let decode = e
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "decode" && a.name.starts_with(&tag))
+        .map(|a| a.name.clone())
+        .ok_or_else(|| anyhow::anyhow!("no decode artifact for {tag}"))?;
+    // --load ckpt.dtck serves trained weights; default is fresh init
+    let params = if let Some(path) = args.get("load") {
+        dtrnet::coordinator::trainer::load_params_for(
+            &e,
+            &decode,
+            std::path::Path::new(path),
+        )?
+    } else {
+        let init = e.load(&format!("{tag}_init"))?;
+        init.call_literals(&[dtrnet::runtime::Tensor::scalar_i32(0).to_literal()?])?
+    };
+    let mut srv = ServeEngine::new(&e, &decode, params, args.get_usize("page", 16))?;
+    let n = args.get_usize("requests", 8);
+    let mut rng = Rng::new(1);
+    let now = std::time::Instant::now();
+    for i in 0..n {
+        srv.submit(Request {
+            id: i as u64,
+            prompt: (0..16).map(|_| rng.below(256) as i32).collect(),
+            max_new_tokens: args.get_usize("gen", 32),
+            temperature: args.get_f64("temp", 0.0) as f32,
+            arrival: now,
+        });
+    }
+    let report = srv.run_to_completion(100_000)?;
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn flops_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "smollm-1b3");
+    let lengths = [2048usize, 4096, 8192, 12288, 16384, 20480];
+    let variants = [
+        Variant::Dense,
+        Variant::DtrBilayer,
+        Variant::DtrTrilayer,
+        Variant::Mod,
+        Variant::Dllm,
+    ];
+    let mut rows = Vec::new();
+    for &n in &lengths {
+        let mut row = vec![n.to_string()];
+        for &v in &variants {
+            let cfg = ModelConfig::preset(preset, v);
+            row.push(format!("{:.4}", flops::flops_ratio_vs_dense(&cfg, n, None)));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!("Fig. 4 — FLOPs ratio vs dense ({preset})"),
+        &["seq", "dense", "dtr_bi", "dtr_tri", "mod", "dllm"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn kvmem_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "smollm-1b3");
+    let lengths = [1024usize, 2048, 4096, 8192, 16384];
+    let variants = [
+        Variant::Dense,
+        Variant::DtrBilayer,
+        Variant::Mod,
+        Variant::Dllm,
+    ];
+    let mut rows = Vec::new();
+    for &n in &lengths {
+        let mut row = vec![n.to_string()];
+        for &v in &variants {
+            let cfg = ModelConfig::preset(preset, v);
+            let m = memory::kv_bytes(&cfg, n, None);
+            row.push(format!("{:.1}", m.allocated_bytes / 1e6));
+        }
+        rows.push(row);
+    }
+    print_table(
+        &format!("Fig. 6 — KV cache MB ({preset})"),
+        &["seq", "dense", "dtr_bi", "mod", "dllm"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Metrics: counters, gauges, histograms + JSONL emission.
+//!
+//! The coordinator reports through a `Registry`; training/serving loops log
+//! JSONL rows (one object per line) that EXPERIMENTS.md tables and the
+//! bench harnesses consume.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Monotone counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency/size histogram; stores raw samples (bounded) for percentiles.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        let mut s = self.samples.lock().unwrap();
+        // Reservoir-free bound: cap memory, keep most recent window.
+        if s.len() >= 1 << 20 {
+            s.drain(..1 << 19);
+        }
+        s.push(v);
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        let s = self.samples.lock().unwrap();
+        HistSummary {
+            count: s.len(),
+            mean: stats::mean(&s),
+            p50: stats::percentile(&s, 50.0),
+            p95: stats::percentile(&s, 95.0),
+            p99: stats::percentile(&s, 99.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct HistSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+        ])
+    }
+}
+
+/// Named metric registry shared across coordinator components.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let mut obj = Json::obj();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            obj.set(k, Json::Num(c.get() as f64));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            obj.set(k, h.summary().to_json());
+        }
+        obj
+    }
+}
+
+/// Append-only JSONL log (one JSON object per line).
+pub struct JsonlWriter {
+    file: Mutex<std::fs::File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &std::path::Path) -> std::io::Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlWriter {
+            file: Mutex::new(std::fs::File::create(path)?),
+        })
+    }
+
+    pub fn write(&self, row: &Json) {
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{}", row.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histograms() {
+        let reg = Registry::default();
+        let c = reg.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let h = reg.histogram("lat");
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.path("reqs").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn jsonl_rows() {
+        let dir = std::env::temp_dir().join("dtrnet_test_jsonl");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("log.jsonl");
+        let w = JsonlWriter::create(&path).unwrap();
+        w.write(&Json::from_pairs(vec![("a", Json::Num(1.0))]));
+        w.write(&Json::from_pairs(vec![("a", Json::Num(2.0))]));
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Host-side model analytics.
+//!
+//! The paper's Figs. 4 and 6 are *analytical* (theoretical FLOPs, KV-cache
+//! bytes); this module implements those models exactly so the benches can
+//! regenerate the figures at both the paper's scales (smollm-1b3) and the
+//! testbed scales (tiny) — and so the coordinator can make capacity
+//! decisions without touching the device.
+
+pub mod flops;
+pub mod memory;
+
+pub use flops::{flops_forward, flops_per_layer, FlopsBreakdown};
+pub use memory::{kv_bytes, KvMemoryModel};

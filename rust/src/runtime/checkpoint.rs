@@ -1,0 +1,258 @@
+//! Checkpointing: persist/restore parameter sets (and Adam state) to disk.
+//!
+//! Format ("DTCK" v1, little-endian): a self-describing binary container —
+//!   magic "DTCK" · u32 version · u32 tensor count ·
+//!   per tensor: u32 name_len · name bytes · u8 dtype (0=f32, 1=i32) ·
+//!               u32 rank · u64 dims[rank] · raw data
+//! plus a trailing u64 FNV-1a checksum over everything before it.
+//!
+//! This gives the coordinator real train → serve handoff across processes
+//! (`dtrnet train --save ckpt.dtck`, `dtrnet serve --load ckpt.dtck`)
+//! without any external serialization crates.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{Data, Tensor};
+
+const MAGIC: &[u8; 4] = b"DTCK";
+const VERSION: u32 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A named tensor collection (parameters, optimizer state, …).
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
+        self.entries.push((name.into(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Serialize to bytes (see module docs for the layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            match &t.data {
+                Data::F32(_) => out.push(0u8),
+                Data::I32(_) => out.push(1u8),
+            }
+            out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            match &t.data {
+                Data::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                Data::I32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 20 {
+            bail!("checkpoint too short");
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        let got = fnv1a(body);
+        if want != got {
+            bail!("checkpoint checksum mismatch (corrupt file?)");
+        }
+        let mut p = body;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            if p.len() < n {
+                bail!("truncated checkpoint");
+            }
+            let (a, b) = p.split_at(n);
+            p = b;
+            Ok(a)
+        };
+        if take(4)? != MAGIC {
+            bail!("bad magic (not a DTCK checkpoint)");
+        }
+        let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            let name = std::str::from_utf8(take(nlen)?)
+                .context("bad tensor name")?
+                .to_string();
+            let dtype = take(1)?[0];
+            let rank = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let t = match dtype {
+                0 => {
+                    let raw = take(n * 4)?;
+                    let v: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::f32(shape, v)
+                }
+                1 => {
+                    let raw = take(n * 4)?;
+                    let v: Vec<i32> = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    Tensor::i32(shape, v)
+                }
+                other => bail!("unknown dtype tag {other}"),
+            };
+            entries.push((name, t));
+        }
+        Ok(Checkpoint { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Checkpoint::from_bytes(&bytes)
+    }
+
+    /// Build from parameter literals + the manifest layout (names/shapes
+    /// validated against the manifest contract).
+    pub fn from_literals(
+        names: &[super::manifest::ParamSpec],
+        literals: &[xla::Literal],
+    ) -> Result<Checkpoint> {
+        anyhow::ensure!(names.len() == literals.len(), "layout/literal arity mismatch");
+        let mut ck = Checkpoint::new();
+        for (spec, lit) in names.iter().zip(literals) {
+            let t = Tensor::from_literal(lit)?;
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{}: shape {:?} != manifest {:?}",
+                spec.path,
+                t.shape,
+                spec.shape
+            );
+            ck.push(spec.path.clone(), t);
+        }
+        Ok(ck)
+    }
+
+    /// Convert back to literals in manifest order (errors on missing/extra).
+    pub fn to_literals(&self, names: &[super::manifest::ParamSpec]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            self.entries.len() == names.len(),
+            "checkpoint has {} tensors, manifest wants {}",
+            self.entries.len(),
+            names.len()
+        );
+        names
+            .iter()
+            .map(|spec| {
+                let t = self
+                    .get(&spec.path)
+                    .with_context(|| format!("checkpoint missing {}", spec.path))?;
+                anyhow::ensure!(t.shape == spec.shape, "{}: shape mismatch", spec.path);
+                t.to_literal()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        ck.push("a", Tensor::f32(vec![2, 3], vec![1., -2., 3.5, 0., 1e-9, 7.]));
+        ck.push("b.c", Tensor::i32(vec![4], vec![1, -2, 3, 4]));
+        ck.push("scalar", Tensor::scalar_f32(42.0));
+        ck
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample();
+        let re = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck.entries.len(), re.entries.len());
+        for ((n1, t1), (n2, t2)) in ck.entries.iter().zip(&re.entries) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("dtrnet_ck_test");
+        let path = dir.join("x.dtck");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(re.get("a").unwrap(), ck.get("a").unwrap());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+}

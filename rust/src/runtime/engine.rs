@@ -1,0 +1,153 @@
+//! Engine: PJRT client + compiled-executable cache.
+//!
+//! One `Engine` per process. Artifacts compile lazily on first use and are
+//! cached by name. Executions go through `Executable::call`, which checks
+//! arity, packs host tensors into literals, runs, and unpacks the result
+//! tuple (aot.py lowers with `return_tuple=True`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// Process-wide runtime: PJRT CPU client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory (see
+    /// [`crate::artifacts_dir`]). Compiles nothing yet.
+    pub fn new(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let exe = Arc::new(Executable {
+            name: name.to_string(),
+            spec,
+            exe,
+            compile_s: t0.elapsed().as_secs_f64(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact, callable over host tensors.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_s: f64,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn call(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = self.pack(inputs)?;
+        let outs = self.call_literals(&lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Pack host tensors into literals, validating arity and shapes.
+    pub fn pack(&self, inputs: &[Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let want = &self.spec.inputs[i].shape;
+                if &t.shape != want {
+                    bail!(
+                        "{}: input {i} shape {:?} != manifest {:?}",
+                        self.name,
+                        t.shape,
+                        want
+                    );
+                }
+                t.to_literal()
+            })
+            .collect()
+    }
+
+    /// Execute with pre-packed literals (hot-path variant: callers reuse
+    /// literal buffers across steps where inputs don't change).
+    pub fn call_literals(&self, lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Like [`Self::call_literals`] but over borrowed literals — lets the
+    /// trainer/serving loops keep resident state (weights, KV cache) and
+    /// pass references each step without cloning.
+    pub fn call_literals_ref(&self, lits: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and keep outputs as device buffers (for param-resident
+    /// loops: feed these straight back in via [`Self::call_buffers`]).
+    pub fn call_buffers(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(bufs)?;
+        Ok(result.remove(0))
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.spec.inputs.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.spec.outputs.len()
+    }
+}
+
+/// Convert a literal tuple element count mismatch into a readable error.
+pub fn expect_outputs(outs: &[Tensor], n: usize, what: &str) -> Result<()> {
+    if outs.len() != n {
+        bail!("{what}: expected {n} outputs, got {}", outs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Manifest parsing: the contract between `aot.py` and the runtime.
+//!
+//! `artifacts/manifest.json` records, per artifact: the HLO file, kind,
+//! model config, the flat parameter layout (path/shape/dtype in execution
+//! order) and full input/output shape lists. The runtime trusts these
+//! shapes; mismatches fail loudly at literal-build time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Shape+dtype of one input/output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> IoSpec {
+        IoSpec {
+            shape: j
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|a| a.iter().map(|v| v.as_usize().unwrap()).collect())
+                .unwrap_or_default(),
+            dtype: j
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One named parameter in the flat layout.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub config: ModelConfig,
+    pub config_json: Json,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub max_kv: Option<usize>,
+    pub nparams: Option<usize>,
+}
+
+/// Parsed manifest: artifact index by name.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing artifacts[]")?;
+        let artifacts = arts
+            .iter()
+            .map(|a| {
+                let cfg_json = a.get("config").cloned().unwrap_or(Json::obj());
+                ArtifactSpec {
+                    name: a.get("name").and_then(|v| v.as_str()).unwrap().to_string(),
+                    file: a.get("file").and_then(|v| v.as_str()).unwrap().to_string(),
+                    kind: a.get("kind").and_then(|v| v.as_str()).unwrap().to_string(),
+                    config: ModelConfig::from_manifest(&cfg_json),
+                    config_json: cfg_json,
+                    params: a
+                        .get("params")
+                        .and_then(|p| p.as_arr())
+                        .map(|ps| {
+                            ps.iter()
+                                .map(|p| ParamSpec {
+                                    path: p
+                                        .get("path")
+                                        .and_then(|v| v.as_str())
+                                        .unwrap()
+                                        .to_string(),
+                                    shape: p
+                                        .get("shape")
+                                        .and_then(|s| s.as_arr())
+                                        .map(|a| {
+                                            a.iter().map(|v| v.as_usize().unwrap()).collect()
+                                        })
+                                        .unwrap_or_default(),
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().map(IoSpec::from_json).collect())
+                        .unwrap_or_default(),
+                    outputs: a
+                        .get("outputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().map(IoSpec::from_json).collect())
+                        .unwrap_or_default(),
+                    batch: a.get("batch").and_then(|v| v.as_usize()),
+                    seq: a.get("seq").and_then(|v| v.as_usize()),
+                    max_kv: a.get("max_kv").and_then(|v| v.as_usize()),
+                    nparams: a.get("nparams").and_then(|v| v.as_usize()),
+                }
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// All artifacts of a given kind (e.g. every `fwd`).
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): artifacts produced by
+//! `python/compile/aot.py` are compiled once per process and cached; the
+//! coordinator calls them as plain functions over host tensors.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod checkpoint;
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use checkpoint::Checkpoint;
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use tensor::Tensor;

@@ -1,0 +1,159 @@
+//! Host tensors: the coordinator's view of model inputs/outputs.
+//!
+//! A `Tensor` is a shape + flat row-major data buffer (f32 or i32 — the
+//! only element types crossing the AOT boundary in this system). It
+//! converts to/from `xla::Literal` at the runtime edge.
+
+use anyhow::{bail, Result};
+
+/// View a 4-byte-element slice as raw bytes (safe: both f32 and i32 are
+/// plain-old-data with alignment ≥ u8).
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+/// Element storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape,
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape,
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn zeros_i32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::i32(shape, vec![0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) => v[0],
+            Data::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// Row-major strides for this shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Index with a multi-dim coordinate (debug/eval helper, not hot path).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        let strides = self.strides();
+        let flat: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        match &self.data {
+            Data::F32(v) => v[flat],
+            Data::I32(v) => v[flat] as f32,
+        }
+    }
+
+    // ---- Literal conversion -------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Single-copy path (§Perf L3): build the shaped literal directly
+        // from raw bytes. The vec1 + reshape route copies twice (once into
+        // the rank-1 literal, once in reshape) — measured 2.4× slower on
+        // the 12 MB decode-cache pack (see EXPERIMENTS.md §Perf).
+        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
+            Data::F32(v) => (xla::ElementType::F32, bytemuck_cast(v)),
+            Data::I32(v) => (xla::ElementType::S32, bytemuck_cast(v)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_at() {
+        let t = Tensor::f32(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+}

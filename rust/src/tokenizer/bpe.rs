@@ -1,0 +1,154 @@
+//! Trainable byte-pair-encoding tokenizer (byte-fallback, LLaMA family).
+//!
+//! Training: iteratively merge the most frequent adjacent pair until the
+//! target vocabulary size is reached. Encoding: greedy highest-priority
+//! merge first (same as GPT-2/LLaMA BPE inference).
+
+use std::collections::HashMap;
+
+use super::Tokenizer;
+
+/// A trained BPE model. Token ids 0..256 are raw bytes; ids ≥256 are merges
+/// in training order.
+#[derive(Debug, Clone)]
+pub struct BpeTokenizer {
+    /// merge rank -> (left id, right id); new token id = 256 + rank.
+    merges: Vec<(u32, u32)>,
+    /// (left, right) -> merged id, for O(1) encode lookups.
+    merge_map: HashMap<(u32, u32), u32>,
+}
+
+impl BpeTokenizer {
+    /// Train on `corpus` until `vocab_size` tokens (≥256) exist.
+    pub fn train(corpus: &str, vocab_size: usize) -> BpeTokenizer {
+        assert!(vocab_size >= 256, "vocab must include all bytes");
+        let mut ids: Vec<u32> = corpus.as_bytes().iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::new();
+        let mut merge_map = HashMap::new();
+        while 256 + merges.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // Deterministic argmax: highest count, ties by smallest pair.
+            let best = counts
+                .iter()
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)))
+                .map(|(&pair, &c)| (pair, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // no compression left
+            }
+            let new_id = 256 + merges.len() as u32;
+            merges.push(pair);
+            merge_map.insert(pair, new_id);
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+        BpeTokenizer { merges, merge_map }
+    }
+
+    fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Expand a token id to its byte sequence.
+    fn expand(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.expand(l, out);
+            self.expand(r, out);
+        }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+}
+
+impl Tokenizer for BpeTokenizer {
+    fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.as_bytes().iter().map(|&b| b as u32).collect();
+        // Apply merges in priority (training) order: repeatedly find the
+        // lowest-rank applicable merge. O(n · merges) worst case; fine for
+        // the corpus sizes here.
+        loop {
+            let mut best: Option<(usize, u32, usize)> = None; // (rank, id, pos)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&m) = self.merge_map.get(&(ids[i], ids[i + 1])) {
+                    let rank = (m - 256) as usize;
+                    if best.map_or(true, |(br, _, _)| rank < br) {
+                        best = Some((rank, m, i));
+                    }
+                }
+            }
+            let Some((_, m, i)) = best else { break };
+            ids.splice(i..i + 2, [m]);
+        }
+        ids
+    }
+
+    fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.expand(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog. \
+        the dog barks. the fox runs. the quick dog jumps over the brown fox. \
+        lazy foxes and quick dogs. the the the quick quick brown brown.";
+
+    #[test]
+    fn train_compresses() {
+        let t = BpeTokenizer::train(CORPUS, 300);
+        assert!(t.n_merges() > 0);
+        let ids = t.encode("the quick brown fox");
+        assert!(ids.len() < "the quick brown fox".len());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = BpeTokenizer::train(CORPUS, 320);
+        for s in ["the quick brown fox", "unseen wörds ok", "", "a"] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn byte_fallback_for_unseen() {
+        let t = BpeTokenizer::train(CORPUS, 280);
+        let ids = t.encode("zzzyyqq");
+        assert_eq!(t.decode(&ids), "zzzyyqq");
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = BpeTokenizer::train(CORPUS, 300);
+        let b = BpeTokenizer::train(CORPUS, 300);
+        assert_eq!(a.merges, b.merges);
+    }
+}

@@ -1,0 +1,52 @@
+//! Tokenizers.
+//!
+//! The paper uses the LLaMA-2 32k SentencePiece tokenizer; offline we
+//! substitute (a) a plain byte tokenizer (vocab 256, used by the tiny
+//! configs whose artifacts bake `vocab_size=256`) and (b) a trainable
+//! byte-pair-encoding tokenizer for larger vocabularies — functionally the
+//! same family as the paper's (byte-fallback BPE). See DESIGN.md
+//! §Substitutions.
+
+pub mod bpe;
+
+pub use bpe::BpeTokenizer;
+
+/// Trait implemented by all tokenizers in the crate.
+pub trait Tokenizer: Send + Sync {
+    fn encode(&self, text: &str) -> Vec<u32>;
+    fn decode(&self, ids: &[u32]) -> String;
+    fn vocab_size(&self) -> usize;
+}
+
+/// Identity byte tokenizer: one token per UTF-8 byte. Vocabulary is exactly
+/// 256, matching the tiny/xs artifact configs.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i & 0xff) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "hello, DTRNet! é";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert!(t.encode(s).iter().all(|&i| i < 256));
+    }
+}

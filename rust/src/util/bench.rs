@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (replaces criterion, unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Reports mean / p50 / p95 wall-clock over timed iterations after a
+//! warmup, and can append structured rows to `results/*.json` so
+//! EXPERIMENTS.md tables regenerate from artifacts rather than prose.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("stddev_s", Json::Num(self.stddev_s)),
+        ])
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&times),
+        p50_s: stats::percentile(&times, 50.0),
+        p95_s: stats::percentile(&times, 95.0),
+        stddev_s: stats::stddev(&times),
+    };
+    println!(
+        "{:<48} {:>10.4} ms/iter  (p50 {:.4}, p95 {:.4}, n={})",
+        m.name,
+        m.mean_s * 1e3,
+        m.p50_s * 1e3,
+        m.p95_s * 1e3,
+        iters
+    );
+    m
+}
+
+/// Adaptive variant: runs for at least `min_time_s` wall-clock.
+pub fn bench_for<F: FnMut()>(name: &str, min_time_s: f64, mut f: F) -> Measurement {
+    // One calibration run decides the iteration count.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((min_time_s / once).ceil() as usize).clamp(3, 10_000);
+    bench(name, 1, iters, f)
+}
+
+/// Write a result table to `results/<file>` (pretty JSON), creating dirs.
+pub fn write_results(file: &str, payload: Json) {
+    let dir = crate::artifacts_dir()
+        .parent()
+        .map(|p| p.join("results"))
+        .unwrap_or_else(|| "results".into());
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(file);
+    std::fs::write(&path, payload.to_string_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    println!("[results] wrote {}", path.display());
+}
+
+/// Render an aligned text table (paper-style rows) to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0usize;
+        let m = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(m.iters, 10);
+        assert!(m.mean_s >= 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Offline-environment substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde/serde_json, clap, rand, rayon,
+//! criterion, proptest) are unavailable. This module provides the minimal,
+//! well-tested replacements the rest of the library builds on.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,110 @@
+//! Minimal scoped thread pool over std::thread + mpsc (replaces rayon).
+//!
+//! The serving coordinator uses OS threads for its workers; this pool is
+//! for fan-out helper work (data generation, eval sharding). Work items
+//! are boxed closures; results come back through a channel.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool {
+            workers,
+            tx: Some(tx),
+        }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker hung up");
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel();
+        let n = items.len();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let _ = rtx.send((i, f(item)));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rrx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("missing result")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,225 @@
+//! Cross-layer integration: Rust runtime ↔ AOT artifacts.
+//!
+//! These tests exercise the real PJRT path over the xs artifact set (built
+//! by `make artifacts`); they are the Rust-side counterpart of the python
+//! decode/fwd consistency suite.
+
+use dtrnet::runtime::{Engine, Tensor};
+
+fn engine() -> Engine {
+    Engine::new(&dtrnet::artifacts_dir()).expect("artifacts built? run `make artifacts`")
+}
+
+fn init_params(e: &Engine, tag: &str, seed: i32) -> Vec<xla::Literal> {
+    let init = e.load(&format!("{tag}_init")).unwrap();
+    init.call_literals(&[Tensor::scalar_i32(seed).to_literal().unwrap()])
+        .unwrap()
+}
+
+#[test]
+fn manifest_loads_and_indexes() {
+    let e = engine();
+    assert!(e.manifest.artifacts.len() >= 14);
+    let spec = e.manifest.get("xs_dtr_bilayer_fwd_b2s64").unwrap();
+    assert_eq!(spec.kind, "fwd");
+    assert_eq!(spec.batch, Some(2));
+    assert_eq!(spec.seq, Some(64));
+    assert!(e.manifest.get("nope").is_err());
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    let e = engine();
+    let a = init_params(&e, "xs_dtr_bilayer", 7);
+    let b = init_params(&e, "xs_dtr_bilayer", 7);
+    let c = init_params(&e, "xs_dtr_bilayer", 8);
+    let ta = Tensor::from_literal(&a[0]).unwrap();
+    let tb = Tensor::from_literal(&b[0]).unwrap();
+    let tc = Tensor::from_literal(&c[0]).unwrap();
+    assert_eq!(ta, tb);
+    assert_ne!(ta, tc);
+}
+
+#[test]
+fn fwd_shapes_and_route_semantics() {
+    let e = engine();
+    let params = init_params(&e, "xs_dtr_bilayer", 0);
+    let fwd = e.load("xs_dtr_bilayer_fwd_b2s64").unwrap();
+    let tok = Tensor::i32(vec![2, 64], (0..128).map(|i| i % 256).collect())
+        .to_literal()
+        .unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok);
+    let outs = fwd.call_literals_ref(&inputs).unwrap();
+    assert_eq!(outs.len(), 4);
+    let logits = Tensor::from_literal(&outs[0]).unwrap();
+    assert_eq!(logits.shape, vec![2, 64, 256]);
+    assert!(logits.as_f32().iter().all(|x| x.is_finite()));
+    // route: dense layers (0, 2, 3 in TDTT) must be all-ones
+    let route = Tensor::from_literal(&outs[1]).unwrap();
+    assert_eq!(route.shape, vec![2, 4, 64]);
+    let layout = fwd.spec.config.layout_string();
+    assert_eq!(layout, "TDTT");
+    for b in 0..2 {
+        for (l, k) in layout.chars().enumerate() {
+            let off = (b * 4 + l) * 64;
+            let frac: f32 =
+                route.as_f32()[off..off + 64].iter().sum::<f32>() / 64.0;
+            if k == 'T' {
+                assert_eq!(frac, 1.0, "dense layer {l} must attend all");
+            } else {
+                assert!(frac < 1.0, "DTR layer {l} should bypass some tokens");
+            }
+        }
+    }
+}
+
+#[test]
+fn fwd_is_deterministic() {
+    let e = engine();
+    let params = init_params(&e, "xs_dense", 3);
+    let fwd = e.load("xs_dense_fwd_b2s64").unwrap();
+    let tok = Tensor::i32(vec![2, 64], vec![42; 128]).to_literal().unwrap();
+    let run = || {
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&tok);
+        let outs = fwd.call_literals_ref(&inputs).unwrap();
+        Tensor::from_literal(&outs[0]).unwrap()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn prefill_matches_fwd_prefix() {
+    // the serving path must agree with the training-shape forward
+    let e = engine();
+    let params = init_params(&e, "xs_dtr_bilayer", 1);
+    let toks64: Vec<i32> = (0..64).map(|i| (i * 13 % 256) as i32).collect();
+
+    let fwd = e.load("xs_dtr_bilayer_fwd_b2s64").unwrap();
+    let mut both = toks64.clone();
+    both.extend(&toks64);
+    let tok = Tensor::i32(vec![2, 64], both).to_literal().unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok);
+    let outs = fwd.call_literals_ref(&inputs).unwrap();
+    let logits = Tensor::from_literal(&outs[0]).unwrap();
+
+    let prefill = e.load("xs_dtr_bilayer_prefill_s32").unwrap();
+    let tok32 = Tensor::i32(vec![32], toks64[..32].to_vec())
+        .to_literal()
+        .unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok32);
+    let pouts = prefill.call_literals_ref(&inputs).unwrap();
+    // outputs: ck, cv, lens, last_logits, routed
+    let last_logits = Tensor::from_literal(&pouts[3]).unwrap();
+    assert_eq!(last_logits.shape, vec![256]);
+
+    // fwd logits at position 31 (batch 0) — causal prefix equality
+    let v = 256;
+    let fwd_row = &logits.as_f32()[31 * v..32 * v];
+    dtrnet::testing::assert_allclose(last_logits.as_f32(), fwd_row, 1e-3, 1e-3);
+
+    // lens: dense layers cached all 32 tokens; DTR layer fewer
+    let lens = Tensor::from_literal(&pouts[2]).unwrap();
+    let layout = prefill.spec.config.layout_string();
+    for (l, k) in layout.chars().enumerate() {
+        let len = lens.as_i32()[l];
+        if k == 'T' {
+            assert_eq!(len, 32);
+        } else {
+            assert!(len < 32, "DTR layer should cache fewer (got {len})");
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_learnable_data() {
+    let e = engine();
+    let tinit = e.load("xs_dtr_bilayer_train_init").unwrap();
+    let mut state = tinit
+        .call_literals(&[Tensor::scalar_i32(0).to_literal().unwrap()])
+        .unwrap();
+    let tstep = e.load("xs_dtr_bilayer_train_step").unwrap();
+    let nparams = tstep.spec.nparams.unwrap();
+    // learnable pattern: ramp repeated
+    let base: Vec<i32> = (0..64).map(|i| (i % 16) as i32).collect();
+    let mut both = base.clone();
+    both.extend(&base);
+    let tok = Tensor::i32(vec![2, 64], both).to_literal().unwrap();
+    let lr = Tensor::scalar_f32(3e-3).to_literal().unwrap();
+    let seed = Tensor::scalar_i32(0).to_literal().unwrap();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for s in 1..=15 {
+        let step = Tensor::scalar_f32(s as f32).to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+        inputs.push(&tok);
+        inputs.push(&step);
+        inputs.push(&lr);
+        inputs.push(&seed);
+        let mut outs = tstep.call_literals_ref(&inputs).unwrap();
+        let metrics = outs.split_off(3 * nparams);
+        state = outs;
+        let loss = Tensor::from_literal(&metrics[0]).unwrap().scalar();
+        if s == 1 {
+            first = loss;
+        }
+        last = loss;
+        assert!(loss.is_finite());
+    }
+    assert!(
+        last < first - 0.2,
+        "loss should fall on learnable data: {first} -> {last}"
+    );
+}
+
+#[test]
+fn decode_step_appends_kv_only_when_routed() {
+    let e = engine();
+    let params = init_params(&e, "xs_dtr_bilayer", 2);
+    let dec = e.load("xs_dtr_bilayer_decode_b2m96").unwrap();
+    let spec = &dec.spec;
+    let nparams = spec.nparams.unwrap();
+    let cs = spec.inputs[nparams].shape.clone(); // [L,B,M,H,hd]
+    let (l_n, b_n) = (cs[0], cs[1]);
+    let mut ck = Tensor::zeros_f32(cs.clone()).to_literal().unwrap();
+    let mut cv = Tensor::zeros_f32(cs.clone()).to_literal().unwrap();
+    let mut lens_t = Tensor::zeros_i32(vec![l_n, b_n]);
+    for t in 0..10 {
+        let tok = Tensor::i32(vec![b_n], vec![(t * 31 % 256) as i32; b_n])
+            .to_literal()
+            .unwrap();
+        let pos = Tensor::i32(vec![b_n], vec![t as i32; b_n]).to_literal().unwrap();
+        let lens = lens_t.to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&ck);
+        inputs.push(&cv);
+        inputs.push(&lens);
+        inputs.push(&tok);
+        inputs.push(&pos);
+        let mut outs = dec.call_literals_ref(&inputs).unwrap();
+        let _g = outs.pop().unwrap();
+        let routed = Tensor::from_literal(&outs.pop().unwrap()).unwrap();
+        let new_lens = Tensor::from_literal(&outs.pop().unwrap()).unwrap();
+        cv = outs.pop().unwrap();
+        ck = outs.pop().unwrap();
+        // invariant: lens increase exactly by the routing decision
+        for i in 0..l_n * b_n {
+            let expect = lens_t.as_i32()[i] + (routed.as_f32()[i] > 0.5) as i32;
+            assert_eq!(new_lens.as_i32()[i], expect);
+        }
+        lens_t = new_lens;
+    }
+    // dense layers cached all 10; DTR layer ≤ 10
+    let layout = spec.config.layout_string();
+    for (l, k) in layout.chars().enumerate() {
+        let len = lens_t.as_i32()[l * b_n];
+        if k == 'T' {
+            assert_eq!(len, 10);
+        } else {
+            assert!(len <= 10);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Property-based tests over coordinator invariants (in-repo harness —
+//! proptest is unavailable offline; see DESIGN.md §Substitutions).
+
+use std::time::Instant;
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::{Batcher, KvPool, Request, RoutingStats};
+use dtrnet::data::Dataset;
+use dtrnet::model::{flops, memory};
+use dtrnet::testing::{property, Gen};
+use dtrnet::tokenizer::{BpeTokenizer, ByteTokenizer, Tokenizer};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+const VARIANTS: [Variant; 8] = [
+    Variant::Dense,
+    Variant::DtrBilayer,
+    Variant::DtrTrilayer,
+    Variant::DtrLaterhalf,
+    Variant::Dtr6T,
+    Variant::DtrSkip,
+    Variant::Mod,
+    Variant::Dllm,
+];
+
+fn arb_cfg(g: &mut Gen) -> ModelConfig {
+    let variant = VARIANTS[g.usize(0..VARIANTS.len())];
+    let mut cfg = ModelConfig::preset("tiny", variant);
+    cfg.n_layers = g.usize(7..33); // ≥7 so dtr_6t anchors are distinct
+    cfg
+}
+
+#[test]
+fn prop_layout_anchors_dense() {
+    // paper invariant: first and last layers are always dense transformers
+    property("layout anchors", 200, |g| {
+        let cfg = arb_cfg(g);
+        let kinds = cfg.layer_kinds();
+        assert_eq!(kinds.len(), cfg.n_layers);
+        assert_eq!(kinds[0], dtrnet::config::LayerKind::Dense);
+        assert_eq!(kinds[cfg.n_layers - 1], dtrnet::config::LayerKind::Dense);
+    });
+}
+
+#[test]
+fn prop_flops_ratio_bounds() {
+    // any routed variant costs between the skip floor and dense ceiling,
+    // and the ratio is monotonically non-increasing in sequence length
+    property("flops ratio bounds", 100, |g| {
+        let cfg = arb_cfg(g);
+        let n1 = g.usize(256..4096);
+        let n2 = n1 * 2;
+        let r1 = flops::flops_ratio_vs_dense(&cfg, n1, None);
+        let r2 = flops::flops_ratio_vs_dense(&cfg, n2, None);
+        assert!(r1 > 0.0 && r1 <= 1.0 + 1e-9, "r1={r1}");
+        assert!(r2 <= r1 + 1e-9, "ratio must not grow with n: {r1} -> {r2}");
+    });
+}
+
+#[test]
+fn prop_kv_memory_linear_and_bounded() {
+    property("kv memory", 100, |g| {
+        let cfg = arb_cfg(g);
+        let n = g.usize(128..8192);
+        let m = memory::kv_bytes(&cfg, n, None);
+        assert!(m.allocated_bytes <= m.dense_bytes + 1e-6);
+        // doubling n doubles bytes exactly (linear allocator)
+        let m2 = memory::kv_bytes(&cfg, n * 2, None);
+        let ratio = m2.allocated_bytes / m.allocated_bytes;
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio={ratio}");
+    });
+}
+
+#[test]
+fn prop_kv_pool_conservation() {
+    // pages_allocated == sum over slots/layers of ceil(len/page);
+    // release always returns to zero for that slot
+    property("kv pool conservation", 100, |g| {
+        let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        let slots = g.usize(1..5);
+        let page = g.usize(1..33);
+        let mut pool = KvPool::new(&cfg, slots, page, usize::MAX / 2);
+        let mut lens = vec![vec![0usize; cfg.n_layers]; slots];
+        for _ in 0..g.usize(1..300) {
+            let slot = g.usize(0..slots);
+            if g.bool() {
+                let routed: Vec<bool> = (0..cfg.n_layers).map(|_| g.bool()).collect();
+                assert!(pool.append(slot, &routed));
+                for (l, &r) in routed.iter().enumerate() {
+                    if r {
+                        lens[slot][l] += 1;
+                    }
+                }
+            } else {
+                pool.release(slot);
+                lens[slot] = vec![0; cfg.n_layers];
+            }
+            // invariants
+            let expect_pages: usize = lens
+                .iter()
+                .flat_map(|sl| sl.iter().map(|&l| l.div_ceil(page)))
+                .sum();
+            assert_eq!(pool.stats().pages_allocated, expect_pages);
+            for s in 0..slots {
+                assert_eq!(pool.lens(s), lens[s]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_conservation() {
+    // every submitted request is eventually exactly-once completed; token
+    // counts match max_new_tokens
+    property("batcher conservation", 60, |g| {
+        let slots = g.usize(1..6);
+        let n_req = g.usize(1..30);
+        let mut b = Batcher::new(slots, 1024);
+        let now = Instant::now();
+        let mut want_tokens = 0usize;
+        for i in 0..n_req {
+            let gen = g.usize(1..8);
+            want_tokens += gen;
+            assert!(b.submit(Request {
+                id: i as u64,
+                prompt: (0..g.usize(1..10)).map(|x| x as i32).collect(),
+                max_new_tokens: gen,
+                temperature: 0.0,
+                arrival: now,
+            }));
+        }
+        let mut guard = 0;
+        while !b.idle() {
+            b.admit();
+            for s in 0..slots {
+                if b.active[s].is_some() {
+                    b.advance(s, g.u32(0..256) as i32, now);
+                }
+            }
+            guard += 1;
+            assert!(guard < 100_000, "batcher wedged");
+        }
+        assert_eq!(b.completed.len(), n_req);
+        let got: usize = b.completed.iter().map(|c| c.generated.len()).sum();
+        assert_eq!(got, want_tokens);
+        let mut ids: Vec<u64> = b.completed.iter().map(|c| c.req.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n_req, "exactly-once completion");
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip() {
+    property("bpe roundtrip", 40, |g| {
+        // train on random ascii corpus, encode/decode arbitrary strings
+        let corpus: String = (0..g.usize(200..2000))
+            .map(|_| (b'a' + g.u32(0..6) as u8) as char)
+            .collect();
+        let tok = BpeTokenizer::train(&corpus, 256 + g.usize(0..64));
+        let probe: String = (0..g.usize(0..100))
+            .map(|_| (b'a' + g.u32(0..26) as u8) as char)
+            .collect();
+        assert_eq!(tok.decode(&tok.encode(&probe)), probe);
+        // encoding never produces out-of-vocab ids
+        assert!(tok.encode(&probe).iter().all(|&id| (id as usize) < tok.vocab_size()));
+    });
+}
+
+#[test]
+fn prop_byte_tokenizer_total() {
+    property("byte tokenizer roundtrip", 40, |g| {
+        let s: String = (0..g.usize(0..200))
+            .map(|_| char::from_u32(g.u32(1..0x250)).unwrap_or('x'))
+            .collect();
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&t.encode(&s)), s);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn arb_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize(0..4) } else { g.usize(0..6) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e9, 1e9) * 1000.0).round() / 1000.0),
+            3 => Json::Str((0..g.usize(0..12))
+                .map(|_| char::from_u32(g.u32(0x20..0x7f)).unwrap())
+                .collect()),
+            4 => Json::Arr((0..g.usize(0..5)).map(|_| arb_json(g, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..g.usize(0..5) {
+                    let k: String = (0..g.usize(1..8))
+                        .map(|_| char::from_u32(g.u32(0x61..0x7b)).unwrap())
+                        .collect();
+                    m.insert(k, arb_json(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    property("json roundtrip", 200, |g| {
+        let j = arb_json(g, 3);
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, re);
+        let re2 = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(j, re2);
+    });
+}
+
+#[test]
+fn prop_dataset_windows_cover() {
+    property("dataset windows", 60, |g| {
+        let seq = g.usize(4..64);
+        let n = seq * g.usize(2..20) + g.usize(0..seq);
+        let tokens: Vec<u32> = (0..n as u32).collect();
+        let d = Dataset::new(tokens, seq);
+        let mut rng = Rng::new(g.case as u64);
+        let b = d.sample_batch(&mut rng, 3);
+        assert_eq!(b.len(), 3 * seq);
+        // each window is a contiguous run
+        for w in 0..3 {
+            let s = &b[w * seq..(w + 1) * seq];
+            for i in 1..seq {
+                assert_eq!(s[i], s[i - 1] + 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_routing_stats_fractions_bounded() {
+    property("routing stats", 60, |g| {
+        let layers = g.usize(1..8);
+        let mut st = RoutingStats::new(layers);
+        for _ in 0..g.usize(1..20) {
+            for l in 0..layers {
+                let total = g.usize(1..100) as u64;
+                let att = g.usize(0..(total as usize + 1)) as u64;
+                st.record_layer(l, att, total);
+            }
+        }
+        for f in st.fractions() {
+            assert!((0.0..=1.0).contains(&f));
+        }
+    });
+}
