@@ -1,0 +1,73 @@
+//! CPU-backend hot paths: forward tokens/s and decode steps/s for dense
+//! vs DTRNet at testbed scale — the native-path counterpart of
+//! `runtime_hotpath.rs` (which measures the PJRT boundary instead).
+//!
+//! The paper-relevant readout: DTRNet forward cost sits below dense at
+//! the same shape because only the routed fraction pays quadratic
+//! attention — here measured end-to-end, not analytically.
+
+use anyhow::Result;
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::SamplingParams;
+use dtrnet::runtime::{Backend, CpuBackend, Tensor};
+use dtrnet::util::bench::{bench, print_table, write_results};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut results = Json::obj();
+    let mut rows = Vec::new();
+    let (b, s) = (2usize, 64usize);
+
+    for (name, variant) in [
+        ("dense", Variant::Dense),
+        ("dtr_bilayer", Variant::DtrBilayer),
+        ("dtr_skip", Variant::DtrSkip),
+    ] {
+        let cfg = ModelConfig::preset("xs", variant);
+        let backend = CpuBackend::init(&cfg, 0)?;
+        let tokens = Tensor::i32(
+            vec![b, s],
+            (0..(b * s) as i32).map(|i| i * 7 % 256).collect(),
+        );
+
+        let fwd = bench(&format!("fwd_{name}"), 2, 8, || {
+            backend.forward(&tokens).unwrap();
+        });
+        let tok_per_s = (b * s) as f64 / fwd.mean_s;
+
+        let mut rng = Rng::new(1);
+        let prompt: Vec<i32> = (0..16).map(|_| rng.below(256) as i32).collect();
+        let dec = bench(&format!("decode_{name}"), 1, 4, || {
+            let mut r = Rng::new(2);
+            backend
+                .generate(&prompt, 32, &SamplingParams::greedy(), &mut r)
+                .unwrap();
+        });
+        let steps_per_s = 32.0 / dec.mean_s;
+
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2}", fwd.mean_s * 1e3),
+            format!("{:.0}", tok_per_s),
+            format!("{:.0}", steps_per_s),
+        ]);
+        results.set(
+            name,
+            Json::from_pairs(vec![
+                ("fwd_ms", Json::Num(fwd.mean_s * 1e3)),
+                ("fwd_tokens_per_s", Json::Num(tok_per_s)),
+                ("decode_steps_per_s", Json::Num(steps_per_s)),
+            ]),
+        );
+    }
+
+    print_table(
+        &format!("CPU backend hot paths (xs, B={b} S={s})"),
+        &["variant", "fwd ms", "fwd tok/s", "decode steps/s"],
+        &rows,
+    );
+    write_results("cpu_backend.json", results);
+    Ok(())
+}

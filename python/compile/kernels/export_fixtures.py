@@ -1,0 +1,175 @@
+"""Export golden vectors from the ref.py oracles for the Rust CPU backend.
+
+Writes ``rust/tests/fixtures/ref_vectors.json``: for each kernel in
+``ref.py``, a seeded set of inputs and the oracle's outputs. The Rust
+side (``rust/tests/golden_ref.rs``) replays the inputs through the
+native kernels in ``rust/src/runtime/cpu/kernels.rs`` and asserts
+allclose to 1e-4 — the cross-language correctness contract for the CPU
+backend.
+
+Run from the repo root (requires jax, build-time only):
+
+    python3 python/compile/kernels/export_fixtures.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+import sys
+
+import numpy as np
+
+
+def _load_ref():
+    here = os.path.dirname(os.path.abspath(__file__))
+    spec = importlib.util.spec_from_file_location("ref", os.path.join(here, "ref.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _t(arr) -> dict:
+    a = np.asarray(arr, dtype=np.float32)
+    return {"shape": list(a.shape), "data": [float(x) for x in a.reshape(-1)]}
+
+
+def main() -> None:
+    ref = _load_ref()
+    rng = np.random.default_rng(20250731)
+
+    def randn(*shape, scale=1.0):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    cases = {}
+
+    # rmsnorm
+    x = randn(6, 8)
+    w = (1.0 + 0.1 * rng.standard_normal(8)).astype(np.float32)
+    cases["rmsnorm"] = {
+        "x": _t(x),
+        "weight": _t(w),
+        "eps": 1e-5,
+        "out": _t(ref.rmsnorm_ref(x, w)),
+    }
+
+    # router (+ hard decision)
+    x = randn(5, 8)
+    w1 = randn(8, 4, scale=0.5)
+    w2 = randn(4, 2, scale=0.5)
+    g = ref.router_ref(x, w1, w2)
+    cases["router"] = {
+        "x": _t(x),
+        "w1": _t(w1),
+        "w2": _t(w2),
+        "g": _t(g),
+        "delta": _t(ref.route_decision_ref(g)),
+    }
+
+    # bypass (linear path)
+    x = randn(4, 8)
+    wv = randn(8, 8, scale=0.4)
+    wo = randn(8, 8, scale=0.4)
+    cases["bypass"] = {
+        "x": _t(x),
+        "wv": _t(wv),
+        "wo": _t(wo),
+        "out": _t(ref.bypass_ref(x, wv, wo)),
+    }
+
+    # rope
+    x = randn(5, 2, 4)
+    pos = np.arange(5, dtype=np.float32)
+    cases["rope"] = {
+        "x": _t(x),
+        "positions": _t(pos),
+        "theta": 10000.0,
+        "out": _t(ref.rope_ref(x, pos)),
+    }
+
+    # routed attention (mixed routing) + dense attention (all routed)
+    q = randn(6, 2, 4)
+    k = randn(6, 2, 4)
+    v = randn(6, 2, 4)
+    delta = np.array([1, 0, 1, 1, 0, 1], dtype=np.float32)
+    cases["routed_attention"] = {
+        "q": _t(q),
+        "k": _t(k),
+        "v": _t(v),
+        "delta": _t(delta),
+        "out": _t(ref.routed_attention_ref(q, k, v, delta)),
+    }
+    cases["dense_attention"] = {
+        "q": _t(q),
+        "k": _t(k),
+        "v": _t(v),
+        "out": _t(ref.dense_attention_ref(q, k, v)),
+    }
+
+    # swiglu mlp
+    x = randn(4, 8)
+    wg = randn(8, 12, scale=0.5)
+    wu = randn(8, 12, scale=0.5)
+    wd = randn(12, 8, scale=0.5)
+    cases["swiglu_mlp"] = {
+        "x": _t(x),
+        "w_gate": _t(wg),
+        "w_up": _t(wu),
+        "w_down": _t(wd),
+        "out": _t(ref.swiglu_mlp_ref(x, wg, wu, wd)),
+    }
+
+    # full DTR token-mixing sublayer, both bypass modes. Resample until the
+    # router decision is mixed (some routed, some bypassed) so the fixture
+    # exercises both paths and the routed-submask attention.
+    n, d, heads = 8, 16, 4
+    while True:
+        x = randn(n, d, scale=0.8)
+        w1 = randn(d, d // 2, scale=0.4)
+        w2 = randn(d // 2, 2, scale=0.4)
+        dec = np.asarray(ref.route_decision_ref(ref.router_ref(x, w1, w2)))
+        if 0 < dec.sum() < n:
+            break
+    wq = randn(d, d, scale=0.3)
+    wk = randn(d, d, scale=0.3)
+    wv = randn(d, d, scale=0.3)
+    wo = randn(d, d, scale=0.3)
+    pos = np.arange(n, dtype=np.float32)
+    for key, vo in (("dtr_token_update", True), ("dtr_token_update_novo", False)):
+        out, g, delta = ref.dtr_token_update_ref(
+            x, w1, w2, wq, wk, wv, wo, pos, heads, bypass_vo=vo
+        )
+        cases[key] = {
+            "x": _t(x),
+            "w1": _t(w1),
+            "w2": _t(w2),
+            "wq": _t(wq),
+            "wk": _t(wk),
+            "wv": _t(wv),
+            "wo": _t(wo),
+            "positions": _t(pos),
+            "n_heads": heads,
+            "bypass_vo": vo,
+            "update": _t(out),
+            "g": _t(g),
+            "delta": _t(delta),
+        }
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    out_path = os.path.join(root, "rust", "tests", "fixtures", "ref_vectors.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    payload = {"seed": 20250731, "tolerance": 1e-4, "cases": cases}
+    with open(out_path, "w") as f:
+        json.dump(payload, f)
+    n_vals = sum(
+        len(t["data"])
+        for case in cases.values()
+        for t in case.values()
+        if isinstance(t, dict) and "data" in t
+    )
+    print(f"wrote {out_path}: {len(cases)} cases, {n_vals} scalars", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -103,7 +103,18 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// All known preset names (the single source of truth for CLI
+    /// validation and [`Self::try_preset`]).
+    pub const PRESET_NAMES: [&'static str; 5] =
+        ["xs", "tiny", "small", "smollm-360m", "smollm-1b3"];
+
     pub fn preset(name: &str, variant: Variant) -> ModelConfig {
+        Self::try_preset(name, variant)
+            .unwrap_or_else(|| panic!("unknown preset {name:?}"))
+    }
+
+    /// Fallible variant of [`Self::preset`] for user-facing inputs.
+    pub fn try_preset(name: &str, variant: Variant) -> Option<ModelConfig> {
         let (vocab, d, l, h, ff, seq) = match name {
             "xs" => (256, 64, 4, 4, 176, 64),
             "tiny" => (256, 128, 6, 4, 352, 128),
@@ -112,9 +123,9 @@ impl ModelConfig {
             // analytical FLOPs/memory models run at these scales).
             "smollm-360m" => (32000, 960, 32, 15, 2560, 2048),
             "smollm-1b3" => (32000, 2048, 24, 32, 5632, 2048),
-            other => panic!("unknown preset {other:?}"),
+            _ => return None,
         };
-        ModelConfig {
+        Some(ModelConfig {
             name: name.to_string(),
             vocab_size: vocab,
             d_model: d,
@@ -126,7 +137,7 @@ impl ModelConfig {
             dtr_attn_frac: 0.10,
             mod_capacity: 0.7,
             dllm_omega: 0.85,
-        }
+        })
     }
 
     pub fn head_dim(&self) -> usize {

@@ -1,5 +1,9 @@
 //! The L3 coordinator — the paper-facing system.
 //!
+//! The host-side pieces (batcher, KV pool, sampling, stats, workload) are
+//! feature-free; the artifact-driven loops ([`trainer`], [`serve`]) need
+//! the `pjrt` feature (XLA/PJRT execution path).
+//!
 //! * [`trainer`] — training orchestrator: drives the fused `train_step`
 //!   artifact, owns the LR schedule and logging, evaluates checkpoints.
 //! * [`kv_cache`] — routing-aware paged KV-cache pool: pages are allocated
@@ -14,15 +18,19 @@
 pub mod batcher;
 pub mod kv_cache;
 pub mod sampling;
+#[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod stats;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod workload;
 
 pub use batcher::{Batcher, Request, RequestState};
 pub use kv_cache::{KvPool, PoolStats};
 pub use sampling::{sample, SamplingParams};
+#[cfg(feature = "pjrt")]
 pub use serve::{ServeEngine, ServeReport};
 pub use stats::RoutingStats;
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainReport, Trainer};
 pub use workload::{generate as generate_workload, WorkloadSpec};

@@ -1,15 +1,25 @@
 //! Evaluation harnesses: perplexity, routing fractions, long-context spans,
 //! cosine-similarity probe, synthetic zero-shot tasks — everything the
 //! paper's tables/figures report.
+//!
+//! The metric code ([`cross_entropy`], [`EvalResult`]) and the
+//! backend-driven harness ([`perplexity_backend`]) are feature-free; the
+//! artifact-driven harnesses need the `pjrt` feature.
 
 pub mod tasks;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::coordinator::RoutingStats;
+#[cfg(feature = "pjrt")]
 use crate::data::longctx::LongCtxItem;
 use crate::data::Dataset;
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::Backend;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+use crate::runtime::Tensor;
 
 /// Cross-entropy (nats/token) of logits over next-token targets.
 ///
@@ -52,7 +62,39 @@ pub struct EvalResult {
     pub n_tokens: usize,
 }
 
+/// Perplexity of a [`Backend`] on `data` — the feature-free mirror of
+/// [`perplexity`], used by the offline test suite and the CPU demo path.
+pub fn perplexity_backend(
+    backend: &dyn Backend,
+    data: &Dataset,
+    batch: usize,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let cfg = backend.config();
+    let (vocab, n_layers) = (cfg.vocab_size, cfg.n_layers);
+    let seq = data.seq;
+
+    let mut total_ce = 0.0;
+    let mut n_batches = 0usize;
+    let mut routing = RoutingStats::new(n_layers);
+    for tokens in data.eval_batches(batch).take(max_batches) {
+        let out = backend.forward(&Tensor::i32(vec![batch, seq], tokens.clone()))?;
+        total_ce += cross_entropy(out.logits.as_f32(), &tokens, batch, seq, vocab, None);
+        routing.record_route_tensor(out.route.as_f32(), batch, n_layers, seq);
+        n_batches += 1;
+    }
+    anyhow::ensure!(n_batches > 0, "no eval batches");
+    let ce = total_ce / n_batches as f64;
+    Ok(EvalResult {
+        ce_nats: ce,
+        ppl: ce.exp(),
+        routing,
+        n_tokens: n_batches * batch * (seq - 1),
+    })
+}
+
 /// Perplexity of `params` (flat literals) on `data` via a fwd artifact.
+#[cfg(feature = "pjrt")]
 pub fn perplexity(
     engine: &Engine,
     artifact: &str,
@@ -94,6 +136,7 @@ pub fn perplexity(
 
 /// Span-restricted perplexity for long-context items (Fig. 3 metric).
 /// The artifact must be a fwd with batch=1 and seq == item length.
+#[cfg(feature = "pjrt")]
 pub fn span_perplexity(
     engine: &Engine,
     artifact: &str,
@@ -127,6 +170,7 @@ pub fn span_perplexity(
 
 /// Fig. 1 cosine-similarity matrix from a probe artifact: returns the
 /// [L+1, L+1] row-major similarity matrix.
+#[cfg(feature = "pjrt")]
 pub fn cosine_probe(
     engine: &Engine,
     artifact: &str,

@@ -15,8 +15,10 @@
 //!  * `Recall` — Winogrande/cloze-style: the prompt establishes a
 //!    key→value binding; options differ in the recalled value.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Tensor};
 use crate::util::rng::Rng;
 
@@ -122,6 +124,7 @@ pub fn recall_items(
 /// Zero-shot accuracy: lowest length-normalized answer-span CE wins.
 /// Items are packed into the fwd artifact's [B, S] batches (padded with
 /// token 0; CE measured only on the answer span).
+#[cfg(feature = "pjrt")]
 pub fn mc_accuracy(
     engine: &Engine,
     artifact: &str,

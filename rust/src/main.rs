@@ -1,58 +1,80 @@
 //! `dtrnet` CLI — the leader entrypoint.
 //!
-//! Subcommands:
-//!   info                         — platform + artifact inventory
+//! Always available (native CPU backend / analytical models):
+//!   info                           — version, backend, artifact inventory
+//!   demo    --preset xs --variant dtr_bilayer — CPU backend tour:
+//!                                    forward perplexity, routing stats,
+//!                                    greedy/sampled decode
+//!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
+//!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
+//!
+//! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer --steps 200 [--corpus markov|text]
 //!   eval    --tag tiny_dtr_bilayer — perplexity + routing stats
 //!   serve   --tag tiny_dtr_bilayer --requests 8 — continuous-batch demo
-//!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
-//!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
-//!   probe   — Fig. 1 cosine-similarity matrix (needs probe artifact)
 
 use anyhow::{bail, Result};
 
-use dtrnet::config::{ModelConfig, TrainConfig, Variant};
-use dtrnet::coordinator::{Request, ServeEngine, Trainer};
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::SamplingParams;
 use dtrnet::data::{corpus, Dataset};
 use dtrnet::model::{flops, memory};
-use dtrnet::runtime::Engine;
+use dtrnet::runtime::{Backend, CpuBackend};
 use dtrnet::tokenizer::{ByteTokenizer, Tokenizer};
 use dtrnet::util::bench::print_table;
 use dtrnet::util::cli::Args;
 use dtrnet::util::rng::Rng;
+
+#[cfg(feature = "pjrt")]
+use dtrnet::config::TrainConfig;
+#[cfg(feature = "pjrt")]
+use dtrnet::coordinator::{Request, ServeEngine, Trainer};
+#[cfg(feature = "pjrt")]
+use dtrnet::runtime::Engine;
 
 fn main() -> Result<()> {
     let args = Args::parse();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
         "info" => info(),
+        "demo" => demo(&args),
         "train" => train(&args),
         "eval" => eval(&args),
         "serve" => serve(&args),
         "flops" => flops_cmd(&args),
         "kvmem" => kvmem_cmd(&args),
-        other => bail!("unknown command {other:?} (try info/train/eval/serve/flops/kvmem)"),
+        other => bail!("unknown command {other:?} (try info/demo/train/eval/serve/flops/kvmem)"),
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn engine() -> Result<Engine> {
     Engine::new(&dtrnet::artifacts_dir())
 }
 
 fn info() -> Result<()> {
-    let e = engine()?;
-    println!("dtrnet {} — platform {}", dtrnet::version(), e.platform());
-    println!("artifacts ({}):", e.manifest.artifacts.len());
-    for a in &e.manifest.artifacts {
-        println!(
-            "  {:<36} kind={:<11} layout={} in/out={}/{}",
-            a.name,
-            a.kind,
-            a.config.layout_string(),
-            a.inputs.len(),
-            a.outputs.len()
-        );
+    println!("dtrnet {}", dtrnet::version());
+    #[cfg(feature = "pjrt")]
+    {
+        let e = engine()?;
+        println!("execution backend: PJRT ({})", e.platform());
+        println!("artifacts ({}):", e.manifest.artifacts.len());
+        for a in &e.manifest.artifacts {
+            println!(
+                "  {:<36} kind={:<11} layout={} in/out={}/{}",
+                a.name,
+                a.kind,
+                a.config.layout_string(),
+                a.inputs.len(),
+                a.outputs.len()
+            );
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!(
+        "execution backend: native cpu (rebuild with --features pjrt for the \
+         XLA/PJRT artifact path)"
+    );
     Ok(())
 }
 
@@ -70,6 +92,53 @@ fn make_dataset(args: &Args, seq: usize) -> Dataset {
     }
 }
 
+/// Native CPU backend tour: forward perplexity + routing + decode — runs
+/// on any machine, no artifacts, no XLA.
+fn demo(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "xs");
+    let variant = Variant::from_str(args.get_or("variant", "dtr_bilayer"))
+        .ok_or_else(|| anyhow::anyhow!("unknown variant (try dense/dtr_bilayer/dtr_trilayer)"))?;
+    let cfg = ModelConfig::try_preset(preset, variant).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown preset {preset:?} (try one of {:?})",
+            ModelConfig::PRESET_NAMES
+        )
+    })?;
+    let seed = args.get_u64("seed", 0);
+    let backend = CpuBackend::init(&cfg, seed)?;
+    println!(
+        "backend={} model={} variant={} layout={} params={}",
+        backend.name(),
+        cfg.name,
+        variant.as_str(),
+        cfg.layout_string(),
+        cfg.param_count()
+    );
+
+    let data = make_dataset(args, cfg.max_seq.min(64));
+    let r = dtrnet::eval::perplexity_backend(&backend, &data, 2, args.get_usize("batches", 2))?;
+    println!(
+        "[fwd] ppl {:.3} over {} tokens; attention fractions {:?}",
+        r.ppl,
+        r.n_tokens,
+        r.routing.fractions()
+    );
+
+    let mut rng = Rng::new(seed.wrapping_add(1));
+    let prompt: Vec<i32> = (0..args.get_usize("prompt", 8))
+        .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+        .collect();
+    let sampling = SamplingParams::temperature(args.get_f64("temp", 0.0) as f32);
+    let gen = backend.generate(&prompt, args.get_usize("gen", 16), &sampling, &mut rng)?;
+    println!(
+        "[decode] prompt {:?} -> generated {:?}",
+        prompt, gen.tokens
+    );
+    println!("[decode] per-layer attention fractions {:?}", gen.attn_frac);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn train(args: &Args) -> Result<()> {
     let e = engine()?;
     let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
@@ -105,6 +174,16 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn train(_args: &Args) -> Result<()> {
+    bail!(
+        "`train` drives AOT train_step artifacts and needs the `pjrt` build \
+         (cargo build --features pjrt, with the xla crate available); \
+         try `dtrnet demo` for the native CPU path"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn eval(args: &Args) -> Result<()> {
     let e = engine()?;
     let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
@@ -133,6 +212,15 @@ fn eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn eval(_args: &Args) -> Result<()> {
+    bail!(
+        "`eval` scores AOT fwd artifacts and needs the `pjrt` build; \
+         use `dtrnet demo` to evaluate the native CPU backend"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(args: &Args) -> Result<()> {
     let e = engine()?;
     let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
@@ -170,6 +258,14 @@ fn serve(args: &Args) -> Result<()> {
     let report = srv.run_to_completion(100_000)?;
     println!("{}", report.to_json().to_string_pretty());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &Args) -> Result<()> {
+    bail!(
+        "`serve` drives AOT decode artifacts and needs the `pjrt` build; \
+         try `dtrnet demo --gen 32` for native CPU decoding"
+    )
 }
 
 fn flops_cmd(args: &Args) -> Result<()> {

@@ -1,0 +1,165 @@
+//! Pluggable execution backends.
+//!
+//! A [`Backend`] evaluates the DTRNet model family over host [`Tensor`]s:
+//! batched training-shape forward passes (logits + routing telemetry) and
+//! incremental decode with a routing-aware KV state. Two implementations
+//! exist:
+//!
+//! * [`crate::runtime::CpuBackend`] — native Rust, always available; the
+//!   default build's execution path and the offline test substrate.
+//! * The PJRT/XLA path (`pjrt` cargo feature) — AOT artifacts executed
+//!   through [`crate::runtime::Engine`]; it keeps device-resident state
+//!   inside [`crate::coordinator`] loops rather than implementing this
+//!   trait directly (literals must stay on device across steps).
+//!
+//! [`DecodeState`] is the host-side analogue of the decode artifact's
+//! resident KV literals: per layer, only tokens the router sent through
+//! attention are cached — the mechanism behind the paper's Fig. 6 memory
+//! savings. Dense layers cache every token.
+
+use anyhow::{ensure, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::sampling::{sample, SamplingParams};
+use crate::util::rng::Rng;
+
+use super::tensor::Tensor;
+
+/// Batched forward outputs — mirrors the AOT `fwd` artifact tuple
+/// (logits, route, g_attn, attn_frac).
+#[derive(Debug, Clone)]
+pub struct ForwardOutput {
+    /// `[B, S, V]` next-token logits.
+    pub logits: Tensor,
+    /// `[B, L, S]` hard routing decisions (1.0 = attention path). Dense
+    /// layers are all-ones by construction.
+    pub route: Tensor,
+    /// `[B, L, S]` soft attention-path router scores (1.0 on dense layers).
+    pub g_attn: Tensor,
+    /// `[L]` mean fraction of tokens routed to attention per layer.
+    pub attn_frac: Vec<f64>,
+}
+
+/// Per-sequence incremental decode state: position counter plus per-layer
+/// cached keys/values (`[len, H*hd]` row-major, RoPE already applied to
+/// keys at their absolute positions — the same contract as the decode
+/// artifact's cache literals).
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    pub position: usize,
+    pub keys: Vec<Vec<f32>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl DecodeState {
+    pub fn new(n_layers: usize) -> DecodeState {
+        DecodeState {
+            position: 0,
+            keys: vec![Vec::new(); n_layers],
+            values: vec![Vec::new(); n_layers],
+        }
+    }
+
+    /// Cached token count per layer (the artifact's `lens` row).
+    pub fn lens(&self, d_model: usize) -> Vec<usize> {
+        self.keys.iter().map(|k| k.len() / d_model).collect()
+    }
+}
+
+/// One decode step's outputs — mirrors the decode artifact tuple
+/// (logits, routing decision per layer, soft scores per layer).
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// `[V]` logits for the next token.
+    pub logits: Tensor,
+    /// Per-layer: did this token take the attention path (and get cached)?
+    pub routed: Vec<bool>,
+    /// Per-layer soft attention score g_attn (1.0 on dense layers).
+    pub g_attn: Vec<f32>,
+}
+
+/// Outcome of [`Backend::generate`].
+#[derive(Debug, Clone)]
+pub struct GenerateOutput {
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<i32>,
+    /// Per-layer fraction of tokens fed through the model that took the
+    /// attention path. Covers the prompt plus all but the last generated
+    /// token (the final sample is returned without a decode step).
+    pub attn_frac: Vec<f64>,
+}
+
+/// An execution backend for the DTRNet model family.
+pub trait Backend {
+    /// Human-readable backend name (for logs/reports).
+    fn name(&self) -> &'static str;
+
+    /// The model configuration this backend instance was built for.
+    fn config(&self) -> &ModelConfig;
+
+    /// Batched training-shape forward. `tokens` is `[B, S]` i32.
+    fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput>;
+
+    /// Fresh decode state for one sequence.
+    fn begin_decode(&self) -> DecodeState;
+
+    /// Feed one token at the state's current position; returns next-token
+    /// logits and the per-layer routing decisions that updated the cache.
+    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput>;
+
+    /// Prefill a prompt by running sequential decode steps; returns the
+    /// last step's output (logits predict the token after the prompt).
+    fn prefill(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<StepOutput> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let mut last = None;
+        for &t in tokens {
+            last = Some(self.decode_step(state, t)?);
+        }
+        Ok(last.unwrap())
+    }
+
+    /// Greedy/sampled autoregressive decode: prefill `prompt`, then sample
+    /// `max_new_tokens` continuation tokens under `params` (temperature 0
+    /// = greedy). Deterministic given (`prompt`, `params`, `rng` seed).
+    fn generate(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        params: &SamplingParams,
+        rng: &mut Rng,
+    ) -> Result<GenerateOutput> {
+        let mut state = self.begin_decode();
+        let mut step = self.prefill(&mut state, prompt)?;
+        // prefill() reports only its last step; the prompt's per-layer
+        // routed counts are exactly the cache lens after prefill.
+        let mut routed_counts: Vec<u64> = state
+            .lens(self.config().d_model)
+            .iter()
+            .map(|&len| len as u64)
+            .collect();
+        let mut total_steps = prompt.len() as u64;
+
+        let mut out_tokens: Vec<i32> = Vec::with_capacity(max_new_tokens);
+        for _ in 0..max_new_tokens {
+            let next = sample(step.logits.as_f32(), params, &out_tokens, rng);
+            out_tokens.push(next);
+            if out_tokens.len() == max_new_tokens {
+                break;
+            }
+            step = self.decode_step(&mut state, next)?;
+            total_steps += 1;
+            for (l, &r) in step.routed.iter().enumerate() {
+                routed_counts[l] += u64::from(r);
+            }
+        }
+
+        let attn_frac = routed_counts
+            .iter()
+            .map(|&c| c as f64 / (total_steps as f64).max(1.0))
+            .collect();
+        Ok(GenerateOutput {
+            tokens: out_tokens,
+            attn_frac,
+        })
+    }
+}

@@ -167,6 +167,7 @@ impl Checkpoint {
 
     /// Build from parameter literals + the manifest layout (names/shapes
     /// validated against the manifest contract).
+    #[cfg(feature = "pjrt")]
     pub fn from_literals(
         names: &[super::manifest::ParamSpec],
         literals: &[xla::Literal],
@@ -188,6 +189,7 @@ impl Checkpoint {
     }
 
     /// Convert back to literals in manifest order (errors on missing/extra).
+    #[cfg(feature = "pjrt")]
     pub fn to_literals(&self, names: &[super::manifest::ParamSpec]) -> Result<Vec<xla::Literal>> {
         anyhow::ensure!(
             self.entries.len() == names.len(),

@@ -1,0 +1,499 @@
+//! Native CPU kernels — the Rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! Every function here has a line-for-line oracle in ref.py and is held to
+//! it by the golden-vector suite (`rust/tests/golden_ref.rs`, fixtures
+//! exported by `python/compile/kernels/export_fixtures.py`) to 1e-4.
+//!
+//! Conventions (paper notation): `n` sequence length, `d` model dim, `h`
+//! heads, `hd` head dim (`d = h * hd`). All buffers are flat row-major
+//! `f32` slices; `[n, h, hd]` tensors index as `(i*h + head)*hd + t`.
+
+/// Large-negative instead of -inf: keeps softmax NaN-free (ref.py NEG_INF).
+pub const NEG_INF: f32 = -1.0e30;
+
+/// SiLU activation: `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * (1.0 / (1.0 + (-x).exp()))
+}
+
+/// Row-major matmul: `a [n, k] @ b [k, m] -> [n, m]`.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * m..(kk + 1) * m];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// RMSNorm (ref.rmsnorm_ref): `x [n, d]`, `weight [d]`.
+pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
+    let d = weight.len();
+    let n = x.len() / d;
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let var: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            out[i * d + j] = row[j] * inv * weight[j];
+        }
+    }
+    out
+}
+
+/// DTRNet token router (ref.router_ref, paper Eq. 1):
+/// `G = softmax(SiLU(x W1) W2)`. `x [n, d]`, `w1 [d, dh]`, `w2 [dh, 2]`.
+/// Returns `[n, 2]` — column 0 = attention path, 1 = bypass.
+pub fn router(x: &[f32], w1: &[f32], w2: &[f32], n: usize, d: usize, dh: usize) -> Vec<f32> {
+    let mut hidden = matmul(x, w1, n, d, dh);
+    for v in hidden.iter_mut() {
+        *v = silu(*v);
+    }
+    let mut g = matmul(&hidden, w2, n, dh, 2);
+    for i in 0..n {
+        let m = g[i * 2].max(g[i * 2 + 1]);
+        let e0 = (g[i * 2] - m).exp();
+        let e1 = (g[i * 2 + 1] - m).exp();
+        let z = e0 + e1;
+        g[i * 2] = e0 / z;
+        g[i * 2 + 1] = e1 / z;
+    }
+    g
+}
+
+/// Hard token-choice routing (ref.route_decision_ref, paper Eq. 2):
+/// `delta_i = 1[g_attn > g_bypass]`. `g [n, 2]` -> `[n]` in {0, 1}.
+pub fn route_decision(g: &[f32]) -> Vec<f32> {
+    let n = g.len() / 2;
+    (0..n)
+        .map(|i| if g[i * 2] > g[i * 2 + 1] { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// Expert-choice top-k mask: exactly `k` ones at the positions of the `k`
+/// largest scores (ties broken toward the lower index, deterministically).
+pub fn topk_mask(scores: &[f32], k: usize) -> Vec<f32> {
+    let n = scores.len();
+    let k = k.min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![0.0f32; n];
+    for &i in &idx[..k] {
+        mask[i] = 1.0;
+    }
+    mask
+}
+
+/// Linear-path update (ref.bypass_ref, paper Eq. 5 core): `x W^V W^O` —
+/// self-attention without interaction. `x [n, d]`, `wv`/`wo` `[d, d]`.
+pub fn bypass(x: &[f32], wv: &[f32], wo: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let v = matmul(x, wv, n, d, d);
+    matmul(&v, wo, n, d, d)
+}
+
+/// Rotary position embedding (ref.rope_ref) over `x [n, h, hd]` at
+/// (possibly fractional, for YaRN-style scaling) `positions [n]`.
+pub fn rope(x: &[f32], positions: &[f32], n: usize, h: usize, hd: usize, theta: f32) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * h * hd);
+    debug_assert_eq!(positions.len(), n);
+    let half = hd / 2;
+    let freqs: Vec<f32> = (0..half)
+        .map(|j| 1.0 / theta.powf(j as f32 / half as f32))
+        .collect();
+    let mut out = vec![0.0f32; n * h * hd];
+    for i in 0..n {
+        for head in 0..h {
+            let base = (i * h + head) * hd;
+            for j in 0..half {
+                let angle = positions[i] * freqs[j];
+                let (sin, cos) = angle.sin_cos();
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                out[base + j] = x1 * cos - x2 * sin;
+                out[base + half + j] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+    out
+}
+
+/// Routed multi-head causal attention (ref.routed_attention_ref, paper
+/// Eq. 4 + sparse-equivalence Eq. 6). `q`/`k`/`v [n, h, hd]` (q/k already
+/// RoPE'd), `delta [n]` in {0, 1}. Attention is causal AND restricted to
+/// the routed-token submask `delta·deltaᵀ`; the diagonal is always
+/// allowed so every softmax row stays finite (non-routed queries' outputs
+/// are discarded by the caller's path select). Returns `[n, h, hd]`.
+pub fn routed_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    delta: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; n * h * hd];
+    let mut logits = vec![0.0f32; n];
+    for head in 0..h {
+        for i in 0..n {
+            let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
+            let row = &mut logits[..i + 1];
+            for (j, lg) in row.iter_mut().enumerate() {
+                let allowed = j == i || (delta[i] > 0.5 && delta[j] > 0.5);
+                *lg = if allowed {
+                    let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    dot(qi, kj) * scale
+                } else {
+                    NEG_INF
+                };
+            }
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for lg in row.iter_mut() {
+                *lg = (*lg - m).exp();
+                z += *lg;
+            }
+            let orow = &mut out[(i * h + head) * hd..(i * h + head + 1) * hd];
+            for (j, &w) in row.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                let wj = w / z;
+                let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                for (o, &vv) in orow.iter_mut().zip(vj) {
+                    *o += wj * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Plain causal MHA (ref.dense_attention_ref): routed with all-ones delta.
+pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, h: usize, hd: usize) -> Vec<f32> {
+    let ones = vec![1.0f32; n];
+    routed_attention(q, k, v, &ones, n, h, hd)
+}
+
+/// Single-query attention over a KV cache plus the current token — the
+/// decode-path form of [`routed_attention`]. `q`/`k_self`/`v_self` are
+/// `[h*hd]` for the current token (q/k RoPE'd at its absolute position);
+/// `cache_k`/`cache_v` are `[len, h*hd]` rows in append order (ascending
+/// positions, so the softmax accumulation order matches the batched
+/// kernel). Returns `[h*hd]` context.
+pub fn decode_attention(
+    q: &[f32],
+    cache_k: &[f32],
+    cache_v: &[f32],
+    k_self: &[f32],
+    v_self: &[f32],
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let d = h * hd;
+    let len = cache_k.len() / d;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; d];
+    let mut logits = vec![0.0f32; len + 1];
+    for head in 0..h {
+        let qh = &q[head * hd..(head + 1) * hd];
+        for j in 0..len {
+            let kj = &cache_k[j * d + head * hd..j * d + (head + 1) * hd];
+            logits[j] = dot(qh, kj) * scale;
+        }
+        logits[len] = dot(qh, &k_self[head * hd..(head + 1) * hd]) * scale;
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for lg in logits.iter_mut() {
+            *lg = (*lg - m).exp();
+            z += *lg;
+        }
+        let orow = &mut out[head * hd..(head + 1) * hd];
+        for (j, &w) in logits.iter().enumerate() {
+            let wj = w / z;
+            let vj = if j < len {
+                &cache_v[j * d + head * hd..j * d + (head + 1) * hd]
+            } else {
+                &v_self[head * hd..(head + 1) * hd]
+            };
+            for (o, &vv) in orow.iter_mut().zip(vj) {
+                *o += wj * vv;
+            }
+        }
+    }
+    out
+}
+
+/// SwiGLU MLP (ref.swiglu_mlp_ref): `(SiLU(x Wg) * (x Wu)) Wd`.
+/// `x [n, d]`, `w_gate`/`w_up [d, ff]`, `w_down [ff, d]`.
+pub fn swiglu_mlp(
+    x: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    w_down: &[f32],
+    n: usize,
+    d: usize,
+    ff: usize,
+) -> Vec<f32> {
+    let mut gate = matmul(x, w_gate, n, d, ff);
+    let up = matmul(x, w_up, n, d, ff);
+    for (g, &u) in gate.iter_mut().zip(&up) {
+        *g = silu(*g) * u;
+    }
+    matmul(&gate, w_down, n, ff, d)
+}
+
+/// Q/K/V projection + RoPE on q and k (model.py `_attention_kv` front
+/// half). `u [n, d]` normalized stream; returns `(q, k, v)` each
+/// `[n, h, hd]` with q/k rotated at `positions`.
+#[allow(clippy::too_many_arguments)]
+pub fn qkv_rope(
+    u: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    positions: &[f32],
+    n: usize,
+    d: usize,
+    h: usize,
+    theta: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hd = d / h;
+    let q = rope(&matmul(u, wq, n, d, d), positions, n, h, hd, theta);
+    let k = rope(&matmul(u, wk, n, d, d), positions, n, h, hd, theta);
+    let v = matmul(u, wv, n, d, d);
+    (q, k, v)
+}
+
+/// Output of [`dtr_token_update`].
+pub struct DtrUpdate {
+    /// `[n, d]` token-mixing update (added to the residual stream).
+    pub update: Vec<f32>,
+    /// `[n, 2]` soft router scores.
+    pub g: Vec<f32>,
+    /// `[n]` hard routing decisions actually applied.
+    pub delta: Vec<f32>,
+}
+
+/// Post-router half of the DTR sublayer: given precomputed scores `g`
+/// `[n, 2]` and hard decisions `delta` `[n]`, compute the token-mixing
+/// update — routed attention for selected tokens, linear bypass for the
+/// rest, soft-score path select (paper Eqs. 3–5). Shared by
+/// [`dtr_token_update`] (the golden-tested oracle mirror) and the CPU
+/// backend's forward path, so both stay under one implementation.
+#[allow(clippy::too_many_arguments)]
+pub fn dtr_token_mix(
+    x: &[f32],
+    g: &[f32],
+    delta: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    positions: &[f32],
+    n: usize,
+    d: usize,
+    h: usize,
+    theta: f32,
+    bypass_vo: bool,
+) -> Vec<f32> {
+    let hd = d / h;
+    let (q, k, v) = qkv_rope(x, wq, wk, wv, positions, n, d, h, theta);
+    let ctx = routed_attention(&q, &k, &v, delta, n, h, hd);
+    let attn_out = matmul(&ctx, wo, n, d, d);
+    let byp = if bypass_vo {
+        bypass(x, wv, wo, n, d)
+    } else {
+        x.to_vec()
+    };
+    let mut update = vec![0.0f32; n * d];
+    for i in 0..n {
+        let (w, src) = if delta[i] > 0.5 {
+            (g[i * 2], &attn_out)
+        } else {
+            (g[i * 2 + 1], &byp)
+        };
+        for j in 0..d {
+            update[i * d + j] = w * src[i * d + j];
+        }
+    }
+    update
+}
+
+/// Full DTR token-mixing sublayer (ref.dtr_token_update_ref, paper
+/// Eqs. 1–5): router → {routed attention, linear bypass} → soft-score
+/// path select. `x` is the *normalized* residual stream `[n, d]`.
+/// `forced_delta` overrides the token-choice decision (expert-choice
+/// top-k, or all-zeros for the dtr_skip ablation); `None` = Eq. 2.
+#[allow(clippy::too_many_arguments)]
+pub fn dtr_token_update(
+    x: &[f32],
+    r_w1: &[f32],
+    r_w2: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    positions: &[f32],
+    n: usize,
+    d: usize,
+    h: usize,
+    theta: f32,
+    bypass_vo: bool,
+    forced_delta: Option<&[f32]>,
+) -> DtrUpdate {
+    let g = router(x, r_w1, r_w2, n, d, d / 2);
+    let delta: Vec<f32> = match forced_delta {
+        Some(f) => f.to_vec(),
+        None => route_decision(&g),
+    };
+    let update = dtr_token_mix(
+        x, &g, &delta, wq, wk, wv, wo, positions, n, d, h, theta, bypass_vo,
+    );
+    DtrUpdate { update, g, delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2, 3]
+        let mut eye = vec![0.0f32; 9];
+        for i in 0..3 {
+            eye[i * 3 + i] = 1.0;
+        }
+        assert_allclose(&matmul(&x, &eye, 2, 3, 3), &x, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn router_rows_are_distributions() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (7, 8);
+        let g = router(
+            &randn(&mut rng, n * d, 1.0),
+            &randn(&mut rng, d * (d / 2), 0.5),
+            &randn(&mut rng, (d / 2) * 2, 0.5),
+            n,
+            d,
+            d / 2,
+        );
+        for i in 0..n {
+            let s = g[i * 2] + g[i * 2 + 1];
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            assert!(g[i * 2] >= 0.0 && g[i * 2 + 1] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn rope_at_position_zero_is_identity() {
+        let mut rng = Rng::new(2);
+        let (n, h, hd) = (3, 2, 4);
+        let x = randn(&mut rng, n * h * hd, 1.0);
+        let zeros = vec![0.0f32; n];
+        let out = rope(&x, &zeros, n, h, hd, 10000.0);
+        assert_allclose(&out, &x, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::new(3);
+        let (n, h, hd) = (4, 2, 8);
+        let x = randn(&mut rng, n * h * hd, 1.0);
+        let pos: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let out = rope(&x, &pos, n, h, hd, 10000.0);
+        let norm = |v: &[f32]| v.iter().map(|&a| (a * a) as f64).sum::<f64>();
+        assert!((norm(&x) - norm(&out)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn single_token_attention_returns_value() {
+        let mut rng = Rng::new(4);
+        let (h, hd) = (2, 4);
+        let q = randn(&mut rng, h * hd, 1.0);
+        let k = randn(&mut rng, h * hd, 1.0);
+        let v = randn(&mut rng, h * hd, 1.0);
+        // n = 1: softmax over the single (diagonal) entry is 1 → output = v
+        let out = routed_attention(&q, &k, &v, &[0.0], 1, h, hd);
+        assert_allclose(&out, &v, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn decode_attention_matches_batched_last_row() {
+        let mut rng = Rng::new(5);
+        let (n, h, hd) = (6, 2, 4);
+        let d = h * hd;
+        let q = randn(&mut rng, n * d, 1.0);
+        let k = randn(&mut rng, n * d, 1.0);
+        let v = randn(&mut rng, n * d, 1.0);
+        let full = dense_attention(&q, &k, &v, n, h, hd);
+        // decode view: cache = rows 0..n-1, self = row n-1
+        let dec = decode_attention(
+            &q[(n - 1) * d..],
+            &k[..(n - 1) * d],
+            &v[..(n - 1) * d],
+            &k[(n - 1) * d..],
+            &v[(n - 1) * d..],
+            h,
+            hd,
+        );
+        assert_allclose(&dec, &full[(n - 1) * d..], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn topk_mask_exact_count_with_ties() {
+        let scores = vec![0.5, 0.9, 0.5, 0.1, 0.9, 0.5];
+        let mask = topk_mask(&scores, 3);
+        assert_eq!(mask.iter().filter(|&&m| m > 0.5).count(), 3);
+        // the two 0.9s always make it; the tie among 0.5s breaks low-index
+        assert_eq!(mask[1], 1.0);
+        assert_eq!(mask[4], 1.0);
+        assert_eq!(mask[0], 1.0);
+    }
+
+    #[test]
+    fn bypass_is_linear_in_x() {
+        let mut rng = Rng::new(6);
+        let (n, d) = (3, 8);
+        let x = randn(&mut rng, n * d, 1.0);
+        let wv = randn(&mut rng, d * d, 0.5);
+        let wo = randn(&mut rng, d * d, 0.5);
+        let y1 = bypass(&x, &wv, &wo, n, d);
+        let x2: Vec<f32> = x.iter().map(|&a| 2.0 * a).collect();
+        let y2 = bypass(&x2, &wv, &wo, n, d);
+        let y1x2: Vec<f32> = y1.iter().map(|&a| 2.0 * a).collect();
+        assert_allclose(&y2, &y1x2, 1e-4, 1e-4);
+    }
+}

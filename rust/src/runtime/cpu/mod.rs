@@ -1,0 +1,521 @@
+//! Native Rust CPU backend — DTRNet end-to-end with no XLA, no artifacts.
+//!
+//! Evaluates the same block semantics as `python/compile/model.py`
+//! (pre-norm RMSNorm + RoPE + SwiGLU; DTR layers: router → routed
+//! attention / linear bypass → soft-score path select) over the host
+//! [`Tensor`] type, via the oracle-mirrored kernels in [`kernels`].
+//!
+//! Supported variants: `dense` and the `dtr_*` family (including
+//! `dtr_skip`, whose routers are forced to bypass). The MoD / D-LLM
+//! baselines remain PJRT-artifact-only for now.
+//!
+//! Weights interoperate with the DTCK checkpoint format using the same
+//! `flatten_params` naming contract as the Python side
+//! (`tok_embed`, `unembed`, `out_norm`, `layers.{i}.{key}`), so a
+//! PJRT-trained checkpoint can be served by this backend and vice versa.
+
+pub mod kernels;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{LayerKind, ModelConfig, Variant};
+use crate::util::rng::Rng;
+
+use super::backend::{Backend, DecodeState, ForwardOutput, StepOutput};
+use super::checkpoint::Checkpoint;
+use super::tensor::Tensor;
+
+/// RoPE base frequency (model.py `rope_theta` default).
+pub const ROPE_THETA: f32 = 10000.0;
+/// RMSNorm epsilon (model.py `rmsnorm_eps` default).
+pub const RMSNORM_EPS: f32 = 1e-5;
+
+/// How DTR layers turn router scores into hard routing decisions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouterMode {
+    /// Paper Eq. 2: route token i iff `g_attn > g_bypass` (the default;
+    /// causal, so it is the mode decode supports).
+    TokenChoice,
+    /// Appendix A1 ablation: route exactly `ceil(capacity * n)` tokens —
+    /// the top-k by `g_attn` over the full sequence. Forward-only.
+    ExpertChoice { capacity: f64 },
+}
+
+/// One layer's weights (flat row-major, shapes per model.py init_params).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub kind: LayerKind,
+    pub norm1: Vec<f32>,  // [d]
+    pub norm2: Vec<f32>,  // [d]
+    pub wq: Vec<f32>,     // [d, d]
+    pub wk: Vec<f32>,     // [d, d]
+    pub wv: Vec<f32>,     // [d, d]
+    pub wo: Vec<f32>,     // [d, d]
+    pub w_gate: Vec<f32>, // [d, ff]
+    pub w_up: Vec<f32>,   // [d, ff]
+    pub w_down: Vec<f32>, // [ff, d]
+    pub r_w1: Vec<f32>,   // [d, d/2] (empty on dense layers)
+    pub r_w2: Vec<f32>,   // [d/2, 2] (empty on dense layers)
+}
+
+/// Full parameter set for one model.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub tok_embed: Vec<f32>, // [V, d]
+    pub unembed: Vec<f32>,   // [d, V]
+    pub out_norm: Vec<f32>,  // [d]
+    pub layers: Vec<LayerWeights>,
+}
+
+/// The native CPU execution backend.
+pub struct CpuBackend {
+    cfg: ModelConfig,
+    weights: ModelWeights,
+    router_mode: RouterMode,
+}
+
+impl CpuBackend {
+    /// Build from explicit weights, validating variant support and shapes.
+    pub fn new(cfg: ModelConfig, weights: ModelWeights, mode: RouterMode) -> Result<CpuBackend> {
+        ensure!(
+            cfg.variant == Variant::Dense || cfg.variant.is_dtr(),
+            "CPU backend supports dense/dtr_* variants, not {:?} (MoD/D-LLM are PJRT-only)",
+            cfg.variant
+        );
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        ensure!(d % cfg.n_heads == 0, "d_model must divide by n_heads");
+        ensure!(weights.tok_embed.len() == v * d, "tok_embed shape");
+        ensure!(weights.unembed.len() == d * v, "unembed shape");
+        ensure!(weights.out_norm.len() == d, "out_norm shape");
+        ensure!(
+            weights.layers.len() == cfg.n_layers,
+            "expected {} layers, got {}",
+            cfg.n_layers,
+            weights.layers.len()
+        );
+        for (i, (lw, kind)) in weights.layers.iter().zip(cfg.layer_kinds()).enumerate() {
+            ensure!(lw.kind == kind, "layer {i}: kind mismatch with config layout");
+            ensure!(lw.norm1.len() == d && lw.norm2.len() == d, "layer {i}: norm shape");
+            ensure!(
+                lw.wq.len() == d * d
+                    && lw.wk.len() == d * d
+                    && lw.wv.len() == d * d
+                    && lw.wo.len() == d * d,
+                "layer {i}: attention projection shape"
+            );
+            ensure!(
+                lw.w_gate.len() == d * ff && lw.w_up.len() == d * ff && lw.w_down.len() == ff * d,
+                "layer {i}: mlp shape"
+            );
+            match kind {
+                LayerKind::Dtr => ensure!(
+                    lw.r_w1.len() == d * (d / 2) && lw.r_w2.len() == (d / 2) * 2,
+                    "layer {i}: router shape"
+                ),
+                LayerKind::Dense => ensure!(
+                    lw.r_w1.is_empty() && lw.r_w2.is_empty(),
+                    "layer {i}: dense layer must not carry router weights"
+                ),
+                _ => bail!("layer {i}: unsupported kind for CPU backend"),
+            }
+        }
+        Ok(CpuBackend {
+            cfg,
+            weights,
+            router_mode: mode,
+        })
+    }
+
+    /// Seeded random initialization (LLaMA-style: N(0, 0.02), output
+    /// projections scaled by 1/sqrt(2L), norms at one — mirroring
+    /// model.py `init_params`' distributional choices, not its bits).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Result<CpuBackend> {
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let std = 0.02f32;
+        let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let mut rng = Rng::new(seed ^ 0xD7121517);
+        let mut mat = |n: usize, s: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * s).collect()
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let kinds = cfg.layer_kinds();
+        let tok_embed = mat(v * d, std);
+        let unembed = mat(d * v, std);
+        for kind in kinds {
+            let routed = kind == LayerKind::Dtr;
+            layers.push(LayerWeights {
+                kind,
+                norm1: vec![1.0; d],
+                norm2: vec![1.0; d],
+                wq: mat(d * d, std),
+                wk: mat(d * d, std),
+                wv: mat(d * d, std),
+                wo: mat(d * d, out_std),
+                w_gate: mat(d * ff, std),
+                w_up: mat(d * ff, std),
+                w_down: mat(ff * d, out_std),
+                r_w1: if routed { mat(d * (d / 2), std) } else { Vec::new() },
+                r_w2: if routed { mat((d / 2) * 2, std) } else { Vec::new() },
+            });
+        }
+        let weights = ModelWeights {
+            tok_embed,
+            unembed,
+            out_norm: vec![1.0; d],
+            layers,
+        };
+        CpuBackend::new(cfg.clone(), weights, RouterMode::TokenChoice)
+    }
+
+    pub fn set_router_mode(&mut self, mode: RouterMode) {
+        self.router_mode = mode;
+    }
+
+    pub fn router_mode(&self) -> RouterMode {
+        self.router_mode
+    }
+
+    /// Export weights as a DTCK checkpoint using the Python
+    /// `flatten_params` naming/order contract.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let (d, ff, v) = (self.cfg.d_model, self.cfg.d_ff, self.cfg.vocab_size);
+        let mut ck = Checkpoint::new();
+        ck.push("tok_embed", Tensor::f32(vec![v, d], self.weights.tok_embed.clone()));
+        ck.push("unembed", Tensor::f32(vec![d, v], self.weights.unembed.clone()));
+        ck.push("out_norm", Tensor::f32(vec![d], self.weights.out_norm.clone()));
+        for (i, lw) in self.weights.layers.iter().enumerate() {
+            // sorted key order within a layer (flatten_params contract)
+            let mut entries: Vec<(&str, Vec<usize>, &Vec<f32>)> = vec![
+                ("norm1", vec![d], &lw.norm1),
+                ("norm2", vec![d], &lw.norm2),
+                ("w_down", vec![ff, d], &lw.w_down),
+                ("w_gate", vec![d, ff], &lw.w_gate),
+                ("w_up", vec![d, ff], &lw.w_up),
+                ("wk", vec![d, d], &lw.wk),
+                ("wo", vec![d, d], &lw.wo),
+                ("wq", vec![d, d], &lw.wq),
+                ("wv", vec![d, d], &lw.wv),
+            ];
+            if lw.kind == LayerKind::Dtr {
+                entries.push(("r_w1", vec![d, d / 2], &lw.r_w1));
+                entries.push(("r_w2", vec![d / 2, 2], &lw.r_w2));
+            }
+            entries.sort_by(|a, b| a.0.cmp(b.0));
+            for (name, shape, data) in entries {
+                ck.push(format!("layers.{i}.{name}"), Tensor::f32(shape, data.clone()));
+            }
+        }
+        ck
+    }
+
+    /// Load weights from a DTCK checkpoint (names per `flatten_params`).
+    pub fn from_checkpoint(cfg: &ModelConfig, ck: &Checkpoint) -> Result<CpuBackend> {
+        let get = |name: &str| -> Result<Vec<f32>> {
+            Ok(ck
+                .get(name)
+                .with_context(|| format!("checkpoint missing {name}"))?
+                .as_f32()
+                .to_vec())
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for (i, kind) in cfg.layer_kinds().into_iter().enumerate() {
+            let lg = |key: &str| get(&format!("layers.{i}.{key}"));
+            let routed = kind == LayerKind::Dtr;
+            layers.push(LayerWeights {
+                kind,
+                norm1: lg("norm1")?,
+                norm2: lg("norm2")?,
+                wq: lg("wq")?,
+                wk: lg("wk")?,
+                wv: lg("wv")?,
+                wo: lg("wo")?,
+                w_gate: lg("w_gate")?,
+                w_up: lg("w_up")?,
+                w_down: lg("w_down")?,
+                r_w1: if routed { lg("r_w1")? } else { Vec::new() },
+                r_w2: if routed { lg("r_w2")? } else { Vec::new() },
+            });
+        }
+        let weights = ModelWeights {
+            tok_embed: get("tok_embed")?,
+            unembed: get("unembed")?,
+            out_norm: get("out_norm")?,
+            layers,
+        };
+        CpuBackend::new(cfg.clone(), weights, RouterMode::TokenChoice)
+    }
+
+    /// Hard routing decision for one DTR layer over the full sequence.
+    fn decide(&self, g: &[f32], n: usize) -> Vec<f32> {
+        if self.cfg.variant == Variant::DtrSkip {
+            return vec![0.0; n];
+        }
+        match self.router_mode {
+            RouterMode::TokenChoice => kernels::route_decision(g),
+            RouterMode::ExpertChoice { capacity } => {
+                let g0: Vec<f32> = (0..n).map(|i| g[i * 2]).collect();
+                let k = ((capacity * n as f64).ceil() as usize).max(1);
+                kernels::topk_mask(&g0, k)
+            }
+        }
+    }
+
+    /// Single-sequence forward: `tokens [n]` → (logits `[n*V]`,
+    /// route `[L*n]`, g_attn `[L*n]`).
+    fn forward_seq(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = tokens.len();
+        let n_layers = cfg.n_layers;
+        let positions: Vec<f32> = (0..n).map(|i| i as f32).collect();
+
+        let mut x = Vec::with_capacity(n * d);
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+            let t = t as usize;
+            x.extend_from_slice(&self.weights.tok_embed[t * d..(t + 1) * d]);
+        }
+
+        let mut route = vec![0.0f32; n_layers * n];
+        let mut g_attn = vec![0.0f32; n_layers * n];
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let (mixed, delta, g0): (Vec<f32>, Vec<f32>, Vec<f32>) = match lw.kind {
+                LayerKind::Dense => {
+                    let (q, kk, vv) =
+                        kernels::qkv_rope(&u, &lw.wq, &lw.wk, &lw.wv, &positions, n, d, heads, ROPE_THETA);
+                    let ctx = kernels::dense_attention(&q, &kk, &vv, n, heads, hd);
+                    let attn = kernels::matmul(&ctx, &lw.wo, n, d, d);
+                    (attn, vec![1.0; n], vec![1.0; n])
+                }
+                LayerKind::Dtr => {
+                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, n, d, d / 2);
+                    let delta = self.decide(&g, n);
+                    // shared with the golden-tested oracle mirror
+                    // (kernels::dtr_token_update) — one implementation
+                    let mixed = kernels::dtr_token_mix(
+                        &u, &g, &delta, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &positions, n, d,
+                        heads, ROPE_THETA, true,
+                    );
+                    let g0 = (0..n).map(|i| g[i * 2]).collect();
+                    (mixed, delta, g0)
+                }
+                _ => bail!("unsupported layer kind in CPU backend"),
+            };
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
+            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff);
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+            route[li * n..(li + 1) * n].copy_from_slice(&delta);
+            g_attn[li * n..(li + 1) * n].copy_from_slice(&g0);
+        }
+
+        let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
+        let logits = kernels::matmul(&xn, &self.weights.unembed, n, d, vocab);
+        Ok((logits, route, g_attn))
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput> {
+        ensure!(
+            tokens.shape.len() == 2,
+            "forward expects [B, S] tokens, got shape {:?}",
+            tokens.shape
+        );
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        let n_layers = self.cfg.n_layers;
+        let vocab = self.cfg.vocab_size;
+        let ids = tokens.as_i32();
+
+        let mut logits = Vec::with_capacity(b * s * vocab);
+        let mut route = Vec::with_capacity(b * n_layers * s);
+        let mut g_attn = Vec::with_capacity(b * n_layers * s);
+        for bi in 0..b {
+            let (lg, rt, ga) = self.forward_seq(&ids[bi * s..(bi + 1) * s])?;
+            logits.extend_from_slice(&lg);
+            route.extend_from_slice(&rt);
+            g_attn.extend_from_slice(&ga);
+        }
+        let mut attn_frac = vec![0.0f64; n_layers];
+        for bi in 0..b {
+            for l in 0..n_layers {
+                let row = &route[(bi * n_layers + l) * s..(bi * n_layers + l + 1) * s];
+                attn_frac[l] += row.iter().map(|&r| r as f64).sum::<f64>() / (b * s) as f64;
+            }
+        }
+        Ok(ForwardOutput {
+            logits: Tensor::f32(vec![b, s, vocab], logits),
+            route: Tensor::f32(vec![b, n_layers, s], route),
+            g_attn: Tensor::f32(vec![b, n_layers, s], g_attn),
+            attn_frac,
+        })
+    }
+
+    fn begin_decode(&self) -> DecodeState {
+        DecodeState::new(self.cfg.n_layers)
+    }
+
+    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
+        let cfg = &self.cfg;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        ensure!(
+            token >= 0 && (token as usize) < vocab,
+            "token id {token} out of range for vocab {vocab}"
+        );
+        // Reject before touching the caller's cache: bailing mid-layer
+        // would leave a partially-updated DecodeState behind.
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; decode supports token-choice only"
+        );
+        let pos = [state.position as f32];
+
+        let t = token as usize;
+        let mut x = self.weights.tok_embed[t * d..(t + 1) * d].to_vec();
+        let mut routed = Vec::with_capacity(cfg.n_layers);
+        let mut g_attn = Vec::with_capacity(cfg.n_layers);
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let (mixed, is_routed, gl): (Vec<f32>, bool, f32) = match lw.kind {
+                LayerKind::Dense => {
+                    let (q, kk, vv) =
+                        kernels::qkv_rope(&u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA);
+                    let ctx = kernels::decode_attention(
+                        &q,
+                        &state.keys[li],
+                        &state.values[li],
+                        &kk,
+                        &vv,
+                        heads,
+                        hd,
+                    );
+                    let attn = kernels::matmul(&ctx, &lw.wo, 1, d, d);
+                    state.keys[li].extend_from_slice(&kk);
+                    state.values[li].extend_from_slice(&vv);
+                    (attn, true, 1.0)
+                }
+                LayerKind::Dtr => {
+                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, 1, d, d / 2);
+                    let go = cfg.variant != Variant::DtrSkip && g[0] > g[1];
+                    if go {
+                        let (q, kk, vv) = kernels::qkv_rope(
+                            &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
+                        );
+                        let ctx = kernels::decode_attention(
+                            &q,
+                            &state.keys[li],
+                            &state.values[li],
+                            &kk,
+                            &vv,
+                            heads,
+                            hd,
+                        );
+                        let attn = kernels::matmul(&ctx, &lw.wo, 1, d, d);
+                        state.keys[li].extend_from_slice(&kk);
+                        state.values[li].extend_from_slice(&vv);
+                        (attn.iter().map(|&a| g[0] * a).collect(), true, g[0])
+                    } else {
+                        let byp = kernels::bypass(&u, &lw.wv, &lw.wo, 1, d);
+                        (byp.iter().map(|&a| g[1] * a).collect(), false, g[0])
+                    }
+                }
+                _ => bail!("unsupported layer kind in CPU backend"),
+            };
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
+            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, 1, d, ff);
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+            routed.push(is_routed);
+            g_attn.push(gl);
+        }
+
+        let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
+        let logits = kernels::matmul(&xn, &self.weights.unembed, 1, d, vocab);
+        state.position += 1;
+        Ok(StepOutput {
+            logits: Tensor::f32(vec![vocab], logits),
+            routed,
+            g_attn,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xs_cfg(variant: Variant) -> ModelConfig {
+        ModelConfig::preset("xs", variant)
+    }
+
+    #[test]
+    fn rejects_unsupported_variants() {
+        assert!(CpuBackend::init(&xs_cfg(Variant::Mod), 0).is_err());
+        assert!(CpuBackend::init(&xs_cfg(Variant::Dllm), 0).is_err());
+        assert!(CpuBackend::init(&xs_cfg(Variant::DtrBilayer), 0).is_ok());
+    }
+
+    #[test]
+    fn dtr_skip_routes_nothing_but_still_updates() {
+        let be = CpuBackend::init(&xs_cfg(Variant::DtrSkip), 1).unwrap();
+        let tokens = Tensor::i32(vec![1, 8], (0..8).collect());
+        let out = be.forward(&tokens).unwrap();
+        let layout = be.config().layout_string();
+        for (l, kind) in layout.chars().enumerate() {
+            let frac = out.attn_frac[l];
+            if kind == 'T' {
+                assert_eq!(frac, 1.0);
+            } else {
+                assert_eq!(frac, 0.0, "dtr_skip layer {l} must bypass all tokens");
+            }
+        }
+        assert!(out.logits.as_f32().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_forward() {
+        let be = CpuBackend::init(&xs_cfg(Variant::DtrBilayer), 7).unwrap();
+        let ck = be.to_checkpoint();
+        let re = CpuBackend::from_checkpoint(be.config(), &ck).unwrap();
+        let tokens = Tensor::i32(vec![1, 12], (0..12).map(|i| i * 5 % 256).collect());
+        let a = be.forward(&tokens).unwrap();
+        let b = re.forward(&tokens).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.route, b.route);
+    }
+
+    #[test]
+    fn checkpoint_bytes_roundtrip() {
+        let be = CpuBackend::init(&xs_cfg(Variant::DtrBilayer), 3).unwrap();
+        let ck = be.to_checkpoint();
+        let re = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let be2 = CpuBackend::from_checkpoint(be.config(), &re).unwrap();
+        let tokens = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(
+            be.forward(&tokens).unwrap().logits,
+            be2.forward(&tokens).unwrap().logits
+        );
+    }
+}

@@ -1,19 +1,31 @@
-//! Runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//! Runtime: pluggable execution backends over host tensors.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): artifacts produced by
-//! `python/compile/aot.py` are compiled once per process and cached; the
-//! coordinator calls them as plain functions over host tensors.
-//!
-//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
-//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! * [`backend`] — the [`Backend`] trait: batched forward + incremental
+//!   decode with a routing-aware KV state, over host [`Tensor`]s.
+//! * [`cpu`] — the native Rust CPU backend (always available): evaluates
+//!   the DTRNet block end-to-end with kernels mirrored from
+//!   `python/compile/kernels/ref.py`. This is the offline test substrate.
+//! * [`engine`] (`pjrt` feature) — the XLA/PJRT path: AOT artifacts (HLO
+//!   text produced by `python/compile/aot.py`) compiled once per process
+//!   and called as plain functions. Interchange is HLO *text* — the
+//!   image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//!   (64-bit instruction ids); the text parser reassigns ids.
+//! * [`manifest`] — the artifact contract with `aot.py` (feature-free:
+//!   shapes/layouts are plain host data).
+//! * [`checkpoint`] — DTCK parameter persistence, shared by both backends.
 
+pub mod backend;
 pub mod checkpoint;
+pub mod cpu;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
+pub use backend::{Backend, DecodeState, ForwardOutput, GenerateOutput, StepOutput};
 pub use checkpoint::Checkpoint;
+pub use cpu::{CpuBackend, RouterMode};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use tensor::Tensor;

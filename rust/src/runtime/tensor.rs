@@ -1,17 +1,42 @@
-//! Host tensors: the coordinator's view of model inputs/outputs.
+//! Host tensors: the backends' shared view of model inputs/outputs.
 //!
 //! A `Tensor` is a shape + flat row-major data buffer (f32 or i32 — the
-//! only element types crossing the AOT boundary in this system). It
-//! converts to/from `xla::Literal` at the runtime edge.
+//! only element types crossing execution boundaries in this system). The
+//! native CPU backend consumes it directly; with the `pjrt` feature it
+//! also converts to/from `xla::Literal` at the runtime edge.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Result};
 
-/// View a 4-byte-element slice as raw bytes (safe: both f32 and i32 are
-/// plain-old-data with alignment ≥ u8).
-fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
-    }
+/// Element types whose slices may be viewed as raw bytes.
+///
+/// Sealed to exactly `f32` and `i32`: both are plain-old-data — no
+/// padding, no invalid bit patterns, 4-byte size, alignment ≥ 1 — which
+/// is what makes the byte view in [`bytes_of`] sound. Restricting the
+/// generic at the type level (instead of the old `bytemuck_cast<T>` over
+/// *any* `T`) means a padded or non-POD element type is a compile error,
+/// not latent UB.
+pub trait Pod: sealed::Sealed + Copy + 'static {}
+
+impl Pod for f32 {}
+impl Pod for i32 {}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// View a slice of [`Pod`] elements as native-endian raw bytes.
+pub fn bytes_of<T: Pod>(v: &[T]) -> &[u8] {
+    // Both admitted types are 4-byte POD; keep the guard as a defensive
+    // invariant should the sealed set ever grow.
+    debug_assert_eq!(std::mem::size_of::<T>(), 4);
+    debug_assert_eq!(std::mem::size_of_val(v), v.len() * 4);
+    // SAFETY: `T: Pod` is sealed to f32/i32 — plain-old-data with no
+    // padding and no invalid byte patterns; u8 has alignment 1, and the
+    // byte length equals the slice's size in bytes.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
 /// Element storage.
@@ -92,6 +117,14 @@ impl Tensor {
         }
     }
 
+    /// Native-endian raw-byte view of the element buffer.
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => bytes_of(v.as_slice()),
+            Data::I32(v) => bytes_of(v.as_slice()),
+        }
+    }
+
     /// Row-major strides for this shape.
     pub fn strides(&self) -> Vec<usize> {
         let mut s = vec![1usize; self.shape.len()];
@@ -110,22 +143,25 @@ impl Tensor {
             Data::I32(v) => v[flat] as f32,
         }
     }
+}
 
-    // ---- Literal conversion -------------------------------------------------
+// ---- Literal conversion (PJRT boundary) -----------------------------------
 
+#[cfg(feature = "pjrt")]
+impl Tensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         // Single-copy path (§Perf L3): build the shaped literal directly
         // from raw bytes. The vec1 + reshape route copies twice (once into
         // the rank-1 literal, once in reshape) — measured 2.4× slower on
         // the 12 MB decode-cache pack (see EXPERIMENTS.md §Perf).
-        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
-            Data::F32(v) => (xla::ElementType::F32, bytemuck_cast(v)),
-            Data::I32(v) => (xla::ElementType::S32, bytemuck_cast(v)),
+        let ty = match &self.data {
+            Data::F32(_) => xla::ElementType::F32,
+            Data::I32(_) => xla::ElementType::S32,
         };
         Ok(xla::Literal::create_from_shape_and_untyped_data(
             ty,
             &self.shape,
-            bytes,
+            self.raw_bytes(),
         )?)
     }
 
@@ -155,5 +191,36 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn bytes_roundtrip_f32() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let bytes = bytes_of(v.as_slice());
+        assert_eq!(bytes.len(), v.len() * 4);
+        let back: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_ne_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn bytes_roundtrip_i32() {
+        let v = vec![0i32, -1, i32::MAX, i32::MIN, 123456789];
+        let bytes = bytes_of(v.as_slice());
+        let back: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_ne_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn tensor_raw_bytes_matches_dtype_width() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.raw_bytes().len(), 16);
+        let t = Tensor::i32(vec![3], vec![7, 8, 9]);
+        assert_eq!(t.raw_bytes().len(), 12);
     }
 }

@@ -1,0 +1,168 @@
+//! Golden-vector parity: native CPU kernels vs the Python oracles.
+//!
+//! `rust/tests/fixtures/ref_vectors.json` is exported from
+//! `python/compile/kernels/ref.py` by
+//! `python/compile/kernels/export_fixtures.py` (build-time only; the
+//! fixture is checked in so this suite runs fully offline). Every kernel
+//! in `runtime::cpu::kernels` must match its oracle to 1e-4.
+
+use dtrnet::runtime::cpu::kernels;
+use dtrnet::testing::assert_allclose;
+use dtrnet::util::json::Json;
+
+const RTOL: f32 = 1e-4;
+const ATOL: f32 = 1e-4;
+
+fn fixture() -> Json {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/ref_vectors.json"
+    );
+    Json::parse_file(std::path::Path::new(path)).expect("parse ref_vectors.json")
+}
+
+fn case(fix: &Json, name: &str) -> Json {
+    fix.get("cases")
+        .and_then(|c| c.get(name))
+        .unwrap_or_else(|| panic!("fixture case {name} missing"))
+        .clone()
+}
+
+fn tensor(c: &Json, key: &str) -> (Vec<usize>, Vec<f32>) {
+    let t = c
+        .get(key)
+        .unwrap_or_else(|| panic!("fixture field {key} missing"));
+    let shape: Vec<usize> = t
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let data: Vec<f32> = t
+        .get("data")
+        .and_then(|d| d.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    (shape, data)
+}
+
+#[test]
+fn golden_rmsnorm() {
+    let c = case(&fixture(), "rmsnorm");
+    let (_, x) = tensor(&c, "x");
+    let (_, w) = tensor(&c, "weight");
+    let (_, want) = tensor(&c, "out");
+    let eps = c.get("eps").unwrap().as_f64().unwrap() as f32;
+    assert_allclose(&kernels::rmsnorm(&x, &w, eps), &want, RTOL, ATOL);
+}
+
+#[test]
+fn golden_router_and_decision() {
+    let c = case(&fixture(), "router");
+    let (xs, x) = tensor(&c, "x");
+    let (w1s, w1) = tensor(&c, "w1");
+    let (_, w2) = tensor(&c, "w2");
+    let (_, want_g) = tensor(&c, "g");
+    let (_, want_delta) = tensor(&c, "delta");
+    let (n, d, dh) = (xs[0], xs[1], w1s[1]);
+    let g = kernels::router(&x, &w1, &w2, n, d, dh);
+    assert_allclose(&g, &want_g, RTOL, ATOL);
+    assert_allclose(&kernels::route_decision(&g), &want_delta, 0.0, 1e-6);
+}
+
+#[test]
+fn golden_bypass() {
+    let c = case(&fixture(), "bypass");
+    let (xs, x) = tensor(&c, "x");
+    let (_, wv) = tensor(&c, "wv");
+    let (_, wo) = tensor(&c, "wo");
+    let (_, want) = tensor(&c, "out");
+    assert_allclose(&kernels::bypass(&x, &wv, &wo, xs[0], xs[1]), &want, RTOL, ATOL);
+}
+
+#[test]
+fn golden_rope() {
+    let c = case(&fixture(), "rope");
+    let (xs, x) = tensor(&c, "x");
+    let (_, pos) = tensor(&c, "positions");
+    let (_, want) = tensor(&c, "out");
+    let theta = c.get("theta").unwrap().as_f64().unwrap() as f32;
+    let out = kernels::rope(&x, &pos, xs[0], xs[1], xs[2], theta);
+    assert_allclose(&out, &want, RTOL, ATOL);
+}
+
+#[test]
+fn golden_routed_attention() {
+    let c = case(&fixture(), "routed_attention");
+    let (qs, q) = tensor(&c, "q");
+    let (_, k) = tensor(&c, "k");
+    let (_, v) = tensor(&c, "v");
+    let (_, delta) = tensor(&c, "delta");
+    let (_, want) = tensor(&c, "out");
+    let out = kernels::routed_attention(&q, &k, &v, &delta, qs[0], qs[1], qs[2]);
+    assert_allclose(&out, &want, RTOL, ATOL);
+}
+
+#[test]
+fn golden_dense_attention() {
+    let c = case(&fixture(), "dense_attention");
+    let (qs, q) = tensor(&c, "q");
+    let (_, k) = tensor(&c, "k");
+    let (_, v) = tensor(&c, "v");
+    let (_, want) = tensor(&c, "out");
+    let out = kernels::dense_attention(&q, &k, &v, qs[0], qs[1], qs[2]);
+    assert_allclose(&out, &want, RTOL, ATOL);
+}
+
+#[test]
+fn golden_swiglu_mlp() {
+    let c = case(&fixture(), "swiglu_mlp");
+    let (xs, x) = tensor(&c, "x");
+    let (ws, wg) = tensor(&c, "w_gate");
+    let (_, wu) = tensor(&c, "w_up");
+    let (_, wd) = tensor(&c, "w_down");
+    let (_, want) = tensor(&c, "out");
+    let out = kernels::swiglu_mlp(&x, &wg, &wu, &wd, xs[0], xs[1], ws[1]);
+    assert_allclose(&out, &want, RTOL, ATOL);
+}
+
+fn check_dtr_update(case_name: &str) {
+    let c = case(&fixture(), case_name);
+    let (xs, x) = tensor(&c, "x");
+    let (_, w1) = tensor(&c, "w1");
+    let (_, w2) = tensor(&c, "w2");
+    let (_, wq) = tensor(&c, "wq");
+    let (_, wk) = tensor(&c, "wk");
+    let (_, wv) = tensor(&c, "wv");
+    let (_, wo) = tensor(&c, "wo");
+    let (_, pos) = tensor(&c, "positions");
+    let (_, want_update) = tensor(&c, "update");
+    let (_, want_g) = tensor(&c, "g");
+    let (_, want_delta) = tensor(&c, "delta");
+    let heads = c.get("n_heads").unwrap().as_usize().unwrap();
+    let bypass_vo = c.get("bypass_vo").unwrap().as_bool().unwrap();
+    let (n, d) = (xs[0], xs[1]);
+    let out = kernels::dtr_token_update(
+        &x, &w1, &w2, &wq, &wk, &wv, &wo, &pos, n, d, heads, 10000.0, bypass_vo, None,
+    );
+    // the fixture's routing mixes both paths — make sure it stays a real test
+    let routed: f32 = want_delta.iter().sum();
+    assert!(routed > 0.0 && routed < n as f32, "fixture routing not mixed");
+    assert_allclose(&out.delta, &want_delta, 0.0, 1e-6);
+    assert_allclose(&out.g, &want_g, RTOL, ATOL);
+    assert_allclose(&out.update, &want_update, RTOL, ATOL);
+}
+
+#[test]
+fn golden_dtr_token_update() {
+    check_dtr_update("dtr_token_update");
+}
+
+#[test]
+fn golden_dtr_token_update_without_vo_bypass() {
+    check_dtr_update("dtr_token_update_novo");
+}

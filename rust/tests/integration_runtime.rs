@@ -2,7 +2,10 @@
 //!
 //! These tests exercise the real PJRT path over the xs artifact set (built
 //! by `make artifacts`); they are the Rust-side counterpart of the python
-//! decode/fwd consistency suite.
+//! decode/fwd consistency suite. They require the `pjrt` feature (see
+//! Cargo.toml `required-features`); the offline mirror driving the same
+//! assertions through the CPU backend lives in `integration_cpu.rs`.
+#![cfg(feature = "pjrt")]
 
 use dtrnet::runtime::{Engine, Tensor};
 

@@ -1,4 +1,8 @@
 //! Integration: serving engine over real decode artifacts.
+//!
+//! Requires the `pjrt` feature + AOT artifacts (see Cargo.toml
+//! `required-features`).
+#![cfg(feature = "pjrt")]
 
 use std::time::Instant;
 

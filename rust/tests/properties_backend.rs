@@ -1,0 +1,219 @@
+//! Property tests over the CPU backend & kernels — the paper's central
+//! routing invariants (in-repo harness; proptest unavailable offline):
+//!
+//! * full selection: routed attention with every token selected equals
+//!   plain causal attention (paper Eq. 6 sparse-equivalence boundary);
+//! * zero selection: every token still changes, via the linear bypass
+//!   update `g_bypass · x W^V W^O` (paper Eq. 5);
+//! * expert-choice top-k: the router selects exactly `ceil(c·n)` tokens;
+//! * decode/forward consistency: sequential decode with the routing-aware
+//!   KV cache reproduces the batched forward logits.
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::runtime::cpu::kernels;
+use dtrnet::runtime::{Backend, CpuBackend, RouterMode, Tensor};
+use dtrnet::testing::{assert_allclose, property, Gen};
+
+fn randn_vec(g: &mut Gen, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| g.rng.normal() as f32 * scale).collect()
+}
+
+/// Independent plain causal MHA (f64 softmax accumulation, no masking
+/// machinery) — the oracle for the full-selection property.
+fn naive_causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = vec![0.0f32; n * h * hd];
+    for head in 0..h {
+        for i in 0..n {
+            let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
+            let logits: Vec<f64> = (0..=i)
+                .map(|j| {
+                    let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    qi.iter()
+                        .zip(kj)
+                        .map(|(&a, &b)| a as f64 * b as f64)
+                        .sum::<f64>()
+                        * scale
+                })
+                .collect();
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            for (j, &e) in exps.iter().enumerate() {
+                let w = e / z;
+                let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                for t in 0..hd {
+                    out[(i * h + head) * hd + t] += (w * vj[t] as f64) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_full_selection_equals_dense_attention() {
+    property("routed(all ones) == causal attention", 50, |g| {
+        let n = g.usize(1..10);
+        let h = g.usize(1..4);
+        let hd = 2 * g.usize(1..4);
+        let q = randn_vec(g, n * h * hd, 1.0);
+        let k = randn_vec(g, n * h * hd, 1.0);
+        let v = randn_vec(g, n * h * hd, 1.0);
+        let ones = vec![1.0f32; n];
+        let routed = kernels::routed_attention(&q, &k, &v, &ones, n, h, hd);
+        let dense = kernels::dense_attention(&q, &k, &v, n, h, hd);
+        let naive = naive_causal_attention(&q, &k, &v, n, h, hd);
+        assert_allclose(&routed, &dense, 1e-6, 1e-6);
+        assert_allclose(&routed, &naive, 1e-4, 1e-4);
+    });
+}
+
+#[test]
+fn prop_zero_selection_still_updates_every_token() {
+    property("zero routed -> bypass updates every token", 40, |g| {
+        let n = g.usize(1..8);
+        let heads = [1usize, 2, 4][g.usize(0..3)];
+        let d = heads * 2 * g.usize(1..4);
+        let x = randn_vec(g, n * d, 1.0);
+        let w1 = randn_vec(g, d * (d / 2), 0.5);
+        let w2 = randn_vec(g, (d / 2) * 2, 0.5);
+        let wq = randn_vec(g, d * d, 0.4);
+        let wk = randn_vec(g, d * d, 0.4);
+        let wv = randn_vec(g, d * d, 0.4);
+        let wo = randn_vec(g, d * d, 0.4);
+        let pos: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let zeros = vec![0.0f32; n];
+        let out = kernels::dtr_token_update(
+            &x, &w1, &w2, &wq, &wk, &wv, &wo, &pos, n, d, heads, 10000.0, true,
+            Some(&zeros),
+        );
+        // every token's update is the soft-weighted linear bypass …
+        let byp = kernels::bypass(&x, &wv, &wo, n, d);
+        let want: Vec<f32> = (0..n * d).map(|i| out.g[(i / d) * 2 + 1] * byp[i]).collect();
+        assert_allclose(&out.update, &want, 1e-5, 1e-5);
+        // … and it is a real update: nonzero for every token (a.s.)
+        for i in 0..n {
+            let norm: f64 = out.update[i * d..(i + 1) * d]
+                .iter()
+                .map(|&u| (u as f64).powi(2))
+                .sum();
+            assert!(norm > 0.0, "token {i} got no bypass update");
+        }
+    });
+}
+
+#[test]
+fn prop_topk_selects_exact_capacity() {
+    property("top-k mask count == ceil(0.1 n) incl. ties", 100, |g| {
+        let n = g.usize(1..64);
+        // quantized scores force ties
+        let scores: Vec<f32> = (0..n)
+            .map(|_| (g.f64(0.0, 1.0) * 10.0).round() as f32 / 10.0)
+            .collect();
+        let k = ((0.1 * n as f64).ceil() as usize).max(1);
+        let mask = kernels::topk_mask(&scores, k);
+        let got = mask.iter().filter(|&&m| m > 0.5).count();
+        assert_eq!(got, k.min(n), "scores={scores:?}");
+        // selected scores dominate unselected ones
+        let min_sel = mask
+            .iter()
+            .zip(&scores)
+            .filter(|(&m, _)| m > 0.5)
+            .map(|(_, &s)| s)
+            .fold(f32::INFINITY, f32::min);
+        for (m, &s) in mask.iter().zip(&scores) {
+            if *m < 0.5 {
+                assert!(s <= min_sel, "unselected {s} beats selected {min_sel}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_expert_choice_forward_matches_capacity_exactly() {
+    property("expert-choice routed fraction == ceil(0.1 s)/s", 10, |g| {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let mut backend = CpuBackend::init(&cfg, g.case as u64).unwrap();
+        backend.set_router_mode(RouterMode::ExpertChoice { capacity: 0.1 });
+        let s = g.usize(10..40);
+        let tokens: Vec<i32> = (0..s).map(|_| g.rng.below(256) as i32).collect();
+        let out = backend
+            .forward(&Tensor::i32(vec![1, s], tokens))
+            .unwrap();
+        let k = ((0.1 * s as f64).ceil() as usize).max(1);
+        let layout = cfg.layout_string();
+        for (l, kind) in layout.chars().enumerate() {
+            let row = &out.route.as_f32()[l * s..(l + 1) * s];
+            let routed = row.iter().filter(|&&r| r > 0.5).count();
+            if kind == 'D' {
+                assert_eq!(routed, k, "layer {l}: expected exactly {k} routed of {s}");
+                assert!((out.attn_frac[l] - k as f64 / s as f64).abs() < 1e-12);
+            } else {
+                assert_eq!(routed, s, "dense layer {l} must attend all tokens");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dense_layers_always_route_all() {
+    property("dense layers route every token", 8, |g| {
+        let variants = [
+            Variant::Dense,
+            Variant::DtrBilayer,
+            Variant::DtrTrilayer,
+            Variant::DtrLaterhalf,
+            Variant::DtrSkip,
+        ];
+        let variant = variants[g.usize(0..variants.len())];
+        let cfg = ModelConfig::preset("xs", variant);
+        let backend = CpuBackend::init(&cfg, g.case as u64).unwrap();
+        let s = g.usize(4..24);
+        let tokens: Vec<i32> = (0..s).map(|_| g.rng.below(256) as i32).collect();
+        let out = backend.forward(&Tensor::i32(vec![1, s], tokens)).unwrap();
+        for (l, kind) in cfg.layout_string().chars().enumerate() {
+            let row = &out.route.as_f32()[l * s..(l + 1) * s];
+            if kind == 'T' {
+                assert!(row.iter().all(|&r| r > 0.5), "dense layer {l} skipped a token");
+            }
+            if variant == Variant::DtrSkip && kind == 'D' {
+                assert!(row.iter().all(|&r| r < 0.5), "dtr_skip layer {l} routed a token");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decode_matches_forward_prefix() {
+    property("sequential decode == batched forward", 6, |g| {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let backend = CpuBackend::init(&cfg, 1000 + g.case as u64).unwrap();
+        let s = g.usize(2..12);
+        let tokens: Vec<i32> = (0..s).map(|_| g.rng.below(256) as i32).collect();
+        let fwd = backend
+            .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+            .unwrap();
+        let mut state = backend.begin_decode();
+        let step = backend.prefill(&mut state, &tokens).unwrap();
+        let v = cfg.vocab_size;
+        let last = &fwd.logits.as_f32()[(s - 1) * v..s * v];
+        assert_allclose(step.logits.as_f32(), last, 1e-3, 1e-3);
+        // cache lens must equal the forward pass's routed counts
+        let lens = state.lens(cfg.d_model);
+        for l in 0..cfg.n_layers {
+            let routed: usize = fwd.route.as_f32()[l * s..(l + 1) * s]
+                .iter()
+                .filter(|&&r| r > 0.5)
+                .count();
+            assert_eq!(lens[l], routed, "layer {l} cache len != routed count");
+        }
+    });
+}

@@ -1,0 +1,197 @@
+//! In-repo substitute for the `anyhow` crate (see DESIGN.md §Substitutions).
+//!
+//! The build must work with no network and no registry cache, so this
+//! vendored crate provides the (small) subset of anyhow's API the
+//! codebase uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Like the real anyhow, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket
+//! `impl From<E: std::error::Error> for Error` coherent and lets `?`
+//! convert any standard error while still propagating `Error` itself
+//! (via the reflexive `From<T> for T`).
+//!
+//! Differences from the real crate (acceptable for this codebase):
+//! the source chain is flattened into one message string at conversion
+//! time instead of being kept as a trait-object chain, and there is no
+//! backtrace capture.
+
+use std::fmt;
+
+/// A flattened, context-annotated error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (what `Context::context` uses).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-annotation extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Annotate an error/`None` with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    /// Annotate lazily (context built only on the error path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{ctx}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or a value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_literal() -> Result<()> {
+        bail!("plain message")
+    }
+
+    fn fails_fmt(x: usize) -> Result<()> {
+        bail!("bad value {x} ({})", x * 2)
+    }
+
+    fn guarded(n: usize) -> Result<usize> {
+        ensure!(n < 10, "n too big: {n}");
+        ensure!(n != 7);
+        Ok(n)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        assert_eq!(fails_literal().unwrap_err().to_string(), "plain message");
+        assert_eq!(fails_fmt(3).unwrap_err().to_string(), "bad value 3 (6)");
+        assert!(guarded(3).is_ok());
+        assert_eq!(guarded(12).unwrap_err().to_string(), "n too big: 12");
+        assert!(guarded(7).unwrap_err().to_string().contains("n != 7"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+        let some: Option<u32> = Some(5);
+        assert_eq!(some.context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn error_propagates_through_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("deep")
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "deep");
+    }
+}
