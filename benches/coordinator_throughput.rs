@@ -1,23 +1,158 @@
 //! Coordinator throughput: serving engine end-to-end + host-side pieces.
 //!
-//! (a) serving tokens/s for dense vs DTRNet at several batch fills — the
-//!     paper's "efficiency gains scale with sequence length / batching"
-//!     story measured on this testbed;
+//! (a) the backend-generic continuous-batching engine on the native CPU
+//!     backend: serving tokens/s for dense vs DTRNet across batch fills
+//!     and prefill modes — the paper's "efficiency gains scale with
+//!     batching" story measured with no artifacts and no XLA;
 //! (b) microbenches of the pure-host components (batcher, KV pool,
 //!     routing stats) proving the coordinator is not the bottleneck
-//!     (§Perf L3 target).
+//!     (§Perf L3 target);
+//! (c) with the `pjrt` feature + AOT artifacts present: the artifact
+//!     decode engine, for apples-to-apples backend comparison.
+//!
+//! Pass `--test` (e.g. `cargo bench --bench coordinator_throughput --
+//! --test`) for a seconds-scale CI smoke configuration.
 
 use anyhow::Result;
 use std::time::Instant;
 
 use dtrnet::config::{ModelConfig, Variant};
-use dtrnet::coordinator::{Batcher, KvPool, Request, RoutingStats, ServeEngine};
-use dtrnet::runtime::{Engine, Tensor};
+use dtrnet::coordinator::{
+    generate_workload, Batcher, KvPool, PrefillMode, Request, RoutingStats, Server,
+    ServerConfig, WorkloadSpec,
+};
+use dtrnet::runtime::CpuBackend;
 use dtrnet::util::bench::{bench, print_table, write_results};
 use dtrnet::util::json::Json;
-use dtrnet::util::rng::Rng;
 
-fn serving(engine: &Engine) -> Result<Json> {
+fn cpu_serving(quick: bool) -> Result<Json> {
+    let mut out = Json::obj();
+    let mut rows = Vec::new();
+    let (preset, n_req) = if quick { ("xs", 4) } else { ("tiny", 16) };
+    let slot_fills: &[usize] = if quick { &[2] } else { &[1, 4, 8] };
+    for variant in [Variant::Dense, Variant::DtrBilayer] {
+        let cfg = ModelConfig::preset(preset, variant);
+        let backend = CpuBackend::init(&cfg, 0)?;
+        for &slots in slot_fills {
+            for (mode_name, prefill) in [
+                ("chunked", PrefillMode::Chunked(32)),
+                ("stepwise", PrefillMode::Decode),
+            ] {
+                let scfg = ServerConfig {
+                    slots,
+                    prefill,
+                    ..Default::default()
+                };
+                let mut srv = Server::new(&backend, scfg)?;
+                let spec = WorkloadSpec {
+                    n_requests: n_req,
+                    arrival_rate: 10_000.0,
+                    prompt_len_mean: 12,
+                    prompt_len_max: 32,
+                    gen_len_mean: if quick { 8 } else { 24 },
+                    gen_len_max: if quick { 16 } else { 48 },
+                    temperature: 0.0,
+                    vocab: cfg.vocab_size,
+                };
+                let trace = generate_workload(&spec, 2);
+                let rep = srv.run_workload(&trace, 10_000_000)?;
+                assert_eq!(rep.completed + rep.evicted, n_req, "requests lost");
+                let key = format!("{}_{}_s{}", variant.as_str(), mode_name, slots);
+                rows.push(vec![
+                    variant.as_str().to_string(),
+                    slots.to_string(),
+                    mode_name.to_string(),
+                    format!("{:.1}", rep.tokens_per_s),
+                    format!("{:.3}", rep.decode_step_ms_p50),
+                    format!("{:.2}", rep.ttft_ms_p50),
+                    format!("{:.2}", rep.batch_occupancy),
+                    format!("{}/{}", rep.pool.pages_peak, rep.dense_pages_peak),
+                ]);
+                out.set(
+                    &key,
+                    Json::from_pairs(vec![
+                        ("tokens_per_s", Json::Num(rep.tokens_per_s)),
+                        ("step_ms_p50", Json::Num(rep.decode_step_ms_p50)),
+                        ("ttft_ms_p50", Json::Num(rep.ttft_ms_p50)),
+                        ("occupancy", Json::Num(rep.batch_occupancy)),
+                        ("kv_pages_peak", Json::Num(rep.pool.pages_peak as f64)),
+                        ("dense_pages_peak", Json::Num(rep.dense_pages_peak as f64)),
+                        ("kv_savings_ratio", Json::Num(rep.kv_savings_ratio)),
+                    ]),
+                );
+            }
+        }
+    }
+    print_table(
+        &format!("cpu serving throughput ({preset}, {n_req} requests)"),
+        &[
+            "model", "slots", "prefill", "tok/s", "step ms", "ttft ms", "occup",
+            "kv/dense pages",
+        ],
+        &rows,
+    );
+    Ok(out)
+}
+
+fn host_micro(quick: bool) -> Json {
+    let mut out = Json::obj();
+    let iters = if quick { 3 } else { 20 };
+    // batcher admit/advance cycle
+    let m = bench("batcher_admit_advance_1k_reqs", 2, iters, || {
+        let mut b = Batcher::new(8, 2048);
+        let now = Instant::now();
+        for i in 0..1000u64 {
+            b.submit(Request {
+                id: i,
+                prompt: vec![1, 2, 3, 4],
+                max_new_tokens: 4,
+                temperature: 0.0,
+                arrival: now,
+            });
+        }
+        while !b.idle() {
+            b.admit();
+            for s in 0..8 {
+                if b.active[s].is_some() {
+                    b.advance(s, 1, now);
+                }
+            }
+        }
+        assert_eq!(b.completed.len(), 1000);
+    });
+    out.set("batcher", m.to_json());
+
+    // KV pool append/release
+    let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
+    let m = bench("kv_pool_100k_appends", 2, iters.min(10), || {
+        let mut p = KvPool::new(&cfg, 8, 16, usize::MAX / 2);
+        let routed = [true, false, true, false, true, true];
+        for i in 0..100_000 {
+            p.append(i % 8, &routed);
+        }
+        for s in 0..8 {
+            p.release(s);
+        }
+    });
+    out.set("kv_pool", m.to_json());
+
+    // routing stats ingestion (fwd-eval path)
+    let route = vec![1.0f32; 4 * 6 * 128];
+    let stats_iters = if quick { 10 } else { 200 };
+    let m = bench("routing_stats_record_4x6x128", 2, stats_iters, || {
+        let mut s = RoutingStats::new(6);
+        s.record_route_tensor(&route, 4, 6, 128);
+    });
+    out.set("routing_stats", m.to_json());
+    out
+}
+
+#[cfg(feature = "pjrt")]
+fn artifact_serving(engine: &dtrnet::runtime::Engine) -> Result<Json> {
+    use dtrnet::coordinator::ServeEngine;
+    use dtrnet::runtime::Tensor;
+    use dtrnet::util::rng::Rng;
+
     let mut out = Json::obj();
     let mut rows = Vec::new();
     for tag in ["tiny_dense", "tiny_dtr_bilayer"] {
@@ -56,70 +191,24 @@ fn serving(engine: &Engine) -> Result<Json> {
         }
     }
     print_table(
-        "serving throughput (decode B=4 slots)",
+        "artifact serving throughput (decode B=4 slots)",
         &["model", "reqs", "tok/s", "step ms", "ttft ms"],
         &rows,
     );
     Ok(out)
 }
 
-fn host_micro() -> Json {
-    let mut out = Json::obj();
-    // batcher admit/advance cycle
-    let m = bench("batcher_admit_advance_1k_reqs", 2, 20, || {
-        let mut b = Batcher::new(8, 2048);
-        let now = Instant::now();
-        for i in 0..1000u64 {
-            b.submit(Request {
-                id: i,
-                prompt: vec![1, 2, 3, 4],
-                max_new_tokens: 4,
-                temperature: 0.0,
-                arrival: now,
-            });
-        }
-        while !b.idle() {
-            b.admit();
-            for s in 0..8 {
-                if b.active[s].is_some() {
-                    b.advance(s, 1, now);
-                }
-            }
-        }
-        assert_eq!(b.completed.len(), 1000);
-    });
-    out.set("batcher", m.to_json());
-
-    // KV pool append/release
-    let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
-    let m = bench("kv_pool_100k_appends", 2, 10, || {
-        let mut p = KvPool::new(&cfg, 8, 16, usize::MAX / 2);
-        let routed = [true, false, true, false, true, true];
-        for i in 0..100_000 {
-            p.append(i % 8, &routed);
-        }
-        for s in 0..8 {
-            p.release(s);
-        }
-    });
-    out.set("kv_pool", m.to_json());
-
-    // routing stats ingestion (fwd-eval path)
-    let route = vec![1.0f32; 4 * 6 * 128];
-    let m = bench("routing_stats_record_4x6x128", 2, 200, || {
-        let mut s = RoutingStats::new(6);
-        s.record_route_tensor(&route, 4, 6, 128);
-    });
-    out.set("routing_stats", m.to_json());
-    out
-}
-
 fn main() -> Result<()> {
+    let quick = std::env::args().skip(1).any(|a| a == "--test");
     let mut results = Json::obj();
-    results.set("host_micro", host_micro());
-    match Engine::new(&dtrnet::artifacts_dir()) {
-        Ok(engine) => results.set("serving", serving(&engine)?),
-        Err(e) => println!("[coordinator_throughput] no artifacts: {e:#}"),
+    results.set("host_micro", host_micro(quick));
+    results.set("cpu_serving", cpu_serving(quick)?);
+    #[cfg(feature = "pjrt")]
+    {
+        match dtrnet::runtime::Engine::new(&dtrnet::artifacts_dir()) {
+            Ok(engine) => results.set("artifact_serving", artifact_serving(&engine)?),
+            Err(e) => println!("[coordinator_throughput] no artifacts: {e:#}"),
+        }
     }
     write_results("coordinator_throughput.json", results);
     Ok(())

@@ -132,12 +132,40 @@ impl Batcher {
         false
     }
 
+    /// Fast-forward `slot` through its entire prompt: the engine ingested
+    /// every prompt token in one chunked-prefill shot and sampled `first`
+    /// from the returned logits (chunked prefill collapses what
+    /// [`Batcher::advance`] would see as `prompt.len()` separate steps).
+    /// Records the first generated token and TTFT; retires the request if
+    /// it is already done. Returns true if the slot completed.
+    pub fn complete_prefill(&mut self, slot: usize, first: i32, now: Instant) -> bool {
+        let Some(st) = self.active[slot].as_mut() else {
+            return false;
+        };
+        st.prompt_cursor = st.req.prompt.len();
+        st.position = st.req.prompt.len();
+        st.first_token_at = Some(now);
+        st.generated.push(first);
+        if st.done() {
+            let st = self.active[slot].take().unwrap();
+            self.completed.push(st);
+            return true;
+        }
+        false
+    }
+
     pub fn n_active(&self) -> usize {
         self.active.iter().filter(|s| s.is_some()).count()
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Remove and return every queued (not-yet-admitted) request — used
+    /// by the engine to retire the backlog when a run is cut short.
+    pub fn drain_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
     }
 
     pub fn idle(&self) -> bool {
@@ -185,6 +213,34 @@ mod tests {
         assert!(b.advance(0, 103, now));
         assert_eq!(b.completed.len(), 1);
         assert_eq!(b.completed[0].generated, vec![102, 103]);
+        assert!(b.active[0].is_none());
+    }
+
+    #[test]
+    fn complete_prefill_fast_forwards_prompt() {
+        let mut b = Batcher::new(1, 10);
+        b.submit(req(1, 5, 3));
+        b.admit();
+        let now = Instant::now();
+        assert!(!b.complete_prefill(0, 42, now));
+        let st = b.active[0].as_ref().unwrap();
+        assert!(!st.in_prefill());
+        assert_eq!(st.position, 5);
+        assert_eq!(st.generated, vec![42]);
+        assert!(st.first_token_at.is_some());
+        // two more decode steps finish it
+        assert!(!b.advance(0, 43, now));
+        assert!(b.advance(0, 44, now));
+        assert_eq!(b.completed[0].generated, vec![42, 43, 44]);
+    }
+
+    #[test]
+    fn complete_prefill_retires_single_token_requests() {
+        let mut b = Batcher::new(1, 10);
+        b.submit(req(7, 4, 1));
+        b.admit();
+        assert!(b.complete_prefill(0, 9, Instant::now()));
+        assert_eq!(b.completed.len(), 1);
         assert!(b.active[0].is_none());
     }
 

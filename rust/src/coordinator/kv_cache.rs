@@ -91,6 +91,37 @@ impl KvPool {
         true
     }
 
+    /// Bulk-charge a chunked prefill for `slot`: of `n_tokens` prompt
+    /// tokens fed, layer l cached `routed_counts[l]` of them (the decode
+    /// state's lens delta). Atomic like [`KvPool::append`]: returns false
+    /// and charges nothing if the page budget would be exceeded.
+    pub fn append_prefill(
+        &mut self,
+        slot: usize,
+        routed_counts: &[usize],
+        n_tokens: usize,
+    ) -> bool {
+        let mut new_pages = 0;
+        for (l, &cnt) in routed_counts.iter().enumerate() {
+            let sl = &self.slots[slot][l];
+            new_pages += (sl.len + cnt).div_ceil(self.page_size) - sl.pages;
+        }
+        if self.stats.pages_allocated + new_pages > self.max_pages {
+            return false;
+        }
+        self.stats.tokens_seen += n_tokens;
+        for (l, &cnt) in routed_counts.iter().enumerate() {
+            let sl = &mut self.slots[slot][l];
+            let need = (sl.len + cnt).div_ceil(self.page_size);
+            self.stats.pages_allocated += need - sl.pages;
+            sl.pages = need;
+            sl.len += cnt;
+            self.stats.tokens_cached += cnt;
+        }
+        self.refresh_peaks();
+        true
+    }
+
     /// Release everything held by `slot` (sequence finished / evicted).
     pub fn release(&mut self, slot: usize) {
         for sl in &mut self.slots[slot] {
@@ -168,6 +199,46 @@ mod tests {
         assert_eq!(p.stats().pages_allocated, 0);
         // peak survives release
         assert_eq!(p.stats().pages_peak, before);
+    }
+
+    #[test]
+    fn bulk_prefill_matches_per_token_appends() {
+        let mut a = pool();
+        let mut b = pool();
+        // 37 prompt tokens; layers 0/2/4/5 cache all, layers 1/3 every 4th.
+        let routed_of = |i: usize| {
+            let dtr = i % 4 == 0;
+            [true, dtr, true, dtr, true, true]
+        };
+        for i in 0..37 {
+            assert!(a.append(0, &routed_of(i)));
+        }
+        let mut counts = [0usize; 6];
+        for i in 0..37 {
+            for (l, &r) in routed_of(i).iter().enumerate() {
+                counts[l] += r as usize;
+            }
+        }
+        assert!(b.append_prefill(0, &counts, 37));
+        assert_eq!(a.lens(0), b.lens(0));
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.pages_allocated, sb.pages_allocated);
+        assert_eq!(sa.tokens_cached, sb.tokens_cached);
+        assert_eq!(sa.tokens_seen, sb.tokens_seen);
+        assert_eq!(sa.bytes_allocated, sb.bytes_allocated);
+    }
+
+    #[test]
+    fn bulk_prefill_capacity_atomic() {
+        let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        let mut p = KvPool::new(&cfg, 1, 4, 6);
+        // needs ceil(5/4)=2 pages on each of 6 layers > 6 budget
+        assert!(!p.append_prefill(0, &[5; 6], 5));
+        assert_eq!(p.stats().pages_allocated, 0);
+        assert_eq!(p.stats().tokens_seen, 0);
+        // 4 tokens on 6 layers = 6 pages fits exactly
+        assert!(p.append_prefill(0, &[4; 6], 4));
+        assert_eq!(p.stats().pages_allocated, 6);
     }
 
     #[test]

@@ -1,25 +1,32 @@
 //! The L3 coordinator — the paper-facing system.
 //!
-//! The host-side pieces (batcher, KV pool, sampling, stats, workload) are
-//! feature-free; the artifact-driven loops ([`trainer`], [`serve`]) need
-//! the `pjrt` feature (XLA/PJRT execution path).
+//! Everything here is feature-free except the artifact-driven loops
+//! ([`trainer`], [`serve`]), which need the `pjrt` feature (XLA/PJRT
+//! execution path).
 //!
-//! * [`trainer`] — training orchestrator: drives the fused `train_step`
-//!   artifact, owns the LR schedule and logging, evaluates checkpoints.
+//! * [`server`] — the backend-generic continuous-batching serving engine:
+//!   runs on any [`crate::runtime::Backend`] (the native CPU backend on
+//!   the default build), batched decode + chunked prefill + routing-aware
+//!   KV paging + latency/throughput/routing telemetry.
 //! * [`kv_cache`] — routing-aware paged KV-cache pool: pages are allocated
 //!   per (sequence, layer) only when that layer routed the token to
 //!   attention — the mechanism behind the paper's Fig. 6 memory savings.
 //! * [`batcher`] — continuous batching: slot assignment, admission,
 //!   completion recycling.
-//! * [`serve`] — the serving engine: decode loop over the batched decode
-//!   artifact, sampling, routing-stats collection, latency metrics.
+//! * [`workload`] — synthetic serving traces (Poisson arrivals,
+//!   heavy-tailed lengths), deterministic per seed.
 //! * [`stats`] — routing statistics (Fig. 5 telemetry).
+//! * [`trainer`] (`pjrt`) — training orchestrator: drives the fused
+//!   `train_step` artifact, owns the LR schedule, evaluates checkpoints.
+//! * [`serve`] (`pjrt`) — the artifact-bound serving loop over the AOT
+//!   batched decode executable (device-resident KV literals).
 
 pub mod batcher;
 pub mod kv_cache;
 pub mod sampling;
 #[cfg(feature = "pjrt")]
 pub mod serve;
+pub mod server;
 pub mod stats;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
@@ -29,7 +36,10 @@ pub use batcher::{Batcher, Request, RequestState};
 pub use kv_cache::{KvPool, PoolStats};
 pub use sampling::{sample, SamplingParams};
 #[cfg(feature = "pjrt")]
-pub use serve::{ServeEngine, ServeReport};
+pub use serve::ServeEngine;
+pub use server::{
+    FinishReason, PrefillMode, RequestRecord, ServeReport, Server, ServerConfig,
+};
 pub use stats::RoutingStats;
 #[cfg(feature = "pjrt")]
 pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,829 @@
+//! Backend-generic continuous-batching serving engine.
+//!
+//! Runs on any [`Backend`] — the native CPU backend on the default build,
+//! the PJRT path once that implements the trait — and wires the host-side
+//! coordinator pieces into a real engine loop:
+//!
+//! * **admission** — [`Batcher`] queue → free decode slots, iteration-level
+//!   (vLLM-style) scheduling;
+//! * **prefill** — either chunked at admission through
+//!   [`Backend::prefill_chunked`] (default: one batched pass per chunk,
+//!   page-charged in bulk) or token-by-token through the decode loop
+//!   ([`PrefillMode::Decode`], the decode-artifact semantics);
+//! * **batched decode** — one [`Backend::decode_batch`] call per engine
+//!   step over every active slot's [`DecodeState`]; bit-identical to
+//!   per-sequence decode by the trait contract, so token streams never
+//!   depend on batch composition;
+//! * **routing-aware KV paging** — [`KvPool`] pages are allocated per
+//!   (slot, layer) only for tokens the router sent through attention (the
+//!   paper's Fig. 6 mechanism); a dense shadow pool tracks what a
+//!   route-everything model would have allocated, making "pages saved vs
+//!   dense" a measured quantity rather than an analytical one;
+//! * **completion recycling** — finished/evicted slots release their pages
+//!   and re-enter admission;
+//! * **telemetry** — per-request TTFT and end-to-end latency, engine-step
+//!   and throughput histograms ([`Registry`]), per-layer routing fractions
+//!   ([`RoutingStats`]), all folded into a [`ServeReport`].
+//!
+//! Determinism: sampling uses one RNG per request, seeded from
+//! `engine seed ^ request id`, so generated token streams are a function
+//! of (weights, prompt, sampling params, seed) only — never of arrival
+//! timing, batch packing, or slot assignment. `integration_server.rs`
+//! pins this.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::batcher::{Batcher, Request};
+use super::kv_cache::{KvPool, PoolStats};
+use super::sampling::{sample, SamplingParams};
+use super::stats::RoutingStats;
+use super::workload::TimedRequest;
+use crate::metrics::Registry;
+use crate::runtime::backend::PREFILL_CHUNK;
+use crate::runtime::{Backend, DecodeState};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How the engine ingests prompts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// Feed prompt tokens one per engine step through the batched decode
+    /// call — pure iteration-level scheduling (the decode-artifact
+    /// serving semantics; prefill and generation are the same step kind).
+    Decode,
+    /// Ingest the whole prompt at admission via
+    /// [`Backend::prefill_chunked`] with this chunk width, bulk-charging
+    /// the KV pool from the resulting cache lens.
+    Chunked(usize),
+}
+
+/// Engine configuration. Zero means "derive a default" where noted.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Decode batch width (concurrent sequences).
+    pub slots: usize,
+    /// Request queue bound (submissions beyond it are rejected).
+    pub max_queue: usize,
+    /// KV page granularity in tokens.
+    pub kv_page_size: usize,
+    /// Page budget across the pool; 0 = the dense-equivalent footprint at
+    /// full context (`slots × layers × ceil(max_seq / page)`), so a dense
+    /// model exactly fits and the DTR model's headroom IS the Fig. 6 win.
+    pub max_kv_pages: usize,
+    /// Per-sequence position cap; 0 = the backend's `max_seq`.
+    pub max_seq: usize,
+    pub prefill: PrefillMode,
+    /// Engine-wide sampling defaults (top-k/top-p/repetition penalty);
+    /// per-request temperature comes from each [`Request`].
+    pub sampling: SamplingParams,
+    /// Seed for the per-request sampling RNGs.
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            slots: 4,
+            max_queue: 4096,
+            kv_page_size: 16,
+            max_kv_pages: 0,
+            max_seq: 0,
+            prefill: PrefillMode::Chunked(PREFILL_CHUNK),
+            sampling: SamplingParams::greedy(),
+            seed: 0x5e11,
+        }
+    }
+}
+
+/// Why a request left its slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens`.
+    Completed,
+    /// Evicted: the KV pool hit its page budget.
+    KvExhausted,
+    /// Evicted: the sequence reached the engine's position cap.
+    ContextCap,
+    /// The run's step bound tripped while this request was still queued
+    /// or in flight (accounting stays closed: nothing vanishes).
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Completed => "completed",
+            FinishReason::KvExhausted => "kv_exhausted",
+            FinishReason::ContextCap => "context_cap",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Per-request outcome (the engine's response object).
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated tokens (prompt not included).
+    pub tokens: Vec<i32>,
+    /// Time to first token; 0.0 if evicted before producing any.
+    pub ttft_ms: f64,
+    pub latency_ms: f64,
+    pub finish: FinishReason,
+}
+
+/// Serving run summary.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub backend: String,
+    pub completed: usize,
+    pub evicted: usize,
+    /// Submissions refused by queue backpressure or validation.
+    pub rejected: usize,
+    pub tokens_generated: usize,
+    pub prompt_tokens: usize,
+    pub steps: usize,
+    pub wall_s: f64,
+    /// Generated tokens per wall-clock second.
+    pub tokens_per_s: f64,
+    pub decode_step_ms_p50: f64,
+    pub decode_step_ms_p99: f64,
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p99: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p99: f64,
+    /// Mean fraction of slots doing useful work per step.
+    pub batch_occupancy: f64,
+    /// Routed-only pool (the real allocation).
+    pub pool: PoolStats,
+    /// Peak pages a dense-equivalent model would have allocated for the
+    /// same token stream (measured by the shadow pool, same paging).
+    pub dense_pages_peak: usize,
+    /// tokens_cached / (tokens_seen × layers): the token-granular KV
+    /// footprint ratio vs dense (page quantization visible via pages).
+    pub kv_savings_ratio: f64,
+    pub routing: RoutingStats,
+    /// Per-layer fraction of tokens routed to attention (Fig. 5 y-axis).
+    pub attn_fracs: Vec<f64>,
+    pub requests: Vec<RequestRecord>,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        let reqs = self
+            .requests
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("prompt_len", Json::Num(r.prompt_len as f64)),
+                    ("n_tokens", Json::Num(r.tokens.len() as f64)),
+                    ("ttft_ms", Json::Num(r.ttft_ms)),
+                    ("latency_ms", Json::Num(r.latency_ms)),
+                    ("finish", Json::Str(r.finish.as_str().to_string())),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("backend", Json::Str(self.backend.clone())),
+            ("completed", Json::Num(self.completed as f64)),
+            ("evicted", Json::Num(self.evicted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("decode_step_ms_p50", Json::Num(self.decode_step_ms_p50)),
+            ("decode_step_ms_p99", Json::Num(self.decode_step_ms_p99)),
+            ("ttft_ms_p50", Json::Num(self.ttft_ms_p50)),
+            ("ttft_ms_p99", Json::Num(self.ttft_ms_p99)),
+            ("latency_ms_p50", Json::Num(self.latency_ms_p50)),
+            ("latency_ms_p99", Json::Num(self.latency_ms_p99)),
+            ("batch_occupancy", Json::Num(self.batch_occupancy)),
+            ("kv_pages_peak", Json::Num(self.pool.pages_peak as f64)),
+            ("kv_bytes_peak", Json::Num(self.pool.bytes_peak as f64)),
+            ("dense_pages_peak", Json::Num(self.dense_pages_peak as f64)),
+            ("kv_savings_ratio", Json::Num(self.kv_savings_ratio)),
+            ("attn_fracs", Json::arr_f64(&self.attn_fracs)),
+            ("routing", self.routing.to_json()),
+            ("requests", Json::Arr(reqs)),
+        ])
+    }
+}
+
+/// Continuous-batching serving engine over any [`Backend`].
+pub struct Server<'b> {
+    backend: &'b dyn Backend,
+    cfg: ServerConfig,
+    pub batcher: Batcher,
+    /// Routing-aware paged pool — the real allocation accountant.
+    pub pool: KvPool,
+    /// Shadow pool charged as if every layer cached every token.
+    dense_shadow: KvPool,
+    states: Vec<Option<DecodeState>>,
+    rngs: Vec<Rng>,
+    routing: RoutingStats,
+    registry: Registry,
+    records: Vec<RequestRecord>,
+    rejected: usize,
+    steps: usize,
+    steps_active_sum: u64,
+    d_model: usize,
+    n_layers: usize,
+    vocab: usize,
+    all_routed: Vec<bool>,
+}
+
+impl<'b> Server<'b> {
+    pub fn new(backend: &'b dyn Backend, cfg: ServerConfig) -> Result<Server<'b>> {
+        ensure!(cfg.slots > 0, "server needs at least one decode slot");
+        ensure!(cfg.kv_page_size > 0, "kv page size must be positive");
+        if let PrefillMode::Chunked(c) = cfg.prefill {
+            ensure!(c > 0, "chunked prefill needs a positive chunk width");
+        }
+        let mcfg = backend.config().clone();
+        let max_seq = if cfg.max_seq == 0 { mcfg.max_seq } else { cfg.max_seq };
+        let max_pages = if cfg.max_kv_pages == 0 {
+            cfg.slots * mcfg.n_layers * max_seq.div_ceil(cfg.kv_page_size)
+        } else {
+            cfg.max_kv_pages
+        };
+        let pool = KvPool::new(&mcfg, cfg.slots, cfg.kv_page_size, max_pages);
+        let dense_shadow = KvPool::new(&mcfg, cfg.slots, cfg.kv_page_size, usize::MAX / 2);
+        // Placeholders — every admission reseeds its slot from the
+        // request id, so streams never depend on slot assignment.
+        let rngs = (0..cfg.slots).map(|_| Rng::new(cfg.seed)).collect();
+        let slots = cfg.slots;
+        let max_queue = cfg.max_queue;
+        Ok(Server {
+            backend,
+            cfg: ServerConfig {
+                max_seq,
+                max_kv_pages: max_pages,
+                ..cfg
+            },
+            batcher: Batcher::new(slots, max_queue),
+            pool,
+            dense_shadow,
+            states: (0..slots).map(|_| None).collect(),
+            rngs,
+            routing: RoutingStats::new(mcfg.n_layers),
+            registry: Registry::default(),
+            records: Vec::new(),
+            rejected: 0,
+            steps: 0,
+            steps_active_sum: 0,
+            d_model: mcfg.d_model,
+            n_layers: mcfg.n_layers,
+            vocab: mcfg.vocab_size,
+            all_routed: vec![true; mcfg.n_layers],
+        })
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Per-layer decode-cache lens of a live slot (None if vacant) — the
+    /// backend-reported routed counts the KV pool must mirror.
+    pub fn decode_lens(&self, slot: usize) -> Option<Vec<usize>> {
+        self.states[slot].as_ref().map(|s| s.lens(self.d_model))
+    }
+
+    /// Invariant check (used by tests after every step): for every live
+    /// slot, pool pages cover exactly the tokens the backend cached —
+    /// `pool.lens(slot) == DecodeState::lens` per layer.
+    pub fn check_kv_invariant(&self) -> Result<()> {
+        for slot in 0..self.cfg.slots {
+            let Some(want) = self.decode_lens(slot) else {
+                continue;
+            };
+            let got = self.pool.lens(slot);
+            ensure!(
+                got == want,
+                "slot {slot}: pool lens {got:?} != decode cache lens {want:?}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Enqueue a request. Returns false (and drops it) when the queue is
+    /// full or the request is malformed: empty prompt, zero tokens, an
+    /// out-of-vocabulary prompt token (which would make the backend error
+    /// mid-run and kill every other in-flight request), or a prompt
+    /// longer than the position cap. The cap check keeps the two prefill
+    /// modes equivalent — chunked prefill would otherwise ingest the
+    /// whole oversized prompt while stepwise prefill stops at the cap
+    /// mid-prompt, diverging streams and RoPE positions. Every refusal
+    /// is counted into [`ServeReport::rejected`], so `completed +
+    /// evicted + rejected` equals submissions on every run path.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let malformed = req.prompt.is_empty()
+            || req.max_new_tokens == 0
+            || req.prompt.len() > self.cfg.max_seq
+            || req
+                .prompt
+                .iter()
+                .any(|&t| t < 0 || (t as usize) >= self.vocab);
+        if malformed || !self.batcher.submit(req) {
+            self.rejected += 1;
+            return false;
+        }
+        true
+    }
+
+    /// One engine iteration: admit (+ chunked prefill) → batched decode →
+    /// sample → advance/recycle. Returns requests finished this step.
+    pub fn step(&mut self) -> Result<usize> {
+        let mut finished = 0;
+        for slot in self.batcher.admit() {
+            // Ownership rule: whoever vacates a slot releases its pages
+            // and state, so an admitted slot is always clean here.
+            debug_assert!(self.states[slot].is_none());
+            debug_assert_eq!(self.pool.lens(slot).iter().sum::<usize>(), 0);
+            self.states[slot] = Some(self.backend.begin_decode());
+            let id = self.batcher.active[slot]
+                .as_ref()
+                .expect("admitted slot is active")
+                .req
+                .id;
+            self.rngs[slot] = Rng::new(self.cfg.seed ^ id);
+            if let PrefillMode::Chunked(chunk) = self.cfg.prefill {
+                finished += self.prefill_slot(slot, chunk)?;
+            }
+        }
+        if self.batcher.idle() {
+            self.update_gauges();
+            return Ok(finished);
+        }
+
+        // Gather the active slots into one batched decode call.
+        let mut slot_ids = Vec::with_capacity(self.cfg.slots);
+        let mut toks = Vec::with_capacity(self.cfg.slots);
+        for (slot, st) in self.batcher.active.iter().enumerate() {
+            if let Some(rs) = st {
+                slot_ids.push(slot);
+                toks.push(rs.next_input());
+            }
+        }
+        if slot_ids.is_empty() {
+            // Everything admitted this step already finished in prefill;
+            // queued requests (if any) admit next step. Not counted as a
+            // step: `steps` tallies decode iterations only, so occupancy
+            // and the step budget aren't skewed by prefill-only passes
+            // (each of which retires at least one queued request, so
+            // they are bounded by the queue and cannot spin).
+            self.update_gauges();
+            return Ok(finished);
+        }
+        self.steps += 1;
+        let mut refs: Vec<&mut DecodeState> = Vec::with_capacity(slot_ids.len());
+        let mut k = 0;
+        for (slot, st) in self.states.iter_mut().enumerate() {
+            if k < slot_ids.len() && slot_ids[k] == slot {
+                refs.push(st.as_mut().expect("active slot missing decode state"));
+                k += 1;
+            }
+        }
+        let t0 = Instant::now();
+        let outs = self.backend.decode_batch(&mut refs, &toks)?;
+        drop(refs);
+        self.registry
+            .histogram("decode_step_ms")
+            .record(t0.elapsed().as_secs_f64() * 1e3);
+        self.steps_active_sum += slot_ids.len() as u64;
+
+        let now = Instant::now();
+        for (out, &slot) in outs.iter().zip(&slot_ids) {
+            for (l, &r) in out.routed.iter().enumerate() {
+                self.routing.record_layer(l, r as u64, 1);
+            }
+            if !self.pool.append(slot, &out.routed) {
+                // Page budget hit — a production engine would preempt and
+                // requeue; this one finishes the request early.
+                self.evict_slot(slot, now, FinishReason::KvExhausted);
+                finished += 1;
+                continue;
+            }
+            self.dense_shadow.append(slot, &self.all_routed);
+            // Only sample when this step actually produces a generated
+            // token (mid-prefill outputs are discarded). Keeps RNG draws
+            // at exactly one per generated token, so token streams are
+            // identical across prefill modes even with temperature > 0.
+            let produces_token = {
+                let rs = self.batcher.active[slot].as_ref().expect("slot is live");
+                !rs.in_prefill() || rs.prompt_cursor + 1 == rs.req.prompt.len()
+            };
+            let sampled = if produces_token {
+                self.sample_slot(slot, out.logits.as_f32())
+            } else {
+                0
+            };
+            if self.batcher.advance(slot, sampled, now) {
+                self.record_finish(now, FinishReason::Completed);
+                self.release_slot(slot);
+                finished += 1;
+            } else if self.slot_at_cap(slot) {
+                self.evict_slot(slot, now, FinishReason::ContextCap);
+                finished += 1;
+            }
+        }
+        self.update_gauges();
+        Ok(finished)
+    }
+
+    /// Run until every already-submitted request finishes. If the
+    /// cumulative `max_steps` bound trips first, everything still queued
+    /// or in flight is retired as [`FinishReason::Cancelled`], so the
+    /// report's accounting stays closed.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        while !self.batcher.idle() && self.steps < max_steps {
+            self.step()?;
+        }
+        self.cancel_in_flight();
+        Ok(self.report(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Drive a timed workload trace end-to-end: open-loop arrivals (a
+    /// request is submitted once its offset has elapsed), then drain.
+    /// When the engine is otherwise idle, a virtual clock jumps to the
+    /// next arrival instant instead of spinning — and because the jump
+    /// moves *time* rather than submitting a single request, a burst of
+    /// near-simultaneous delayed arrivals still lands together and gets
+    /// batched rather than serialized.
+    pub fn run_workload(
+        &mut self,
+        trace: &[TimedRequest],
+        max_steps: usize,
+    ) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut next = 0;
+        let mut skipped_s = 0.0f64; // virtual time fast-forwarded while idle
+        while (next < trace.len() || !self.batcher.idle()) && self.steps < max_steps {
+            let now_s = t0.elapsed().as_secs_f64() + skipped_s;
+            while next < trace.len() && trace[next].offset_s <= now_s {
+                self.submit_traced(&trace[next]);
+                next += 1;
+            }
+            if self.batcher.idle() && next < trace.len() {
+                skipped_s += trace[next].offset_s - now_s;
+                continue; // re-enter the submission loop at the new time
+            }
+            self.step()?;
+        }
+        self.cancel_in_flight();
+        Ok(self.report(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Retire every queued or in-flight request as cancelled (step bound
+    /// exhausted). No-op when the engine is idle.
+    fn cancel_in_flight(&mut self) {
+        let now = Instant::now();
+        for slot in 0..self.cfg.slots {
+            if self.batcher.active[slot].is_some() {
+                self.evict_slot(slot, now, FinishReason::Cancelled);
+            }
+        }
+        for req in self.batcher.drain_queue() {
+            self.records.push(RequestRecord {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                ttft_ms: 0.0,
+                latency_ms: now.duration_since(req.arrival).as_secs_f64() * 1e3,
+                finish: FinishReason::Cancelled,
+            });
+        }
+    }
+
+    fn submit_traced(&mut self, tr: &TimedRequest) {
+        let mut req = tr.request.clone();
+        // The trace records offsets; latency is measured from actual
+        // submission, not trace generation.
+        req.arrival = Instant::now();
+        self.submit(req); // refusals are counted by submit itself
+    }
+
+    /// Chunked prefill of a freshly admitted slot. Returns 1 if the
+    /// request finished already (single-token generations, eviction).
+    fn prefill_slot(&mut self, slot: usize, chunk: usize) -> Result<usize> {
+        let prompt = self.batcher.active[slot]
+            .as_ref()
+            .expect("prefill target is active")
+            .req
+            .prompt
+            .clone();
+        let t0 = Instant::now();
+        let state = self.states[slot].as_mut().expect("admitted slot has state");
+        let out = self.backend.prefill_chunked(state, &prompt, chunk)?;
+        let lens = state.lens(self.d_model);
+        self.registry
+            .histogram("prefill_ms")
+            .record(t0.elapsed().as_secs_f64() * 1e3);
+        for (l, &len) in lens.iter().enumerate() {
+            self.routing.record_layer(l, len as u64, prompt.len() as u64);
+        }
+        let now = Instant::now();
+        if !self.pool.append_prefill(slot, &lens, prompt.len()) {
+            self.evict_slot(slot, now, FinishReason::KvExhausted);
+            return Ok(1);
+        }
+        self.dense_shadow
+            .append_prefill(slot, &vec![prompt.len(); self.n_layers], prompt.len());
+        let sampled = self.sample_slot(slot, out.logits.as_f32());
+        if self.batcher.complete_prefill(slot, sampled, now) {
+            self.record_finish(now, FinishReason::Completed);
+            self.release_slot(slot);
+            return Ok(1);
+        }
+        if self.slot_at_cap(slot) {
+            self.evict_slot(slot, now, FinishReason::ContextCap);
+            return Ok(1);
+        }
+        Ok(0)
+    }
+
+    fn slot_at_cap(&self, slot: usize) -> bool {
+        self.batcher.active[slot]
+            .as_ref()
+            .map(|rs| rs.position >= self.cfg.max_seq)
+            .unwrap_or(false)
+    }
+
+    fn sample_slot(&mut self, slot: usize, logits: &[f32]) -> i32 {
+        let st = self.batcher.active[slot]
+            .as_ref()
+            .expect("sampling a vacant slot");
+        let params = SamplingParams {
+            temperature: st.req.temperature,
+            ..self.cfg.sampling
+        };
+        sample(logits, &params, &st.generated, &mut self.rngs[slot])
+    }
+
+    /// Free a finished slot's pages and decode state (the request itself
+    /// was already retired into `batcher.completed`).
+    fn release_slot(&mut self, slot: usize) {
+        self.pool.release(slot);
+        self.dense_shadow.release(slot);
+        self.states[slot] = None;
+    }
+
+    /// Force-finish a live slot (pool exhaustion / context cap).
+    fn evict_slot(&mut self, slot: usize, now: Instant, reason: FinishReason) {
+        if let Some(st) = self.batcher.active[slot].take() {
+            self.batcher.completed.push(st);
+            self.record_finish(now, reason);
+        }
+        self.release_slot(slot);
+    }
+
+    /// Build the [`RequestRecord`] for the request most recently pushed
+    /// onto `batcher.completed`.
+    fn record_finish(&mut self, now: Instant, reason: FinishReason) {
+        let st = self
+            .batcher
+            .completed
+            .last()
+            .expect("finish without a completed request");
+        // TTFT exists only if a first token was actually produced — a
+        // zero-token eviction must not fabricate one into the histogram.
+        let ttft = st
+            .first_token_at
+            .map(|t| t.duration_since(st.req.arrival).as_secs_f64() * 1e3);
+        let latency_ms = now.duration_since(st.req.arrival).as_secs_f64() * 1e3;
+        if let Some(ms) = ttft {
+            self.registry.histogram("ttft_ms").record(ms);
+        }
+        self.registry.histogram("request_latency_ms").record(latency_ms);
+        self.registry.counter("requests_finished").inc();
+        self.records.push(RequestRecord {
+            id: st.req.id,
+            prompt_len: st.req.prompt.len(),
+            tokens: st.generated.clone(),
+            ttft_ms: ttft.unwrap_or(0.0),
+            latency_ms,
+            finish: reason,
+        });
+    }
+
+    fn update_gauges(&self) {
+        self.registry
+            .gauge("queue_depth")
+            .set(self.batcher.queue_len() as f64);
+        self.registry
+            .gauge("active_slots")
+            .set(self.batcher.n_active() as f64);
+        self.registry
+            .gauge("kv_pages_allocated")
+            .set(self.pool.stats().pages_allocated as f64);
+    }
+
+    fn report(&self, wall_s: f64) -> ServeReport {
+        let step_h = self.registry.histogram("decode_step_ms").summary();
+        let ttft_h = self.registry.histogram("ttft_ms").summary();
+        let lat_h = self.registry.histogram("request_latency_ms").summary();
+        let pool = self.pool.stats();
+        let dense = self.dense_shadow.stats();
+        let tokens_generated: usize = self.records.iter().map(|r| r.tokens.len()).sum();
+        let prompt_tokens: usize = self.records.iter().map(|r| r.prompt_len).sum();
+        let kv_savings_ratio = if pool.tokens_seen > 0 {
+            pool.tokens_cached as f64 / (pool.tokens_seen * self.n_layers) as f64
+        } else {
+            1.0
+        };
+        ServeReport {
+            backend: self.backend.name().to_string(),
+            completed: self
+                .records
+                .iter()
+                .filter(|r| r.finish == FinishReason::Completed)
+                .count(),
+            evicted: self
+                .records
+                .iter()
+                .filter(|r| r.finish != FinishReason::Completed)
+                .count(),
+            rejected: self.rejected,
+            tokens_generated,
+            prompt_tokens,
+            steps: self.steps,
+            wall_s,
+            tokens_per_s: if wall_s > 0.0 {
+                tokens_generated as f64 / wall_s
+            } else {
+                0.0
+            },
+            decode_step_ms_p50: step_h.p50,
+            decode_step_ms_p99: step_h.p99,
+            ttft_ms_p50: ttft_h.p50,
+            ttft_ms_p99: ttft_h.p99,
+            latency_ms_p50: lat_h.p50,
+            latency_ms_p99: lat_h.p99,
+            batch_occupancy: if self.steps > 0 {
+                self.steps_active_sum as f64 / (self.steps * self.cfg.slots) as f64
+            } else {
+                0.0
+            },
+            pool,
+            dense_pages_peak: dense.pages_peak,
+            kv_savings_ratio,
+            routing: self.routing.clone(),
+            attn_fracs: self.routing.fractions(),
+            requests: self.records.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+    use crate::runtime::CpuBackend;
+
+    fn backend() -> CpuBackend {
+        CpuBackend::init(&ModelConfig::preset("xs", Variant::DtrBilayer), 3).unwrap()
+    }
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt_len).map(|i| (i as i32 * 7 + id as i32) % 256).collect(),
+            max_new_tokens: gen,
+            temperature: 0.0,
+            arrival: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn serves_more_requests_than_slots() {
+        let be = backend();
+        let cfg = ServerConfig {
+            slots: 2,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        for i in 0..5 {
+            assert!(srv.submit(req(i, 6, 4)));
+        }
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.completed, 5);
+        assert_eq!(rep.evicted, 0);
+        assert_eq!(rep.tokens_generated, 20);
+        for r in &rep.requests {
+            assert_eq!(r.tokens.len(), 4, "request {} short", r.id);
+            assert_eq!(r.finish, FinishReason::Completed);
+        }
+        // all pages returned after the run
+        assert_eq!(srv.pool.stats().pages_allocated, 0);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let be = backend();
+        let mut srv = Server::new(&be, ServerConfig::default()).unwrap();
+        assert!(!srv.submit(req(0, 0, 4)), "empty prompt");
+        assert!(!srv.submit(req(1, 4, 0)), "zero generation budget");
+        assert!(!srv.submit(req(2, 65, 4)), "prompt past the xs position cap");
+        let oov = Request {
+            id: 3,
+            prompt: vec![0, 999],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            arrival: Instant::now(),
+        };
+        assert!(!srv.submit(oov), "out-of-vocabulary prompt token");
+        assert!(srv.batcher.idle());
+    }
+
+    #[test]
+    fn step_budget_cancels_cleanly() {
+        let be = backend();
+        let mut srv = Server::new(&be, ServerConfig::default()).unwrap();
+        for i in 0..3 {
+            assert!(srv.submit(req(i, 6, 50)));
+        }
+        let rep = srv.run_to_completion(2).unwrap();
+        assert_eq!(rep.requests.len(), 3, "nothing may vanish at the step bound");
+        assert!(rep
+            .requests
+            .iter()
+            .all(|r| r.finish == FinishReason::Cancelled));
+        assert_eq!(rep.completed + rep.evicted, 3);
+        assert_eq!(srv.pool.stats().pages_allocated, 0);
+        assert!(srv.batcher.idle());
+    }
+
+    #[test]
+    fn decode_prefill_mode_matches_chunked_token_streams() {
+        let be = backend();
+        let run = |prefill| {
+            let cfg = ServerConfig {
+                slots: 2,
+                prefill,
+                ..Default::default()
+            };
+            let mut srv = Server::new(&be, cfg).unwrap();
+            for i in 0..4 {
+                srv.submit(req(i, 9, 5));
+            }
+            let mut rep = srv.run_to_completion(10_000).unwrap();
+            rep.requests.sort_by_key(|r| r.id);
+            rep.requests
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(PrefillMode::Decode), run(PrefillMode::Chunked(4)));
+    }
+
+    #[test]
+    fn kv_budget_eviction_frees_the_slot() {
+        let be = backend();
+        // Budget fits barely one short sequence's pages (4 layers, page 4).
+        let cfg = ServerConfig {
+            slots: 1,
+            kv_page_size: 4,
+            max_kv_pages: 4,
+            prefill: PrefillMode::Decode,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        srv.submit(req(0, 8, 40));
+        srv.submit(req(1, 8, 40));
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.requests.len(), 2, "both requests must leave the engine");
+        assert!(
+            rep.requests.iter().any(|r| r.finish == FinishReason::KvExhausted),
+            "tiny page budget must evict: {:?}",
+            rep.requests.iter().map(|r| r.finish).collect::<Vec<_>>()
+        );
+        assert_eq!(srv.pool.stats().pages_allocated, 0);
+    }
+
+    #[test]
+    fn context_cap_stops_runaway_generation() {
+        let be = backend();
+        let cfg = ServerConfig {
+            slots: 1,
+            max_seq: 16,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        srv.submit(req(0, 8, 1000));
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.requests.len(), 1);
+        assert_eq!(rep.requests[0].finish, FinishReason::ContextCap);
+        // fed tokens never exceed the cap
+        assert!(rep.requests[0].prompt_len + rep.requests[0].tokens.len() <= 17);
+    }
+}

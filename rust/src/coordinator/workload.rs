@@ -40,6 +40,23 @@ impl Default for WorkloadSpec {
     }
 }
 
+impl WorkloadSpec {
+    /// Small deterministic workload for CLI demos and CI smoke runs:
+    /// `n` requests arriving in a fast burst, short prompts/generations
+    /// sized so `tiny`-preset sequences stay far from the context cap.
+    pub fn smoke(n: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: n,
+            arrival_rate: 500.0,
+            prompt_len_mean: 12,
+            prompt_len_max: 32,
+            gen_len_mean: 16,
+            gen_len_max: 48,
+            ..Default::default()
+        }
+    }
+}
+
 /// A request with its (relative) arrival offset in seconds.
 #[derive(Debug, Clone)]
 pub struct TimedRequest {

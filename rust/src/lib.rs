@@ -28,9 +28,11 @@
 //! - [`runtime`] — execution backends: the [`runtime::Backend`] trait,
 //!   the native CPU backend, DTCK checkpoints, and (behind `pjrt`) the
 //!   PJRT artifact registry: load, compile, execute.
-//! - [`coordinator`] — the system contribution: continuous batching and
-//!   the routing-aware paged KV-cache pool (feature-free), plus the
-//!   training orchestrator and serving engine (`pjrt`).
+//! - [`coordinator`] — the system contribution: the backend-generic
+//!   continuous-batching serving engine ([`coordinator::Server`]) over
+//!   the routing-aware paged KV-cache pool — feature-free, serving on
+//!   the CPU backend today — plus the training orchestrator and the
+//!   artifact-bound serving loop (`pjrt`).
 //! - [`eval`] — perplexity / routing-stats / cosine-probe harnesses;
 //!   [`eval::perplexity_backend`] runs against any [`runtime::Backend`].
 //! - [`metrics`] — counters, histograms, JSONL emission.

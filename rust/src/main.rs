@@ -5,18 +5,25 @@
 //!   demo    --preset xs --variant dtr_bilayer — CPU backend tour:
 //!                                    forward perplexity, routing stats,
 //!                                    greedy/sampled decode
+//!   serve   --requests 8           — continuous-batching engine on the
+//!                                    CPU backend: synthetic workload,
+//!                                    throughput/latency/KV-page report
+//!                                    (see DESIGN.md §Serving for flags)
 //!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
 //!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer --steps 200 [--corpus markov|text]
 //!   eval    --tag tiny_dtr_bilayer — perplexity + routing stats
-//!   serve   --tag tiny_dtr_bilayer --requests 8 — continuous-batch demo
+//!   serve   --artifact tiny_dtr_bilayer — serve the AOT decode artifact
+//!                                    instead of the CPU backend
 
 use anyhow::{bail, Result};
 
 use dtrnet::config::{ModelConfig, Variant};
-use dtrnet::coordinator::SamplingParams;
+use dtrnet::coordinator::{
+    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, WorkloadSpec,
+};
 use dtrnet::data::{corpus, Dataset};
 use dtrnet::model::{flops, memory};
 use dtrnet::runtime::{Backend, CpuBackend};
@@ -28,7 +35,7 @@ use dtrnet::util::rng::Rng;
 #[cfg(feature = "pjrt")]
 use dtrnet::config::TrainConfig;
 #[cfg(feature = "pjrt")]
-use dtrnet::coordinator::{Request, ServeEngine, Trainer};
+use dtrnet::coordinator::Trainer;
 #[cfg(feature = "pjrt")]
 use dtrnet::runtime::Engine;
 
@@ -92,10 +99,10 @@ fn make_dataset(args: &Args, seq: usize) -> Dataset {
     }
 }
 
-/// Native CPU backend tour: forward perplexity + routing + decode — runs
-/// on any machine, no artifacts, no XLA.
-fn demo(args: &Args) -> Result<()> {
-    let preset = args.get_or("preset", "xs");
+/// Shared `--preset` / `--variant` / `--seed` parsing for the CPU-backend
+/// commands (`demo`, `serve`).
+fn parse_model(args: &Args, default_preset: &str) -> Result<(ModelConfig, Variant, u64)> {
+    let preset = args.get_or("preset", default_preset);
     let variant = Variant::from_str(args.get_or("variant", "dtr_bilayer"))
         .ok_or_else(|| anyhow::anyhow!("unknown variant (try dense/dtr_bilayer/dtr_trilayer)"))?;
     let cfg = ModelConfig::try_preset(preset, variant).ok_or_else(|| {
@@ -104,7 +111,13 @@ fn demo(args: &Args) -> Result<()> {
             ModelConfig::PRESET_NAMES
         )
     })?;
-    let seed = args.get_u64("seed", 0);
+    Ok((cfg, variant, args.get_u64("seed", 0)))
+}
+
+/// Native CPU backend tour: forward perplexity + routing + decode — runs
+/// on any machine, no artifacts, no XLA.
+fn demo(args: &Args) -> Result<()> {
+    let (cfg, variant, seed) = parse_model(args, "xs")?;
     let backend = CpuBackend::init(&cfg, seed)?;
     println!(
         "backend={} model={} variant={} layout={} params={}",
@@ -220,10 +233,107 @@ fn eval(_args: &Args) -> Result<()> {
     )
 }
 
-#[cfg(feature = "pjrt")]
+/// Continuous-batching serve: one dispatch for both execution paths. The
+/// default drives the backend-generic engine on the native CPU backend
+/// (works on every build); `--artifact <tag>` opts into the AOT decode
+/// artifact path (pjrt builds only).
 fn serve(args: &Args) -> Result<()> {
+    if args.get("artifact").is_some() {
+        return serve_artifact(args);
+    }
+    let (cfg, variant, seed) = parse_model(args, "tiny")?;
+    // --load ckpt.dtck serves trained weights; default is fresh init
+    let backend = if let Some(path) = args.get("load") {
+        let ck = dtrnet::runtime::Checkpoint::load(std::path::Path::new(path))?;
+        CpuBackend::from_checkpoint(&cfg, &ck)?
+    } else {
+        CpuBackend::init(&cfg, seed)?
+    };
+
+    let mut spec = WorkloadSpec::smoke(args.get_usize("requests", 8));
+    spec.arrival_rate = args.get_f64("rate", spec.arrival_rate);
+    spec.prompt_len_mean = args.get_usize("prompt-mean", spec.prompt_len_mean);
+    spec.prompt_len_max = args.get_usize("prompt-max", spec.prompt_len_max);
+    spec.gen_len_mean = args.get_usize("gen", spec.gen_len_mean);
+    spec.gen_len_max = args.get_usize("gen-max", spec.gen_len_max);
+    spec.temperature = args.get_f64("temp", 0.0) as f32;
+    spec.vocab = cfg.vocab_size;
+    let trace = generate_workload(&spec, args.get_u64("workload-seed", 1));
+
+    let chunk = args.get_usize("prefill-chunk", 32);
+    let scfg = ServerConfig {
+        slots: args.get_usize("slots", 4),
+        kv_page_size: args.get_usize("page", 16),
+        prefill: if chunk == 0 {
+            PrefillMode::Decode
+        } else {
+            PrefillMode::Chunked(chunk)
+        },
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "backend={} model={} variant={} layout={} slots={} page={} prefill={:?}",
+        backend.name(),
+        cfg.name,
+        variant.as_str(),
+        cfg.layout_string(),
+        scfg.slots,
+        scfg.kv_page_size,
+        scfg.prefill,
+    );
+    let mut srv = Server::new(&backend, scfg)?;
+    let report = srv.run_workload(&trace, args.get_usize("max-steps", 1_000_000))?;
+
+    println!(
+        "requests: {} completed, {} evicted, {} rejected ({} steps, occupancy {:.2})",
+        report.completed, report.evicted, report.rejected, report.steps, report.batch_occupancy
+    );
+    println!(
+        "tokens: {} generated (+{} prompt) in {:.3}s -> {:.1} tok/s",
+        report.tokens_generated, report.prompt_tokens, report.wall_s, report.tokens_per_s
+    );
+    println!(
+        "latency ms: request p50 {:.2} p99 {:.2} | ttft p50 {:.2} p99 {:.2} | step p50 {:.3} p99 {:.3}",
+        report.latency_ms_p50,
+        report.latency_ms_p99,
+        report.ttft_ms_p50,
+        report.ttft_ms_p99,
+        report.decode_step_ms_p50,
+        report.decode_step_ms_p99,
+    );
+    let saved = report.dense_pages_peak.saturating_sub(report.pool.pages_peak);
+    println!(
+        "kv pages: peak {} vs dense-equivalent {} ({} pages saved, {:.1}%); \
+         token-granular footprint {:.3}x dense",
+        report.pool.pages_peak,
+        report.dense_pages_peak,
+        saved,
+        if report.dense_pages_peak > 0 {
+            100.0 * saved as f64 / report.dense_pages_peak as f64
+        } else {
+            0.0
+        },
+        report.kv_savings_ratio,
+    );
+    let fracs: Vec<String> = report.attn_fracs.iter().map(|f| format!("{f:.3}")).collect();
+    println!(
+        "attention fraction per layer [{}]: {} (DTR capacity target ~{:.2})",
+        cfg.layout_string(),
+        fracs.join(" "),
+        cfg.dtr_attn_frac,
+    );
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_artifact(args: &Args) -> Result<()> {
+    use dtrnet::coordinator::{Request, ServeEngine};
     let e = engine()?;
-    let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
+    let tag = args.get_or("artifact", "tiny_dtr_bilayer").to_string();
     let decode = e
         .manifest
         .artifacts
@@ -261,10 +371,10 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn serve(_args: &Args) -> Result<()> {
+fn serve_artifact(_args: &Args) -> Result<()> {
     bail!(
-        "`serve` drives AOT decode artifacts and needs the `pjrt` build; \
-         try `dtrnet demo --gen 32` for native CPU decoding"
+        "`serve --artifact` drives AOT decode artifacts and needs the `pjrt` \
+         build; omit --artifact to serve on the native CPU backend"
     )
 }
 

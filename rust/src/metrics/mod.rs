@@ -30,6 +30,21 @@ impl Counter {
     }
 }
 
+/// Point-in-time gauge (queue depth, active slots, pool pages). Stores
+/// f64 bits in an atomic so readers never block the engine loop.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Latency/size histogram; stores raw samples (bounded) for percentiles.
 #[derive(Debug, Default)]
 pub struct Histogram {
@@ -83,12 +98,22 @@ impl HistSummary {
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -109,6 +134,9 @@ impl Registry {
         let mut obj = Json::obj();
         for (k, c) in self.counters.lock().unwrap().iter() {
             obj.set(k, Json::Num(c.get() as f64));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            obj.set(k, Json::Num(g.get()));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
             obj.set(k, h.summary().to_json());
@@ -158,6 +186,17 @@ mod tests {
         assert!((s.p50 - 50.5).abs() < 1.0);
         let snap = reg.snapshot();
         assert_eq!(snap.path("reqs").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn gauges_hold_latest_value() {
+        let reg = Registry::default();
+        let g = reg.gauge("queue_depth");
+        assert_eq!(g.get(), 0.0);
+        g.set(7.5);
+        g.set(3.0);
+        assert_eq!(g.get(), 3.0);
+        assert_eq!(reg.snapshot().path("queue_depth").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -89,6 +89,10 @@ pub struct GenerateOutput {
     pub attn_frac: Vec<f64>,
 }
 
+/// Default chunk width for [`Backend::prefill`] (balances batched-kernel
+/// amortization against scratch memory; any value is correct).
+pub const PREFILL_CHUNK: usize = 32;
+
 /// An execution backend for the DTRNet model family.
 pub trait Backend {
     /// Human-readable backend name (for logs/reports).
@@ -107,15 +111,64 @@ pub trait Backend {
     /// logits and the per-layer routing decisions that updated the cache.
     fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput>;
 
-    /// Prefill a prompt by running sequential decode steps; returns the
+    /// Batched multi-sequence decode: feed one token to each sequence in
+    /// `states` (a slab of independent per-sequence decode states) and
+    /// return one [`StepOutput`] per sequence, in order.
+    ///
+    /// Contract: the outputs and cache updates must be **bit-identical**
+    /// to calling [`Backend::decode_step`] on each (state, token) pair
+    /// sequentially — batching is an execution-strategy choice, never a
+    /// semantics choice (the serving engine's determinism guarantee rests
+    /// on this). The default implementation is that loop; backends
+    /// override it to share work across the batch.
+    fn decode_batch(
+        &self,
+        states: &mut [&mut DecodeState],
+        tokens: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            states.len() == tokens.len(),
+            "decode_batch: {} states vs {} tokens",
+            states.len(),
+            tokens.len()
+        );
+        states
+            .iter_mut()
+            .zip(tokens)
+            .map(|(s, &t)| self.decode_step(s, t))
+            .collect()
+    }
+
+    /// Prefill `tokens` in chunks of up to `chunk` tokens; returns the
     /// last step's output (logits predict the token after the prompt).
-    fn prefill(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<StepOutput> {
+    ///
+    /// Same bit-identity contract as [`Backend::decode_batch`]: the cache
+    /// contents, per-layer lens, and final logits must equal a sequential
+    /// [`Backend::decode_step`] loop for any chunk size. The default
+    /// implementation is that loop; backends with batched forward kernels
+    /// override it to process whole chunks at once.
+    fn prefill_chunked(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<StepOutput> {
         ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let _ = chunk;
         let mut last = None;
         for &t in tokens {
             last = Some(self.decode_step(state, t)?);
         }
         Ok(last.unwrap())
+    }
+
+    /// Prefill a prompt; returns the last step's output (logits predict
+    /// the token after the prompt). Delegates to
+    /// [`Backend::prefill_chunked`] with [`PREFILL_CHUNK`], so backends
+    /// that implement the chunked hook get non-sequential prefill here
+    /// and in [`Backend::generate`] for free.
+    fn prefill(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<StepOutput> {
+        self.prefill_chunked(state, tokens, PREFILL_CHUNK)
     }
 
     /// Greedy/sampled autoregressive decode: prefill `prompt`, then sample

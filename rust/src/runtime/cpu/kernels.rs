@@ -249,6 +249,30 @@ pub fn decode_attention(
     out
 }
 
+/// Gather rows `idx` of `x [n, d]` into a contiguous `[idx.len(), d]`
+/// buffer — the routed/bypassed token split of the batched decode path.
+pub fn gather_rows(x: &[f32], idx: &[usize], d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        out.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Scatter `src [idx.len(), d]` rows back into `dst [n, d]` at `idx`,
+/// scaling row r by `scale[r]` (the soft router score of the taken path).
+pub fn scatter_rows_scaled(dst: &mut [f32], src: &[f32], idx: &[usize], scale: &[f32], d: usize) {
+    debug_assert_eq!(src.len(), idx.len() * d);
+    debug_assert_eq!(scale.len(), idx.len());
+    for (r, &i) in idx.iter().enumerate() {
+        let srow = &src[r * d..(r + 1) * d];
+        let drow = &mut dst[i * d..(i + 1) * d];
+        for (o, &s) in drow.iter_mut().zip(srow) {
+            *o = scale[r] * s;
+        }
+    }
+}
+
 /// SwiGLU MLP (ref.swiglu_mlp_ref): `(SiLU(x Wg) * (x Wu)) Wd`.
 /// `x [n, d]`, `w_gate`/`w_up [d, ff]`, `w_down [ff, d]`.
 pub fn swiglu_mlp(
@@ -481,6 +505,20 @@ mod tests {
         assert_eq!(mask[1], 1.0);
         assert_eq!(mask[4], 1.0);
         assert_eq!(mask[0], 1.0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = 3;
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect(); // [4, 3]
+        let idx = [2usize, 0];
+        let g = gather_rows(&x, &idx, d);
+        assert_eq!(g, vec![6.0, 7.0, 8.0, 0.0, 1.0, 2.0]);
+        let mut dst = vec![0.0f32; 12];
+        scatter_rows_scaled(&mut dst, &g, &idx, &[2.0, 1.0], d);
+        assert_eq!(&dst[6..9], &[12.0, 14.0, 16.0]);
+        assert_eq!(&dst[0..3], &[0.0, 1.0, 2.0]);
+        assert_eq!(&dst[3..6], &[0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -74,6 +74,63 @@ pub struct CpuBackend {
     router_mode: RouterMode,
 }
 
+/// Which rows of a [`CpuBackend::step_rows`] call need logits. Only the
+/// requested rows pay the `[·, V]` unembed matmul — the dominant
+/// per-token cost at small `d_model` — so intermediate prefill chunks
+/// (whose logits nobody reads) skip it entirely.
+#[derive(Clone, Copy, PartialEq)]
+enum LogitsRows {
+    All,
+    Last,
+    None,
+}
+
+/// Output of [`CpuBackend::step_rows`].
+struct RowsOutput {
+    /// Logits per [`LogitsRows`]: `[n, V]`, `[1, V]`, or empty.
+    logits: Vec<f32>,
+    /// `[n][L]` per-row hard routing decisions.
+    routed: Vec<Vec<bool>>,
+    /// `[n][L]` per-row soft attention scores (1.0 on dense layers).
+    g_attn: Vec<Vec<f32>>,
+}
+
+/// Attend each row r (in order) against layer `li` of
+/// `states[rows_cache[r]]` plus the row's own K/V, then append that K/V
+/// to the cache — so later rows mapped to the same cache see earlier
+/// ones (within-chunk causality), and rows mapped to distinct caches are
+/// independent. Same float-op order per row as a sequential
+/// `decode_attention` + append loop. Returns `[m, d]` context rows.
+#[allow(clippy::too_many_arguments)]
+fn attend_rows(
+    q: &[f32],
+    kk: &[f32],
+    vv: &[f32],
+    states: &mut [&mut DecodeState],
+    rows_cache: &[usize],
+    li: usize,
+    d: usize,
+    heads: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let mut ctx = Vec::with_capacity(rows_cache.len() * d);
+    for (r, &c) in rows_cache.iter().enumerate() {
+        let st = &mut *states[c];
+        ctx.extend_from_slice(&kernels::decode_attention(
+            &q[r * d..(r + 1) * d],
+            &st.keys[li],
+            &st.values[li],
+            &kk[r * d..(r + 1) * d],
+            &vv[r * d..(r + 1) * d],
+            heads,
+            hd,
+        ));
+        st.keys[li].extend_from_slice(&kk[r * d..(r + 1) * d]);
+        st.values[li].extend_from_slice(&vv[r * d..(r + 1) * d]);
+    }
+    ctx
+}
+
 impl CpuBackend {
     /// Build from explicit weights, validating variant support and shapes.
     pub fn new(cfg: ModelConfig, weights: ModelWeights, mode: RouterMode) -> Result<CpuBackend> {
@@ -258,6 +315,136 @@ impl CpuBackend {
                 kernels::topk_mask(&g0, k)
             }
         }
+    }
+
+    /// Row-parallel DTRNet step — the shared core of
+    /// [`Backend::decode_batch`] and the chunked-prefill path. Each row r
+    /// is one token fed at `positions[r]` against the cache
+    /// `states[cache_of[r]]`. Rows are processed in order within every
+    /// layer, and a row's K/V are appended to its cache before the next
+    /// row attends — row order IS causal order: batched decode maps each
+    /// row to its own sequence, chunked prefill maps every row to the
+    /// same sequence (within-chunk causality). All per-row math runs
+    /// through the batched norm/router/projection/MLP kernels, which are
+    /// row-independent, so outputs and cache bits are identical to a
+    /// sequential [`Backend::decode_step`] loop. `logits` selects which
+    /// rows pay the unembed matmul (the prefill fast path). Each row
+    /// advances its cache's position by one.
+    fn step_rows(
+        &self,
+        toks: &[i32],
+        positions: &[f32],
+        states: &mut [&mut DecodeState],
+        cache_of: &[usize],
+        logits: LogitsRows,
+    ) -> Result<RowsOutput> {
+        let cfg = &self.cfg;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = toks.len();
+        ensure!(n > 0, "step_rows needs at least one row");
+        debug_assert_eq!(positions.len(), n);
+        debug_assert_eq!(cache_of.len(), n);
+        for &t in toks {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; incremental \
+             decode/prefill supports token-choice only"
+        );
+
+        let mut x = Vec::with_capacity(n * d);
+        for &t in toks {
+            let t = t as usize;
+            x.extend_from_slice(&self.weights.tok_embed[t * d..(t + 1) * d]);
+        }
+
+        let mut routed = vec![Vec::with_capacity(cfg.n_layers); n];
+        let mut g_attn = vec![Vec::with_capacity(cfg.n_layers); n];
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let mut mixed = vec![0.0f32; n * d];
+            match lw.kind {
+                LayerKind::Dense => {
+                    let (q, kk, vv) = kernels::qkv_rope(
+                        &u, &lw.wq, &lw.wk, &lw.wv, positions, n, d, heads, ROPE_THETA,
+                    );
+                    let ctx = attend_rows(&q, &kk, &vv, states, cache_of, li, d, heads, hd);
+                    mixed = kernels::matmul(&ctx, &lw.wo, n, d, d);
+                    for r in 0..n {
+                        routed[r].push(true);
+                        g_attn[r].push(1.0);
+                    }
+                }
+                LayerKind::Dtr => {
+                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, n, d, d / 2);
+                    let decide = |i: usize| {
+                        cfg.variant != Variant::DtrSkip && g[i * 2] > g[i * 2 + 1]
+                    };
+                    let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
+                    let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
+                    if !att_idx.is_empty() {
+                        let u_r = kernels::gather_rows(&u, &att_idx, d);
+                        let pos_r: Vec<f32> = att_idx.iter().map(|&i| positions[i]).collect();
+                        let (q, kk, vv) = kernels::qkv_rope(
+                            &u_r, &lw.wq, &lw.wk, &lw.wv, &pos_r, att_idx.len(), d, heads,
+                            ROPE_THETA,
+                        );
+                        let rows_cache: Vec<usize> =
+                            att_idx.iter().map(|&i| cache_of[i]).collect();
+                        let ctx =
+                            attend_rows(&q, &kk, &vv, states, &rows_cache, li, d, heads, hd);
+                        let attn = kernels::matmul(&ctx, &lw.wo, att_idx.len(), d, d);
+                        let g0: Vec<f32> = att_idx.iter().map(|&i| g[i * 2]).collect();
+                        kernels::scatter_rows_scaled(&mut mixed, &attn, &att_idx, &g0, d);
+                    }
+                    if !byp_idx.is_empty() {
+                        let u_b = kernels::gather_rows(&u, &byp_idx, d);
+                        let byp = kernels::bypass(&u_b, &lw.wv, &lw.wo, byp_idx.len(), d);
+                        let g1: Vec<f32> = byp_idx.iter().map(|&i| g[i * 2 + 1]).collect();
+                        kernels::scatter_rows_scaled(&mut mixed, &byp, &byp_idx, &g1, d);
+                    }
+                    for i in 0..n {
+                        routed[i].push(decide(i));
+                        g_attn[i].push(g[i * 2]);
+                    }
+                }
+                _ => bail!("unsupported layer kind in CPU backend"),
+            }
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
+            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff);
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+        }
+
+        let logits = match logits {
+            LogitsRows::None => Vec::new(),
+            LogitsRows::Last => {
+                let xn =
+                    kernels::rmsnorm(&x[(n - 1) * d..n * d], &self.weights.out_norm, RMSNORM_EPS);
+                kernels::matmul(&xn, &self.weights.unembed, 1, d, vocab)
+            }
+            LogitsRows::All => {
+                let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
+                kernels::matmul(&xn, &self.weights.unembed, n, d, vocab)
+            }
+        };
+        for &c in cache_of {
+            states[c].position += 1;
+        }
+        Ok(RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        })
     }
 
     /// Single-sequence forward: `tokens [n]` → (logits `[n*V]`,
@@ -458,6 +645,98 @@ impl Backend for CpuBackend {
             logits: Tensor::f32(vec![vocab], logits),
             routed,
             g_attn,
+        })
+    }
+
+    /// Vectorized multi-sequence decode: one token per sequence, sharing
+    /// the norm/router/MLP/unembed matmuls across the batch via
+    /// [`CpuBackend::step_rows`] (each row mapped to its own sequence's
+    /// cache). Attention stays per-sequence. Bit-identical to
+    /// per-sequence [`Backend::decode_step`].
+    fn decode_batch(
+        &self,
+        states: &mut [&mut DecodeState],
+        tokens: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            states.len() == tokens.len(),
+            "decode_batch: {} states vs {} tokens",
+            states.len(),
+            tokens.len()
+        );
+        let b = states.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let positions: Vec<f32> = states.iter().map(|s| s.position as f32).collect();
+        let cache_of: Vec<usize> = (0..b).collect();
+        let RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        } = self.step_rows(tokens, &positions, states, &cache_of, LogitsRows::All)?;
+        let vocab = self.cfg.vocab_size;
+        let mut outs = Vec::with_capacity(b);
+        for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
+            outs.push(StepOutput {
+                logits: Tensor::f32(vec![vocab], logits[i * vocab..(i + 1) * vocab].to_vec()),
+                routed: r,
+                g_attn: ga,
+            });
+        }
+        Ok(outs)
+    }
+
+    /// Chunked prefill over [`CpuBackend::step_rows`] with every row
+    /// mapped to the one sequence's cache (within-chunk causality comes
+    /// from row order); also skips the per-token unembed a sequential
+    /// loop pays, so prompt ingestion is markedly cheaper.
+    fn prefill_chunked(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<StepOutput> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        // Validate everything before touching the caller's cache (same
+        // no-partial-update guarantee as decode_step).
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; prefill supports token-choice only"
+        );
+        let chunk = chunk.max(1);
+        let n_chunks = tokens.len().div_ceil(chunk);
+        let mut last = None;
+        for (ci, ck) in tokens.chunks(chunk).enumerate() {
+            let positions: Vec<f32> =
+                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
+            let cache_of = vec![0usize; ck.len()];
+            let mut slab = [&mut *state];
+            // Intermediate chunks' logits are never read — skip their
+            // unembed; only the final chunk computes the last row's.
+            let mode = if ci + 1 == n_chunks {
+                LogitsRows::Last
+            } else {
+                LogitsRows::None
+            };
+            last = Some(self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?);
+        }
+        let RowsOutput {
+            logits,
+            mut routed,
+            mut g_attn,
+        } = last.unwrap();
+        Ok(StepOutput {
+            logits: Tensor::f32(vec![vocab], logits),
+            routed: routed.pop().unwrap(),
+            g_attn: g_attn.pop().unwrap(),
         })
     }
 }

@@ -1,0 +1,287 @@
+//! Cross-layer integration: the backend-generic continuous-batching
+//! serving engine (`coordinator::server`) on the native CPU backend.
+//!
+//! Pins the three subsystem contracts:
+//! * scheduling — admission/recycling under mixed-length workloads;
+//! * KV paging — the pool's per-(slot, layer) lens mirror the backend's
+//!   routing-aware decode caches at every step (pages are allocated for
+//!   exactly the routed tokens — the Fig. 6 mechanism);
+//! * determinism — same seed + workload → identical per-request token
+//!   streams, independent of prefill mode, batch packing, and timing.
+
+use std::time::Instant;
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::{
+    generate_workload, Batcher, FinishReason, PrefillMode, Request, Server, ServerConfig,
+    WorkloadSpec,
+};
+use dtrnet::runtime::{Backend, CpuBackend};
+
+fn backend(variant: Variant, seed: u64) -> CpuBackend {
+    CpuBackend::init(&ModelConfig::preset("xs", variant), seed).unwrap()
+}
+
+/// Small mixed-length workload sized for the xs preset (max_seq 64).
+fn spec(n: usize, temperature: f32) -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests: n,
+        arrival_rate: 2000.0,
+        prompt_len_mean: 6,
+        prompt_len_max: 16,
+        gen_len_mean: 8,
+        gen_len_max: 20,
+        temperature,
+        vocab: 256,
+    }
+}
+
+#[test]
+fn batcher_recycles_slots_under_mixed_lengths() {
+    let trace = generate_workload(
+        &WorkloadSpec {
+            n_requests: 24,
+            prompt_len_mean: 5,
+            prompt_len_max: 40,
+            gen_len_mean: 6,
+            gen_len_max: 30,
+            ..Default::default()
+        },
+        11,
+    );
+    let mut b = Batcher::new(3, 64);
+    for t in &trace {
+        assert!(b.submit(t.request.clone()));
+    }
+    let now = Instant::now();
+    let mut max_active = 0;
+    let mut guard = 0;
+    while !b.idle() {
+        b.admit();
+        max_active = max_active.max(b.n_active());
+        assert!(b.n_active() <= 3, "slot count exceeded");
+        for s in 0..3 {
+            if b.active[s].is_some() {
+                b.advance(s, 1, now);
+            }
+        }
+        guard += 1;
+        assert!(guard < 100_000, "batcher failed to drain");
+    }
+    assert_eq!(b.completed.len(), 24, "every request must complete");
+    assert_eq!(max_active, 3, "slots must saturate under backlog");
+    for c in &b.completed {
+        assert_eq!(c.generated.len(), c.req.max_new_tokens, "req {}", c.req.id);
+        assert_eq!(c.position, c.req.prompt.len() + c.req.max_new_tokens - 1);
+    }
+}
+
+#[test]
+fn kv_pool_mirrors_backend_caches_every_step() {
+    for prefill in [PrefillMode::Decode, PrefillMode::Chunked(5)] {
+        let be = backend(Variant::DtrBilayer, 9);
+        let cfg = ServerConfig {
+            slots: 3,
+            prefill,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        let trace = generate_workload(&spec(8, 0.0), 3);
+        for t in &trace {
+            let mut req = t.request.clone();
+            req.arrival = Instant::now();
+            assert!(srv.submit(req));
+        }
+        let mut guard = 0;
+        while !srv.batcher.idle() {
+            srv.step().unwrap();
+            // THE invariant: pool pages cover exactly the tokens the
+            // backend routed into each live slot's cache.
+            srv.check_kv_invariant()
+                .unwrap_or_else(|e| panic!("{prefill:?}: {e:#}"));
+            guard += 1;
+            assert!(guard < 100_000, "engine failed to drain");
+        }
+        assert_eq!(
+            srv.pool.stats().pages_allocated,
+            0,
+            "{prefill:?}: completion must recycle every page"
+        );
+    }
+}
+
+#[test]
+fn serve_end_to_end_reports_routing_aware_savings() {
+    // Two DTR layers (xs trilayer: TDDT), fine-grained 2-token pages, and
+    // sequences long enough that routed page counts drop below dense ones
+    // at the pool's peak with overwhelming margin.
+    let be = backend(Variant::DtrTrilayer, 4);
+    let cfg = ServerConfig {
+        kv_page_size: 2,
+        ..Default::default()
+    };
+    let mut srv = Server::new(&be, cfg).unwrap();
+    let trace = generate_workload(
+        &WorkloadSpec {
+            n_requests: 10,
+            arrival_rate: 2000.0,
+            prompt_len_mean: 8,
+            prompt_len_max: 16,
+            gen_len_mean: 20,
+            gen_len_max: 40,
+            temperature: 0.0,
+            vocab: 256,
+        },
+        7,
+    );
+    let rep = srv.run_workload(&trace, 1_000_000).unwrap();
+
+    assert_eq!(rep.completed, 10);
+    assert_eq!(rep.evicted, 0);
+    assert_eq!(rep.rejected, 0);
+    assert!(rep.tokens_generated > 0);
+    assert!(rep.tokens_per_s > 0.0);
+    assert!(rep.latency_ms_p99 >= rep.latency_ms_p50);
+    assert_eq!(rep.backend, "cpu");
+
+    // Routing telemetry: dense layers (TDDT layout: 0, 3) attend all
+    // tokens; the DTR layers bypass some, which is exactly what the
+    // paged pool converts into memory savings.
+    let layout = be.config().layout_string();
+    assert_eq!(layout, "TDDT");
+    for (l, kind) in layout.chars().enumerate() {
+        if kind == 'T' {
+            assert_eq!(rep.attn_fracs[l], 1.0, "dense layer {l}");
+        } else {
+            assert!(rep.attn_fracs[l] < 1.0, "DTR layer {l} routed everything");
+        }
+    }
+    assert!(
+        rep.pool.pages_peak < rep.dense_pages_peak,
+        "routed paging must beat dense: {} vs {}",
+        rep.pool.pages_peak,
+        rep.dense_pages_peak
+    );
+    assert!(rep.kv_savings_ratio < 1.0);
+    // report accounting is self-consistent
+    let toks: usize = rep.requests.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(toks, rep.tokens_generated);
+    assert!(rep.requests.iter().all(|r| r.finish == FinishReason::Completed));
+}
+
+#[test]
+fn serve_determinism_same_seed_identical_token_streams() {
+    // Temperature > 0 exercises the per-request RNG path: streams must be
+    // a function of (weights, prompt, params, seed) only.
+    let run = || {
+        let be = backend(Variant::DtrBilayer, 21);
+        let cfg = ServerConfig {
+            slots: 3,
+            seed: 99,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        let trace = generate_workload(&spec(8, 0.8), 5);
+        let mut rep = srv.run_workload(&trace, 1_000_000).unwrap();
+        rep.requests.sort_by_key(|r| r.id);
+        rep
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request {} stream diverged", x.id);
+        assert_eq!(x.finish, y.finish);
+    }
+    assert_eq!(a.tokens_generated, b.tokens_generated);
+    assert_eq!(a.pool.tokens_cached, b.pool.tokens_cached);
+}
+
+#[test]
+fn prefill_mode_does_not_change_token_streams() {
+    // Even with temperature sampling: the engine draws from the RNG once
+    // per generated token in both modes, and batched/chunked execution is
+    // bit-identical to sequential, so the streams agree exactly.
+    let be = backend(Variant::DtrBilayer, 13);
+    let run = |prefill| {
+        let cfg = ServerConfig {
+            slots: 2,
+            seed: 7,
+            prefill,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        let trace = generate_workload(&spec(6, 0.9), 17);
+        let mut rep = srv.run_workload(&trace, 1_000_000).unwrap();
+        rep.requests.sort_by_key(|r| r.id);
+        rep.requests
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(PrefillMode::Decode), run(PrefillMode::Chunked(4)));
+    assert_eq!(run(PrefillMode::Chunked(1)), run(PrefillMode::Chunked(64)));
+}
+
+#[test]
+fn queue_backpressure_is_reported_not_fatal() {
+    let be = backend(Variant::DtrBilayer, 2);
+    let cfg = ServerConfig {
+        slots: 1,
+        max_queue: 2,
+        ..Default::default()
+    };
+    let mut srv = Server::new(&be, cfg).unwrap();
+    // Effectively-simultaneous arrivals into a 1-slot engine with a
+    // 2-deep queue: the whole burst lands before the first step, so the
+    // queue must overflow regardless of how fast the engine drains.
+    let burst = WorkloadSpec {
+        arrival_rate: 1e9,
+        ..spec(12, 0.0)
+    };
+    let trace = generate_workload(&burst, 23);
+    let rep = srv.run_workload(&trace, 1_000_000).unwrap();
+    assert!(rep.rejected > 0, "tiny queue must shed load");
+    assert_eq!(rep.completed + rep.evicted + rep.rejected, 12);
+    assert_eq!(rep.requests.len(), rep.completed + rep.evicted);
+}
+
+#[test]
+fn decode_batch_validates_lengths() {
+    let be = backend(Variant::DtrBilayer, 0);
+    let mut s1 = be.begin_decode();
+    let mut s2 = be.begin_decode();
+    let mut refs = vec![&mut s1, &mut s2];
+    assert!(be.decode_batch(&mut refs, &[1]).is_err());
+    assert!(be.decode_batch(&mut refs, &[1, 999]).is_err());
+    let empty: &mut [&mut dtrnet::runtime::DecodeState] = &mut [];
+    assert_eq!(be.decode_batch(empty, &[]).unwrap().len(), 0);
+}
+
+#[test]
+fn single_request_matches_backend_generate() {
+    // The engine is a scheduler around the backend: a lone greedy request
+    // must reproduce Backend::generate's token stream exactly.
+    use dtrnet::coordinator::SamplingParams;
+    use dtrnet::util::rng::Rng;
+
+    let be = backend(Variant::DtrBilayer, 31);
+    let prompt: Vec<i32> = (0..9).map(|i| i * 23 % 256).collect();
+    let mut rng = Rng::new(0);
+    let direct = be
+        .generate(&prompt, 12, &SamplingParams::greedy(), &mut rng)
+        .unwrap();
+
+    let mut srv = Server::new(&be, ServerConfig::default()).unwrap();
+    assert!(srv.submit(Request {
+        id: 0,
+        prompt,
+        max_new_tokens: 12,
+        temperature: 0.0,
+        arrival: Instant::now(),
+    }));
+    let rep = srv.run_to_completion(100_000).unwrap();
+    assert_eq!(rep.requests.len(), 1);
+    assert_eq!(rep.requests[0].tokens, direct.tokens);
+}

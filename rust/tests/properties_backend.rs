@@ -11,7 +11,7 @@
 
 use dtrnet::config::{ModelConfig, Variant};
 use dtrnet::runtime::cpu::kernels;
-use dtrnet::runtime::{Backend, CpuBackend, RouterMode, Tensor};
+use dtrnet::runtime::{Backend, CpuBackend, DecodeState, RouterMode, Tensor};
 use dtrnet::testing::{assert_allclose, property, Gen};
 
 fn randn_vec(g: &mut Gen, n: usize, scale: f32) -> Vec<f32> {
@@ -188,6 +188,82 @@ fn prop_dense_layers_always_route_all() {
                 assert!(row.iter().all(|&r| r < 0.5), "dtr_skip layer {l} routed a token");
             }
         }
+    });
+}
+
+#[test]
+fn prop_decode_batch_bit_identical_to_decode_step() {
+    property("decode_batch == per-sequence decode_step (bitwise)", 6, |g| {
+        let variants = [Variant::Dense, Variant::DtrBilayer, Variant::DtrTrilayer];
+        let variant = variants[g.usize(0..variants.len())];
+        let cfg = ModelConfig::preset("xs", variant);
+        let backend = CpuBackend::init(&cfg, 2000 + g.case as u64).unwrap();
+        let b = g.usize(1..5);
+        let n_steps = g.usize(2..7);
+        // Stagger the sequences: different prompts AND different lengths,
+        // so batched decode mixes positions and cache depths.
+        let mut seq_states: Vec<DecodeState> = (0..b).map(|_| backend.begin_decode()).collect();
+        for st in seq_states.iter_mut() {
+            let plen = g.usize(1..6);
+            for _ in 0..plen {
+                let t = g.rng.below(256) as i32;
+                backend.decode_step(st, t).unwrap();
+            }
+        }
+        let mut bat_states = seq_states.clone();
+
+        for step in 0..n_steps {
+            let toks: Vec<i32> = (0..b).map(|i| ((step * 31 + i * 17) % 256) as i32).collect();
+            let seq_outs: Vec<_> = seq_states
+                .iter_mut()
+                .zip(&toks)
+                .map(|(s, &t)| backend.decode_step(s, t).unwrap())
+                .collect();
+            let mut refs: Vec<&mut DecodeState> = bat_states.iter_mut().collect();
+            let bat_outs = backend.decode_batch(&mut refs, &toks).unwrap();
+            assert_eq!(bat_outs.len(), b);
+            for i in 0..b {
+                assert_eq!(seq_outs[i].logits, bat_outs[i].logits, "seq {i} step {step}");
+                assert_eq!(seq_outs[i].routed, bat_outs[i].routed, "seq {i} step {step}");
+                assert_eq!(seq_outs[i].g_attn, bat_outs[i].g_attn, "seq {i} step {step}");
+            }
+        }
+        for (i, (a, c)) in seq_states.iter().zip(&bat_states).enumerate() {
+            assert_eq!(a.position, c.position, "seq {i} position");
+            assert_eq!(a.keys, c.keys, "seq {i} cached keys diverged");
+            assert_eq!(a.values, c.values, "seq {i} cached values diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_prefill_bit_identical_to_sequential() {
+    property("prefill_chunked(c) == sequential decode loop (bitwise)", 8, |g| {
+        let variants = [Variant::Dense, Variant::DtrBilayer, Variant::DtrSkip];
+        let variant = variants[g.usize(0..variants.len())];
+        let cfg = ModelConfig::preset("xs", variant);
+        let backend = CpuBackend::init(&cfg, 3000 + g.case as u64).unwrap();
+        let n = g.usize(2..20);
+        let tokens: Vec<i32> = (0..n).map(|_| g.rng.below(256) as i32).collect();
+        // chunk sizes spanning 1 (degenerate), mid, and > n (single chunk)
+        let chunk = g.usize(1..24);
+
+        let mut s_ref = backend.begin_decode();
+        let mut last = None;
+        for &t in &tokens {
+            last = Some(backend.decode_step(&mut s_ref, t).unwrap());
+        }
+        let last = last.unwrap();
+
+        let mut s_chk = backend.begin_decode();
+        let out = backend.prefill_chunked(&mut s_chk, &tokens, chunk).unwrap();
+
+        assert_eq!(last.logits, out.logits, "chunk={chunk} n={n}");
+        assert_eq!(last.routed, out.routed);
+        assert_eq!(last.g_attn, out.g_attn);
+        assert_eq!(s_ref.position, s_chk.position);
+        assert_eq!(s_ref.keys, s_chk.keys, "chunk={chunk}: cache keys diverged");
+        assert_eq!(s_ref.values, s_chk.values, "chunk={chunk}: cache values diverged");
     });
 }
 
