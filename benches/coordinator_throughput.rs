@@ -201,6 +201,11 @@ fn artifact_serving(engine: &dtrnet::runtime::Engine) -> Result<Json> {
 fn main() -> Result<()> {
     let quick = std::env::args().skip(1).any(|a| a == "--test");
     let mut results = Json::obj();
+    // Backends share the process-wide kernel pool (bit-identical at any
+    // thread count); `dtrnet bench` sweeps thread counts explicitly.
+    let threads = dtrnet::util::threadpool::global().threads();
+    println!("[coordinator_throughput] kernel threads: {threads}");
+    results.set("threads", Json::Num(threads as f64));
     results.set("host_micro", host_micro(quick));
     results.set("cpu_serving", cpu_serving(quick)?);
     #[cfg(feature = "pjrt")]

@@ -19,6 +19,11 @@ fn main() -> Result<()> {
     let mut results = Json::obj();
     let mut rows = Vec::new();
     let (b, s) = (2usize, 64usize);
+    // Backends share the process-wide kernel pool (bit-identical at any
+    // thread count; see DESIGN.md §Benchmarking).
+    let threads = dtrnet::util::threadpool::global().threads();
+    println!("[cpu_backend] kernel threads: {threads}");
+    results.set("threads", Json::Num(threads as f64));
 
     for (name, variant) in [
         ("dense", Variant::Dense),

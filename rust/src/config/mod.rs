@@ -20,6 +20,7 @@ pub enum LayerKind {
 }
 
 impl LayerKind {
+    /// One-letter layout code (T/D/M/L) used in layout strings.
     pub fn letter(self) -> char {
         match self {
             LayerKind::Dense => 'T',
@@ -33,17 +34,26 @@ impl LayerKind {
 /// Architecture variant (paper Tables 1/3/4/5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Variant {
+    /// All-dense baseline.
     Dense,
+    /// DTR every second layer (paper default).
     DtrBilayer,
+    /// DTR two of every three layers.
     DtrTrilayer,
+    /// Dense first half, DTR second half.
     DtrLaterhalf,
+    /// Six dense anchors (ends/middle), DTR elsewhere.
     Dtr6T,
+    /// Ablation: DTR layers forced to bypass every token.
     DtrSkip,
+    /// Mixture-of-Depths baseline.
     Mod,
+    /// D-LLM baseline.
     Dllm,
 }
 
 impl Variant {
+    /// Parse a variant name (the CLI `--variant` values).
     pub fn from_str(s: &str) -> Option<Variant> {
         Some(match s {
             "dense" => Variant::Dense,
@@ -58,6 +68,7 @@ impl Variant {
         })
     }
 
+    /// Canonical lowercase name.
     pub fn as_str(self) -> &'static str {
         match self {
             Variant::Dense => "dense",
@@ -71,6 +82,7 @@ impl Variant {
         }
     }
 
+    /// Whether this is one of the DTR variants.
     pub fn is_dtr(self) -> bool {
         matches!(
             self,
@@ -86,19 +98,29 @@ impl Variant {
 /// Model hyperparameters (mirror of python ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Preset name (or "custom" for manifest-derived configs).
     pub name: String,
+    /// Vocabulary size V.
     pub vocab_size: usize,
+    /// Residual stream width d.
     pub d_model: usize,
+    /// Layer count L.
     pub n_layers: usize,
+    /// Attention heads H.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Maximum sequence length / decode position cap.
     pub max_seq: usize,
+    /// Architecture variant (decides the layer layout).
     pub variant: Variant,
     /// Expected attention-routing fraction for DTR layers after training
     /// (paper: ~0.10). Used by the analytical FLOPs/memory models; measured
     /// values from artifacts override it where available.
     pub dtr_attn_frac: f64,
+    /// MoD expert-choice capacity (fraction of tokens kept).
     pub mod_capacity: f64,
+    /// D-LLM keep probability.
     pub dllm_omega: f64,
 }
 
@@ -108,12 +130,23 @@ impl ModelConfig {
     pub const PRESET_NAMES: [&'static str; 5] =
         ["xs", "tiny", "small", "smollm-360m", "smollm-1b3"];
 
+    /// Look up a preset by name; panics on unknown names.
     pub fn preset(name: &str, variant: Variant) -> ModelConfig {
         Self::try_preset(name, variant)
             .unwrap_or_else(|| panic!("unknown preset {name:?}"))
     }
 
     /// Fallible variant of [`Self::preset`] for user-facing inputs.
+    ///
+    /// ```
+    /// use dtrnet::config::{ModelConfig, Variant};
+    ///
+    /// let cfg = ModelConfig::try_preset("tiny", Variant::DtrBilayer).unwrap();
+    /// assert_eq!(cfg.n_layers, 6);
+    /// // First/last layers are forced dense; DTR alternates between.
+    /// assert_eq!(cfg.layout_string(), "TDTDTT");
+    /// assert!(ModelConfig::try_preset("nope", Variant::Dense).is_none());
+    /// ```
     pub fn try_preset(name: &str, variant: Variant) -> Option<ModelConfig> {
         let (vocab, d, l, h, ff, seq) = match name {
             "xs" => (256, 64, 4, 4, 176, 64),
@@ -140,6 +173,7 @@ impl ModelConfig {
         })
     }
 
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -208,6 +242,7 @@ impl ModelConfig {
         kinds
     }
 
+    /// Layer kinds as a string of one-letter codes, e.g. "TDTDTT".
     pub fn layout_string(&self) -> String {
         self.layer_kinds().iter().map(|k| k.letter()).collect()
     }
@@ -247,6 +282,7 @@ impl ModelConfig {
         n
     }
 
+    /// Rebuild a config from an artifact manifest's config object.
     pub fn from_manifest(cfg: &Json) -> ModelConfig {
         let variant = Variant::from_str(cfg.get("variant").and_then(|v| v.as_str()).unwrap())
             .expect("bad variant in manifest");
@@ -276,12 +312,19 @@ impl ModelConfig {
 /// Training-run settings (the L3 trainer owns the schedule).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Optimizer steps.
     pub steps: usize,
+    /// Sequences per step.
     pub batch: usize,
+    /// Tokens per sequence.
     pub seq: usize,
+    /// Peak learning rate (after warmup).
     pub peak_lr: f64,
+    /// Fraction of steps spent in linear warmup.
     pub warmup_ratio: f64,
+    /// Data/init RNG seed.
     pub seed: u64,
+    /// Emit a log row every this many steps.
     pub log_every: usize,
 }
 
@@ -316,10 +359,15 @@ impl TrainConfig {
 /// Serving-engine settings.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Decode slots (concurrent sequences).
     pub max_batch: usize,
+    /// KV budget in tokens per sequence.
     pub max_kv: usize,
+    /// KV page granularity in tokens.
     pub kv_page_size: usize,
+    /// Per-sequence position cap.
     pub max_seq_len: usize,
+    /// Request queue bound.
     pub queue_depth: usize,
 }
 

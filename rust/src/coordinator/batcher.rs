@@ -12,17 +12,24 @@ use std::time::Instant;
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-assigned request id (unique per run; seeds the sampler).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget (the request retires after this many tokens).
     pub max_new_tokens: usize,
+    /// Per-request sampling temperature (0 = greedy).
     pub temperature: f32,
+    /// Submission timestamp (latency/TTFT are measured from it).
     pub arrival: Instant,
 }
 
 /// Lifecycle state of an admitted request.
 #[derive(Debug)]
 pub struct RequestState {
+    /// The request being served.
     pub req: Request,
+    /// Decode slot this request occupies.
     pub slot: usize,
     /// Tokens generated so far (excludes prompt).
     pub generated: Vec<i32>,
@@ -30,15 +37,19 @@ pub struct RequestState {
     pub prompt_cursor: usize,
     /// Absolute position of the next token fed to the model.
     pub position: usize,
+    /// When the first generated token appeared (None until then).
     pub first_token_at: Option<Instant>,
+    /// When the request left the queue for its slot.
     pub admitted_at: Instant,
 }
 
 impl RequestState {
+    /// Still consuming prompt tokens (stepwise-prefill mode)?
     pub fn in_prefill(&self) -> bool {
         self.prompt_cursor < self.req.prompt.len()
     }
 
+    /// Has the generation budget been spent?
     pub fn done(&self) -> bool {
         self.generated.len() >= self.req.max_new_tokens
     }
@@ -57,12 +68,15 @@ impl RequestState {
 pub struct Batcher {
     n_slots: usize,
     queue: VecDeque<Request>,
+    /// One entry per decode slot (None = vacant).
     pub active: Vec<Option<RequestState>>,
+    /// Requests retired from their slots, in completion order.
     pub completed: Vec<RequestState>,
     max_queue: usize,
 }
 
 impl Batcher {
+    /// A batcher with `n_slots` decode slots and a `max_queue` bound.
     pub fn new(n_slots: usize, max_queue: usize) -> Batcher {
         Batcher {
             n_slots,
@@ -154,10 +168,12 @@ impl Batcher {
         false
     }
 
+    /// Occupied decode slots.
     pub fn n_active(&self) -> usize {
         self.active.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Requests waiting for a slot.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -168,6 +184,7 @@ impl Batcher {
         self.queue.drain(..).collect()
     }
 
+    /// No queued work and no active slots.
     pub fn idle(&self) -> bool {
         self.n_active() == 0 && self.queue.is_empty()
     }

@@ -19,11 +19,17 @@ use crate::model::memory::KV_ELEM_BYTES;
 /// Pool-wide statistics snapshot.
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
+    /// Pages currently held across all slots.
     pub pages_allocated: usize,
+    /// High-water mark of `pages_allocated`.
     pub pages_peak: usize,
+    /// Bytes currently held (pages x page bytes).
     pub bytes_allocated: usize,
+    /// High-water mark of `bytes_allocated`.
     pub bytes_peak: usize,
+    /// Tokens actually cached (routed tokens, summed over layers).
     pub tokens_cached: usize,
+    /// Tokens fed through the model (per-slot, not per-layer).
     pub tokens_seen: usize,
 }
 
@@ -47,6 +53,7 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// A pool for `n_slots` sequences with `page_size`-token pages and a `max_pages` budget.
     pub fn new(cfg: &ModelConfig, n_slots: usize, page_size: usize, max_pages: usize) -> KvPool {
         KvPool {
             page_size,
@@ -146,6 +153,7 @@ impl KvPool {
         self.stats.tokens_seen * n_layers * self.bytes_per_token_layer
     }
 
+    /// Current allocation counters and peaks.
     pub fn stats(&self) -> PoolStats {
         let mut s = self.stats.clone();
         s.bytes_allocated = self.allocated_bytes();

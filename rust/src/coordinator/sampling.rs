@@ -10,6 +10,7 @@ use crate::util::rng::Rng;
 /// Decode-time sampling configuration (per request).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SamplingParams {
+    /// Softmax temperature; 0 = greedy argmax.
     pub temperature: f32,
     /// 0 = disabled; otherwise keep only the k highest logits.
     pub top_k: usize,
@@ -31,10 +32,12 @@ impl Default for SamplingParams {
 }
 
 impl SamplingParams {
+    /// Greedy decoding (temperature 0).
     pub fn greedy() -> SamplingParams {
         SamplingParams::default()
     }
 
+    /// Pure temperature sampling at `t`.
     pub fn temperature(t: f32) -> SamplingParams {
         SamplingParams {
             temperature: t,

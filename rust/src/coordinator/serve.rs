@@ -24,21 +24,34 @@ use crate::util::stats as ustats;
 /// Serving run summary.
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Requests that ran to completion.
     pub completed: usize,
+    /// Total generated tokens.
     pub tokens_generated: usize,
+    /// Decode iterations executed.
     pub steps: usize,
+    /// Wall-clock seconds.
     pub wall_s: f64,
+    /// Generated tokens per second.
     pub tokens_per_s: f64,
+    /// Median decode step time.
     pub decode_step_ms_p50: f64,
+    /// 95th-percentile decode step time.
     pub decode_step_ms_p95: f64,
+    /// Median time to first token.
     pub ttft_ms_p50: f64,
+    /// Mean gap between consecutive tokens of a request.
     pub inter_token_ms_mean: f64,
+    /// KV pool counters.
     pub pool: PoolStats,
+    /// Per-layer routing counters.
     pub routing: RoutingStats,
+    /// Cached-token fraction vs a cache-everything model.
     pub kv_savings_ratio: f64,
 }
 
 impl ServeReport {
+    /// Serialize as JSON (the CLI's report output).
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("completed", Json::Num(self.completed as f64)),
@@ -65,7 +78,9 @@ pub struct ServeEngine {
     cache_k: xla::Literal,
     cache_v: xla::Literal,
     lens: Tensor, // host-authoritative [L, B] i32
+    /// Admission queue + slot table.
     pub batcher: Batcher,
+    /// Routing-aware paged KV accountant.
     pub pool: KvPool,
     rng: Rng,
     n_layers: usize,
@@ -122,6 +137,7 @@ impl ServeEngine {
         })
     }
 
+    /// Enqueue a request; false when the queue is full.
     pub fn submit(&mut self, req: Request) -> bool {
         self.batcher.submit(req)
     }

@@ -74,6 +74,7 @@ pub struct ServerConfig {
     pub max_kv_pages: usize,
     /// Per-sequence position cap; 0 = the backend's `max_seq`.
     pub max_seq: usize,
+    /// How prompts are ingested (see [`PrefillMode`]).
     pub prefill: PrefillMode,
     /// Engine-wide sampling defaults (top-k/top-p/repetition penalty);
     /// per-request temperature comes from each [`Request`].
@@ -112,6 +113,7 @@ pub enum FinishReason {
 }
 
 impl FinishReason {
+    /// Stable snake_case name (the report's `finish` field).
     pub fn as_str(self) -> &'static str {
         match self {
             FinishReason::Completed => "completed",
@@ -125,35 +127,52 @@ impl FinishReason {
 /// Per-request outcome (the engine's response object).
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
+    /// Request id (as submitted).
     pub id: u64,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
     /// Generated tokens (prompt not included).
     pub tokens: Vec<i32>,
     /// Time to first token; 0.0 if evicted before producing any.
     pub ttft_ms: f64,
+    /// End-to-end latency from submission to retirement.
     pub latency_ms: f64,
+    /// Why the request left its slot.
     pub finish: FinishReason,
 }
 
 /// Serving run summary.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Name of the backend that served the run.
     pub backend: String,
+    /// Requests that spent their full generation budget.
     pub completed: usize,
+    /// Requests finished early (KV budget, position cap, cancel).
     pub evicted: usize,
     /// Submissions refused by queue backpressure or validation.
     pub rejected: usize,
+    /// Generated tokens across all requests.
     pub tokens_generated: usize,
+    /// Prompt tokens across all requests.
     pub prompt_tokens: usize,
+    /// Batched decode iterations executed.
     pub steps: usize,
+    /// Wall-clock duration of the run in seconds.
     pub wall_s: f64,
     /// Generated tokens per wall-clock second.
     pub tokens_per_s: f64,
+    /// Median batched-decode step time.
     pub decode_step_ms_p50: f64,
+    /// 99th-percentile batched-decode step time.
     pub decode_step_ms_p99: f64,
+    /// Median time to first token.
     pub ttft_ms_p50: f64,
+    /// 99th-percentile time to first token.
     pub ttft_ms_p99: f64,
+    /// Median end-to-end request latency.
     pub latency_ms_p50: f64,
+    /// 99th-percentile end-to-end request latency.
     pub latency_ms_p99: f64,
     /// Mean fraction of slots doing useful work per step.
     pub batch_occupancy: f64,
@@ -165,13 +184,21 @@ pub struct ServeReport {
     /// tokens_cached / (tokens_seen × layers): the token-granular KV
     /// footprint ratio vs dense (page quantization visible via pages).
     pub kv_savings_ratio: f64,
+    /// Per-layer routing counters for the whole run.
     pub routing: RoutingStats,
     /// Per-layer fraction of tokens routed to attention (Fig. 5 y-axis).
     pub attn_fracs: Vec<f64>,
+    /// Per-request outcomes, in retirement order.
     pub requests: Vec<RequestRecord>,
+    /// Per-kernel wall-clock snapshot from
+    /// [`Backend::kernel_timings`], when the backend records one (the
+    /// CPU backend always does). Cumulative over the backend's lifetime,
+    /// not just this run.
+    pub kernel_timings: Option<Json>,
 }
 
 impl ServeReport {
+    /// Serialize the full report (the `serve --json` document).
     pub fn to_json(&self) -> Json {
         let reqs = self
             .requests
@@ -187,7 +214,7 @@ impl ServeReport {
                 ])
             })
             .collect();
-        Json::from_pairs(vec![
+        let mut out = Json::from_pairs(vec![
             ("backend", Json::Str(self.backend.clone())),
             ("completed", Json::Num(self.completed as f64)),
             ("evicted", Json::Num(self.evicted as f64)),
@@ -211,7 +238,11 @@ impl ServeReport {
             ("attn_fracs", Json::arr_f64(&self.attn_fracs)),
             ("routing", self.routing.to_json()),
             ("requests", Json::Arr(reqs)),
-        ])
+        ]);
+        if let Some(kt) = &self.kernel_timings {
+            out.set("kernel_timings", kt.clone());
+        }
+        out
     }
 }
 
@@ -219,6 +250,7 @@ impl ServeReport {
 pub struct Server<'b> {
     backend: &'b dyn Backend,
     cfg: ServerConfig,
+    /// Admission queue + slot table.
     pub batcher: Batcher,
     /// Routing-aware paged pool — the real allocation accountant.
     pub pool: KvPool,
@@ -239,6 +271,7 @@ pub struct Server<'b> {
 }
 
 impl<'b> Server<'b> {
+    /// An engine over `backend` with `cfg` (slots/paging/prefill/seed).
     pub fn new(backend: &'b dyn Backend, cfg: ServerConfig) -> Result<Server<'b>> {
         ensure!(cfg.slots > 0, "server needs at least one decode slot");
         ensure!(cfg.kv_page_size > 0, "kv page size must be positive");
@@ -284,10 +317,12 @@ impl<'b> Server<'b> {
         })
     }
 
+    /// The effective configuration (defaults resolved).
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
     }
 
+    /// Engine metrics (step/prefill histograms, queue gauges).
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
@@ -680,6 +715,7 @@ impl<'b> Server<'b> {
             routing: self.routing.clone(),
             attn_fracs: self.routing.fractions(),
             requests: self.records.clone(),
+            kernel_timings: self.backend.kernel_timings(),
         }
     }
 }

@@ -9,11 +9,14 @@ use crate::util::json::Json;
 /// Per-layer routing counters.
 #[derive(Debug, Clone)]
 pub struct RoutingStats {
+    /// Per-layer count of tokens that took the attention path.
     pub attended: Vec<u64>,
+    /// Per-layer count of tokens observed.
     pub total: Vec<u64>,
 }
 
 impl RoutingStats {
+    /// Zeroed statistics for `n_layers` layers.
     pub fn new(n_layers: usize) -> RoutingStats {
         RoutingStats {
             attended: vec![0; n_layers],
@@ -58,6 +61,7 @@ impl RoutingStats {
         layers.iter().map(|&l| self.fractions()[l]).sum::<f64>() / layers.len() as f64
     }
 
+    /// Accumulate another run's counts into this one.
     pub fn merge(&mut self, other: &RoutingStats) {
         for l in 0..self.attended.len() {
             self.attended[l] += other.attended[l];
@@ -65,6 +69,7 @@ impl RoutingStats {
         }
     }
 
+    /// Per-layer `{attended, total, fraction}` rows.
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("fractions", Json::arr_f64(&self.fractions())),

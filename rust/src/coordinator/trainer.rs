@@ -21,19 +21,28 @@ use crate::util::rng::Rng;
 /// Outcome of a training run.
 #[derive(Debug)]
 pub struct TrainReport {
+    /// Artifact tag that was trained.
     pub tag: String,
+    /// Optimizer steps executed.
     pub steps: usize,
+    /// Total loss per logged step.
     pub losses: Vec<f64>,
+    /// Cross-entropy component per logged step.
     pub ce_losses: Vec<f64>,
+    /// Router load-balance penalty per logged step.
     pub penalties: Vec<f64>,
+    /// Final total loss.
     pub final_loss: f64,
     /// Mean attention fraction per layer over the last 10% of steps.
     pub attn_frac: Vec<f64>,
+    /// Wall-clock seconds.
     pub wall_s: f64,
+    /// Training throughput.
     pub tokens_per_s: f64,
 }
 
 impl TrainReport {
+    /// Serialize as JSON (one EXPERIMENTS.md row).
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("tag", Json::Str(self.tag.clone())),
@@ -54,7 +63,9 @@ pub struct Trainer {
     /// params ++ m ++ v, in manifest flat order, resident as literals.
     state: Vec<xla::Literal>,
     nparams: usize,
+    /// Sequences per step (from the artifact shape).
     pub batch: usize,
+    /// Tokens per sequence (from the artifact shape).
     pub seq: usize,
     n_layers: usize,
 }

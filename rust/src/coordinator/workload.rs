@@ -14,14 +14,21 @@ use crate::util::rng::Rng;
 /// Workload description.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Number of requests in the trace.
     pub n_requests: usize,
     /// Mean requests/second of the Poisson arrival process.
     pub arrival_rate: f64,
+    /// Mean prompt length (geometric-ish; see `generate`).
     pub prompt_len_mean: usize,
+    /// Hard cap on prompt length.
     pub prompt_len_max: usize,
+    /// Mean generation budget.
     pub gen_len_mean: usize,
+    /// Hard cap on generation budget.
     pub gen_len_max: usize,
+    /// Sampling temperature stamped on every request.
     pub temperature: f32,
+    /// Vocabulary size prompts are drawn from.
     pub vocab: usize,
 }
 
@@ -60,7 +67,9 @@ impl WorkloadSpec {
 /// A request with its (relative) arrival offset in seconds.
 #[derive(Debug, Clone)]
 pub struct TimedRequest {
+    /// Arrival offset from the trace start, in seconds.
     pub offset_s: f64,
+    /// The request to submit at that offset.
     pub request: Request,
 }
 

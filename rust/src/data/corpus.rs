@@ -103,12 +103,16 @@ pub fn markov_corpus(rng: &mut Rng, vocab: usize, len: usize, n_states: usize) -
 /// Simple corpus statistics (entropy estimate, symbol coverage).
 #[derive(Debug, Clone)]
 pub struct CorpusStats {
+    /// Token count.
     pub len: usize,
+    /// Distinct token values observed.
     pub distinct: usize,
+    /// Empirical unigram entropy in bits per token.
     pub unigram_entropy_bits: f64,
 }
 
 impl CorpusStats {
+    /// Summary statistics of a token stream.
     pub fn of(tokens: &[u32], vocab: usize) -> CorpusStats {
         let mut counts = vec![0usize; vocab];
         for &t in tokens {

@@ -18,8 +18,11 @@ use crate::util::rng::Rng;
 /// (start, end) over which perplexity should be measured.
 #[derive(Debug, Clone)]
 pub struct LongCtxItem {
+    /// Full prompt: haystack with the needle embedded.
     pub tokens: Vec<u32>,
+    /// Needle span start (token index).
     pub answer_start: usize,
+    /// Needle span end (exclusive).
     pub answer_end: usize,
 }
 

@@ -19,11 +19,14 @@ pub use stream::BatchStream;
 /// A tokenized dataset split into fixed-length training windows.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// The flat token stream batches are cut from.
     pub tokens: Vec<u32>,
+    /// Sequence length of every batch row.
     pub seq: usize,
 }
 
 impl Dataset {
+    /// Wrap a token stream for `seq`-length batching.
     pub fn new(tokens: Vec<u32>, seq: usize) -> Dataset {
         assert!(tokens.len() > seq, "corpus shorter than one window");
         Dataset { tokens, seq }

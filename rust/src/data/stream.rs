@@ -17,7 +17,9 @@ use crate::util::rng::Rng;
 /// A produced training batch: `[batch, seq]` row-major token ids.
 #[derive(Debug)]
 pub struct StreamBatch {
+    /// Position of this batch within the epoch.
     pub index: usize,
+    /// Row-major `[batch, seq]` token ids.
     pub tokens: Vec<i32>,
 }
 

@@ -56,9 +56,13 @@ pub fn cross_entropy(
 /// Result of a forward-eval pass.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
+    /// Mean next-token cross-entropy in nats.
     pub ce_nats: f64,
+    /// Perplexity, `exp(ce_nats)`.
     pub ppl: f64,
+    /// Per-layer routing statistics accumulated over the eval.
     pub routing: RoutingStats,
+    /// Number of scored (next-token) positions.
     pub n_tokens: usize,
 }
 

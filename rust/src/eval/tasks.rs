@@ -26,8 +26,11 @@ use crate::util::rng::Rng;
 /// padded to the artifact's sequence length.
 #[derive(Debug, Clone)]
 pub struct McItem {
+    /// Candidate completions as full token sequences.
     pub options: Vec<Vec<u32>>, // full token sequences per option
+    /// Index where the options start diverging (shared prefix length).
     pub answer_start: usize,    // option span start (shared)
+    /// Index of the correct option.
     pub correct: usize,
 }
 

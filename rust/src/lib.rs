@@ -35,10 +35,18 @@
 //!   artifact-bound serving loop (`pjrt`).
 //! - [`eval`] — perplexity / routing-stats / cosine-probe harnesses;
 //!   [`eval::perplexity_backend`] runs against any [`runtime::Backend`].
-//! - [`metrics`] — counters, histograms, JSONL emission.
+//! - [`metrics`] — counters, histograms, per-kernel timers, JSONL
+//!   emission.
+//! - [`perf`] — the reproducible perf harness behind `dtrnet bench`:
+//!   fixed-seed scenarios swept across thread counts into
+//!   `BENCH_*.json` (DESIGN.md §Benchmarking).
 //! - [`testing`] — in-repo property-testing harness (proptest is
 //!   unavailable offline; see DESIGN.md §Substitutions).
 
+// Every public item carries documentation — enforced as a warning here
+// and promoted to an error by the CI `docs` job
+// (RUSTDOCFLAGS="-D warnings" cargo doc --no-deps).
+#![warn(missing_docs)]
 // Style accommodations for the offline CI clippy gate: these lints are
 // stylistic and pervasive in index-heavy numerical code; correctness
 // lints stay enabled.
@@ -59,11 +67,13 @@ pub mod data;
 pub mod eval;
 pub mod metrics;
 pub mod model;
+pub mod perf;
 pub mod runtime;
 pub mod testing;
 pub mod tokenizer;
 pub mod util;
 
+/// Crate version (from Cargo.toml).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -9,8 +9,18 @@
 //!                                    CPU backend: synthetic workload,
 //!                                    throughput/latency/KV-page report
 //!                                    (see DESIGN.md §Serving for flags)
+//!   bench   [--test] [--out BENCH_pr3.json] — reproducible perf harness:
+//!                                    fixed-seed forward/decode/serve
+//!                                    scenarios swept across thread
+//!                                    counts (DESIGN.md §Benchmarking)
 //!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
 //!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
+//!
+//! Global flags:
+//!   --threads N — kernel-thread count for the CPU backend (default:
+//!                 available parallelism; 1 = the single-threaded
+//!                 determinism baseline — outputs are bit-identical
+//!                 either way, only throughput changes)
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer --steps 200 [--corpus markov|text]
@@ -41,6 +51,12 @@ use dtrnet::runtime::Engine;
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // Pin the process-wide kernel pool before any backend is built.
+    // Thread count is a throughput knob only: outputs are bit-identical
+    // for every value (--threads 1 is the serial determinism baseline).
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        dtrnet::util::threadpool::set_global_threads(n);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
         "info" => info(),
@@ -48,10 +64,33 @@ fn main() -> Result<()> {
         "train" => train(&args),
         "eval" => eval(&args),
         "serve" => serve(&args),
+        "bench" => bench_cmd(&args),
         "flops" => flops_cmd(&args),
         "kvmem" => kvmem_cmd(&args),
-        other => bail!("unknown command {other:?} (try info/demo/train/eval/serve/flops/kvmem)"),
+        other => {
+            bail!("unknown command {other:?} (try info/demo/train/eval/serve/bench/flops/kvmem)")
+        }
     }
+}
+
+/// Reproducible perf harness: run the fixed-seed scenario suite across a
+/// thread sweep and write the machine-readable bench document.
+fn bench_cmd(args: &Args) -> Result<()> {
+    let quick = args.has("test") || args.has("quick");
+    let mut opts = dtrnet::perf::BenchOptions::new(quick);
+    if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        opts.threads = if n <= 1 { vec![1] } else { vec![1, n] };
+    }
+    println!(
+        "[bench] {} mode, thread sweep {:?} (hw {})",
+        if quick { "smoke" } else { "full" },
+        opts.threads,
+        dtrnet::util::threadpool::available_threads()
+    );
+    let doc = dtrnet::perf::run(&opts)?;
+    let out = args.get_or("out", "BENCH_pr3.json");
+    dtrnet::perf::write(std::path::Path::new(out), &doc)?;
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -273,7 +312,7 @@ fn serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "backend={} model={} variant={} layout={} slots={} page={} prefill={:?}",
+        "backend={} model={} variant={} layout={} slots={} page={} prefill={:?} threads={}",
         backend.name(),
         cfg.name,
         variant.as_str(),
@@ -281,6 +320,7 @@ fn serve(args: &Args) -> Result<()> {
         scfg.slots,
         scfg.kv_page_size,
         scfg.prefill,
+        backend.threads(),
     );
     let mut srv = Server::new(&backend, scfg)?;
     let report = srv.run_workload(&trace, args.get_usize("max-steps", 1_000_000))?;
@@ -323,6 +363,23 @@ fn serve(args: &Args) -> Result<()> {
         fracs.join(" "),
         cfg.dtr_attn_frac,
     );
+    if let Some(kt) = &report.kernel_timings {
+        let ms = |k: &str| {
+            kt.path(&format!("{k}.total_ms"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        println!(
+            "kernel ms: attention {:.1} | mlp {:.1} | bypass {:.1} | router {:.1} | \
+             norm {:.1} | unembed {:.1}",
+            ms("attention"),
+            ms("mlp"),
+            ms("bypass"),
+            ms("router"),
+            ms("norm"),
+            ms("unembed"),
+        );
+    }
     if args.has("json") {
         println!("{}", report.to_json().to_string_pretty());
     }

@@ -1,13 +1,17 @@
-//! Metrics: counters, gauges, histograms + JSONL emission.
+//! Metrics: counters, gauges, histograms, lightweight timers + JSONL
+//! emission.
 //!
 //! The coordinator reports through a `Registry`; training/serving loops log
 //! JSONL rows (one object per line) that EXPERIMENTS.md tables and the
-//! bench harnesses consume.
+//! bench harnesses consume. [`KernelTimers`] is the per-kernel wall-clock
+//! accountant the CPU backend feeds and the `bench` harness reads into
+//! `BENCH_*.json` (see DESIGN.md §Benchmarking).
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -17,14 +21,17 @@ use crate::util::stats;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Increment by one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Increment by `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -36,12 +43,119 @@ impl Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// Store a new value.
     pub fn set(&self, v: f64) {
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
+    /// Most recently stored value (0.0 initially).
     pub fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lightweight section timer: total wall-clock + call count, stored in
+/// atomics so `&self` hot paths (the CPU backend's kernel sections) can
+/// record from any thread with two `Instant` reads and two relaxed adds
+/// per section — cheap enough to stay on permanently.
+#[derive(Debug, Default)]
+pub struct Timer {
+    ns: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl Timer {
+    /// Time one invocation of `f`, folding its duration into the total.
+    #[inline]
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        r
+    }
+
+    /// Accumulated wall-clock seconds.
+    pub fn total_s(&self) -> f64 {
+        self.ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Number of timed invocations.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Zero the accumulators (between bench scenarios).
+    pub fn reset(&self) {
+        self.ns.store(0, Ordering::Relaxed);
+        self.calls.store(0, Ordering::Relaxed);
+    }
+
+    /// `{calls, total_ms, mean_us}` snapshot.
+    pub fn to_json(&self) -> Json {
+        let calls = self.calls();
+        let s = self.total_s();
+        Json::from_pairs(vec![
+            ("calls", Json::Num(calls as f64)),
+            ("total_ms", Json::Num(s * 1e3)),
+            (
+                "mean_us",
+                Json::Num(if calls > 0 { s * 1e6 / calls as f64 } else { 0.0 }),
+            ),
+        ])
+    }
+}
+
+/// Per-kernel wall-clock accounting for one execution backend: one
+/// [`Timer`] per hot section of the transformer block. The CPU backend
+/// owns one and wraps each kernel family; `Backend::kernel_timings`
+/// exposes the snapshot to the serve report and the bench harness.
+#[derive(Debug, Default)]
+pub struct KernelTimers {
+    /// RMSNorm (pre-attention, pre-MLP).
+    pub norm: Timer,
+    /// DTR router scores (Eq. 1).
+    pub router: Timer,
+    /// Q/K/V projection + RoPE + (routed/decode) attention + Wo.
+    pub attention: Timer,
+    /// Linear bypass `x Wv Wo` for non-routed tokens (Eq. 5).
+    pub bypass: Timer,
+    /// SwiGLU MLP.
+    pub mlp: Timer,
+    /// Final norm + `[·, V]` unembed matmul.
+    pub unembed: Timer,
+}
+
+impl KernelTimers {
+    /// Per-section `{calls, total_ms, mean_us}` plus the summed total.
+    pub fn snapshot(&self) -> Json {
+        let mut obj = Json::obj();
+        let mut total_ms = 0.0;
+        for (name, t) in self.sections() {
+            total_ms += t.total_s() * 1e3;
+            obj.set(name, t.to_json());
+        }
+        obj.set("total_ms", Json::Num(total_ms));
+        obj
+    }
+
+    /// Zero every section (between bench scenarios).
+    pub fn reset(&self) {
+        for (_, t) in self.sections() {
+            t.reset();
+        }
+    }
+
+    fn sections(&self) -> [(&'static str, &Timer); 6] {
+        [
+            ("norm", &self.norm),
+            ("router", &self.router),
+            ("attention", &self.attention),
+            ("bypass", &self.bypass),
+            ("mlp", &self.mlp),
+            ("unembed", &self.unembed),
+        ]
     }
 }
 
@@ -52,6 +166,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Record one sample.
     pub fn record(&self, v: f64) {
         let mut s = self.samples.lock().unwrap();
         // Reservoir-free bound: cap memory, keep most recent window.
@@ -61,6 +176,7 @@ impl Histogram {
         s.push(v);
     }
 
+    /// Count/mean/percentile summary of the recorded samples.
     pub fn summary(&self) -> HistSummary {
         let s = self.samples.lock().unwrap();
         HistSummary {
@@ -74,15 +190,22 @@ impl Histogram {
 }
 
 #[derive(Debug, Clone, Default)]
+/// Summary statistics of a [`Histogram`].
 pub struct HistSummary {
+    /// Samples recorded.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl HistSummary {
+    /// Serialize as a flat JSON object.
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("count", Json::Num(self.count as f64)),
@@ -103,6 +226,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// The counter registered under `name` (created on first use).
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
             .lock()
@@ -112,6 +236,7 @@ impl Registry {
             .clone()
     }
 
+    /// The gauge registered under `name` (created on first use).
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
         self.gauges
             .lock()
@@ -121,6 +246,7 @@ impl Registry {
             .clone()
     }
 
+    /// The histogram registered under `name` (created on first use).
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
         self.histograms
             .lock()
@@ -130,6 +256,7 @@ impl Registry {
             .clone()
     }
 
+    /// Every registered metric as one JSON object (histograms summarized).
     pub fn snapshot(&self) -> Json {
         let mut obj = Json::obj();
         for (k, c) in self.counters.lock().unwrap().iter() {
@@ -151,6 +278,7 @@ pub struct JsonlWriter {
 }
 
 impl JsonlWriter {
+    /// Create/truncate the log file at `path` (parent dirs created).
     pub fn create(path: &std::path::Path) -> std::io::Result<JsonlWriter> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -160,6 +288,7 @@ impl JsonlWriter {
         })
     }
 
+    /// Append one JSON object as a line.
     pub fn write(&self, row: &Json) {
         let mut f = self.file.lock().unwrap();
         let _ = writeln!(f, "{}", row.to_string());
@@ -197,6 +326,25 @@ mod tests {
         g.set(3.0);
         assert_eq!(g.get(), 3.0);
         assert_eq!(reg.snapshot().path("queue_depth").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn timers_accumulate_and_reset() {
+        let kt = KernelTimers::default();
+        let x = kt.norm.time(|| 21 * 2);
+        assert_eq!(x, 42);
+        kt.mlp.time(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(kt.norm.calls(), 1);
+        assert!(kt.mlp.total_s() >= 1e-3);
+        let snap = kt.snapshot();
+        assert!(snap.path("total_ms").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(
+            snap.path("norm").unwrap().path("calls").unwrap().as_f64(),
+            Some(1.0)
+        );
+        kt.reset();
+        assert_eq!(kt.norm.calls(), 0);
+        assert_eq!(kt.mlp.total_s(), 0.0);
     }
 
     #[test]

@@ -12,14 +12,20 @@ use crate::config::{LayerKind, ModelConfig, Variant};
 /// Per-layer FLOPs decomposition (per token, forward).
 #[derive(Debug, Clone, Default)]
 pub struct FlopsBreakdown {
+    /// Router MLP cost (DTR layers only).
     pub router: f64,
+    /// Q/K/V/O projection cost for routed tokens.
     pub qkvo_proj: f64,
+    /// Attention score + weighted-sum cost (the quadratic term).
     pub attn_mix: f64,
+    /// Linear-bypass cost for non-routed tokens.
     pub bypass: f64,
+    /// SwiGLU MLP cost (every token, both paths).
     pub mlp: f64,
 }
 
 impl FlopsBreakdown {
+    /// Sum of all components.
     pub fn total(&self) -> f64 {
         self.router + self.qkvo_proj + self.attn_mix + self.bypass + self.mlp
     }

@@ -23,6 +23,7 @@ pub struct KvMemoryModel {
 }
 
 impl KvMemoryModel {
+    /// Allocated bytes as a fraction of the dense-equivalent footprint.
     pub fn ratio(&self) -> f64 {
         self.allocated_bytes / self.dense_bytes
     }

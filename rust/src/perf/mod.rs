@@ -1,0 +1,347 @@
+//! Reproducible performance harness — the `dtrnet bench` subcommand.
+//!
+//! Runs a fixed set of fixed-seed scenarios (training-shape forward,
+//! autoregressive decode, the continuous-batching serving engine) across
+//! a sweep of kernel-thread counts, and emits one machine-readable JSON
+//! document (`BENCH_pr3.json` at the repo root by convention — the
+//! recorded perf trajectory every future PR diffs against). See
+//! DESIGN.md §Benchmarking for the schema and methodology.
+//!
+//! Two properties make the numbers comparable across PRs:
+//!
+//! * **Fixed seeds everywhere** — model init, workload trace, and
+//!   sampling RNGs are pinned, so two runs execute the same token
+//!   streams and the same routing decisions; only the wall-clock moves.
+//! * **Thread-count sweeps with a bitwise check** — every scenario runs
+//!   at `--threads 1` (the determinism baseline) and at the host's
+//!   parallelism, and the harness *verifies* that logits / generated
+//!   token streams are bitwise identical across the sweep before
+//!   reporting speedups. A bench run that breaks bit-identity fails
+//!   loudly instead of recording tainted numbers.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{ModelConfig, Variant};
+use crate::coordinator::{
+    generate_workload, PrefillMode, Server, ServerConfig, WorkloadSpec,
+};
+use crate::runtime::{Backend, CpuBackend, Tensor};
+use crate::util::bench::bench;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool::available_threads;
+use crate::coordinator::SamplingParams;
+
+/// Schema tag stamped into every bench document.
+pub const SCHEMA: &str = "dtrnet-bench-v1";
+
+/// Fixed seed for model init in every scenario.
+pub const MODEL_SEED: u64 = 0;
+/// Fixed seed for the serving workload trace.
+pub const WORKLOAD_SEED: u64 = 2;
+
+/// Harness configuration (CLI flags map onto this).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Seconds-scale smoke configuration (`bench --test`, the CI mode):
+    /// xs preset, fewer iterations/requests. Full mode uses tiny.
+    pub quick: bool,
+    /// Thread counts to sweep, ascending; must start at 1 (the
+    /// determinism baseline every other count is diffed against).
+    pub threads: Vec<usize>,
+}
+
+impl BenchOptions {
+    /// Default sweep: `[1, available_parallelism]`.
+    pub fn new(quick: bool) -> BenchOptions {
+        let hw = available_threads();
+        let mut threads = vec![1];
+        if hw > 1 {
+            threads.push(hw);
+        }
+        BenchOptions { quick, threads }
+    }
+}
+
+/// Run every scenario and assemble the bench document.
+pub fn run(opts: &BenchOptions) -> Result<Json> {
+    ensure!(
+        opts.threads.first() == Some(&1),
+        "bench sweep must start at --threads 1 (the determinism baseline)"
+    );
+    let mut scenarios = Json::obj();
+    for variant in [Variant::Dense, Variant::DtrBilayer] {
+        let (fwd_key, fwd) = forward_scenario(opts, variant)?;
+        scenarios.set(&fwd_key, fwd);
+        let (dec_key, dec) = decode_scenario(opts, variant)?;
+        scenarios.set(&dec_key, dec);
+        for &slots in serve_slot_fills(opts.quick) {
+            let (key, s) = serve_scenario(opts, variant, slots)?;
+            scenarios.set(&key, s);
+        }
+    }
+    let mut out = Json::obj();
+    out.set("schema", Json::Str(SCHEMA.to_string()));
+    out.set("quick", Json::Bool(opts.quick));
+    out.set(
+        "host",
+        Json::from_pairs(vec![
+            ("hw_threads", Json::Num(available_threads() as f64)),
+            (
+                "threads_measured",
+                Json::arr_f64(&opts.threads.iter().map(|&t| t as f64).collect::<Vec<_>>()),
+            ),
+        ]),
+    );
+    out.set(
+        "seeds",
+        Json::from_pairs(vec![
+            ("model", Json::Num(MODEL_SEED as f64)),
+            ("workload", Json::Num(WORKLOAD_SEED as f64)),
+        ]),
+    );
+    out.set("scenarios", scenarios);
+    Ok(out)
+}
+
+/// Write the document as pretty JSON (the committed `BENCH_*.json` form).
+pub fn write(path: &Path, payload: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, payload.to_string_pretty() + "\n")?;
+    println!("[bench] wrote {}", path.display());
+    Ok(())
+}
+
+fn preset(quick: bool) -> &'static str {
+    if quick {
+        "xs"
+    } else {
+        "tiny"
+    }
+}
+
+fn serve_slot_fills(quick: bool) -> &'static [usize] {
+    if quick {
+        &[2]
+    } else {
+        &[4, 8]
+    }
+}
+
+fn backend_with_threads(variant: Variant, quick: bool, t: usize) -> Result<CpuBackend> {
+    let cfg = ModelConfig::preset(preset(quick), variant);
+    let mut be = CpuBackend::init(&cfg, MODEL_SEED)?;
+    be.set_threads(t);
+    Ok(be)
+}
+
+/// Training-shape forward throughput (tokens/s) per thread count, with a
+/// bitwise logits check against the `--threads 1` baseline.
+fn forward_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let (b, s) = if opts.quick { (2usize, 32usize) } else { (2, 64) };
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (2, 10) };
+    let key = format!("forward_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let mut baseline: Option<Vec<f32>> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be = backend_with_threads(variant, opts.quick, t)?;
+        let tokens = Tensor::i32(
+            vec![b, s],
+            (0..(b * s) as i32).map(|i| i * 7 % 256).collect(),
+        );
+        let logits = be.forward(&tokens)?.logits;
+        match &baseline {
+            None => baseline = Some(logits.as_f32().to_vec()),
+            Some(want) => ensure!(
+                want.as_slice() == logits.as_f32(),
+                "{key}: logits bits diverged between threads=1 and threads={t}"
+            ),
+        }
+        let m = bench(&format!("{key}_t{t}"), warmup, iters, || {
+            be.forward(&tokens).unwrap();
+        });
+        let tps = (b * s) as f64 / m.mean_s;
+        tok_s.push(tps);
+        sc.set(
+            &format!("t{t}"),
+            Json::from_pairs(vec![
+                ("tokens_per_s", Json::Num(tps)),
+                ("mean_ms", Json::Num(m.mean_s * 1e3)),
+                ("p50_ms", Json::Num(m.p50_s * 1e3)),
+                ("p95_ms", Json::Num(m.p95_s * 1e3)),
+            ]),
+        );
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// Autoregressive decode (prefill + greedy generation) steps/s per
+/// thread count, with a bitwise token-stream check.
+fn decode_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let gen = if opts.quick { 8usize } else { 32 };
+    let (warmup, iters) = if opts.quick { (1, 2) } else { (1, 5) };
+    let key = format!("decode_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let mut baseline: Option<Vec<i32>> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be = backend_with_threads(variant, opts.quick, t)?;
+        let mut prompt_rng = Rng::new(MODEL_SEED.wrapping_add(1));
+        let prompt: Vec<i32> = (0..16).map(|_| prompt_rng.below(256) as i32).collect();
+        let mut rng = Rng::new(2);
+        let out = be.generate(&prompt, gen, &SamplingParams::greedy(), &mut rng)?;
+        match &baseline {
+            None => baseline = Some(out.tokens.clone()),
+            Some(want) => ensure!(
+                *want == out.tokens,
+                "{key}: token stream diverged between threads=1 and threads={t}"
+            ),
+        }
+        let m = bench(&format!("{key}_t{t}"), warmup, iters, || {
+            let mut r = Rng::new(2);
+            be.generate(&prompt, gen, &SamplingParams::greedy(), &mut r)
+                .unwrap();
+        });
+        let sps = gen as f64 / m.mean_s;
+        tok_s.push(sps);
+        sc.set(
+            &format!("t{t}"),
+            Json::from_pairs(vec![
+                ("steps_per_s", Json::Num(sps)),
+                ("mean_ms", Json::Num(m.mean_s * 1e3)),
+            ]),
+        );
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// The serving engine end-to-end at a given batch width: tokens/s,
+/// latency/TTFT percentiles, occupancy, per-kernel timings — plus the
+/// bitwise token-stream check across the thread sweep.
+fn serve_scenario(opts: &BenchOptions, variant: Variant, slots: usize) -> Result<(String, Json)> {
+    let n_req = if opts.quick { 4usize } else { 16 };
+    let key = format!("serve_{}_s{slots}", variant.as_str());
+    let mut sc = Json::obj();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be = backend_with_threads(variant, opts.quick, t)?;
+        let cfg = be.config().clone();
+        let spec = WorkloadSpec {
+            n_requests: n_req,
+            arrival_rate: 10_000.0,
+            prompt_len_mean: 12,
+            prompt_len_max: 32,
+            gen_len_mean: if opts.quick { 8 } else { 24 },
+            gen_len_max: if opts.quick { 16 } else { 48 },
+            temperature: 0.0,
+            vocab: cfg.vocab_size,
+        };
+        let trace = generate_workload(&spec, WORKLOAD_SEED);
+        let scfg = ServerConfig {
+            slots,
+            prefill: PrefillMode::Chunked(32),
+            ..Default::default()
+        };
+        be.timers().reset();
+        let mut srv = Server::new(&be, scfg)?;
+        let rep = srv.run_workload(&trace, 10_000_000)?;
+        ensure!(
+            rep.completed + rep.evicted == n_req,
+            "{key}: requests lost at threads={t}"
+        );
+        let mut streams: Vec<(u64, Vec<i32>)> = rep
+            .requests
+            .iter()
+            .map(|r| (r.id, r.tokens.clone()))
+            .collect();
+        streams.sort_by_key(|(id, _)| *id);
+        let streams: Vec<Vec<i32>> = streams.into_iter().map(|(_, s)| s).collect();
+        match &baseline {
+            None => baseline = Some(streams),
+            Some(want) => ensure!(
+                *want == streams,
+                "{key}: token streams diverged between threads=1 and threads={t}"
+            ),
+        }
+        tok_s.push(rep.tokens_per_s);
+        let mut row = Json::from_pairs(vec![
+            ("tokens_per_s", Json::Num(rep.tokens_per_s)),
+            ("latency_ms_p50", Json::Num(rep.latency_ms_p50)),
+            ("latency_ms_p99", Json::Num(rep.latency_ms_p99)),
+            ("ttft_ms_p50", Json::Num(rep.ttft_ms_p50)),
+            ("ttft_ms_p99", Json::Num(rep.ttft_ms_p99)),
+            ("step_ms_p50", Json::Num(rep.decode_step_ms_p50)),
+            ("step_ms_p99", Json::Num(rep.decode_step_ms_p99)),
+            ("batch_occupancy", Json::Num(rep.batch_occupancy)),
+            ("steps", Json::Num(rep.steps as f64)),
+        ]);
+        if let Some(kt) = &rep.kernel_timings {
+            row.set("kernel_timings", kt.clone());
+        }
+        sc.set(&format!("t{t}"), row);
+        println!(
+            "[bench] {key} threads={t}: {:.1} tok/s (p50 {:.2} ms, occupancy {:.2})",
+            rep.tokens_per_s, rep.latency_ms_p50, rep.batch_occupancy
+        );
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// Stamp the cross-thread summary: speedup of the widest sweep point
+/// over the `--threads 1` baseline, and the (already enforced) bitwise
+/// identity marker.
+fn finish_scenario(sc: &mut Json, tok_s: &[f64]) {
+    if let (Some(&first), Some(&last)) = (tok_s.first(), tok_s.last()) {
+        if first > 0.0 {
+            sc.set("speedup_vs_t1", Json::Num(last / first));
+        }
+    }
+    // run()/the scenario fns ensure! bitwise equality before we get here
+    sc.set("bitwise_identical_across_threads", Json::Bool(true));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_produces_schema_and_identity() {
+        let opts = BenchOptions {
+            quick: true,
+            threads: vec![1, 2],
+        };
+        let doc = run(&opts).unwrap();
+        assert_eq!(doc.path("schema").unwrap().as_str(), Some(SCHEMA));
+        let sc = doc.path("scenarios").unwrap();
+        for key in [
+            "forward_dense",
+            "forward_dtr_bilayer",
+            "decode_dense",
+            "serve_dtr_bilayer_s2",
+        ] {
+            let s = sc
+                .get(key)
+                .unwrap_or_else(|| panic!("scenario {key} missing"));
+            assert_eq!(
+                s.path("bitwise_identical_across_threads").and_then(Json::as_bool),
+                Some(true),
+                "{key} lost bit-identity"
+            );
+            assert!(s.path("t1").is_some() && s.path("t2").is_some(), "{key} sweep");
+        }
+        let serve = sc.path("serve_dense_s2.t1").unwrap();
+        assert!(serve.path("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(serve.path("kernel_timings.total_ms").is_some());
+    }
+}

@@ -21,6 +21,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::ModelConfig;
 use crate::coordinator::sampling::{sample, SamplingParams};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::tensor::Tensor;
@@ -46,12 +47,16 @@ pub struct ForwardOutput {
 /// artifact's cache literals).
 #[derive(Debug, Clone)]
 pub struct DecodeState {
+    /// Tokens fed so far (the next token's absolute position).
     pub position: usize,
+    /// Per-layer cached keys, `[len, H*hd]` row-major.
     pub keys: Vec<Vec<f32>>,
+    /// Per-layer cached values, `[len, H*hd]` row-major.
     pub values: Vec<Vec<f32>>,
 }
 
 impl DecodeState {
+    /// An empty decode state for a model with `n_layers` layers.
     pub fn new(n_layers: usize) -> DecodeState {
         DecodeState {
             position: 0,
@@ -100,6 +105,16 @@ pub trait Backend {
 
     /// The model configuration this backend instance was built for.
     fn config(&self) -> &ModelConfig;
+
+    /// Per-kernel wall-clock accounting snapshot (the
+    /// [`crate::metrics::KernelTimers`] JSON schema: one
+    /// `{calls, total_ms, mean_us}` object per hot section plus a summed
+    /// `total_ms`), if this backend records one. The serving engine folds
+    /// it into [`crate::coordinator::ServeReport`] and the `bench`
+    /// harness writes it into `BENCH_*.json`. Default: `None`.
+    fn kernel_timings(&self) -> Option<Json> {
+        None
+    }
 
     /// Batched training-shape forward. `tokens` is `[B, S]` i32.
     fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput>;

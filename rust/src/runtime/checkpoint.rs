@@ -32,18 +32,22 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 /// A named tensor collection (parameters, optimizer state, …).
 #[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
+    /// Named tensors in insertion order (the flatten_params order).
     pub entries: Vec<(String, Tensor)>,
 }
 
 impl Checkpoint {
+    /// An empty checkpoint.
     pub fn new() -> Checkpoint {
         Checkpoint::default()
     }
 
+    /// Append a named tensor.
     pub fn push(&mut self, name: impl Into<String>, t: Tensor) {
         self.entries.push((name.into(), t));
     }
 
+    /// Look up a tensor by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
     }
@@ -83,6 +87,7 @@ impl Checkpoint {
         out
     }
 
+    /// Parse the DTCK container format.
     pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
         if bytes.len() < 20 {
             bail!("checkpoint too short");
@@ -147,6 +152,7 @@ impl Checkpoint {
         Ok(Checkpoint { entries })
     }
 
+    /// Write the DTCK container to `path` (parent dirs created).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -157,6 +163,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read a DTCK container from `path`.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)

@@ -7,9 +7,36 @@
 //! Conventions (paper notation): `n` sequence length, `d` model dim, `h`
 //! heads, `hd` head dim (`d = h * hd`). All buffers are flat row-major
 //! `f32` slices; `[n, h, hd]` tensors index as `(i*h + head)*hd + t`.
+//!
+//! # Parallel execution
+//!
+//! Hot kernels come in two forms: the plain name (serial, the ref.py
+//! oracle mirror) and a `_par` variant taking a
+//! [`Pool`](crate::util::threadpool::Pool). Both run the *same* loop
+//! body over disjoint row/column chunks, and every per-element floating
+//! accumulation happens in a fixed order (ascending `k` for matmuls,
+//! cache-then-pending-then-self for attention), so the parallel form is
+//! **bit-identical** to the serial form for every thread count —
+//! `rust/tests/properties_backend.rs` pins this bitwise. Tiny regions
+//! run inline (no dispatch); see the threshold constants below.
+
+use crate::util::threadpool::Pool;
 
 /// Large-negative instead of -inf: keeps softmax NaN-free (ref.py NEG_INF).
 pub const NEG_INF: f32 = -1.0e30;
+
+/// Below this many multiply-adds a kernel skips the pool entirely.
+const PAR_MIN_FLOPS: usize = 16 * 1024;
+
+/// Target multiply-adds per parallel chunk (the pool's work grain) —
+/// shared with the backend's attention row chunking (`attend_rows`).
+pub(crate) const PAR_CHUNK_FLOPS: usize = 8 * 1024;
+
+/// k-dimension tile for [`matmul`]: keeps a `K_BLOCK × m` panel of `b`
+/// hot in cache across the rows of a chunk. Blocks are walked in
+/// ascending order, so per-element accumulation order — and therefore
+/// the result bits — match the untiled loop.
+const K_BLOCK: usize = 64;
 
 /// SiLU activation: `x * sigmoid(x)`.
 #[inline]
@@ -17,24 +44,78 @@ pub fn silu(x: f32) -> f32 {
     x * (1.0 / (1.0 + (-x).exp()))
 }
 
+/// Rows `[row0, row0 + orows.len()/m)` of `a [n,k] @ b [k,m]`, written
+/// into `orows` (zero-initialized by the caller). The shared loop body
+/// of [`matmul`] / [`matmul_par`]: k is tiled in ascending [`K_BLOCK`]s
+/// and zero `a` entries skip their row of `b` exactly like the
+/// reference loop, so bits match it for any chunking.
+fn matmul_rows(a: &[f32], b: &[f32], k: usize, m: usize, row0: usize, orows: &mut [f32]) {
+    let rows = orows.len() / m;
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + K_BLOCK).min(k);
+        for r in 0..rows {
+            let arow = &a[(row0 + r) * k..(row0 + r) * k + k];
+            let orow = &mut orows[r * m..(r + 1) * m];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * m..(kk + 1) * m];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
 /// Row-major matmul: `a [n, k] @ b [k, m] -> [n, m]`.
+///
+/// ```
+/// use dtrnet::runtime::cpu::kernels::matmul;
+/// // [1, 2] @ [2, 1]: 1*3 + 2*4 = 11
+/// assert_eq!(matmul(&[1.0, 2.0], &[3.0, 4.0], 1, 2, 1), vec![11.0]);
+/// ```
 pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    matmul_par(&Pool::serial(), a, b, n, k, m)
+}
+
+/// [`matmul`] over `pool`: multi-row inputs parallelize across row
+/// chunks, a single-row input (the decode hot path) across column
+/// chunks. Bit-identical to the serial kernel for any thread count.
+pub fn matmul_par(pool: &Pool, a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(b.len(), k * m);
     let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * m..(kk + 1) * m];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
+    let work = n * k * m;
+    if pool.threads() == 1 || work < PAR_MIN_FLOPS {
+        matmul_rows(a, b, k, m, 0, &mut out);
+        return out;
     }
+    if n == 1 {
+        // One output row: chunk its columns (contiguous sub-slices).
+        // Accumulation per element is still ascending k.
+        let grain = (PAR_CHUNK_FLOPS / k.max(1)).max(16);
+        pool.run_rows(&mut out, 1, grain, |c0, ocols| {
+            for (kk, &av) in a.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let bcols = &b[kk * m + c0..kk * m + c0 + ocols.len()];
+                for (o, &bv) in ocols.iter_mut().zip(bcols) {
+                    *o += av * bv;
+                }
+            }
+        });
+        return out;
+    }
+    let grain = (PAR_CHUNK_FLOPS / (k * m).max(1)).max(1);
+    pool.run_rows(&mut out, m, grain, |row0, orows| {
+        matmul_rows(a, b, k, m, row0, orows)
+    });
     out
 }
 
@@ -46,17 +127,25 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// RMSNorm (ref.rmsnorm_ref): `x [n, d]`, `weight [d]`.
 pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
+    rmsnorm_par(&Pool::serial(), x, weight, eps)
+}
+
+/// [`rmsnorm`] parallelized across row chunks (rows are independent).
+pub fn rmsnorm_par(pool: &Pool, x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
     let d = weight.len();
     let n = x.len() / d;
     let mut out = vec![0.0f32; n * d];
-    for i in 0..n {
-        let row = &x[i * d..(i + 1) * d];
-        let var: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + eps).sqrt();
-        for j in 0..d {
-            out[i * d + j] = row[j] * inv * weight[j];
+    let grain = (PAR_CHUNK_FLOPS / (3 * d).max(1)).max(4);
+    pool.run_rows(&mut out, d, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(d).enumerate() {
+            let row = &x[(row0 + r) * d..(row0 + r + 1) * d];
+            let var: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for j in 0..d {
+                orow[j] = row[j] * inv * weight[j];
+            }
         }
-    }
+    });
     out
 }
 
@@ -64,11 +153,27 @@ pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
 /// `G = softmax(SiLU(x W1) W2)`. `x [n, d]`, `w1 [d, dh]`, `w2 [dh, 2]`.
 /// Returns `[n, 2]` — column 0 = attention path, 1 = bypass.
 pub fn router(x: &[f32], w1: &[f32], w2: &[f32], n: usize, d: usize, dh: usize) -> Vec<f32> {
-    let mut hidden = matmul(x, w1, n, d, dh);
-    for v in hidden.iter_mut() {
-        *v = silu(*v);
-    }
-    let mut g = matmul(&hidden, w2, n, dh, 2);
+    router_par(&Pool::serial(), x, w1, w2, n, d, dh)
+}
+
+/// [`router`] with pooled matmuls and a row-parallel SiLU.
+pub fn router_par(
+    pool: &Pool,
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    n: usize,
+    d: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let mut hidden = matmul_par(pool, x, w1, n, d, dh);
+    let grain = (PAR_CHUNK_FLOPS / (8 * dh).max(1)).max(4);
+    pool.run_rows(&mut hidden, dh, grain, |_, rows| {
+        for v in rows.iter_mut() {
+            *v = silu(*v);
+        }
+    });
+    let mut g = matmul_par(pool, &hidden, w2, n, dh, 2);
     for i in 0..n {
         let m = g[i * 2].max(g[i * 2 + 1]);
         let e0 = (g[i * 2] - m).exp();
@@ -111,33 +216,58 @@ pub fn topk_mask(scores: &[f32], k: usize) -> Vec<f32> {
 /// Linear-path update (ref.bypass_ref, paper Eq. 5 core): `x W^V W^O` —
 /// self-attention without interaction. `x [n, d]`, `wv`/`wo` `[d, d]`.
 pub fn bypass(x: &[f32], wv: &[f32], wo: &[f32], n: usize, d: usize) -> Vec<f32> {
-    let v = matmul(x, wv, n, d, d);
-    matmul(&v, wo, n, d, d)
+    bypass_par(&Pool::serial(), x, wv, wo, n, d)
+}
+
+/// [`bypass`] with pooled matmuls.
+pub fn bypass_par(pool: &Pool, x: &[f32], wv: &[f32], wo: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let v = matmul_par(pool, x, wv, n, d, d);
+    matmul_par(pool, &v, wo, n, d, d)
 }
 
 /// Rotary position embedding (ref.rope_ref) over `x [n, h, hd]` at
 /// (possibly fractional, for YaRN-style scaling) `positions [n]`.
 pub fn rope(x: &[f32], positions: &[f32], n: usize, h: usize, hd: usize, theta: f32) -> Vec<f32> {
+    rope_par(&Pool::serial(), x, positions, n, h, hd, theta)
+}
+
+/// [`rope`] parallelized across token rows (rows are independent).
+pub fn rope_par(
+    pool: &Pool,
+    x: &[f32],
+    positions: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+    theta: f32,
+) -> Vec<f32> {
     debug_assert_eq!(x.len(), n * h * hd);
     debug_assert_eq!(positions.len(), n);
     let half = hd / 2;
     let freqs: Vec<f32> = (0..half)
         .map(|j| 1.0 / theta.powf(j as f32 / half as f32))
         .collect();
-    let mut out = vec![0.0f32; n * h * hd];
-    for i in 0..n {
-        for head in 0..h {
-            let base = (i * h + head) * hd;
-            for j in 0..half {
-                let angle = positions[i] * freqs[j];
-                let (sin, cos) = angle.sin_cos();
-                let x1 = x[base + j];
-                let x2 = x[base + half + j];
-                out[base + j] = x1 * cos - x2 * sin;
-                out[base + half + j] = x1 * sin + x2 * cos;
+    let width = h * hd;
+    let mut out = vec![0.0f32; n * width];
+    // sin_cos dominates; weight the grain accordingly
+    let grain = (PAR_CHUNK_FLOPS / (16 * width).max(1)).max(2);
+    pool.run_rows(&mut out, width, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(width).enumerate() {
+            let i = row0 + r;
+            for head in 0..h {
+                let base = (i * h + head) * hd;
+                let obase = head * hd;
+                for j in 0..half {
+                    let angle = positions[i] * freqs[j];
+                    let (sin, cos) = angle.sin_cos();
+                    let x1 = x[base + j];
+                    let x2 = x[base + half + j];
+                    orow[obase + j] = x1 * cos - x2 * sin;
+                    orow[obase + half + j] = x1 * sin + x2 * cos;
+                }
             }
         }
-    }
+    });
     out
 }
 
@@ -156,41 +286,65 @@ pub fn routed_attention(
     h: usize,
     hd: usize,
 ) -> Vec<f32> {
+    routed_attention_par(&Pool::serial(), q, k, v, delta, n, h, hd)
+}
+
+/// [`routed_attention`] parallelized across query rows. Each `(i, head)`
+/// output block is self-contained (own logits scratch, own softmax), so
+/// chunking the query dimension cannot change any bit.
+#[allow(clippy::too_many_arguments)]
+pub fn routed_attention_par(
+    pool: &Pool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    delta: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; n * h * hd];
-    let mut logits = vec![0.0f32; n];
-    for head in 0..h {
-        for i in 0..n {
-            let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
-            let row = &mut logits[..i + 1];
-            for (j, lg) in row.iter_mut().enumerate() {
-                let allowed = j == i || (delta[i] > 0.5 && delta[j] > 0.5);
-                *lg = if allowed {
-                    let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
-                    dot(qi, kj) * scale
-                } else {
-                    NEG_INF
-                };
-            }
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut z = 0.0f32;
-            for lg in row.iter_mut() {
-                *lg = (*lg - m).exp();
-                z += *lg;
-            }
-            let orow = &mut out[(i * h + head) * hd..(i * h + head + 1) * hd];
-            for (j, &w) in row.iter().enumerate() {
-                if w == 0.0 {
-                    continue;
+    let width = h * hd;
+    let mut out = vec![0.0f32; n * width];
+    // Average causal row touches n/2 keys; grain in query rows.
+    let per_row = n.div_ceil(2).max(1) * width * 2;
+    let grain = (PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
+    pool.run_rows(&mut out, width, grain, |i0, rows| {
+        let mut logits = vec![0.0f32; n];
+        for (r, orow_all) in rows.chunks_mut(width).enumerate() {
+            let i = i0 + r;
+            for head in 0..h {
+                let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
+                let row = &mut logits[..i + 1];
+                for (j, lg) in row.iter_mut().enumerate() {
+                    let allowed = j == i || (delta[i] > 0.5 && delta[j] > 0.5);
+                    *lg = if allowed {
+                        let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
+                        dot(qi, kj) * scale
+                    } else {
+                        NEG_INF
+                    };
                 }
-                let wj = w / z;
-                let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
-                for (o, &vv) in orow.iter_mut().zip(vj) {
-                    *o += wj * vv;
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for lg in row.iter_mut() {
+                    *lg = (*lg - m).exp();
+                    z += *lg;
+                }
+                let orow = &mut orow_all[head * hd..(head + 1) * hd];
+                for (j, &w) in row.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let wj = w / z;
+                    let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vj) {
+                        *o += wj * vv;
+                    }
                 }
             }
         }
-    }
+    });
     out
 }
 
@@ -198,6 +352,20 @@ pub fn routed_attention(
 pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, h: usize, hd: usize) -> Vec<f32> {
     let ones = vec![1.0f32; n];
     routed_attention(q, k, v, &ones, n, h, hd)
+}
+
+/// [`dense_attention`] over `pool`.
+pub fn dense_attention_par(
+    pool: &Pool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let ones = vec![1.0f32; n];
+    routed_attention_par(pool, q, k, v, &ones, n, h, hd)
 }
 
 /// Single-query attention over a KV cache plus the current token — the
@@ -215,18 +383,52 @@ pub fn decode_attention(
     h: usize,
     hd: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * hd];
+    decode_attention_pending(
+        q, cache_k, cache_v, &[], &[], &[], k_self, v_self, h, hd, &mut out,
+    );
+    out
+}
+
+/// [`decode_attention`] generalized with a *pending* segment: attend the
+/// cache rows, then rows `pending` of the not-yet-appended chunk K/V
+/// (`pend_k`/`pend_v`, `[chunk, h*hd]`), then the token itself — exactly
+/// the key order a sequential decode loop would have seen after
+/// appending the pending rows. This is what lets a prefill chunk's rows
+/// run concurrently (each row reads the chunk K/V of its predecessors
+/// instead of waiting for their cache appends) while producing the same
+/// bits as the sequential loop. Accumulates into `out` (`[h*hd]`,
+/// zeroed by the caller).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attention_pending(
+    q: &[f32],
+    cache_k: &[f32],
+    cache_v: &[f32],
+    pend_k: &[f32],
+    pend_v: &[f32],
+    pending: &[usize],
+    k_self: &[f32],
+    v_self: &[f32],
+    h: usize,
+    hd: usize,
+    out: &mut [f32],
+) {
     let d = h * hd;
     let len = cache_k.len() / d;
+    let p = pending.len();
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0.0f32; d];
-    let mut logits = vec![0.0f32; len + 1];
+    let mut logits = vec![0.0f32; len + p + 1];
     for head in 0..h {
         let qh = &q[head * hd..(head + 1) * hd];
         for j in 0..len {
             let kj = &cache_k[j * d + head * hd..j * d + (head + 1) * hd];
             logits[j] = dot(qh, kj) * scale;
         }
-        logits[len] = dot(qh, &k_self[head * hd..(head + 1) * hd]) * scale;
+        for (t, &pj) in pending.iter().enumerate() {
+            let kj = &pend_k[pj * d + head * hd..pj * d + (head + 1) * hd];
+            logits[len + t] = dot(qh, kj) * scale;
+        }
+        logits[len + p] = dot(qh, &k_self[head * hd..(head + 1) * hd]) * scale;
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
         for lg in logits.iter_mut() {
@@ -238,6 +440,9 @@ pub fn decode_attention(
             let wj = w / z;
             let vj = if j < len {
                 &cache_v[j * d + head * hd..j * d + (head + 1) * hd]
+            } else if j < len + p {
+                let pj = pending[j - len];
+                &pend_v[pj * d + head * hd..pj * d + (head + 1) * hd]
             } else {
                 &v_self[head * hd..(head + 1) * hd]
             };
@@ -246,7 +451,6 @@ pub fn decode_attention(
             }
         }
     }
-    out
 }
 
 /// Gather rows `idx` of `x [n, d]` into a contiguous `[idx.len(), d]`
@@ -284,12 +488,31 @@ pub fn swiglu_mlp(
     d: usize,
     ff: usize,
 ) -> Vec<f32> {
-    let mut gate = matmul(x, w_gate, n, d, ff);
-    let up = matmul(x, w_up, n, d, ff);
-    for (g, &u) in gate.iter_mut().zip(&up) {
-        *g = silu(*g) * u;
-    }
-    matmul(&gate, w_down, n, ff, d)
+    swiglu_mlp_par(&Pool::serial(), x, w_gate, w_up, w_down, n, d, ff)
+}
+
+/// [`swiglu_mlp`] with pooled matmuls and a row-parallel gate fuse.
+#[allow(clippy::too_many_arguments)]
+pub fn swiglu_mlp_par(
+    pool: &Pool,
+    x: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    w_down: &[f32],
+    n: usize,
+    d: usize,
+    ff: usize,
+) -> Vec<f32> {
+    let mut gate = matmul_par(pool, x, w_gate, n, d, ff);
+    let up = matmul_par(pool, x, w_up, n, d, ff);
+    let grain = (PAR_CHUNK_FLOPS / (8 * ff).max(1)).max(2);
+    pool.run_rows(&mut gate, ff, grain, |row0, rows| {
+        let base = row0 * ff;
+        for (t, g) in rows.iter_mut().enumerate() {
+            *g = silu(*g) * up[base + t];
+        }
+    });
+    matmul_par(pool, &gate, w_down, n, ff, d)
 }
 
 /// Q/K/V projection + RoPE on q and k (model.py `_attention_kv` front
@@ -307,10 +530,27 @@ pub fn qkv_rope(
     h: usize,
     theta: f32,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    qkv_rope_par(&Pool::serial(), u, wq, wk, wv, positions, n, d, h, theta)
+}
+
+/// [`qkv_rope`] with pooled projections and rotation.
+#[allow(clippy::too_many_arguments)]
+pub fn qkv_rope_par(
+    pool: &Pool,
+    u: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    positions: &[f32],
+    n: usize,
+    d: usize,
+    h: usize,
+    theta: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let hd = d / h;
-    let q = rope(&matmul(u, wq, n, d, d), positions, n, h, hd, theta);
-    let k = rope(&matmul(u, wk, n, d, d), positions, n, h, hd, theta);
-    let v = matmul(u, wv, n, d, d);
+    let q = rope_par(pool, &matmul_par(pool, u, wq, n, d, d), positions, n, h, hd, theta);
+    let k = rope_par(pool, &matmul_par(pool, u, wk, n, d, d), positions, n, h, hd, theta);
+    let v = matmul_par(pool, u, wv, n, d, d);
     (q, k, v)
 }
 
@@ -346,12 +586,48 @@ pub fn dtr_token_mix(
     theta: f32,
     bypass_vo: bool,
 ) -> Vec<f32> {
+    dtr_token_mix_par(
+        &Pool::serial(),
+        x,
+        g,
+        delta,
+        wq,
+        wk,
+        wv,
+        wo,
+        positions,
+        n,
+        d,
+        h,
+        theta,
+        bypass_vo,
+    )
+}
+
+/// [`dtr_token_mix`] over `pool` — the forward path's parallel form.
+#[allow(clippy::too_many_arguments)]
+pub fn dtr_token_mix_par(
+    pool: &Pool,
+    x: &[f32],
+    g: &[f32],
+    delta: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    positions: &[f32],
+    n: usize,
+    d: usize,
+    h: usize,
+    theta: f32,
+    bypass_vo: bool,
+) -> Vec<f32> {
     let hd = d / h;
-    let (q, k, v) = qkv_rope(x, wq, wk, wv, positions, n, d, h, theta);
-    let ctx = routed_attention(&q, &k, &v, delta, n, h, hd);
-    let attn_out = matmul(&ctx, wo, n, d, d);
+    let (q, k, v) = qkv_rope_par(pool, x, wq, wk, wv, positions, n, d, h, theta);
+    let ctx = routed_attention_par(pool, &q, &k, &v, delta, n, h, hd);
+    let attn_out = matmul_par(pool, &ctx, wo, n, d, d);
     let byp = if bypass_vo {
-        bypass(x, wv, wo, n, d)
+        bypass_par(pool, x, wv, wo, n, d)
     } else {
         x.to_vec()
     };
@@ -423,6 +699,25 @@ mod tests {
     }
 
     #[test]
+    fn matmul_par_bit_identical_to_serial() {
+        let pool = Pool::with_threads(4);
+        let mut rng = Rng::new(11);
+        // shapes spanning the row-parallel, column-parallel (n == 1),
+        // and inline (tiny) paths, with k crossing the K_BLOCK tile
+        for (n, k, m) in [(1usize, 200usize, 300usize), (7, 65, 129), (64, 64, 64), (2, 3, 4)] {
+            let mut a = randn(&mut rng, n * k, 1.0);
+            // exercise the zero-skip path too
+            for i in (0..a.len()).step_by(5) {
+                a[i] = 0.0;
+            }
+            let b = randn(&mut rng, k * m, 1.0);
+            let serial = matmul(&a, &b, n, k, m);
+            let par = matmul_par(&pool, &a, &b, n, k, m);
+            assert_eq!(serial, par, "bits diverged at n={n} k={k} m={m}");
+        }
+    }
+
+    #[test]
     fn router_rows_are_distributions() {
         let mut rng = Rng::new(1);
         let (n, d) = (7, 8);
@@ -475,6 +770,25 @@ mod tests {
     }
 
     #[test]
+    fn attention_par_bit_identical_to_serial() {
+        let pool = Pool::with_threads(3);
+        let mut rng = Rng::new(12);
+        let (n, h, hd) = (33, 2, 8);
+        let q = randn(&mut rng, n * h * hd, 1.0);
+        let k = randn(&mut rng, n * h * hd, 1.0);
+        let v = randn(&mut rng, n * h * hd, 1.0);
+        let delta: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        assert_eq!(
+            routed_attention(&q, &k, &v, &delta, n, h, hd),
+            routed_attention_par(&pool, &q, &k, &v, &delta, n, h, hd),
+        );
+        assert_eq!(
+            dense_attention(&q, &k, &v, n, h, hd),
+            dense_attention_par(&pool, &q, &k, &v, n, h, hd),
+        );
+    }
+
+    #[test]
     fn decode_attention_matches_batched_last_row() {
         let mut rng = Rng::new(5);
         let (n, h, hd) = (6, 2, 4);
@@ -494,6 +808,34 @@ mod tests {
             hd,
         );
         assert_allclose(&dec, &full[(n - 1) * d..], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn decode_attention_pending_matches_appended_cache() {
+        // Attending (cache ++ pending rows) must be bit-identical to
+        // attending a cache that already contains those rows.
+        let mut rng = Rng::new(13);
+        let (h, hd, len, chunk) = (2usize, 4usize, 5usize, 3usize);
+        let d = h * hd;
+        let cache_k = randn(&mut rng, len * d, 1.0);
+        let cache_v = randn(&mut rng, len * d, 1.0);
+        let pend_k = randn(&mut rng, chunk * d, 1.0);
+        let pend_v = randn(&mut rng, chunk * d, 1.0);
+        let q = randn(&mut rng, d, 1.0);
+        let ks = randn(&mut rng, d, 1.0);
+        let vs = randn(&mut rng, d, 1.0);
+        // pending = first two chunk rows
+        let mut out_pending = vec![0.0f32; d];
+        decode_attention_pending(
+            &q, &cache_k, &cache_v, &pend_k, &pend_v, &[0, 1], &ks, &vs, h, hd,
+            &mut out_pending,
+        );
+        let mut big_k = cache_k.clone();
+        big_k.extend_from_slice(&pend_k[..2 * d]);
+        let mut big_v = cache_v.clone();
+        big_v.extend_from_slice(&pend_v[..2 * d]);
+        let out_appended = decode_attention(&q, &big_k, &big_v, &ks, &vs, h, hd);
+        assert_eq!(out_pending, out_appended, "pending view changed bits");
     }
 
     #[test]
@@ -533,5 +875,28 @@ mod tests {
         let y2 = bypass(&x2, &wv, &wo, n, d);
         let y1x2: Vec<f32> = y1.iter().map(|&a| 2.0 * a).collect();
         assert_allclose(&y2, &y1x2, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn mlp_and_norm_par_bit_identical_to_serial() {
+        let pool = Pool::with_threads(4);
+        let mut rng = Rng::new(14);
+        let (n, d, ff) = (40, 32, 88);
+        let x = randn(&mut rng, n * d, 1.0);
+        let wg = randn(&mut rng, d * ff, 0.3);
+        let wu = randn(&mut rng, d * ff, 0.3);
+        let wd = randn(&mut rng, ff * d, 0.3);
+        assert_eq!(
+            swiglu_mlp(&x, &wg, &wu, &wd, n, d, ff),
+            swiglu_mlp_par(&pool, &x, &wg, &wu, &wd, n, d, ff),
+        );
+        let w = randn(&mut rng, d, 1.0);
+        assert_eq!(rmsnorm(&x, &w, 1e-5), rmsnorm_par(&pool, &x, &w, 1e-5));
+        let w1 = randn(&mut rng, d * (d / 2), 0.4);
+        let w2 = randn(&mut rng, (d / 2) * 2, 0.4);
+        assert_eq!(
+            router(&x, &w1, &w2, n, d, d / 2),
+            router_par(&pool, &x, &w1, &w2, n, d, d / 2),
+        );
     }
 }

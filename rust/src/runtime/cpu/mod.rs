@@ -13,13 +13,29 @@
 //! `flatten_params` naming contract as the Python side
 //! (`tok_embed`, `unembed`, `out_norm`, `layers.{i}.{key}`), so a
 //! PJRT-trained checkpoint can be served by this backend and vice versa.
+//!
+//! # Parallel execution
+//!
+//! Every hot path runs through the pool-aware `_par` kernels in
+//! [`kernels`], parallelized across rows/tiles on a
+//! [`Pool`](crate::util::threadpool::Pool) (default: the process-wide
+//! pool, sized by `--threads` / available parallelism). Parallel
+//! execution is **bit-identical** to `--threads 1` — chunks are
+//! data-disjoint and every float accumulation keeps its serial order —
+//! so thread count is a pure throughput knob, never a semantics knob
+//! (property-tested bitwise in `rust/tests/properties_backend.rs`).
+//! Per-kernel wall-clock goes to a [`KernelTimers`] readable through
+//! [`Backend::kernel_timings`].
 
 pub mod kernels;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{LayerKind, ModelConfig, Variant};
+use crate::metrics::KernelTimers;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{self, Pool};
 
 use super::backend::{Backend, DecodeState, ForwardOutput, StepOutput};
 use super::checkpoint::Checkpoint;
@@ -44,26 +60,42 @@ pub enum RouterMode {
 /// One layer's weights (flat row-major, shapes per model.py init_params).
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
+    /// Block kind this layer was built for (checked against the config).
     pub kind: LayerKind,
+    /// Pre-attention RMSNorm gain `[d]`.
     pub norm1: Vec<f32>,  // [d]
+    /// Pre-MLP RMSNorm gain `[d]`.
     pub norm2: Vec<f32>,  // [d]
+    /// Query projection `[d, d]`.
     pub wq: Vec<f32>,     // [d, d]
+    /// Key projection `[d, d]`.
     pub wk: Vec<f32>,     // [d, d]
+    /// Value projection `[d, d]`.
     pub wv: Vec<f32>,     // [d, d]
+    /// Output projection `[d, d]`.
     pub wo: Vec<f32>,     // [d, d]
+    /// SwiGLU gate projection `[d, ff]`.
     pub w_gate: Vec<f32>, // [d, ff]
+    /// SwiGLU up projection `[d, ff]`.
     pub w_up: Vec<f32>,   // [d, ff]
+    /// SwiGLU down projection `[ff, d]`.
     pub w_down: Vec<f32>, // [ff, d]
+    /// Router first layer `[d, d/2]` (empty on dense layers).
     pub r_w1: Vec<f32>,   // [d, d/2] (empty on dense layers)
+    /// Router second layer `[d/2, 2]` (empty on dense layers).
     pub r_w2: Vec<f32>,   // [d/2, 2] (empty on dense layers)
 }
 
 /// Full parameter set for one model.
 #[derive(Debug, Clone)]
 pub struct ModelWeights {
+    /// Token embedding `[V, d]`.
     pub tok_embed: Vec<f32>, // [V, d]
+    /// Unembedding `[d, V]`.
     pub unembed: Vec<f32>,   // [d, V]
+    /// Final RMSNorm gain `[d]`.
     pub out_norm: Vec<f32>,  // [d]
+    /// Per-layer weights, in layer order.
     pub layers: Vec<LayerWeights>,
 }
 
@@ -72,6 +104,11 @@ pub struct CpuBackend {
     cfg: ModelConfig,
     weights: ModelWeights,
     router_mode: RouterMode,
+    /// Kernel execution pool (default: the process-wide shared pool).
+    pool: Pool,
+    /// Per-kernel wall-clock accounting, always on (two clock reads per
+    /// section per step — negligible next to the matmuls it brackets).
+    timers: KernelTimers,
 }
 
 /// Which rows of a [`CpuBackend::step_rows`] call need logits. Only the
@@ -95,14 +132,18 @@ struct RowsOutput {
     g_attn: Vec<Vec<f32>>,
 }
 
-/// Attend each row r (in order) against layer `li` of
-/// `states[rows_cache[r]]` plus the row's own K/V, then append that K/V
-/// to the cache — so later rows mapped to the same cache see earlier
-/// ones (within-chunk causality), and rows mapped to distinct caches are
-/// independent. Same float-op order per row as a sequential
-/// `decode_attention` + append loop. Returns `[m, d]` context rows.
+/// Attend each row r against layer `li` of `states[rows_cache[r]]` plus
+/// the row's own K/V, honoring within-chunk causality: later rows mapped
+/// to the same cache see earlier ones, rows mapped to distinct caches
+/// are independent. Rows run **concurrently** — instead of waiting for
+/// its predecessors' cache appends, each row reads them straight out of
+/// the chunk K/V (`kernels::decode_attention_pending`), which visits
+/// keys in exactly the order a sequential attend-then-append loop would
+/// have, so the result (and the cache bytes appended afterwards) is
+/// bit-identical to that loop. Returns `[m, d]` context rows.
 #[allow(clippy::too_many_arguments)]
 fn attend_rows(
+    pool: &Pool,
     q: &[f32],
     kk: &[f32],
     vv: &[f32],
@@ -113,20 +154,46 @@ fn attend_rows(
     heads: usize,
     hd: usize,
 ) -> Vec<f32> {
-    let mut ctx = Vec::with_capacity(rows_cache.len() * d);
+    let m = rows_cache.len();
+    let mut ctx = vec![0.0f32; m * d];
+    {
+        // Immutable snapshot of every cache's layer-li K/V for the
+        // parallel reads; the appends below wait until all rows finish.
+        let views: Vec<(&[f32], &[f32])> = states
+            .iter()
+            .map(|st| (st.keys[li].as_slice(), st.values[li].as_slice()))
+            .collect();
+        // Chunk rows before r that share r's cache (ascending — the
+        // order a sequential loop would have appended them).
+        let pending: Vec<Vec<usize>> = (0..m)
+            .map(|r| (0..r).filter(|&p| rows_cache[p] == rows_cache[r]).collect())
+            .collect();
+        let cached_rows: usize = views.iter().map(|(ks, _)| ks.len() / d).sum();
+        let per_row = (cached_rows / m.max(1) + m / 2 + 1) * d * 2;
+        let grain = (kernels::PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
+        pool.run_rows(&mut ctx, d, grain, |r0, rows| {
+            for (i, orow) in rows.chunks_mut(d).enumerate() {
+                let r = r0 + i;
+                let (cache_k, cache_v) = views[rows_cache[r]];
+                kernels::decode_attention_pending(
+                    &q[r * d..(r + 1) * d],
+                    cache_k,
+                    cache_v,
+                    kk,
+                    vv,
+                    &pending[r],
+                    &kk[r * d..(r + 1) * d],
+                    &vv[r * d..(r + 1) * d],
+                    heads,
+                    hd,
+                    orow,
+                );
+            }
+        });
+    }
     for (r, &c) in rows_cache.iter().enumerate() {
-        let st = &mut *states[c];
-        ctx.extend_from_slice(&kernels::decode_attention(
-            &q[r * d..(r + 1) * d],
-            &st.keys[li],
-            &st.values[li],
-            &kk[r * d..(r + 1) * d],
-            &vv[r * d..(r + 1) * d],
-            heads,
-            hd,
-        ));
-        st.keys[li].extend_from_slice(&kk[r * d..(r + 1) * d]);
-        st.values[li].extend_from_slice(&vv[r * d..(r + 1) * d]);
+        states[c].keys[li].extend_from_slice(&kk[r * d..(r + 1) * d]);
+        states[c].values[li].extend_from_slice(&vv[r * d..(r + 1) * d]);
     }
     ctx
 }
@@ -180,12 +247,31 @@ impl CpuBackend {
             cfg,
             weights,
             router_mode: mode,
+            pool: threadpool::global().clone(),
+            timers: KernelTimers::default(),
         })
     }
 
     /// Seeded random initialization (LLaMA-style: N(0, 0.02), output
     /// projections scaled by 1/sqrt(2L), norms at one — mirroring
     /// model.py `init_params`' distributional choices, not its bits).
+    ///
+    /// ```
+    /// use dtrnet::config::{ModelConfig, Variant};
+    /// use dtrnet::coordinator::SamplingParams;
+    /// use dtrnet::runtime::{Backend, CpuBackend};
+    /// use dtrnet::util::rng::Rng;
+    ///
+    /// let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    /// let backend = CpuBackend::init(&cfg, 0).unwrap();
+    /// let mut rng = Rng::new(1);
+    /// let out = backend
+    ///     .generate(&[1, 2, 3], 4, &SamplingParams::greedy(), &mut rng)
+    ///     .unwrap();
+    /// assert_eq!(out.tokens.len(), 4);
+    /// // Dense layers route every token; DTR layers only a fraction.
+    /// assert_eq!(out.attn_frac.len(), cfg.n_layers);
+    /// ```
     pub fn init(cfg: &ModelConfig, seed: u64) -> Result<CpuBackend> {
         let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
         let std = 0.02f32;
@@ -224,12 +310,38 @@ impl CpuBackend {
         CpuBackend::new(cfg.clone(), weights, RouterMode::TokenChoice)
     }
 
+    /// Switch between token-choice and expert-choice routing.
     pub fn set_router_mode(&mut self, mode: RouterMode) {
         self.router_mode = mode;
     }
 
+    /// The active routing mode.
     pub fn router_mode(&self) -> RouterMode {
         self.router_mode
+    }
+
+    /// Run kernels on an explicit pool instead of the process-wide one.
+    /// Thread count changes throughput only — outputs are bit-identical
+    /// for every pool size.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
+    }
+
+    /// Convenience for [`CpuBackend::set_pool`]: a fresh pool of `n`
+    /// threads (`1` = the serial determinism baseline).
+    pub fn set_threads(&mut self, n: usize) {
+        self.pool = Pool::with_threads(n);
+    }
+
+    /// Kernel-thread concurrency this backend currently runs with.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Per-kernel wall-clock accounting (always on; reset between bench
+    /// scenarios via [`KernelTimers::reset`]).
+    pub fn timers(&self) -> &KernelTimers {
+        &self.timers
     }
 
     /// Export weights as a DTCK checkpoint using the Python
@@ -363,50 +475,69 @@ impl CpuBackend {
             x.extend_from_slice(&self.weights.tok_embed[t * d..(t + 1) * d]);
         }
 
+        let pool = &self.pool;
         let mut routed = vec![Vec::with_capacity(cfg.n_layers); n];
         let mut g_attn = vec![Vec::with_capacity(cfg.n_layers); n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
-            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let mut mixed = vec![0.0f32; n * d];
             match lw.kind {
                 LayerKind::Dense => {
-                    let (q, kk, vv) = kernels::qkv_rope(
-                        &u, &lw.wq, &lw.wk, &lw.wv, positions, n, d, heads, ROPE_THETA,
-                    );
-                    let ctx = attend_rows(&q, &kk, &vv, states, cache_of, li, d, heads, hd);
-                    mixed = kernels::matmul(&ctx, &lw.wo, n, d, d);
+                    mixed = self.timers.attention.time(|| {
+                        let (q, kk, vv) = kernels::qkv_rope_par(
+                            pool, &u, &lw.wq, &lw.wk, &lw.wv, positions, n, d, heads,
+                            ROPE_THETA,
+                        );
+                        let ctx =
+                            attend_rows(pool, &q, &kk, &vv, states, cache_of, li, d, heads, hd);
+                        kernels::matmul_par(pool, &ctx, &lw.wo, n, d, d)
+                    });
                     for r in 0..n {
                         routed[r].push(true);
                         g_attn[r].push(1.0);
                     }
                 }
                 LayerKind::Dtr => {
-                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, n, d, d / 2);
+                    let g = self
+                        .timers
+                        .router
+                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
                     let decide = |i: usize| {
                         cfg.variant != Variant::DtrSkip && g[i * 2] > g[i * 2 + 1]
                     };
                     let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
                     let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
                     if !att_idx.is_empty() {
-                        let u_r = kernels::gather_rows(&u, &att_idx, d);
-                        let pos_r: Vec<f32> = att_idx.iter().map(|&i| positions[i]).collect();
-                        let (q, kk, vv) = kernels::qkv_rope(
-                            &u_r, &lw.wq, &lw.wk, &lw.wv, &pos_r, att_idx.len(), d, heads,
-                            ROPE_THETA,
-                        );
-                        let rows_cache: Vec<usize> =
-                            att_idx.iter().map(|&i| cache_of[i]).collect();
-                        let ctx =
-                            attend_rows(&q, &kk, &vv, states, &rows_cache, li, d, heads, hd);
-                        let attn = kernels::matmul(&ctx, &lw.wo, att_idx.len(), d, d);
-                        let g0: Vec<f32> = att_idx.iter().map(|&i| g[i * 2]).collect();
-                        kernels::scatter_rows_scaled(&mut mixed, &attn, &att_idx, &g0, d);
+                        self.timers.attention.time(|| {
+                            let u_r = kernels::gather_rows(&u, &att_idx, d);
+                            let pos_r: Vec<f32> =
+                                att_idx.iter().map(|&i| positions[i]).collect();
+                            let (q, kk, vv) = kernels::qkv_rope_par(
+                                pool, &u_r, &lw.wq, &lw.wk, &lw.wv, &pos_r, att_idx.len(), d,
+                                heads, ROPE_THETA,
+                            );
+                            let rows_cache: Vec<usize> =
+                                att_idx.iter().map(|&i| cache_of[i]).collect();
+                            let ctx = attend_rows(
+                                pool, &q, &kk, &vv, states, &rows_cache, li, d, heads, hd,
+                            );
+                            let attn =
+                                kernels::matmul_par(pool, &ctx, &lw.wo, att_idx.len(), d, d);
+                            let g0: Vec<f32> = att_idx.iter().map(|&i| g[i * 2]).collect();
+                            kernels::scatter_rows_scaled(&mut mixed, &attn, &att_idx, &g0, d);
+                        });
                     }
                     if !byp_idx.is_empty() {
-                        let u_b = kernels::gather_rows(&u, &byp_idx, d);
-                        let byp = kernels::bypass(&u_b, &lw.wv, &lw.wo, byp_idx.len(), d);
-                        let g1: Vec<f32> = byp_idx.iter().map(|&i| g[i * 2 + 1]).collect();
-                        kernels::scatter_rows_scaled(&mut mixed, &byp, &byp_idx, &g1, d);
+                        self.timers.bypass.time(|| {
+                            let u_b = kernels::gather_rows(&u, &byp_idx, d);
+                            let byp =
+                                kernels::bypass_par(pool, &u_b, &lw.wv, &lw.wo, byp_idx.len(), d);
+                            let g1: Vec<f32> = byp_idx.iter().map(|&i| g[i * 2 + 1]).collect();
+                            kernels::scatter_rows_scaled(&mut mixed, &byp, &byp_idx, &g1, d);
+                        });
                     }
                     for i in 0..n {
                         routed[i].push(decide(i));
@@ -418,25 +549,34 @@ impl CpuBackend {
             for (xv, mv) in x.iter_mut().zip(&mixed) {
                 *xv += mv;
             }
-            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
-            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff);
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let mlp = self.timers.mlp.time(|| {
+                kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff)
+            });
             for (xv, mv) in x.iter_mut().zip(&mlp) {
                 *xv += mv;
             }
         }
 
-        let logits = match logits {
+        let logits = self.timers.unembed.time(|| match logits {
             LogitsRows::None => Vec::new(),
             LogitsRows::Last => {
-                let xn =
-                    kernels::rmsnorm(&x[(n - 1) * d..n * d], &self.weights.out_norm, RMSNORM_EPS);
-                kernels::matmul(&xn, &self.weights.unembed, 1, d, vocab)
+                let xn = kernels::rmsnorm_par(
+                    pool,
+                    &x[(n - 1) * d..n * d],
+                    &self.weights.out_norm,
+                    RMSNORM_EPS,
+                );
+                kernels::matmul_par(pool, &xn, &self.weights.unembed, 1, d, vocab)
             }
             LogitsRows::All => {
-                let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
-                kernels::matmul(&xn, &self.weights.unembed, n, d, vocab)
+                let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+                kernels::matmul_par(pool, &xn, &self.weights.unembed, n, d, vocab)
             }
-        };
+        });
         for &c in cache_of {
             states[c].position += 1;
         }
@@ -467,27 +607,40 @@ impl CpuBackend {
             x.extend_from_slice(&self.weights.tok_embed[t * d..(t + 1) * d]);
         }
 
+        let pool = &self.pool;
         let mut route = vec![0.0f32; n_layers * n];
         let mut g_attn = vec![0.0f32; n_layers * n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
-            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let (mixed, delta, g0): (Vec<f32>, Vec<f32>, Vec<f32>) = match lw.kind {
                 LayerKind::Dense => {
-                    let (q, kk, vv) =
-                        kernels::qkv_rope(&u, &lw.wq, &lw.wk, &lw.wv, &positions, n, d, heads, ROPE_THETA);
-                    let ctx = kernels::dense_attention(&q, &kk, &vv, n, heads, hd);
-                    let attn = kernels::matmul(&ctx, &lw.wo, n, d, d);
+                    let attn = self.timers.attention.time(|| {
+                        let (q, kk, vv) = kernels::qkv_rope_par(
+                            pool, &u, &lw.wq, &lw.wk, &lw.wv, &positions, n, d, heads,
+                            ROPE_THETA,
+                        );
+                        let ctx = kernels::dense_attention_par(pool, &q, &kk, &vv, n, heads, hd);
+                        kernels::matmul_par(pool, &ctx, &lw.wo, n, d, d)
+                    });
                     (attn, vec![1.0; n], vec![1.0; n])
                 }
                 LayerKind::Dtr => {
-                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, n, d, d / 2);
+                    let g = self
+                        .timers
+                        .router
+                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
                     let delta = self.decide(&g, n);
                     // shared with the golden-tested oracle mirror
                     // (kernels::dtr_token_update) — one implementation
-                    let mixed = kernels::dtr_token_mix(
-                        &u, &g, &delta, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &positions, n, d,
-                        heads, ROPE_THETA, true,
-                    );
+                    let mixed = self.timers.attention.time(|| {
+                        kernels::dtr_token_mix_par(
+                            pool, &u, &g, &delta, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &positions,
+                            n, d, heads, ROPE_THETA, true,
+                        )
+                    });
                     let g0 = (0..n).map(|i| g[i * 2]).collect();
                     (mixed, delta, g0)
                 }
@@ -496,8 +649,13 @@ impl CpuBackend {
             for (xv, mv) in x.iter_mut().zip(&mixed) {
                 *xv += mv;
             }
-            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
-            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff);
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let mlp = self.timers.mlp.time(|| {
+                kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff)
+            });
             for (xv, mv) in x.iter_mut().zip(&mlp) {
                 *xv += mv;
             }
@@ -505,8 +663,10 @@ impl CpuBackend {
             g_attn[li * n..(li + 1) * n].copy_from_slice(&g0);
         }
 
-        let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
-        let logits = kernels::matmul(&xn, &self.weights.unembed, n, d, vocab);
+        let logits = self.timers.unembed.time(|| {
+            let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+            kernels::matmul_par(pool, &xn, &self.weights.unembed, n, d, vocab)
+        });
         Ok((logits, route, g_attn))
     }
 }
@@ -518,6 +678,10 @@ impl Backend for CpuBackend {
 
     fn config(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    fn kernel_timings(&self) -> Option<Json> {
+        Some(self.timers.snapshot())
     }
 
     fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput> {
@@ -575,36 +739,21 @@ impl Backend for CpuBackend {
         );
         let pos = [state.position as f32];
 
+        let pool = &self.pool;
         let t = token as usize;
         let mut x = self.weights.tok_embed[t * d..(t + 1) * d].to_vec();
         let mut routed = Vec::with_capacity(cfg.n_layers);
         let mut g_attn = Vec::with_capacity(cfg.n_layers);
         for (li, lw) in self.weights.layers.iter().enumerate() {
-            let u = kernels::rmsnorm(&x, &lw.norm1, RMSNORM_EPS);
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let (mixed, is_routed, gl): (Vec<f32>, bool, f32) = match lw.kind {
                 LayerKind::Dense => {
-                    let (q, kk, vv) =
-                        kernels::qkv_rope(&u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA);
-                    let ctx = kernels::decode_attention(
-                        &q,
-                        &state.keys[li],
-                        &state.values[li],
-                        &kk,
-                        &vv,
-                        heads,
-                        hd,
-                    );
-                    let attn = kernels::matmul(&ctx, &lw.wo, 1, d, d);
-                    state.keys[li].extend_from_slice(&kk);
-                    state.values[li].extend_from_slice(&vv);
-                    (attn, true, 1.0)
-                }
-                LayerKind::Dtr => {
-                    let g = kernels::router(&u, &lw.r_w1, &lw.r_w2, 1, d, d / 2);
-                    let go = cfg.variant != Variant::DtrSkip && g[0] > g[1];
-                    if go {
-                        let (q, kk, vv) = kernels::qkv_rope(
-                            &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
+                    let attn = self.timers.attention.time(|| {
+                        let (q, kk, vv) = kernels::qkv_rope_par(
+                            pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
                         );
                         let ctx = kernels::decode_attention(
                             &q,
@@ -615,12 +764,44 @@ impl Backend for CpuBackend {
                             heads,
                             hd,
                         );
-                        let attn = kernels::matmul(&ctx, &lw.wo, 1, d, d);
+                        let attn = kernels::matmul_par(pool, &ctx, &lw.wo, 1, d, d);
                         state.keys[li].extend_from_slice(&kk);
                         state.values[li].extend_from_slice(&vv);
+                        attn
+                    });
+                    (attn, true, 1.0)
+                }
+                LayerKind::Dtr => {
+                    let g = self
+                        .timers
+                        .router
+                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, 1, d, d / 2));
+                    let go = cfg.variant != Variant::DtrSkip && g[0] > g[1];
+                    if go {
+                        let attn = self.timers.attention.time(|| {
+                            let (q, kk, vv) = kernels::qkv_rope_par(
+                                pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
+                            );
+                            let ctx = kernels::decode_attention(
+                                &q,
+                                &state.keys[li],
+                                &state.values[li],
+                                &kk,
+                                &vv,
+                                heads,
+                                hd,
+                            );
+                            let attn = kernels::matmul_par(pool, &ctx, &lw.wo, 1, d, d);
+                            state.keys[li].extend_from_slice(&kk);
+                            state.values[li].extend_from_slice(&vv);
+                            attn
+                        });
                         (attn.iter().map(|&a| g[0] * a).collect(), true, g[0])
                     } else {
-                        let byp = kernels::bypass(&u, &lw.wv, &lw.wo, 1, d);
+                        let byp = self
+                            .timers
+                            .bypass
+                            .time(|| kernels::bypass_par(pool, &u, &lw.wv, &lw.wo, 1, d));
                         (byp.iter().map(|&a| g[1] * a).collect(), false, g[0])
                     }
                 }
@@ -629,8 +810,13 @@ impl Backend for CpuBackend {
             for (xv, mv) in x.iter_mut().zip(&mixed) {
                 *xv += mv;
             }
-            let h2 = kernels::rmsnorm(&x, &lw.norm2, RMSNORM_EPS);
-            let mlp = kernels::swiglu_mlp(&h2, &lw.w_gate, &lw.w_up, &lw.w_down, 1, d, ff);
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let mlp = self.timers.mlp.time(|| {
+                kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, 1, d, ff)
+            });
             for (xv, mv) in x.iter_mut().zip(&mlp) {
                 *xv += mv;
             }
@@ -638,8 +824,10 @@ impl Backend for CpuBackend {
             g_attn.push(gl);
         }
 
-        let xn = kernels::rmsnorm(&x, &self.weights.out_norm, RMSNORM_EPS);
-        let logits = kernels::matmul(&xn, &self.weights.unembed, 1, d, vocab);
+        let logits = self.timers.unembed.time(|| {
+            let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+            kernels::matmul_par(pool, &xn, &self.weights.unembed, 1, d, vocab)
+        });
         state.position += 1;
         Ok(StepOutput {
             logits: Tensor::f32(vec![vocab], logits),

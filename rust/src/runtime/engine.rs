@@ -17,6 +17,7 @@ use super::tensor::Tensor;
 /// Process-wide runtime: PJRT CPU client + manifest + executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
+    /// Artifact inventory loaded from `manifest.json`.
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
@@ -34,6 +35,7 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (cpu/gpu/tpu).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -69,9 +71,12 @@ impl Engine {
 
 /// A compiled artifact, callable over host tensors.
 pub struct Executable {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Shapes/layout contract for this executable.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// Compile wall-clock seconds (one-time, per process).
     pub compile_s: f64,
 }
 
@@ -135,10 +140,12 @@ impl Executable {
         Ok(result.remove(0))
     }
 
+    /// Number of input literals the executable expects.
     pub fn n_inputs(&self) -> usize {
         self.spec.inputs.len()
     }
 
+    /// Number of output literals the executable produces.
     pub fn n_outputs(&self) -> usize {
         self.spec.outputs.len()
     }

@@ -15,7 +15,9 @@ use crate::util::json::Json;
 /// Shape+dtype of one input/output.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Element type name ("f32"/"i32").
     pub dtype: String,
 }
 
@@ -35,10 +37,12 @@ impl IoSpec {
         }
     }
 
+    /// Element count (shape product).
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True for zero-sized tensors.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -47,35 +51,52 @@ impl IoSpec {
 /// One named parameter in the flat layout.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Path of the packed parameter file, relative to the artifact dir.
     pub path: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 /// One artifact entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (the manifest key).
     pub name: String,
+    /// HLO text file, relative to the artifact dir.
     pub file: String,
+    /// Artifact kind: fwd / decode / train_step / init.
     pub kind: String,
+    /// Model configuration the artifact was lowered for.
     pub config: ModelConfig,
+    /// The raw config JSON (manifest round-trip fidelity).
     pub config_json: Json,
+    /// Packed parameter files in call order.
     pub params: Vec<ParamSpec>,
+    /// Input tensor specs in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output tensor specs in call order.
     pub outputs: Vec<IoSpec>,
+    /// Batch dimension, when the artifact fixes one.
     pub batch: Option<usize>,
+    /// Sequence length, when the artifact fixes one.
     pub seq: Option<usize>,
+    /// KV capacity, for decode artifacts.
     pub max_kv: Option<usize>,
+    /// Parameter count, when recorded.
     pub nparams: Option<usize>,
 }
 
 /// Parsed manifest: artifact index by name.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifact specs in manifest order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let j = Json::parse_file(&path)
@@ -139,6 +160,7 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact by exact name.
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .iter()
@@ -160,6 +182,7 @@ impl Manifest {
         self.artifacts.iter().filter(|a| a.kind == kind).collect()
     }
 
+    /// Absolute path of an artifact's HLO text file.
     pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
         self.dir.join(&spec.file)
     }

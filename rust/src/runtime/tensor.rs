@@ -22,6 +22,7 @@ impl Pod for f32 {}
 impl Pod for i32 {}
 
 mod sealed {
+    /// Marker restricting [`Pod`] to in-repo types.
     pub trait Sealed {}
     impl Sealed for f32 {}
     impl Sealed for i32 {}
@@ -42,18 +43,23 @@ pub fn bytes_of<T: Pod>(v: &[T]) -> &[u8] {
 /// Element storage.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
+    /// 32-bit float payload.
     F32(Vec<f32>),
+    /// 32-bit integer payload.
     I32(Vec<i32>),
 }
 
 /// Dense row-major host tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Row-major shape.
     pub shape: Vec<usize>,
+    /// Typed flat payload.
     pub data: Data,
 }
 
 impl Tensor {
+    /// An f32 tensor (panics if data doesn't match the shape product).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor {
@@ -62,6 +68,7 @@ impl Tensor {
         }
     }
 
+    /// An i32 tensor (panics if data doesn't match the shape product).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor {
@@ -70,32 +77,39 @@ impl Tensor {
         }
     }
 
+    /// A rank-0 f32 tensor.
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor::f32(vec![], vec![v])
     }
 
+    /// A rank-0 i32 tensor.
     pub fn scalar_i32(v: i32) -> Tensor {
         Tensor::i32(vec![], vec![v])
     }
 
+    /// An all-zero f32 tensor of `shape`.
     pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::f32(shape, vec![0.0; n])
     }
 
+    /// An all-zero i32 tensor of `shape`.
     pub fn zeros_i32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::i32(shape, vec![0; n])
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True for zero-sized tensors.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The f32 payload (panics on i32 tensors).
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
             Data::F32(v) => v,
@@ -103,6 +117,7 @@ impl Tensor {
         }
     }
 
+    /// The i32 payload (panics on f32 tensors).
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
             Data::I32(v) => v,
@@ -110,6 +125,7 @@ impl Tensor {
         }
     }
 
+    /// The single element of a rank-0/len-1 tensor, as f64-free f32.
     pub fn scalar(&self) -> f32 {
         match &self.data {
             Data::F32(v) => v[0],
@@ -149,6 +165,7 @@ impl Tensor {
 
 #[cfg(feature = "pjrt")]
 impl Tensor {
+    /// Convert to a PJRT literal (pjrt builds).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         // Single-copy path (§Perf L3): build the shaped literal directly
         // from raw bytes. The vec1 + reshape route copies twice (once into
@@ -165,6 +182,7 @@ impl Tensor {
         )?)
     }
 
+    /// Convert from a PJRT literal (pjrt builds).
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

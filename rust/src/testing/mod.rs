@@ -18,23 +18,29 @@ use crate::util::rng::Rng;
 
 /// Random input generator handed to property bodies.
 pub struct Gen {
+    /// Seeded PRNG for raw draws.
     pub rng: Rng,
+    /// Zero-based index of the current property case.
     pub case: usize,
 }
 
 impl Gen {
+    /// Uniform usize in `range`.
     pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
         range.start + self.rng.usize_below(range.end - range.start)
     }
 
+    /// Uniform u32 in `range`.
     pub fn u32(&mut self, range: std::ops::Range<u32>) -> u32 {
         range.start + self.rng.below((range.end - range.start) as u64) as u32
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
 
+    /// Random-length f32 vector with elements in `[lo, hi)`.
     pub fn f32_vec(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
         let n = self.usize(len);
         (0..n)
@@ -42,11 +48,13 @@ impl Gen {
             .collect()
     }
 
+    /// Random-length u32 vector with elements in `vals`.
     pub fn vec_u32(&mut self, len: std::ops::Range<usize>, vals: std::ops::Range<u32>) -> Vec<u32> {
         let n = self.usize(len);
         (0..n).map(|_| self.u32(vals.clone())).collect()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bool(0.5)
     }

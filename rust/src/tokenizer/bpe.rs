@@ -74,6 +74,7 @@ impl BpeTokenizer {
         }
     }
 
+    /// Number of learned merges.
     pub fn n_merges(&self) -> usize {
         self.merges.len()
     }

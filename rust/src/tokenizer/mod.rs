@@ -13,8 +13,11 @@ pub use bpe::BpeTokenizer;
 
 /// Trait implemented by all tokenizers in the crate.
 pub trait Tokenizer: Send + Sync {
+    /// Text → token ids.
     fn encode(&self, text: &str) -> Vec<u32>;
+    /// Token ids → text (lossy on invalid sequences).
     fn decode(&self, ids: &[u32]) -> String;
+    /// Number of distinct token ids this tokenizer can produce.
     fn vocab_size(&self) -> usize;
 }
 

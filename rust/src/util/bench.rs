@@ -13,15 +13,22 @@ use crate::util::stats;
 /// One measured benchmark result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark name (also the JSON key).
     pub name: String,
+    /// Timed iterations (excluding warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Sample standard deviation of the iteration times.
     pub stddev_s: f64,
 }
 
 impl Measurement {
+    /// Serialize as a flat JSON object (one row of a results table).
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("name", Json::Str(self.name.clone())),

@@ -5,8 +5,11 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
+/// Parsed command line: positional words plus `--key value` flags.
 pub struct Args {
+    /// Arguments that are not flags, in order (the subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / bare `--flag` (value "true").
     pub flags: BTreeMap<String, String>,
 }
 
@@ -34,31 +37,38 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn parse() -> Args {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse_from(&argv)
     }
 
+    /// Raw flag value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Flag value with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Flag parsed as usize, or `default` when absent/unparseable.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag parsed as u64, or `default` when absent/unparseable.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag parsed as f64, or `default` when absent/unparseable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether the flag was given at all (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

@@ -10,33 +10,44 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64; integers are exact below 2^53).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- constructors -----------------------------------------------------
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// An object from (key, value) pairs.
     pub fn from_pairs(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// An array of numbers.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// An array of strings.
     pub fn arr_str(v: &[&str]) -> Json {
         Json::Arr(v.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
     // ---- accessors ---------------------------------------------------------
+    /// Object field lookup (None on non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -44,12 +55,14 @@ impl Json {
         }
     }
 
+    /// Insert/replace an object field (no-op on non-objects).
     pub fn set(&mut self, key: &str, val: Json) {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val);
         }
     }
 
+    /// The number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -57,10 +70,12 @@ impl Json {
         }
     }
 
+    /// The number value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -92,6 +109,7 @@ impl Json {
     }
 
     // ---- parsing -----------------------------------------------------------
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(s: &str) -> Result<Json, String> {
         let b = s.as_bytes();
         let mut p = Parser { b, i: 0 };
@@ -104,6 +122,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file.
     pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
         let s = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
@@ -111,12 +130,14 @@ impl Json {
     }
 
     // ---- serialization -----------------------------------------------------
+    /// Compact serialization (no whitespace).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Indented serialization (2 spaces).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);

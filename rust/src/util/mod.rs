@@ -1,9 +1,11 @@
 //! Offline-environment substrates.
 //!
 //! The build environment vendors only the `xla` crate's dependency closure,
-//! so the usual ecosystem crates (serde/serde_json, clap, rand, rayon,
-//! criterion, proptest) are unavailable. This module provides the minimal,
-//! well-tested replacements the rest of the library builds on.
+//! so the usual ecosystem crates (serde/serde_json, clap, rand, criterion,
+//! proptest) are unavailable. This module provides the minimal, well-tested
+//! replacements the rest of the library builds on — including
+//! [`threadpool`], the scoped work-chunking pool under every parallel CPU
+//! kernel (DESIGN.md §Parallel CPU execution).
 
 pub mod bench;
 pub mod cli;

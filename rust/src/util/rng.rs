@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded construction (SplitMix64-expanded into the state).
     pub fn new(seed: u64) -> Rng {
         // SplitMix64 seeding, as recommended by the xoshiro authors.
         let mut sm = seed;
@@ -31,6 +32,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -63,6 +65,7 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// Uniform usize in `[0, n)`.
     pub fn usize_below(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
     }
@@ -77,10 +80,12 @@ impl Rng {
         self.f64() as f32
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
         lo + (hi - lo) * self.f64()
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -117,6 +122,7 @@ impl Rng {
         }
     }
 
+    /// Fisher-Yates shuffle in place.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.usize_below(i + 1);
@@ -124,6 +130,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly chosen element (panics on an empty slice).
     pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.usize_below(v.len())]
     }

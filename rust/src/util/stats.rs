@@ -8,6 +8,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Population variance (0.0 for fewer than two samples).
 pub fn variance(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -16,6 +17,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
 }
 
+/// Population standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
@@ -61,10 +63,12 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// A fresh EMA with smoothing factor `alpha` in (0, 1].
     pub fn new(alpha: f64) -> Ema {
         Ema { alpha, value: None }
     }
 
+    /// Fold in one observation; returns the updated average.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -74,6 +78,7 @@ impl Ema {
         v
     }
 
+    /// Current average (None before the first update).
     pub fn get(&self) -> Option<f64> {
         self.value
     }

@@ -1,110 +1,423 @@
-//! Minimal scoped thread pool over std::thread + mpsc (replaces rayon).
+//! Scoped, work-chunking thread pool — the parallel substrate under the
+//! native CPU backend's kernels (`runtime::cpu::kernels`).
 //!
-//! The serving coordinator uses OS threads for its workers; this pool is
-//! for fan-out helper work (data generation, eval sharding). Work items
-//! are boxed closures; results come back through a channel.
+//! Design constraints (see DESIGN.md §Benchmarking):
+//!
+//! * **Bit-determinism.** Parallel kernels must produce the same bits as
+//!   their serial form, so the pool only ever hands out *disjoint index
+//!   ranges* — which thread computes a range never affects any value.
+//!   `--threads 1` (a [`Pool`] with no workers) runs every region inline
+//!   on the caller, reproducing the single-threaded code path exactly.
+//! * **Scoped borrows.** Kernel closures borrow stack data (weight
+//!   slices, output buffers). [`Pool::run`] erases the closure lifetime
+//!   to ship it to persistent workers, then blocks until every worker
+//!   job for the region has finished — the borrow outlives all uses.
+//! * **Cheap dispatch.** Workers are spawned once per pool and fed
+//!   through a channel; a parallel region costs a few channel sends and
+//!   one condvar wait, so layer-sized kernels (tens of microseconds) can
+//!   afford it. Regions below their grain run inline with no dispatch.
+//!
+//! The process-wide pool is shared through [`global`]; its size defaults
+//! to [`available_threads`] and can be pinned once at startup with
+//! [`set_global_threads`] (the CLI `--threads` knob).
+//!
+//! # Example
+//!
+//! ```
+//! use dtrnet::util::threadpool::Pool;
+//!
+//! let pool = Pool::with_threads(4);
+//! let mut squares = vec![0u64; 1000];
+//! // Disjoint row chunks may be filled concurrently; the result is
+//! // identical for any thread count, including Pool::serial().
+//! pool.run_rows(&mut squares, 1, 64, |row0, rows| {
+//!     for (i, r) in rows.iter_mut().enumerate() {
+//!         *r = ((row0 + i) as u64).pow(2);
+//!     }
+//! });
+//! assert_eq!(squares[31], 31 * 31);
+//! ```
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
+/// A queued worker job (one helper per parallel region per worker).
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-size worker pool. Dropping the pool joins all workers.
-pub struct ThreadPool {
-    workers: Vec<thread::JoinHandle<()>>,
-    tx: Option<mpsc::Sender<Job>>,
+thread_local! {
+    /// Set on pool worker threads: a kernel that re-enters [`Pool::run`]
+    /// from inside a region body runs inline instead of re-dispatching
+    /// (nested parallelism would only add queueing latency and, with
+    /// blocking joins, could deadlock).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
-impl ThreadPool {
-    pub fn new(n: usize) -> ThreadPool {
-        let n = n.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                thread::spawn(move || loop {
-                    let job = rx.lock().unwrap().recv();
-                    match job {
-                        Ok(job) => job(),
-                        Err(_) => break,
-                    }
-                })
-            })
-            .collect();
-        ThreadPool {
-            workers,
-            tx: Some(tx),
+/// One parallel region: a lifetime-erased chunk body plus the shared
+/// claim/completion state. Workers and the caller claim chunk indices
+/// from `next` until exhausted; the caller blocks until `pending`
+/// helper jobs have all finished, which is what makes the lifetime
+/// erasure in [`Pool::run`] sound.
+struct Region {
+    /// Erased `&'scope (dyn Fn(usize, usize) + Sync)` — valid until the
+    /// submitting call returns (it joins the region first).
+    body: *const (dyn Fn(usize, usize) + Sync),
+    total: usize,
+    chunk: usize,
+    n_chunks: usize,
+    next: AtomicUsize,
+    panicked: AtomicBool,
+    pending: Mutex<usize>,
+    done: Condvar,
+}
+
+// SAFETY: `body` points at a `Sync` closure that the submitting thread
+// keeps alive until the region is joined; all other fields are Sync.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+impl Region {
+    /// Claim and run chunks until none remain. Runs on workers and on
+    /// the submitting thread alike.
+    fn work(&self) {
+        // SAFETY: see the Send impl — the pointee outlives the region.
+        let body = unsafe { &*self.body };
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                return;
+            }
+            let start = i * self.chunk;
+            let end = self.total.min(start + self.chunk);
+            // A panicking chunk must not wedge the pool: record it,
+            // keep the region draining, re-panic on the caller.
+            if catch_unwind(AssertUnwindSafe(|| body(start, end))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
         }
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    fn finish_helper(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Fixed set of persistent worker threads fed through an MPSC channel.
+/// Dropping the pool closes the channel and joins every worker.
+struct Workers {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl Workers {
+    fn new(n: usize) -> Workers {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("dtrnet-pool-{i}"))
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|f| f.set(true));
+                        loop {
+                            let job = rx.lock().unwrap().recv();
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Workers {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    fn send(&self, job: Job) {
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker hung up");
-    }
-
-    /// Map `f` over `items` in parallel, preserving order.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
-    where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
-    {
-        let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel();
-        let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let rtx = rtx.clone();
-            self.execute(move || {
-                let _ = rtx.send((i, f(item)));
-            });
-        }
-        drop(rtx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rrx {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|o| o.expect("missing result")).collect()
+            .send(job)
+            .expect("pool worker hung up");
     }
 }
 
-impl Drop for ThreadPool {
+impl Drop for Workers {
     fn drop(&mut self) {
         drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
         }
     }
+}
+
+/// Handle to a parallel execution context: either the serial inline path
+/// (`threads == 1`, no workers) or a shared set of persistent workers.
+///
+/// Cloning is cheap (an `Arc` bump) and clones share the same workers.
+#[derive(Clone)]
+pub struct Pool {
+    workers: Option<Arc<Workers>>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Pool {
+    /// The serial pool: every region runs inline on the caller. This is
+    /// the `--threads 1` determinism baseline.
+    pub fn serial() -> Pool {
+        Pool {
+            workers: None,
+            threads: 1,
+        }
+    }
+
+    /// A pool with `n` total threads of concurrency (the caller counts
+    /// as one, so `n - 1` workers are spawned). `n <= 1` is serial.
+    pub fn with_threads(n: usize) -> Pool {
+        if n <= 1 {
+            return Pool::serial();
+        }
+        Pool {
+            workers: Some(Arc::new(Workers::new(n - 1))),
+            threads: n,
+        }
+    }
+
+    /// Total concurrency of this pool (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body(start, end)` over disjoint chunks partitioning
+    /// `0..total`, at least `grain` items per chunk. Blocks until every
+    /// chunk has run. Chunk assignment is dynamic (work-stealing via an
+    /// atomic cursor), which is safe for determinism because chunks are
+    /// data-disjoint by construction in every caller.
+    ///
+    /// Runs inline (no dispatch, no catch_unwind) when the pool is
+    /// serial, the region is smaller than one grain, or the caller is
+    /// itself a pool worker (nested regions serialize).
+    pub fn run(&self, total: usize, grain: usize, body: impl Fn(usize, usize) + Sync) {
+        if total == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let workers = match &self.workers {
+            Some(w) if total > grain && !IN_POOL_WORKER.with(|f| f.get()) => w,
+            _ => {
+                body(0, total);
+                return;
+            }
+        };
+        // Over-chunk ~4x vs the thread count so early finishers keep
+        // helping, but never below the caller's grain.
+        let chunk = grain.max(total.div_ceil(self.threads * 4));
+        let n_chunks = total.div_ceil(chunk);
+        if n_chunks <= 1 {
+            body(0, total);
+            return;
+        }
+        let helpers = (self.threads - 1).min(n_chunks - 1);
+        let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
+        // SAFETY: the pointee outlives this call, and this call joins
+        // every helper before returning (the wait loop below). The
+        // transmute (not a cast) erases the borrow's lifetime from the
+        // trait object so it can live in the shared Region.
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+        let body_ptr: *const (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(body_ref) };
+        let region = Arc::new(Region {
+            body: body_ptr,
+            total,
+            chunk,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+        });
+        for _ in 0..helpers {
+            let r = Arc::clone(&region);
+            workers.send(Box::new(move || {
+                r.work();
+                r.finish_helper();
+            }));
+        }
+        region.work();
+        let mut pending = region.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = region.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if region.panicked.load(Ordering::Relaxed) {
+            panic!("a parallel kernel chunk panicked (see worker backtrace above)");
+        }
+    }
+
+    /// Row-parallel mutation: split `data` (rows of `width` elements)
+    /// into disjoint chunks of at least `grain` rows and run
+    /// `body(first_row, rows)` on each, possibly concurrently. The
+    /// mutable disjointness is what lets kernels write one shared output
+    /// buffer from many threads without locks.
+    pub fn run_rows<T: Send>(
+        &self,
+        data: &mut [T],
+        width: usize,
+        grain: usize,
+        body: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        let width = width.max(1);
+        let n_rows = data.len() / width;
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(n_rows, grain, move |start, end| {
+            // SAFETY: [start, end) row ranges from `run` are disjoint,
+            // so the derived sub-slices never alias.
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(start * width), (end - start) * width)
+            };
+            body(start, rows);
+        });
+    }
+}
+
+/// Raw-pointer wrapper that may cross threads. Soundness is the
+/// caller's obligation: derived accesses must be disjoint and must not
+/// outlive the pointee (both hold for [`Pool::run_rows`] chunks).
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Hardware concurrency of this host (`std::thread::available_parallelism`,
+/// falling back to 1 when undetectable).
+pub fn available_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the size of the process-wide pool (the CLI `--threads` knob).
+/// Effective only before the first [`global`] call; returns `false` if
+/// the pool already exists at a different size.
+pub fn set_global_threads(n: usize) -> bool {
+    REQUESTED.store(n.max(1), Ordering::Relaxed);
+    match GLOBAL.get() {
+        None => true,
+        Some(p) => p.threads() == n.max(1),
+    }
+}
+
+/// The process-wide shared pool. Sized by [`set_global_threads`] if
+/// called first, else [`available_threads`]. All `CpuBackend`s use this
+/// unless given an explicit pool.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| {
+        let req = REQUESTED.load(Ordering::Relaxed);
+        Pool::with_threads(if req == 0 { available_threads() } else { req })
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn executes_all_jobs() {
-        let pool = ThreadPool::new(4);
-        let counter = Arc::new(AtomicUsize::new(0));
-        for _ in 0..100 {
-            let c = Arc::clone(&counter);
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
+    fn covers_every_index_exactly_once() {
+        let pool = Pool::with_threads(4);
+        for total in [0usize, 1, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+            pool.run(total, 3, |s, e| {
+                for i in s..e {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
             });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "total={total}"
+            );
         }
-        drop(pool); // join
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
     }
 
     #[test]
-    fn map_preserves_order() {
-        let pool = ThreadPool::new(3);
-        let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * x);
-        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    fn run_rows_matches_serial_bits() {
+        let body = |row0: usize, rows: &mut [f32]| {
+            for (i, v) in rows.iter_mut().enumerate() {
+                let r = row0 + i / 3;
+                *v = (r as f32).sqrt() * 0.37 + (i % 3) as f32;
+            }
+        };
+        let mut serial = vec![0.0f32; 333 * 3];
+        Pool::serial().run_rows(&mut serial, 3, 8, body);
+        let mut par = vec![0.0f32; 333 * 3];
+        Pool::with_threads(4).run_rows(&mut par, 3, 8, body);
+        assert_eq!(serial, par, "parallel chunking changed bits");
+    }
+
+    #[test]
+    fn small_regions_run_inline() {
+        let pool = Pool::with_threads(4);
+        let tid = std::thread::current().id();
+        pool.run(4, 8, |_, _| {
+            assert_eq!(std::thread::current().id(), tid, "sub-grain region dispatched");
+        });
+    }
+
+    #[test]
+    fn nested_regions_serialize() {
+        let pool = Pool::with_threads(3);
+        let count = AtomicU64::new(0);
+        pool.run(32, 1, |s, e| {
+            // Re-entering run() from a region body must not deadlock.
+            pool.run(4, 1, |s2, e2| {
+                count.fetch_add(((e - s) * (e2 - s2)) as u64, Ordering::Relaxed);
+            });
+        });
+        assert!(count.load(Ordering::Relaxed) >= 32 * 4 / 8);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = Pool::with_threads(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(100, 1, |s, _| {
+                if s >= 50 {
+                    panic!("chunk boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool still works after a panicked region
+        let n = AtomicU64::new(0);
+        pool.run(10, 1, |s, e| {
+            n.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let p1 = global();
+        let p2 = global();
+        assert_eq!(p1.threads(), p2.threads());
+        assert!(p1.threads() >= 1);
     }
 }

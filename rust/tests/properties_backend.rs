@@ -7,7 +7,11 @@
 //!   update `g_bypass · x W^V W^O` (paper Eq. 5);
 //! * expert-choice top-k: the router selects exactly `ceil(c·n)` tokens;
 //! * decode/forward consistency: sequential decode with the routing-aware
-//!   KV cache reproduces the batched forward logits.
+//!   KV cache reproduces the batched forward logits;
+//! * thread invariance: multi-threaded kernel execution is bit-identical
+//!   to `--threads 1` for forward, decode_batch, and prefill_chunked,
+//!   including every KV-cache byte — thread count is a throughput knob,
+//!   never a semantics knob (DESIGN.md §Benchmarking).
 
 use dtrnet::config::{ModelConfig, Variant};
 use dtrnet::runtime::cpu::kernels;
@@ -265,6 +269,87 @@ fn prop_chunked_prefill_bit_identical_to_sequential() {
         assert_eq!(s_ref.keys, s_chk.keys, "chunk={chunk}: cache keys diverged");
         assert_eq!(s_ref.values, s_chk.values, "chunk={chunk}: cache values diverged");
     });
+}
+
+#[test]
+fn prop_threaded_bit_identical_to_single_thread() {
+    property(
+        "threads=N ≡ threads=1 bitwise: forward/prefill_chunked/decode_batch + caches",
+        6,
+        |g| {
+            let variants = [Variant::Dense, Variant::DtrBilayer, Variant::DtrTrilayer];
+            let variant = variants[g.usize(0..variants.len())];
+            let cfg = ModelConfig::preset("xs", variant);
+            let seed = 4000 + g.case as u64;
+            let mut serial = CpuBackend::init(&cfg, seed).unwrap();
+            serial.set_threads(1);
+            let mut threaded = CpuBackend::init(&cfg, seed).unwrap();
+            threaded.set_threads(g.usize(2..5)); // 2..=4 threads
+
+            // forward: logits, routing decisions, soft scores
+            let s = g.usize(2..32);
+            let tokens: Vec<i32> = (0..s).map(|_| g.rng.below(256) as i32).collect();
+            let a = serial
+                .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+                .unwrap();
+            let b = threaded
+                .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+                .unwrap();
+            assert_eq!(a.logits, b.logits, "forward logits bits diverged");
+            assert_eq!(a.route, b.route, "forward routing diverged");
+            assert_eq!(a.g_attn, b.g_attn, "forward router scores diverged");
+
+            // prefill_chunked: final step AND every cached KV byte
+            let chunk = g.usize(1..12);
+            let mut st_s = serial.begin_decode();
+            let out_s = serial.prefill_chunked(&mut st_s, &tokens, chunk).unwrap();
+            let mut st_t = threaded.begin_decode();
+            let out_t = threaded.prefill_chunked(&mut st_t, &tokens, chunk).unwrap();
+            assert_eq!(out_s.logits, out_t.logits, "prefill logits diverged");
+            assert_eq!(out_s.routed, out_t.routed);
+            assert_eq!(out_s.g_attn, out_t.g_attn);
+            assert_eq!(st_s.position, st_t.position);
+            assert_eq!(st_s.keys, st_t.keys, "prefill cache keys diverged");
+            assert_eq!(st_s.values, st_t.values, "prefill cache values diverged");
+
+            // decode_batch over staggered sequences: outputs + cache bits
+            let bsz = g.usize(1..4);
+            let mut states_s: Vec<DecodeState> = Vec::new();
+            let mut states_t: Vec<DecodeState> = Vec::new();
+            for bi in 0..bsz {
+                let plen = g.usize(1..6);
+                let prompt: Vec<i32> =
+                    (0..plen).map(|i| ((bi * 31 + i * 7) % 256) as i32).collect();
+                let mut ss = serial.begin_decode();
+                serial.prefill(&mut ss, &prompt).unwrap();
+                let mut st = threaded.begin_decode();
+                threaded.prefill(&mut st, &prompt).unwrap();
+                states_s.push(ss);
+                states_t.push(st);
+            }
+            for step in 0..3 {
+                let toks: Vec<i32> = (0..bsz)
+                    .map(|i| ((step * 53 + i * 17) % 256) as i32)
+                    .collect();
+                let mut refs_s: Vec<&mut DecodeState> = states_s.iter_mut().collect();
+                let outs_s = serial.decode_batch(&mut refs_s, &toks).unwrap();
+                let mut refs_t: Vec<&mut DecodeState> = states_t.iter_mut().collect();
+                let outs_t = threaded.decode_batch(&mut refs_t, &toks).unwrap();
+                for i in 0..bsz {
+                    assert_eq!(
+                        outs_s[i].logits, outs_t[i].logits,
+                        "decode_batch seq {i} step {step} logits diverged"
+                    );
+                    assert_eq!(outs_s[i].routed, outs_t[i].routed);
+                    assert_eq!(outs_s[i].g_attn, outs_t[i].g_attn);
+                }
+            }
+            for (i, (ss, st)) in states_s.iter().zip(&states_t).enumerate() {
+                assert_eq!(ss.keys, st.keys, "seq {i} cache keys diverged");
+                assert_eq!(ss.values, st.values, "seq {i} cache values diverged");
+            }
+        },
+    );
 }
 
 #[test]
