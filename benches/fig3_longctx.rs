@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use dtrnet::config::TrainConfig;
-use dtrnet::coordinator::Trainer;
+use dtrnet::coordinator::ArtifactTrainer;
 use dtrnet::data::{corpus, longctx, Dataset};
 use dtrnet::runtime::Engine;
 use dtrnet::util::bench::{print_table, write_results};
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
             log_every: usize::MAX,
             ..Default::default()
         };
-        let mut trainer = Trainer::new(&engine, tag, 0)?;
+        let mut trainer = ArtifactTrainer::new(&engine, tag, 0)?;
         let mut rng = Rng::new(7);
         let data = Dataset::new(
             corpus::markov_corpus(&mut rng, 256, 200 * trainer.seq, 12),

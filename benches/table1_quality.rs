@@ -17,7 +17,7 @@
 use anyhow::Result;
 
 use dtrnet::config::{LayerKind, TrainConfig};
-use dtrnet::coordinator::Trainer;
+use dtrnet::coordinator::ArtifactTrainer;
 use dtrnet::data::{corpus, Dataset};
 use dtrnet::model::flops;
 use dtrnet::runtime::Engine;
@@ -43,7 +43,7 @@ fn run_variant(engine: &Engine, tag: &'static str, steps: usize) -> Result<Row> 
         log_every: usize::MAX, // quiet
         ..Default::default()
     };
-    let mut trainer = Trainer::new(engine, tag, 0)?;
+    let mut trainer = ArtifactTrainer::new(engine, tag, 0)?;
     let seq = trainer.seq;
 
     // identical data across variants: markov LM + embedded text mixture

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use dtrnet::config::TrainConfig;
-use dtrnet::coordinator::Trainer;
+use dtrnet::coordinator::ArtifactTrainer;
 use dtrnet::data::{corpus, Dataset};
 use dtrnet::metrics::JsonlWriter;
 use dtrnet::runtime::Engine;
@@ -32,7 +32,7 @@ fn run_one(engine: &Engine, tag: &str, args: &Args) -> Result<Json> {
         log_every: args.get_usize("log-every", 25),
         ..Default::default()
     };
-    let mut trainer = Trainer::new(engine, tag, tcfg.seed as i32)?;
+    let mut trainer = ArtifactTrainer::new(engine, tag, tcfg.seed as i32)?;
     let mut rng = Rng::new(args.get_u64("data-seed", 7));
     let data = Dataset::new(
         corpus::markov_corpus(&mut rng, 256, 400 * trainer.seq, 12),

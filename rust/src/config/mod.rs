@@ -4,6 +4,8 @@
 //! `layer_kinds` there must agree (tested in `rust/tests/` against the
 //! manifest, which records the Python-side layout per artifact).
 
+use anyhow::{ensure, Result};
+
 use crate::util::json::Json;
 
 /// Which block occupies a layer slot.
@@ -173,9 +175,44 @@ impl ModelConfig {
         })
     }
 
-    /// Per-head dimension (`d_model / n_heads`).
+    /// Per-head dimension (`d_model / n_heads`). Only meaningful on a
+    /// config that passes [`ModelConfig::validate`] — integer division
+    /// truncates otherwise.
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
+    }
+
+    /// Structural sanity checks, enforced wherever a config enters an
+    /// execution path (backend/trainer construction, CLI parsing).
+    ///
+    /// The load-bearing one is `d_model % n_heads == 0`: `head_dim()`
+    /// silently truncates otherwise, which would desync
+    /// `DecodeState::lens(d_model)` (KV rows are `H·hd` wide) from the
+    /// real cache row width and corrupt every length/paging computation
+    /// built on it.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.vocab_size > 0, "config {}: vocab_size must be > 0", self.name);
+        ensure!(self.d_model > 0, "config {}: d_model must be > 0", self.name);
+        ensure!(self.d_ff > 0, "config {}: d_ff must be > 0", self.name);
+        ensure!(
+            self.n_layers >= 2,
+            "config {}: need at least 2 layers (first/last are forced dense)",
+            self.name
+        );
+        ensure!(self.n_heads > 0, "config {}: n_heads must be > 0", self.name);
+        ensure!(
+            self.d_model % self.n_heads == 0,
+            "config {}: d_model {} is not divisible by n_heads {} — head_dim \
+             would truncate to {} and desync the KV cache row width (rows \
+             are H*hd = {} floats, not d_model = {})",
+            self.name,
+            self.d_model,
+            self.n_heads,
+            self.d_model / self.n_heads,
+            (self.d_model / self.n_heads) * self.n_heads,
+            self.d_model
+        );
+        Ok(())
     }
 
     /// Per-layer block kinds — MUST match python `model.layer_kinds`.
@@ -309,7 +346,9 @@ impl ModelConfig {
     }
 }
 
-/// Training-run settings (the L3 trainer owns the schedule).
+/// Training-run settings (the L3 trainer owns the schedule; the
+/// optimizer constants mirror `python/compile/train.py` — AdamW per the
+/// paper's §Training Setup).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     /// Optimizer steps.
@@ -326,6 +365,19 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Emit a log row every this many steps.
     pub log_every: usize,
+    /// Eq. 7 routing-penalty weight (paper lambda, train.py `lambda_reg`).
+    pub lambda_reg: f64,
+    /// AdamW first-moment decay.
+    pub beta1: f64,
+    /// AdamW second-moment decay.
+    pub beta2: f64,
+    /// AdamW denominator epsilon.
+    pub adam_eps: f64,
+    /// Decoupled weight decay, applied to matrices only (norm gains
+    /// exempt — train.py `WEIGHT_DECAY`).
+    pub weight_decay: f64,
+    /// Global-norm gradient clip (train.py `GRAD_CLIP`).
+    pub grad_clip: f64,
 }
 
 impl Default for TrainConfig {
@@ -338,6 +390,12 @@ impl Default for TrainConfig {
             warmup_ratio: 0.1,
             seed: 0,
             log_every: 10,
+            lambda_reg: 8e-4,
+            beta1: 0.9,
+            beta2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.01,
+            grad_clip: 0.1,
         }
     }
 }
@@ -421,6 +479,21 @@ mod tests {
         assert!((t.lr_at(10) - 1.0).abs() < 1e-9);
         assert!(t.lr_at(55) < 1.0);
         assert!(t.lr_at(100) < 0.01);
+    }
+
+    #[test]
+    fn validate_rejects_truncating_head_dim() {
+        let mut c = ModelConfig::preset("tiny", Variant::DtrBilayer);
+        assert!(c.validate().is_ok());
+        c.n_heads = 5; // 128 % 5 != 0 — head_dim would truncate
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "unexpected error: {err}");
+        c.n_heads = 0;
+        assert!(c.validate().is_err());
+        // every shipped preset must validate
+        for name in ModelConfig::PRESET_NAMES {
+            ModelConfig::preset(name, Variant::DtrBilayer).validate().unwrap();
+        }
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //! * [`workload`] — synthetic serving traces (Poisson arrivals,
 //!   heavy-tailed lengths), deterministic per seed.
 //! * [`stats`] — routing statistics (Fig. 5 telemetry).
-//! * [`trainer`] (`pjrt`) — training orchestrator: drives the fused
-//!   `train_step` artifact, owns the LR schedule, evaluates checkpoints.
+//! * [`trainer`] — backend-generic training orchestrator: drives any
+//!   [`crate::runtime::TrainBackend`] (the native CPU trainer by
+//!   default; with `pjrt`, the fused `train_step` artifact via
+//!   `trainer::ArtifactTrainer`), owns the LR schedule and logging.
 //! * [`serve`] (`pjrt`) — the artifact-bound serving loop over the AOT
 //!   batched decode executable (device-resident KV literals).
 
@@ -28,7 +30,6 @@ pub mod sampling;
 pub mod serve;
 pub mod server;
 pub mod stats;
-#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod workload;
 
@@ -42,5 +43,6 @@ pub use server::{
 };
 pub use stats::RoutingStats;
 #[cfg(feature = "pjrt")]
+pub use trainer::ArtifactTrainer;
 pub use trainer::{TrainReport, Trainer};
 pub use workload::{generate as generate_workload, WorkloadSpec};

@@ -1,27 +1,34 @@
-//! Training orchestrator: drives the fused `train_step` artifact.
+//! Training orchestrator — backend-generic (feature-free).
 //!
 //! Owns everything the paper's §Training Setup puts host-side: the cosine
-//! LR schedule with warmup, data batching, seeding, step loop, metric
-//! logging (JSONL) and periodic held-out evaluation. Parameters and Adam
-//! moments stay as XLA literals between steps (no host round-trip of the
-//! weights on the hot path).
+//! LR schedule with warmup, data batching, seeding, the step loop, metric
+//! logging (JSONL) and the final report. Execution is delegated to a
+//! [`TrainBackend`] (one optimizer step: forward + backward + AdamW):
+//!
+//! * the native [`crate::runtime::CpuTrainer`] on the default build —
+//!   `dtrnet train` works offline, end to end, with no artifacts;
+//! * `ArtifactTrainer` (`pjrt` feature) — the original XLA path,
+//!   driving the fused `{tag}_train_step` executable with parameters and
+//!   Adam moments resident as device literals between steps.
+//!
+//! Either way the trained parameters leave as a DTCK checkpoint that
+//! every serving/eval path loads (`dtrnet serve --load ckpt.dtck`).
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::Dataset;
 use crate::metrics::JsonlWriter;
-use crate::runtime::{Engine, Executable, Tensor};
+use crate::runtime::TrainBackend;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Outcome of a training run.
 #[derive(Debug)]
 pub struct TrainReport {
-    /// Artifact tag that was trained.
+    /// Model/artifact tag that was trained.
     pub tag: String,
     /// Optimizer steps executed.
     pub steps: usize,
@@ -33,6 +40,9 @@ pub struct TrainReport {
     pub penalties: Vec<f64>,
     /// Final total loss.
     pub final_loss: f64,
+    /// Per-layer attention fraction at the first step (the routing
+    /// starting point the trained fractions are compared against).
+    pub attn_frac_first: Vec<f64>,
     /// Mean attention fraction per layer over the last 10% of steps.
     pub attn_frac: Vec<f64>,
     /// Wall-clock seconds.
@@ -49,6 +59,7 @@ impl TrainReport {
             ("steps", Json::Num(self.steps as f64)),
             ("final_loss", Json::Num(self.final_loss)),
             ("attn_frac", Json::arr_f64(&self.attn_frac)),
+            ("attn_frac_first", Json::arr_f64(&self.attn_frac_first)),
             ("wall_s", Json::Num(self.wall_s)),
             ("tokens_per_s", Json::Num(self.tokens_per_s)),
             ("losses", Json::arr_f64(&self.losses)),
@@ -56,23 +67,144 @@ impl TrainReport {
     }
 }
 
-/// Drives `{tag}_train_init` + `{tag}_train_step` artifacts.
-pub struct Trainer {
+/// Drives a [`TrainBackend`] through a full training run.
+pub struct Trainer<'a> {
+    backend: &'a mut dyn TrainBackend,
     tag: String,
-    step_exe: Arc<Executable>,
+}
+
+impl<'a> Trainer<'a> {
+    /// Wrap a backend; `tag` labels log lines and the report.
+    pub fn new(backend: &'a mut dyn TrainBackend, tag: &str) -> Trainer<'a> {
+        Trainer {
+            backend,
+            tag: tag.to_string(),
+        }
+    }
+
+    /// Full training loop per `TrainConfig` over `data`: sample a batch,
+    /// step the backend at the scheduled LR, log, report.
+    pub fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        data: &Dataset,
+        log: Option<&JsonlWriter>,
+    ) -> Result<TrainReport> {
+        let (batch, seq) = (self.backend.batch(), self.backend.seq());
+        anyhow::ensure!(
+            data.seq == seq,
+            "dataset windows are {} tokens but the backend trains on {seq}",
+            data.seq
+        );
+        anyhow::ensure!(cfg.steps >= 1, "need at least one training step");
+        let mut rng = Rng::new(cfg.seed);
+        let t0 = Instant::now();
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut ces = Vec::with_capacity(cfg.steps);
+        let mut pens = Vec::with_capacity(cfg.steps);
+        let mut frac_first = Vec::new();
+        let mut fracs_tail: Vec<Vec<f64>> = Vec::new();
+        let tail_from = cfg.steps - (cfg.steps / 10).max(1) + 1;
+        for s in 1..=cfg.steps {
+            let tokens = data.sample_batch(&mut rng, batch);
+            let lr = cfg.lr_at(s);
+            let m = self.backend.train_step(&tokens, s, lr, cfg.seed)?;
+            losses.push(m.loss);
+            ces.push(m.ce);
+            pens.push(m.penalty);
+            if s == 1 {
+                frac_first = m.attn_frac.clone();
+            }
+            if s >= tail_from {
+                fracs_tail.push(m.attn_frac.clone());
+            }
+            if s % cfg.log_every == 0 || s == cfg.steps {
+                println!(
+                    "[train {}] step {s}/{} loss {:.4} ce {:.4} pen {:.5} \
+                     gnorm {:.3} lr {lr:.2e} frac {:?}",
+                    self.tag,
+                    cfg.steps,
+                    m.loss,
+                    m.ce,
+                    m.penalty,
+                    m.grad_norm,
+                    m.attn_frac
+                        .iter()
+                        .map(|f| (f * 100.0).round() / 100.0)
+                        .collect::<Vec<_>>()
+                );
+            }
+            if let Some(w) = log {
+                w.write(&Json::from_pairs(vec![
+                    ("step", Json::Num(s as f64)),
+                    ("loss", Json::Num(m.loss)),
+                    ("ce", Json::Num(m.ce)),
+                    ("penalty", Json::Num(m.penalty)),
+                    ("grad_norm", Json::Num(m.grad_norm)),
+                    ("lr", Json::Num(lr)),
+                    ("attn_frac", Json::arr_f64(&m.attn_frac)),
+                ]));
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let n_layers = self.backend.config().n_layers;
+        let mut attn_frac = vec![0.0; n_layers];
+        for f in &fracs_tail {
+            for (i, v) in f.iter().enumerate() {
+                attn_frac[i] += v / fracs_tail.len() as f64;
+            }
+        }
+        Ok(TrainReport {
+            tag: self.tag.clone(),
+            steps: cfg.steps,
+            final_loss: *losses.last().unwrap_or(&f64::NAN),
+            losses,
+            ce_losses: ces,
+            penalties: pens,
+            attn_frac_first: frac_first,
+            attn_frac,
+            wall_s: wall,
+            tokens_per_s: (cfg.steps * batch * seq) as f64 / wall,
+        })
+    }
+
+    /// Save the backend's current parameters as a DTCK checkpoint.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let ck = self.backend.to_checkpoint()?;
+        ck.save(path)?;
+        println!("[ckpt] saved {} tensors to {}", ck.entries.len(), path.display());
+        Ok(())
+    }
+}
+
+/// The XLA/PJRT training backend: drives `{tag}_train_init` +
+/// `{tag}_train_step` artifacts with parameters and Adam moments
+/// resident as device literals between steps (no host round-trip of the
+/// weights on the hot path).
+#[cfg(feature = "pjrt")]
+pub struct ArtifactTrainer {
+    tag: String,
+    step_exe: std::sync::Arc<crate::runtime::Executable>,
     /// params ++ m ++ v, in manifest flat order, resident as literals.
     state: Vec<xla::Literal>,
     nparams: usize,
+    config: crate::config::ModelConfig,
     /// Sequences per step (from the artifact shape).
     pub batch: usize,
     /// Tokens per sequence (from the artifact shape).
     pub seq: usize,
-    n_layers: usize,
 }
 
-impl Trainer {
+#[cfg(feature = "pjrt")]
+impl ArtifactTrainer {
     /// Initialize from artifacts: runs `{tag}_train_init(seed)`.
-    pub fn new(engine: &Engine, tag: &str, seed: i32) -> Result<Trainer> {
+    pub fn new(
+        engine: &crate::runtime::Engine,
+        tag: &str,
+        seed: i32,
+    ) -> Result<ArtifactTrainer> {
+        use anyhow::Context;
+        use crate::runtime::Tensor;
         let init = engine
             .load(&format!("{tag}_train_init"))
             .with_context(|| format!("load {tag}_train_init"))?;
@@ -81,6 +213,7 @@ impl Trainer {
         let nparams = spec.nparams.context("train_step missing nparams")?;
         let batch = spec.batch.context("train_step missing batch")?;
         let seq = spec.seq.context("train_step missing seq")?;
+        let config = spec.config.clone();
         let state = init.call_literals(&[Tensor::scalar_i32(seed).to_literal()?])?;
         anyhow::ensure!(
             state.len() == 3 * nparams,
@@ -88,15 +221,14 @@ impl Trainer {
             state.len(),
             3 * nparams
         );
-        let n_layers = spec.config.n_layers;
-        Ok(Trainer {
+        Ok(ArtifactTrainer {
             tag: tag.to_string(),
             step_exe,
             state,
             nparams,
+            config,
             batch,
             seq,
-            n_layers,
         })
     }
 
@@ -109,6 +241,7 @@ impl Trainer {
         lr: f64,
         seed: i32,
     ) -> Result<(f64, f64, f64, f64, Vec<f64>)> {
+        use crate::runtime::Tensor;
         anyhow::ensure!(tokens.len() == self.batch * self.seq);
         let tok = Tensor::i32(vec![self.batch, self.seq], tokens.to_vec()).to_literal()?;
         let step_lit = Tensor::scalar_f32(step_no as f32).to_literal()?;
@@ -140,70 +273,15 @@ impl Trainer {
         Ok((loss, ce, pen, gnorm, frac))
     }
 
-    /// Full training loop per `TrainConfig` over `data`.
+    /// Full training loop (convenience: wraps the generic [`Trainer`]).
     pub fn run(
         &mut self,
         cfg: &TrainConfig,
         data: &Dataset,
         log: Option<&JsonlWriter>,
     ) -> Result<TrainReport> {
-        let mut rng = Rng::new(cfg.seed);
-        let t0 = Instant::now();
-        let mut losses = Vec::with_capacity(cfg.steps);
-        let mut ces = Vec::with_capacity(cfg.steps);
-        let mut pens = Vec::with_capacity(cfg.steps);
-        let mut fracs_tail: Vec<Vec<f64>> = Vec::new();
-        let tail_from = cfg.steps - (cfg.steps / 10).max(1);
-        for s in 1..=cfg.steps {
-            let tokens = data.sample_batch(&mut rng, self.batch);
-            let lr = cfg.lr_at(s);
-            let (loss, ce, pen, gnorm, frac) =
-                self.step(&tokens, s, lr, cfg.seed as i32)?;
-            losses.push(loss);
-            ces.push(ce);
-            pens.push(pen);
-            if s >= tail_from {
-                fracs_tail.push(frac.clone());
-            }
-            if s % cfg.log_every == 0 || s == cfg.steps {
-                println!(
-                    "[train {}] step {s}/{} loss {loss:.4} ce {ce:.4} pen {pen:.5} \
-                     gnorm {gnorm:.3} lr {lr:.2e} frac {:?}",
-                    self.tag,
-                    cfg.steps,
-                    frac.iter().map(|f| (f * 100.0).round() / 100.0).collect::<Vec<_>>()
-                );
-            }
-            if let Some(w) = log {
-                w.write(&Json::from_pairs(vec![
-                    ("step", Json::Num(s as f64)),
-                    ("loss", Json::Num(loss)),
-                    ("ce", Json::Num(ce)),
-                    ("penalty", Json::Num(pen)),
-                    ("grad_norm", Json::Num(gnorm)),
-                    ("lr", Json::Num(lr)),
-                    ("attn_frac", Json::arr_f64(&frac)),
-                ]));
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let mut attn_frac = vec![0.0; self.n_layers];
-        for f in &fracs_tail {
-            for (i, v) in f.iter().enumerate() {
-                attn_frac[i] += v / fracs_tail.len() as f64;
-            }
-        }
-        Ok(TrainReport {
-            tag: self.tag.clone(),
-            steps: cfg.steps,
-            final_loss: *losses.last().unwrap_or(&f64::NAN),
-            losses,
-            ce_losses: ces,
-            penalties: pens,
-            attn_frac,
-            wall_s: wall,
-            tokens_per_s: (cfg.steps * self.batch * self.seq) as f64 / wall,
-        })
+        let tag = self.tag.clone();
+        Trainer::new(self, &tag).run(cfg, data, log)
     }
 
     /// The current parameter literals (flat manifest order) — feed these to
@@ -213,19 +291,16 @@ impl Trainer {
     }
 
     /// Clone parameters out (literal deep copy via host roundtrip).
-    pub fn export_params(&self) -> Result<Vec<Tensor>> {
+    pub fn export_params(&self) -> Result<Vec<crate::runtime::Tensor>> {
         self.state[..self.nparams]
             .iter()
-            .map(Tensor::from_literal)
+            .map(crate::runtime::Tensor::from_literal)
             .collect()
     }
 
     /// Save trained parameters to a DTCK checkpoint (manifest-validated).
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
-        let ck = crate::runtime::Checkpoint::from_literals(
-            &self.step_exe.spec.params,
-            &self.state[..self.nparams],
-        )?;
+        let ck = TrainBackend::to_checkpoint(self)?;
         ck.save(path)?;
         println!("[ckpt] saved {} tensors to {}", ck.entries.len(), path.display());
         Ok(())
@@ -244,10 +319,55 @@ impl Trainer {
     }
 }
 
+#[cfg(feature = "pjrt")]
+impl TrainBackend for ArtifactTrainer {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn config(&self) -> &crate::config::ModelConfig {
+        &self.config
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        step: usize,
+        lr: f64,
+        seed: u64,
+    ) -> Result<crate::runtime::TrainMetrics> {
+        let (loss, ce, penalty, grad_norm, attn_frac) =
+            self.step(tokens, step, lr, seed as i32)?;
+        Ok(crate::runtime::TrainMetrics {
+            loss,
+            ce,
+            penalty,
+            grad_norm,
+            attn_frac,
+        })
+    }
+
+    fn to_checkpoint(&self) -> Result<crate::runtime::Checkpoint> {
+        crate::runtime::Checkpoint::from_literals(
+            &self.step_exe.spec.params,
+            &self.state[..self.nparams],
+        )
+    }
+}
+
 /// Load checkpointed parameters as literals for a given artifact's layout
 /// (serving-side handoff: `ServeEngine::new(engine, artifact, params, …)`).
+#[cfg(feature = "pjrt")]
 pub fn load_params_for(
-    engine: &Engine,
+    engine: &crate::runtime::Engine,
     artifact: &str,
     path: &std::path::Path,
 ) -> Result<Vec<xla::Literal>> {

@@ -25,13 +25,16 @@
 //! - [`data`] — synthetic corpora, tiny-corpus loader, batch pipeline.
 //! - [`model`] — host-side analytics: layer layout, FLOPs (Fig. 4) and
 //!   KV-memory (Fig. 6) models.
-//! - [`runtime`] — execution backends: the [`runtime::Backend`] trait,
-//!   the native CPU backend, DTCK checkpoints, and (behind `pjrt`) the
-//!   PJRT artifact registry: load, compile, execute.
+//! - [`runtime`] — execution backends: the [`runtime::Backend`] and
+//!   [`runtime::TrainBackend`] traits, the native CPU backend and
+//!   trainer (hand-derived backward kernels in `cpu/grads.rs`), DTCK
+//!   checkpoints, and (behind `pjrt`) the PJRT artifact registry: load,
+//!   compile, execute.
 //! - [`coordinator`] — the system contribution: the backend-generic
 //!   continuous-batching serving engine ([`coordinator::Server`]) over
-//!   the routing-aware paged KV-cache pool — feature-free, serving on
-//!   the CPU backend today — plus the training orchestrator and the
+//!   the routing-aware paged KV-cache pool and the backend-generic
+//!   training orchestrator ([`coordinator::Trainer`]) — both
+//!   feature-free, running on the CPU backend today — plus the
 //!   artifact-bound serving loop (`pjrt`).
 //! - [`eval`] — perplexity / routing-stats / cosine-probe harnesses;
 //!   [`eval::perplexity_backend`] runs against any [`runtime::Backend`].

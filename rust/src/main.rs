@@ -5,13 +5,21 @@
 //!   demo    --preset xs --variant dtr_bilayer — CPU backend tour:
 //!                                    forward perplexity, routing stats,
 //!                                    greedy/sampled decode
+//!   train   --steps 200 --save ckpt.dtck — native training on the CPU
+//!                                    backend: forward + hand-derived
+//!                                    backward + AdamW + Eq. 7 routing
+//!                                    penalty, fully offline
+//!                                    (DESIGN.md §Native training)
+//!   eval    [--load ckpt.dtck]     — perplexity + routing stats on the
+//!                                    CPU backend (fresh init or a
+//!                                    trained checkpoint)
 //!   serve   --requests 8           — continuous-batching engine on the
 //!                                    CPU backend: synthetic workload,
 //!                                    throughput/latency/KV-page report
 //!                                    (see DESIGN.md §Serving for flags)
-//!   bench   [--test] [--out BENCH_pr3.json] — reproducible perf harness:
-//!                                    fixed-seed forward/decode/serve
-//!                                    scenarios swept across thread
+//!   bench   [--test] [--out BENCH_pr4.json] — reproducible perf harness:
+//!                                    fixed-seed forward/decode/serve/
+//!                                    train scenarios swept across thread
 //!                                    counts (DESIGN.md §Benchmarking)
 //!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
 //!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
@@ -23,29 +31,29 @@
 //!                 either way, only throughput changes)
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
-//!   train   --tag tiny_dtr_bilayer --steps 200 [--corpus markov|text]
-//!   eval    --tag tiny_dtr_bilayer — perplexity + routing stats
+//!   train   --tag tiny_dtr_bilayer — train the fused AOT train_step
+//!                                    artifact instead of the CPU path
+//!   eval    --tag tiny_dtr_bilayer — score the AOT fwd artifact
 //!   serve   --artifact tiny_dtr_bilayer — serve the AOT decode artifact
 //!                                    instead of the CPU backend
 
 use anyhow::{bail, Result};
 
-use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::config::{ModelConfig, TrainConfig, Variant};
 use dtrnet::coordinator::{
-    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, WorkloadSpec,
+    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, Trainer, WorkloadSpec,
 };
 use dtrnet::data::{corpus, Dataset};
+use dtrnet::metrics::JsonlWriter;
 use dtrnet::model::{flops, memory};
-use dtrnet::runtime::{Backend, CpuBackend};
+use dtrnet::runtime::{Backend, CpuBackend, CpuTrainer, TrainBackend};
 use dtrnet::tokenizer::{ByteTokenizer, Tokenizer};
 use dtrnet::util::bench::print_table;
 use dtrnet::util::cli::Args;
 use dtrnet::util::rng::Rng;
 
 #[cfg(feature = "pjrt")]
-use dtrnet::config::TrainConfig;
-#[cfg(feature = "pjrt")]
-use dtrnet::coordinator::Trainer;
+use dtrnet::coordinator::ArtifactTrainer;
 #[cfg(feature = "pjrt")]
 use dtrnet::runtime::Engine;
 
@@ -88,7 +96,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         dtrnet::util::threadpool::available_threads()
     );
     let doc = dtrnet::perf::run(&opts)?;
-    let out = args.get_or("out", "BENCH_pr3.json");
+    let out = args.get_or("out", "BENCH_pr4.json");
     dtrnet::perf::write(std::path::Path::new(out), &doc)?;
     Ok(())
 }
@@ -190,8 +198,143 @@ fn demo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
+/// Native training: one dispatch for both execution paths. The default
+/// trains the CPU backend (works on every build, fully offline);
+/// `--tag <artifact>` opts into the fused AOT train_step path (pjrt
+/// builds only).
 fn train(args: &Args) -> Result<()> {
+    if args.get("tag").is_some() {
+        return train_artifact(args);
+    }
+    let (cfg, variant, seed) = parse_model(args, "tiny")?;
+    let tcfg = TrainConfig {
+        steps: args.get_usize("steps", 200),
+        batch: args.get_usize("batch", 4),
+        seq: args.get_usize("seq", cfg.max_seq.min(128)),
+        peak_lr: args.get_f64("lr", 3e-4),
+        seed,
+        log_every: args.get_usize("log-every", 10),
+        lambda_reg: args.get_f64("lambda", 8e-4),
+        ..Default::default()
+    };
+    let mut backend = CpuTrainer::new(&cfg, &tcfg)?;
+    println!(
+        "backend=cpu model={} variant={} layout={} params={} batch={}x{} steps={} threads={}",
+        cfg.name,
+        variant.as_str(),
+        cfg.layout_string(),
+        cfg.param_count(),
+        tcfg.batch,
+        tcfg.seq,
+        tcfg.steps,
+        backend.threads(),
+    );
+    let data = make_dataset(args, tcfg.seq);
+    let n_windows = data.n_windows();
+    anyhow::ensure!(
+        n_windows >= 4,
+        "corpus yields only {n_windows} windows of {} tokens (need >= 4 for a \
+         train/held-out split) — reduce --seq or use a larger corpus",
+        tcfg.seq
+    );
+    // At least 2 held-out windows: a 1-window split would be degenerate
+    // (Dataset requires strictly more than one window's tokens).
+    let (train_data, eval_data) = data.split((2.5 / n_windows as f64).max(0.1));
+    let label = format!("{}_{}", cfg.name, variant.as_str());
+    let log = match args.get("log") {
+        Some(p) => Some(JsonlWriter::create(std::path::Path::new(p))?),
+        None => None,
+    };
+    let report = {
+        let mut trainer = Trainer::new(&mut backend, &label);
+        let report = trainer.run(&tcfg, &train_data, log.as_ref())?;
+        if let Some(path) = args.get("save") {
+            trainer.save_checkpoint(std::path::Path::new(path))?;
+        }
+        report
+    };
+    println!(
+        "[done] {} final_loss={:.4} tokens/s={:.0} attn_frac {:?} (step-1 {:?})",
+        report.tag, report.final_loss, report.tokens_per_s, report.attn_frac,
+        report.attn_frac_first
+    );
+    if let Some(kt) = backend.kernel_timings() {
+        let ms = |k: &str| {
+            kt.path(&format!("{k}.total_ms")).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        println!(
+            "kernel ms: fwd attn {:.1} mlp {:.1} router {:.1} | bwd attn {:.1} \
+             mlp {:.1} router {:.1} norm {:.1} head {:.1} | optimizer {:.1}",
+            ms("attention"),
+            ms("mlp"),
+            ms("router"),
+            ms("bwd_attention"),
+            ms("bwd_mlp"),
+            ms("bwd_router"),
+            ms("bwd_norm"),
+            ms("bwd_unembed"),
+            ms("optimizer"),
+        );
+    }
+    // Held-out eval through the real train→serve handoff: export the
+    // checkpoint and score it on the serving backend.
+    let ck = backend.to_checkpoint()?;
+    let serve_be = CpuBackend::from_checkpoint(&cfg, &ck)?;
+    let eval_batch = tcfg.batch.min(eval_data.n_windows()).max(1);
+    let r = dtrnet::eval::perplexity_backend(
+        &serve_be,
+        &eval_data,
+        eval_batch,
+        args.get_usize("eval-batches", 4),
+    )?;
+    println!(
+        "[eval] held-out ppl {:.3} over {} tokens; routing {:?}",
+        r.ppl,
+        r.n_tokens,
+        r.routing.fractions()
+    );
+    if args.has("smoke-assert") {
+        smoke_assert(&cfg, &report)?;
+    }
+    Ok(())
+}
+
+/// CI train-smoke gate: the run must have actually learned (loss
+/// decreased) and the DTR routers must have moved off the ceiling,
+/// trending toward the paper's sparse attention fractions.
+fn smoke_assert(cfg: &ModelConfig, report: &dtrnet::coordinator::TrainReport) -> Result<()> {
+    let k = (report.losses.len() / 5).max(1);
+    let first: f64 = report.losses[..k].iter().sum::<f64>() / k as f64;
+    let last: f64 =
+        report.losses[report.losses.len() - k..].iter().sum::<f64>() / k as f64;
+    anyhow::ensure!(
+        last < first,
+        "smoke: loss did not decrease (first-{k} mean {first:.4} -> last-{k} mean {last:.4})"
+    );
+    for (l, kind) in cfg.layout_string().chars().enumerate() {
+        if kind != 'D' {
+            continue;
+        }
+        let tail = report.attn_frac[l];
+        let init = report.attn_frac_first[l];
+        anyhow::ensure!(
+            tail < 0.9,
+            "smoke: layer {l} attention fraction {tail:.3} stayed at the ceiling"
+        );
+        anyhow::ensure!(
+            tail < init + 0.05,
+            "smoke: layer {l} attention fraction rose ({init:.3} -> {tail:.3})"
+        );
+    }
+    println!(
+        "[smoke] OK: loss {first:.4} -> {last:.4}; dtr attention fractions {:?} (from {:?})",
+        report.attn_frac, report.attn_frac_first
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn train_artifact(args: &Args) -> Result<()> {
     let e = engine()?;
     let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
     let tcfg = TrainConfig {
@@ -201,7 +344,7 @@ fn train(args: &Args) -> Result<()> {
         log_every: args.get_usize("log-every", 10),
         ..Default::default()
     };
-    let mut trainer = Trainer::new(&e, &tag, tcfg.seed as i32)?;
+    let mut trainer = ArtifactTrainer::new(&e, &tag, tcfg.seed as i32)?;
     let data = make_dataset(args, trainer.seq);
     let (train_data, eval_data) = data.split(0.1);
     let report = trainer.run(&tcfg, &train_data, None)?;
@@ -227,16 +370,48 @@ fn train(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn train(_args: &Args) -> Result<()> {
+fn train_artifact(_args: &Args) -> Result<()> {
     bail!(
-        "`train` drives AOT train_step artifacts and needs the `pjrt` build \
-         (cargo build --features pjrt, with the xla crate available); \
-         try `dtrnet demo` for the native CPU path"
+        "`train --tag` drives AOT train_step artifacts and needs the `pjrt` \
+         build; omit --tag to train natively on the CPU backend"
     )
 }
 
-#[cfg(feature = "pjrt")]
+/// Perplexity + routing stats: one dispatch for both execution paths.
+/// The default scores the CPU backend (fresh init, or `--load ckpt.dtck`
+/// for trained weights); `--tag <artifact>` opts into the AOT fwd
+/// artifact path (pjrt builds only).
 fn eval(args: &Args) -> Result<()> {
+    if args.get("tag").is_some() {
+        return eval_artifact(args);
+    }
+    let (cfg, variant, seed) = parse_model(args, "tiny")?;
+    let backend = if let Some(path) = args.get("load") {
+        let ck = dtrnet::runtime::Checkpoint::load(std::path::Path::new(path))?;
+        CpuBackend::from_checkpoint(&cfg, &ck)?
+    } else {
+        CpuBackend::init(&cfg, seed)?
+    };
+    let data = make_dataset(args, args.get_usize("seq", cfg.max_seq.min(128)));
+    let r = dtrnet::eval::perplexity_backend(
+        &backend,
+        &data,
+        args.get_usize("batch", 2),
+        args.get_usize("batches", 4),
+    )?;
+    println!(
+        "backend=cpu model={} variant={} ppl {:.3} over {} tokens; attention fractions {:?}",
+        cfg.name,
+        variant.as_str(),
+        r.ppl,
+        r.n_tokens,
+        r.routing.fractions()
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn eval_artifact(args: &Args) -> Result<()> {
     let e = engine()?;
     let tag = args.get_or("tag", "tiny_dtr_bilayer").to_string();
     let fwd = e
@@ -265,10 +440,10 @@ fn eval(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn eval(_args: &Args) -> Result<()> {
+fn eval_artifact(_args: &Args) -> Result<()> {
     bail!(
-        "`eval` scores AOT fwd artifacts and needs the `pjrt` build; \
-         use `dtrnet demo` to evaluate the native CPU backend"
+        "`eval --tag` scores AOT fwd artifacts and needs the `pjrt` build; \
+         omit --tag to evaluate the native CPU backend"
     )
 }
 

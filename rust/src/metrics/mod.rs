@@ -125,6 +125,20 @@ pub struct KernelTimers {
     pub mlp: Timer,
     /// Final norm + `[·, V]` unembed matmul.
     pub unembed: Timer,
+    /// Backward: RMSNorm (both sublayer norms + the output norm).
+    pub bwd_norm: Timer,
+    /// Backward: router softmax head + its two matmuls.
+    pub bwd_router: Timer,
+    /// Backward: attention (softmax dQ/dK/dV), RoPE transpose,
+    /// projection matmuls, and the bypass path.
+    pub bwd_attention: Timer,
+    /// Backward: SwiGLU MLP.
+    pub bwd_mlp: Timer,
+    /// Backward: cross-entropy head + unembed matmuls + embedding
+    /// scatter.
+    pub bwd_unembed: Timer,
+    /// AdamW moment/parameter update (incl. global-norm clip).
+    pub optimizer: Timer,
 }
 
 impl KernelTimers {
@@ -147,7 +161,7 @@ impl KernelTimers {
         }
     }
 
-    fn sections(&self) -> [(&'static str, &Timer); 6] {
+    fn sections(&self) -> [(&'static str, &Timer); 12] {
         [
             ("norm", &self.norm),
             ("router", &self.router),
@@ -155,6 +169,12 @@ impl KernelTimers {
             ("bypass", &self.bypass),
             ("mlp", &self.mlp),
             ("unembed", &self.unembed),
+            ("bwd_norm", &self.bwd_norm),
+            ("bwd_router", &self.bwd_router),
+            ("bwd_attention", &self.bwd_attention),
+            ("bwd_mlp", &self.bwd_mlp),
+            ("bwd_unembed", &self.bwd_unembed),
+            ("optimizer", &self.optimizer),
         ]
     }
 }

@@ -1,11 +1,11 @@
 //! Reproducible performance harness — the `dtrnet bench` subcommand.
 //!
 //! Runs a fixed set of fixed-seed scenarios (training-shape forward,
-//! autoregressive decode, the continuous-batching serving engine) across
-//! a sweep of kernel-thread counts, and emits one machine-readable JSON
-//! document (`BENCH_pr3.json` at the repo root by convention — the
-//! recorded perf trajectory every future PR diffs against). See
-//! DESIGN.md §Benchmarking for the schema and methodology.
+//! autoregressive decode, native training steps, the continuous-batching
+//! serving engine) across a sweep of kernel-thread counts, and emits one
+//! machine-readable JSON document (`BENCH_pr4.json` at the repo root by
+//! convention — the recorded perf trajectory every future PR diffs
+//! against). See DESIGN.md §Benchmarking for the schema and methodology.
 //!
 //! Two properties make the numbers comparable across PRs:
 //!
@@ -20,14 +20,15 @@
 //!   loudly instead of recording tainted numbers.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::config::{ModelConfig, Variant};
+use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::{
     generate_workload, PrefillMode, Server, ServerConfig, WorkloadSpec,
 };
-use crate::runtime::{Backend, CpuBackend, Tensor};
+use crate::runtime::{Backend, CpuBackend, CpuTrainer, Tensor, TrainBackend};
 use crate::util::bench::bench;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -77,6 +78,8 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         scenarios.set(&fwd_key, fwd);
         let (dec_key, dec) = decode_scenario(opts, variant)?;
         scenarios.set(&dec_key, dec);
+        let (tr_key, tr) = train_scenario(opts, variant)?;
+        scenarios.set(&tr_key, tr);
         for &slots in serve_slot_fills(opts.quick) {
             let (key, s) = serve_scenario(opts, variant, slots)?;
             scenarios.set(&key, s);
@@ -224,6 +227,77 @@ fn decode_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Jso
     Ok((key, sc))
 }
 
+/// Native training throughput (optimizer steps/s over the fused
+/// forward + backward + AdamW step) per thread count, with a bitwise
+/// check of the final weights and loss across the sweep — the
+/// `train_step` determinism contract, re-verified on every bench run.
+/// Per-kernel timings include the backward sections (`bwd_*`,
+/// `optimizer`).
+fn train_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let steps = if opts.quick { 3usize } else { 8 };
+    let hp = TrainConfig {
+        steps,
+        batch: 2,
+        seq: if opts.quick { 32 } else { 64 },
+        seed: MODEL_SEED,
+        ..Default::default()
+    };
+    let key = format!("train_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let mut baseline: Option<(u64, Vec<f32>)> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let cfg = ModelConfig::preset(preset(opts.quick), variant);
+        let mut tr = CpuTrainer::new(&cfg, &hp)?;
+        tr.set_threads(t);
+        let tokens: Vec<i32> = (0..(hp.batch * hp.seq) as i32).map(|i| i * 7 % 256).collect();
+        let t0 = Instant::now();
+        let mut last_loss = f64::NAN;
+        for s in 1..=steps {
+            last_loss = tr.train_step(&tokens, s, 3e-4, 0)?.loss;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let weights_cat: Vec<f32> = tr
+            .weights()
+            .tensors()
+            .into_iter()
+            .flat_map(|(w, _)| w.iter().copied())
+            .collect();
+        match &baseline {
+            None => baseline = Some((last_loss.to_bits(), weights_cat)),
+            Some((lb, wb)) => {
+                ensure!(
+                    *lb == last_loss.to_bits(),
+                    "{key}: loss bits diverged between threads=1 and threads={t}"
+                );
+                ensure!(
+                    *wb == weights_cat,
+                    "{key}: trained weights diverged between threads=1 and threads={t}"
+                );
+            }
+        }
+        let tps = (steps * hp.batch * hp.seq) as f64 / wall;
+        tok_s.push(tps);
+        let mut row = Json::from_pairs(vec![
+            ("steps_per_s", Json::Num(steps as f64 / wall)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("mean_step_ms", Json::Num(wall * 1e3 / steps as f64)),
+            ("final_loss", Json::Num(last_loss)),
+        ]);
+        if let Some(kt) = tr.kernel_timings() {
+            row.set("kernel_timings", kt);
+        }
+        sc.set(&format!("t{t}"), row);
+        println!(
+            "[bench] {key} threads={t}: {:.2} steps/s ({:.1} tok/s)",
+            steps as f64 / wall,
+            tps
+        );
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
 /// The serving engine end-to-end at a given batch width: tokens/s,
 /// latency/TTFT percentiles, occupancy, per-kernel timings — plus the
 /// bitwise token-stream check across the thread sweep.
@@ -328,6 +402,8 @@ mod tests {
             "forward_dense",
             "forward_dtr_bilayer",
             "decode_dense",
+            "train_dense",
+            "train_dtr_bilayer",
             "serve_dtr_bilayer_s2",
         ] {
             let s = sc
@@ -343,5 +419,10 @@ mod tests {
         let serve = sc.path("serve_dense_s2.t1").unwrap();
         assert!(serve.path("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(serve.path("kernel_timings.total_ms").is_some());
+        // the train scenario must record the backward-kernel sections
+        let train = sc.path("train_dtr_bilayer.t1").unwrap();
+        assert!(train.path("steps_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(train.path("kernel_timings.bwd_attention.total_ms").is_some());
+        assert!(train.path("kernel_timings.optimizer.total_ms").is_some());
     }
 }

@@ -1,0 +1,542 @@
+//! Hand-derived backward passes for the native CPU kernels — the
+//! gradient half of the offline training path (`runtime::train`).
+//!
+//! Every forward kernel in [`super::kernels`] has its reverse-mode
+//! counterpart here: matmul (both operand gradients), RMSNorm, RoPE
+//! (transposed rotation), causal dense/routed attention (through the
+//! saved softmax probabilities), SwiGLU, the DTR router (softmax-of-two
+//! head), the softmax cross-entropy head, and the embedding
+//! gather/scatter. The layer-level orchestration (activation stack,
+//! straight-through path select, Eq. 7 penalty, AdamW) lives in
+//! [`crate::runtime::train`]; this module is pure kernels.
+//!
+//! # Determinism contract
+//!
+//! Same discipline as the forward kernels (DESIGN.md §Parallel CPU
+//! execution): work is only ever split into **data-disjoint output
+//! chunks** on the [`Pool`], and every per-element float accumulation
+//! keeps a fixed serial order (ascending contraction index). Gradient
+//! reductions that cross rows — `dW = Xᵀ·dY`, attention `dK`/`dV`, the
+//! RMSNorm gain gradient — are parallelized over the *output* rows, each
+//! accumulated in ascending input-row order by exactly one chunk, so
+//! `train_step` is bit-identical for every thread count
+//! (property-tested in `rust/tests/properties_backend.rs`; the math is
+//! held to finite differences in `rust/tests/grad_check.rs`).
+
+use crate::util::threadpool::Pool;
+
+use super::kernels::{self, dot, silu};
+
+/// Derivative of SiLU: `d/dx [x·σ(x)] = σ(x)·(1 + x·(1 − σ(x)))`.
+#[inline]
+pub fn dsilu(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// `dst[i] += src[i]` over `pool` (row-disjoint chunks; used to merge
+/// gradient contributions without allocating).
+pub fn axpy(pool: &Pool, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let grain = kernels::PAR_CHUNK_FLOPS.max(1);
+    pool.run_rows(dst, 1, grain, |i0, rows| {
+        for (t, d) in rows.iter_mut().enumerate() {
+            *d += src[i0 + t];
+        }
+    });
+}
+
+/// Gradient of `Y = A·B` w.r.t. `A`: `dA [n,k] = dY [n,m] · Bᵀ [m,k]`.
+/// Row-parallel over `dA` rows; each element is one ascending-`j` dot.
+pub fn matmul_bwd_a(pool: &Pool, dy: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * m);
+    debug_assert_eq!(b.len(), k * m);
+    let mut da = vec![0.0f32; n * k];
+    let grain = (kernels::PAR_CHUNK_FLOPS / (k * m).max(1)).max(1);
+    pool.run_rows(&mut da, k, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(k).enumerate() {
+            let dyrow = &dy[(row0 + r) * m..(row0 + r + 1) * m];
+            for (kk, o) in orow.iter_mut().enumerate() {
+                *o = dot(dyrow, &b[kk * m..(kk + 1) * m]);
+            }
+        }
+    });
+    da
+}
+
+/// Gradient of `Y = A·B` w.r.t. `B`: `dB [k,m] = Aᵀ [k,n] · dY [n,m]`.
+/// Row-parallel over `dB` rows (= columns of `A`); each output row
+/// accumulates `a[i,kk]·dy[i,:]` in ascending `i` order within exactly
+/// one chunk, so the cross-row reduction is bit-deterministic.
+pub fn matmul_bwd_b(pool: &Pool, a: &[f32], dy: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(dy.len(), n * m);
+    let mut db = vec![0.0f32; k * m];
+    let grain = (kernels::PAR_CHUNK_FLOPS / (n * m).max(1)).max(1);
+    pool.run_rows(&mut db, m, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(m).enumerate() {
+            let kk = row0 + r;
+            for i in 0..n {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let dyrow = &dy[i * m..(i + 1) * m];
+                for (o, &dv) in orow.iter_mut().zip(dyrow) {
+                    *o += av * dv;
+                }
+            }
+        }
+    });
+    db
+}
+
+/// Backward of [`kernels::rmsnorm`]: given `x [n,d]`, gain `w [d]` and
+/// upstream `dy [n,d]`, returns `(dx [n,d], dw [d])`.
+///
+/// With `inv = 1/sqrt(mean(x²)+eps)` (per row):
+/// `dx_j = inv·w_j·dy_j − x_j·inv³/d · Σ_t dy_t·w_t·x_t`,
+/// `dw_j = Σ_rows dy_j·x_j·inv`.
+pub fn rmsnorm_bwd(
+    pool: &Pool,
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    eps: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = w.len();
+    let n = x.len() / d;
+    debug_assert_eq!(dy.len(), n * d);
+    // Per-row inverse RMS, reused by both output passes.
+    let mut inv = vec![0.0f32; n];
+    let grain = (kernels::PAR_CHUNK_FLOPS / (3 * d).max(1)).max(4);
+    pool.run_rows(&mut inv, 1, grain, |row0, rows| {
+        for (r, o) in rows.iter_mut().enumerate() {
+            let row = &x[(row0 + r) * d..(row0 + r + 1) * d];
+            let var: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            *o = 1.0 / (var + eps).sqrt();
+        }
+    });
+    let mut dx = vec![0.0f32; n * d];
+    pool.run_rows(&mut dx, d, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(d).enumerate() {
+            let i = row0 + r;
+            let xrow = &x[i * d..(i + 1) * d];
+            let dyrow = &dy[i * d..(i + 1) * d];
+            let iv = inv[i];
+            let mut s = 0.0f32;
+            for j in 0..d {
+                s += dyrow[j] * w[j] * xrow[j];
+            }
+            let c = iv * iv * iv * s / d as f32;
+            for j in 0..d {
+                orow[j] = iv * w[j] * dyrow[j] - xrow[j] * c;
+            }
+        }
+    });
+    // Gain gradient: one output element per column, ascending-row sum.
+    let mut dw = vec![0.0f32; d];
+    let wgrain = (kernels::PAR_CHUNK_FLOPS / (2 * n).max(1)).max(4);
+    pool.run_rows(&mut dw, 1, wgrain, |col0, cols| {
+        for (t, o) in cols.iter_mut().enumerate() {
+            let j = col0 + t;
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                acc += dy[i * d + j] * x[i * d + j] * inv[i];
+            }
+            *o = acc;
+        }
+    });
+    (dx, dw)
+}
+
+/// Backward of [`kernels::rope`]: the rotation is orthogonal per
+/// `(j, j+half)` pair, so the gradient is the transposed rotation —
+/// `dx1 = dy1·cos + dy2·sin`, `dx2 = −dy1·sin + dy2·cos`. Same
+/// row-parallel layout as the forward kernel.
+pub fn rope_bwd(
+    pool: &Pool,
+    dy: &[f32],
+    positions: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+    theta: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * h * hd);
+    debug_assert_eq!(positions.len(), n);
+    let half = hd / 2;
+    let freqs: Vec<f32> = (0..half)
+        .map(|j| 1.0 / theta.powf(j as f32 / half as f32))
+        .collect();
+    let width = h * hd;
+    let mut out = vec![0.0f32; n * width];
+    let grain = (kernels::PAR_CHUNK_FLOPS / (16 * width).max(1)).max(2);
+    pool.run_rows(&mut out, width, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(width).enumerate() {
+            let i = row0 + r;
+            for head in 0..h {
+                let base = (i * h + head) * hd;
+                let obase = head * hd;
+                for j in 0..half {
+                    let angle = positions[i] * freqs[j];
+                    let (sin, cos) = angle.sin_cos();
+                    let d1 = dy[base + j];
+                    let d2 = dy[base + half + j];
+                    orow[obase + j] = d1 * cos + d2 * sin;
+                    orow[obase + half + j] = -d1 * sin + d2 * cos;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Training-path forward of [`kernels::routed_attention`]: same output,
+/// but additionally materializes the softmax probabilities
+/// `probs [n, h, n]` (`probs[(i·h+head)·n + j]`, zero where masked or
+/// `j > i`) that the backward pass consumes. Two row-parallel passes
+/// (probabilities, then the value-weighted sum), both query-row
+/// disjoint.
+pub fn routed_attention_probs(
+    pool: &Pool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    delta: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let width = h * hd;
+    let mut probs = vec![0.0f32; n * h * n];
+    let per_row = n.div_ceil(2).max(1) * width * 2;
+    let grain = (kernels::PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
+    pool.run_rows(&mut probs, h * n, grain, |i0, rows| {
+        for (r, prow_all) in rows.chunks_mut(h * n).enumerate() {
+            let i = i0 + r;
+            for head in 0..h {
+                let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
+                let prow = &mut prow_all[head * n..head * n + i + 1];
+                for (j, lg) in prow.iter_mut().enumerate() {
+                    let allowed = j == i || (delta[i] > 0.5 && delta[j] > 0.5);
+                    *lg = if allowed {
+                        let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
+                        dot(qi, kj) * scale
+                    } else {
+                        kernels::NEG_INF
+                    };
+                }
+                let m = prow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for lg in prow.iter_mut() {
+                    *lg = (*lg - m).exp();
+                    z += *lg;
+                }
+                for lg in prow.iter_mut() {
+                    *lg /= z;
+                }
+            }
+        }
+    });
+    let mut out = vec![0.0f32; n * width];
+    pool.run_rows(&mut out, width, grain, |i0, rows| {
+        for (r, orow_all) in rows.chunks_mut(width).enumerate() {
+            let i = i0 + r;
+            for head in 0..h {
+                let prow = &probs[(i * h + head) * n..(i * h + head) * n + i + 1];
+                let orow = &mut orow_all[head * hd..(head + 1) * hd];
+                for (j, &w) in prow.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vj) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    });
+    (out, probs)
+}
+
+/// Backward of causal (dense or routed) attention through saved `probs`
+/// (from [`routed_attention_probs`]): given upstream `dout [n,h,hd]`,
+/// returns `(dq, dk, dv)` each `[n,h,hd]`.
+///
+/// With `p = softmax(l)` and `dp_{ij} = dout_i·v_j`:
+/// `dl_{ij} = p_{ij}·(dp_{ij} − Σ_t p_{it}·dp_{it})`, then
+/// `dq_i = Σ_j dl_{ij}·k_j·scale`, `dk_j = Σ_i dl_{ij}·q_i·scale`,
+/// `dv_j = Σ_i p_{ij}·dout_i`. The mask needs no special handling —
+/// masked pairs have `p = 0` and contribute nothing. `dq` is
+/// query-row-parallel; `dk`/`dv` are key-row-parallel with ascending-`i`
+/// accumulation (each output row owned by one chunk).
+pub fn routed_attention_bwd(
+    pool: &Pool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    dout: &[f32],
+    n: usize,
+    h: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let width = h * hd;
+    debug_assert_eq!(probs.len(), n * h * n);
+    debug_assert_eq!(dout.len(), n * width);
+    let per_row = n.div_ceil(2).max(1) * width * 2;
+    let grain = (kernels::PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
+
+    // Σ_t p_{it}·dp_{it} per (query row, head) — the softmax row dot.
+    let mut rowdot = vec![0.0f32; n * h];
+    pool.run_rows(&mut rowdot, h, grain, |i0, rows| {
+        for (r, orow) in rows.chunks_mut(h).enumerate() {
+            let i = i0 + r;
+            for head in 0..h {
+                let di = &dout[(i * h + head) * hd..(i * h + head + 1) * hd];
+                let prow = &probs[(i * h + head) * n..(i * h + head) * n + i + 1];
+                let mut acc = 0.0f32;
+                for (j, &p) in prow.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    acc += p * dot(di, vj);
+                }
+                orow[head] = acc;
+            }
+        }
+    });
+
+    let mut dq = vec![0.0f32; n * width];
+    pool.run_rows(&mut dq, width, grain, |i0, rows| {
+        for (r, orow_all) in rows.chunks_mut(width).enumerate() {
+            let i = i0 + r;
+            for head in 0..h {
+                let di = &dout[(i * h + head) * hd..(i * h + head + 1) * hd];
+                let prow = &probs[(i * h + head) * n..(i * h + head) * n + i + 1];
+                let rd = rowdot[i * h + head];
+                let orow = &mut orow_all[head * hd..(head + 1) * hd];
+                for (j, &p) in prow.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    let dl = p * (dot(di, vj) - rd) * scale;
+                    let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    for (o, &kv) in orow.iter_mut().zip(kj) {
+                        *o += dl * kv;
+                    }
+                }
+            }
+        }
+    });
+
+    let mut dk = vec![0.0f32; n * width];
+    pool.run_rows(&mut dk, width, grain, |j0, rows| {
+        for (r, orow_all) in rows.chunks_mut(width).enumerate() {
+            let j = j0 + r;
+            for head in 0..h {
+                let orow = &mut orow_all[head * hd..(head + 1) * hd];
+                for i in j..n {
+                    let p = probs[(i * h + head) * n + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let di = &dout[(i * h + head) * hd..(i * h + head + 1) * hd];
+                    let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
+                    let dl = p * (dot(di, vj) - rowdot[i * h + head]) * scale;
+                    let qi = &q[(i * h + head) * hd..(i * h + head + 1) * hd];
+                    for (o, &qv) in orow.iter_mut().zip(qi) {
+                        *o += dl * qv;
+                    }
+                }
+            }
+        }
+    });
+
+    let mut dv = vec![0.0f32; n * width];
+    pool.run_rows(&mut dv, width, grain, |j0, rows| {
+        for (r, orow_all) in rows.chunks_mut(width).enumerate() {
+            let j = j0 + r;
+            for head in 0..h {
+                let orow = &mut orow_all[head * hd..(head + 1) * hd];
+                for i in j..n {
+                    let p = probs[(i * h + head) * n + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let di = &dout[(i * h + head) * hd..(i * h + head + 1) * hd];
+                    for (o, &dd) in orow.iter_mut().zip(di) {
+                        *o += p * dd;
+                    }
+                }
+            }
+        }
+    });
+    (dq, dk, dv)
+}
+
+/// Gradients of the SwiGLU MLP `y = (SiLU(x·Wg) ⊙ (x·Wu))·Wd` given the
+/// saved forward intermediates (`gate_pre = x·Wg`, `up = x·Wu`,
+/// `hmid = SiLU(gate_pre)⊙up`). Returns `(dx, dWg, dWu, dWd)`.
+#[allow(clippy::too_many_arguments)]
+pub fn swiglu_bwd(
+    pool: &Pool,
+    x: &[f32],
+    w_gate: &[f32],
+    w_up: &[f32],
+    w_down: &[f32],
+    gate_pre: &[f32],
+    up: &[f32],
+    hmid: &[f32],
+    dy: &[f32],
+    n: usize,
+    d: usize,
+    ff: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let dwd = matmul_bwd_b(pool, hmid, dy, n, ff, d);
+    let dhmid = matmul_bwd_a(pool, dy, w_down, n, ff, d);
+    // d_up = dhmid ⊙ SiLU(gate_pre); d_gate_pre = dhmid ⊙ up ⊙ SiLU'(gate_pre)
+    let mut dup = vec![0.0f32; n * ff];
+    let grain = (kernels::PAR_CHUNK_FLOPS / (8 * ff).max(1)).max(2);
+    pool.run_rows(&mut dup, ff, grain, |row0, rows| {
+        let base = row0 * ff;
+        for (t, o) in rows.iter_mut().enumerate() {
+            *o = dhmid[base + t] * silu(gate_pre[base + t]);
+        }
+    });
+    let mut dgate = vec![0.0f32; n * ff];
+    pool.run_rows(&mut dgate, ff, grain, |row0, rows| {
+        let base = row0 * ff;
+        for (t, o) in rows.iter_mut().enumerate() {
+            *o = dhmid[base + t] * up[base + t] * dsilu(gate_pre[base + t]);
+        }
+    });
+    let dwg = matmul_bwd_b(pool, x, &dgate, n, d, ff);
+    let dwu = matmul_bwd_b(pool, x, &dup, n, d, ff);
+    let mut dx = matmul_bwd_a(pool, &dgate, w_gate, n, d, ff);
+    let dx_up = matmul_bwd_a(pool, &dup, w_up, n, d, ff);
+    axpy(pool, &mut dx, &dx_up);
+    (dx, dwg, dwu, dwd)
+}
+
+/// Backward of the DTR router (ref.router Eq. 1):
+/// `g = softmax(SiLU(u·W1)·W2)` row-wise over 2 logits. Recomputes the
+/// hidden activations, applies the softmax Jacobian
+/// `dz_c = g_c·(dg_c − Σ_t dg_t·g_t)`, and chains through both matmuls.
+/// Returns `(du, dW1, dW2)`.
+pub fn router_bwd(
+    pool: &Pool,
+    u: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    g: &[f32],
+    dg: &[f32],
+    n: usize,
+    d: usize,
+    dh: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), n * 2);
+    debug_assert_eq!(dg.len(), n * 2);
+    let hp = kernels::matmul_par(pool, u, w1, n, d, dh);
+    let mut hh = hp.clone();
+    let grain = (kernels::PAR_CHUNK_FLOPS / (8 * dh).max(1)).max(4);
+    pool.run_rows(&mut hh, dh, grain, |_, rows| {
+        for v in rows.iter_mut() {
+            *v = silu(*v);
+        }
+    });
+    // Softmax Jacobian over the 2-way head (rows are independent).
+    let mut dz = vec![0.0f32; n * 2];
+    pool.run_rows(&mut dz, 2, 64, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(2).enumerate() {
+            let i = row0 + r;
+            let s = dg[i * 2] * g[i * 2] + dg[i * 2 + 1] * g[i * 2 + 1];
+            orow[0] = g[i * 2] * (dg[i * 2] - s);
+            orow[1] = g[i * 2 + 1] * (dg[i * 2 + 1] - s);
+        }
+    });
+    let dw2 = matmul_bwd_b(pool, &hh, &dz, n, dh, 2);
+    let dhh = matmul_bwd_a(pool, &dz, w2, n, dh, 2);
+    let mut dhp = vec![0.0f32; n * dh];
+    pool.run_rows(&mut dhp, dh, grain, |row0, rows| {
+        let base = row0 * dh;
+        for (t, o) in rows.iter_mut().enumerate() {
+            *o = dhh[base + t] * dsilu(hp[base + t]);
+        }
+    });
+    let dw1 = matmul_bwd_b(pool, u, &dhp, n, d, dh);
+    let du = matmul_bwd_a(pool, &dhp, w1, n, d, dh);
+    (du, dw1, dw2)
+}
+
+/// Next-token cross-entropy over one sequence's logits `[n, V]`
+/// (position `t` predicts `tokens[t+1]`), accumulated in f64. Returns
+/// the *sum* of per-position losses (the caller divides by the batch
+/// target count).
+pub fn xent_loss_sum(logits: &[f32], tokens: &[i32], n: usize, v: usize) -> f64 {
+    let mut total = 0.0f64;
+    for t in 1..n {
+        let row = &logits[(t - 1) * v..t * v];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln() + m as f64;
+        total += logz - row[tokens[t] as usize] as f64;
+    }
+    total
+}
+
+/// Gradient of the mean next-token cross-entropy w.r.t. one sequence's
+/// logits `[n, V]`: `dlogits[t−1] = (softmax(logits[t−1]) − onehot) /
+/// count` for `t in 1..n` (`count` = total scored positions across the
+/// batch); the last row gets zero. Row-parallel (rows independent).
+pub fn xent_bwd(
+    pool: &Pool,
+    logits: &[f32],
+    tokens: &[i32],
+    count: usize,
+    n: usize,
+    v: usize,
+) -> Vec<f32> {
+    let mut dlogits = vec![0.0f32; n * v];
+    let inv = 1.0 / count as f32;
+    let grain = (kernels::PAR_CHUNK_FLOPS / (4 * v).max(1)).max(1);
+    pool.run_rows(&mut dlogits, v, grain, |row0, rows| {
+        for (r, orow) in rows.chunks_mut(v).enumerate() {
+            let t = row0 + r;
+            if t + 1 >= n {
+                continue; // final position predicts nothing
+            }
+            let row = &logits[t * v..(t + 1) * v];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                *o = (x - m).exp();
+                z += *o;
+            }
+            for o in orow.iter_mut() {
+                *o = *o / z * inv;
+            }
+            orow[tokens[t + 1] as usize] -= inv;
+        }
+    });
+    dlogits
+}
+
+/// Backward of the embedding gather: scatter-add each token's stream
+/// gradient row into its embedding row. Serial by construction — rows
+/// repeat when a token recurs, so the accumulation order (ascending
+/// position) is part of the determinism contract.
+pub fn embedding_bwd(d_embed: &mut [f32], tokens: &[i32], dx: &[f32], d: usize) {
+    for (t, &tok) in tokens.iter().enumerate() {
+        let row = &dx[t * d..(t + 1) * d];
+        let dst = &mut d_embed[tok as usize * d..(tok as usize + 1) * d];
+        for (o, &g) in dst.iter_mut().zip(row) {
+            *o += g;
+        }
+    }
+}

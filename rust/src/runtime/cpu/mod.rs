@@ -27,6 +27,7 @@
 //! Per-kernel wall-clock goes to a [`KernelTimers`] readable through
 //! [`Backend::kernel_timings`].
 
+pub mod grads;
 pub mod kernels;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -97,6 +98,180 @@ pub struct ModelWeights {
     pub out_norm: Vec<f32>,  // [d]
     /// Per-layer weights, in layer order.
     pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    /// A zero-filled parameter set with `cfg`'s shapes — the gradient /
+    /// Adam-moment accumulator layout used by the native trainer.
+    pub fn zeros_like(cfg: &ModelConfig) -> ModelWeights {
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let layers = cfg
+            .layer_kinds()
+            .into_iter()
+            .map(|kind| {
+                let routed = kind == LayerKind::Dtr;
+                LayerWeights {
+                    kind,
+                    norm1: vec![0.0; d],
+                    norm2: vec![0.0; d],
+                    wq: vec![0.0; d * d],
+                    wk: vec![0.0; d * d],
+                    wv: vec![0.0; d * d],
+                    wo: vec![0.0; d * d],
+                    w_gate: vec![0.0; d * ff],
+                    w_up: vec![0.0; d * ff],
+                    w_down: vec![0.0; ff * d],
+                    r_w1: if routed { vec![0.0; d * (d / 2)] } else { Vec::new() },
+                    r_w2: if routed { vec![0.0; (d / 2) * 2] } else { Vec::new() },
+                }
+            })
+            .collect();
+        ModelWeights {
+            tok_embed: vec![0.0; v * d],
+            unembed: vec![0.0; d * v],
+            out_norm: vec![0.0; d],
+            layers,
+        }
+    }
+
+    /// Every tensor in a fixed canonical order, with its "is a matrix"
+    /// flag (rank ≥ 2 — the AdamW weight-decay criterion; norm gains are
+    /// exempt). [`ModelWeights::tensors_mut`] yields the same order, so
+    /// params/grads/moments zip positionally.
+    pub fn tensors(&self) -> Vec<(&Vec<f32>, bool)> {
+        let mut out: Vec<(&Vec<f32>, bool)> = vec![
+            (&self.tok_embed, true),
+            (&self.unembed, true),
+            (&self.out_norm, false),
+        ];
+        for lw in &self.layers {
+            out.push((&lw.norm1, false));
+            out.push((&lw.norm2, false));
+            out.push((&lw.wq, true));
+            out.push((&lw.wk, true));
+            out.push((&lw.wv, true));
+            out.push((&lw.wo, true));
+            out.push((&lw.w_gate, true));
+            out.push((&lw.w_up, true));
+            out.push((&lw.w_down, true));
+            out.push((&lw.r_w1, true));
+            out.push((&lw.r_w2, true));
+        }
+        out
+    }
+
+    /// Mutable view of [`ModelWeights::tensors`], same order.
+    pub fn tensors_mut(&mut self) -> Vec<(&mut Vec<f32>, bool)> {
+        let mut out: Vec<(&mut Vec<f32>, bool)> = vec![
+            (&mut self.tok_embed, true),
+            (&mut self.unembed, true),
+            (&mut self.out_norm, false),
+        ];
+        for lw in self.layers.iter_mut() {
+            let LayerWeights {
+                norm1,
+                norm2,
+                wq,
+                wk,
+                wv,
+                wo,
+                w_gate,
+                w_up,
+                w_down,
+                r_w1,
+                r_w2,
+                ..
+            } = lw;
+            out.push((norm1, false));
+            out.push((norm2, false));
+            out.push((wq, true));
+            out.push((wk, true));
+            out.push((wv, true));
+            out.push((wo, true));
+            out.push((w_gate, true));
+            out.push((w_up, true));
+            out.push((w_down, true));
+            out.push((r_w1, true));
+            out.push((r_w2, true));
+        }
+        out
+    }
+}
+
+/// Seeded LLaMA-style random initialization (N(0, 0.02), output
+/// projections scaled by 1/sqrt(2L), norms at one), shared by
+/// [`CpuBackend::init`] and the native trainer
+/// ([`crate::runtime::train::CpuTrainer`]) so `demo`/`serve` at seed `s`
+/// and `train` at seed `s` start from the same bits.
+pub fn init_weights(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+    let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+    let std = 0.02f32;
+    let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+    let mut rng = Rng::new(seed ^ 0xD7121517);
+    let mut mat = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    };
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    let kinds = cfg.layer_kinds();
+    let tok_embed = mat(v * d, std);
+    let unembed = mat(d * v, std);
+    for kind in kinds {
+        let routed = kind == LayerKind::Dtr;
+        layers.push(LayerWeights {
+            kind,
+            norm1: vec![1.0; d],
+            norm2: vec![1.0; d],
+            wq: mat(d * d, std),
+            wk: mat(d * d, std),
+            wv: mat(d * d, std),
+            wo: mat(d * d, out_std),
+            w_gate: mat(d * ff, std),
+            w_up: mat(d * ff, std),
+            w_down: mat(ff * d, out_std),
+            r_w1: if routed { mat(d * (d / 2), std) } else { Vec::new() },
+            r_w2: if routed { mat((d / 2) * 2, std) } else { Vec::new() },
+        });
+    }
+    ModelWeights {
+        tok_embed,
+        unembed,
+        out_norm: vec![1.0; d],
+        layers,
+    }
+}
+
+/// Export `weights` as a DTCK checkpoint under the Python
+/// `flatten_params` naming/order contract — shared by
+/// [`CpuBackend::to_checkpoint`] and the native trainer.
+pub fn weights_to_checkpoint(cfg: &ModelConfig, weights: &ModelWeights) -> Checkpoint {
+    let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+    let mut ck = Checkpoint::new();
+    ck.push("tok_embed", Tensor::f32(vec![v, d], weights.tok_embed.clone()));
+    ck.push("unembed", Tensor::f32(vec![d, v], weights.unembed.clone()));
+    ck.push("out_norm", Tensor::f32(vec![d], weights.out_norm.clone()));
+    for (i, lw) in weights.layers.iter().enumerate() {
+        // sorted key order within a layer (flatten_params contract)
+        let mut entries: Vec<(&str, Vec<usize>, &Vec<f32>)> = vec![
+            ("norm1", vec![d], &lw.norm1),
+            ("norm2", vec![d], &lw.norm2),
+            ("w_down", vec![ff, d], &lw.w_down),
+            ("w_gate", vec![d, ff], &lw.w_gate),
+            ("w_up", vec![d, ff], &lw.w_up),
+            ("wk", vec![d, d], &lw.wk),
+            ("wo", vec![d, d], &lw.wo),
+            ("wq", vec![d, d], &lw.wq),
+            ("wv", vec![d, d], &lw.wv),
+        ];
+        if lw.kind == LayerKind::Dtr {
+            entries.push(("r_w1", vec![d, d / 2], &lw.r_w1));
+            entries.push(("r_w2", vec![d / 2, 2], &lw.r_w2));
+        }
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        for (name, shape, data) in entries {
+            ck.push(format!("layers.{i}.{name}"), Tensor::f32(shape, data.clone()));
+        }
+    }
+    ck
 }
 
 /// The native CPU execution backend.
@@ -206,8 +381,8 @@ impl CpuBackend {
             "CPU backend supports dense/dtr_* variants, not {:?} (MoD/D-LLM are PJRT-only)",
             cfg.variant
         );
+        cfg.validate()?;
         let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
-        ensure!(d % cfg.n_heads == 0, "d_model must divide by n_heads");
         ensure!(weights.tok_embed.len() == v * d, "tok_embed shape");
         ensure!(weights.unembed.len() == d * v, "unembed shape");
         ensure!(weights.out_norm.len() == d, "out_norm shape");
@@ -273,41 +448,7 @@ impl CpuBackend {
     /// assert_eq!(out.attn_frac.len(), cfg.n_layers);
     /// ```
     pub fn init(cfg: &ModelConfig, seed: u64) -> Result<CpuBackend> {
-        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
-        let std = 0.02f32;
-        let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
-        let mut rng = Rng::new(seed ^ 0xD7121517);
-        let mut mat = |n: usize, s: f32| -> Vec<f32> {
-            (0..n).map(|_| rng.normal() as f32 * s).collect()
-        };
-        let mut layers = Vec::with_capacity(cfg.n_layers);
-        let kinds = cfg.layer_kinds();
-        let tok_embed = mat(v * d, std);
-        let unembed = mat(d * v, std);
-        for kind in kinds {
-            let routed = kind == LayerKind::Dtr;
-            layers.push(LayerWeights {
-                kind,
-                norm1: vec![1.0; d],
-                norm2: vec![1.0; d],
-                wq: mat(d * d, std),
-                wk: mat(d * d, std),
-                wv: mat(d * d, std),
-                wo: mat(d * d, out_std),
-                w_gate: mat(d * ff, std),
-                w_up: mat(d * ff, std),
-                w_down: mat(ff * d, out_std),
-                r_w1: if routed { mat(d * (d / 2), std) } else { Vec::new() },
-                r_w2: if routed { mat((d / 2) * 2, std) } else { Vec::new() },
-            });
-        }
-        let weights = ModelWeights {
-            tok_embed,
-            unembed,
-            out_norm: vec![1.0; d],
-            layers,
-        };
-        CpuBackend::new(cfg.clone(), weights, RouterMode::TokenChoice)
+        CpuBackend::new(cfg.clone(), init_weights(cfg, seed), RouterMode::TokenChoice)
     }
 
     /// Switch between token-choice and expert-choice routing.
@@ -347,34 +488,7 @@ impl CpuBackend {
     /// Export weights as a DTCK checkpoint using the Python
     /// `flatten_params` naming/order contract.
     pub fn to_checkpoint(&self) -> Checkpoint {
-        let (d, ff, v) = (self.cfg.d_model, self.cfg.d_ff, self.cfg.vocab_size);
-        let mut ck = Checkpoint::new();
-        ck.push("tok_embed", Tensor::f32(vec![v, d], self.weights.tok_embed.clone()));
-        ck.push("unembed", Tensor::f32(vec![d, v], self.weights.unembed.clone()));
-        ck.push("out_norm", Tensor::f32(vec![d], self.weights.out_norm.clone()));
-        for (i, lw) in self.weights.layers.iter().enumerate() {
-            // sorted key order within a layer (flatten_params contract)
-            let mut entries: Vec<(&str, Vec<usize>, &Vec<f32>)> = vec![
-                ("norm1", vec![d], &lw.norm1),
-                ("norm2", vec![d], &lw.norm2),
-                ("w_down", vec![ff, d], &lw.w_down),
-                ("w_gate", vec![d, ff], &lw.w_gate),
-                ("w_up", vec![d, ff], &lw.w_up),
-                ("wk", vec![d, d], &lw.wk),
-                ("wo", vec![d, d], &lw.wo),
-                ("wq", vec![d, d], &lw.wq),
-                ("wv", vec![d, d], &lw.wv),
-            ];
-            if lw.kind == LayerKind::Dtr {
-                entries.push(("r_w1", vec![d, d / 2], &lw.r_w1));
-                entries.push(("r_w2", vec![d / 2, 2], &lw.r_w2));
-            }
-            entries.sort_by(|a, b| a.0.cmp(b.0));
-            for (name, shape, data) in entries {
-                ck.push(format!("layers.{i}.{name}"), Tensor::f32(shape, data.clone()));
-            }
-        }
-        ck
+        weights_to_checkpoint(&self.cfg, &self.weights)
     }
 
     /// Load weights from a DTCK checkpoint (names per `flatten_params`).

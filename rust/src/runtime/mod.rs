@@ -13,6 +13,11 @@
 //! * [`manifest`] — the artifact contract with `aot.py` (feature-free:
 //!   shapes/layouts are plain host data).
 //! * [`checkpoint`] — DTCK parameter persistence, shared by both backends.
+//! * [`train`] — the [`TrainBackend`] trait (one optimizer step:
+//!   forward + backward + AdamW) and the native [`CpuTrainer`], with
+//!   hand-derived backward kernels in [`cpu::grads`]. The coordinator's
+//!   training loop drives this trait; the PJRT `train_step` artifact
+//!   path is retrofitted behind it in `coordinator::trainer`.
 
 pub mod backend;
 pub mod checkpoint;
@@ -21,6 +26,7 @@ pub mod cpu;
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
+pub mod train;
 
 pub use backend::{Backend, DecodeState, ForwardOutput, GenerateOutput, StepOutput};
 pub use checkpoint::Checkpoint;
@@ -29,3 +35,4 @@ pub use cpu::{CpuBackend, RouterMode};
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use tensor::Tensor;
+pub use train::{CpuTrainer, TrainBackend, TrainMetrics};

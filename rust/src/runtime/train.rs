@@ -1,0 +1,774 @@
+//! Backend-generic training: the [`TrainBackend`] trait and the native
+//! CPU implementation ([`CpuTrainer`]).
+//!
+//! The L3 orchestrator ([`crate::coordinator::Trainer`]) owns the cosine
+//! LR schedule, data batching and logging; a `TrainBackend` owns one
+//! optimizer step: forward, backward, AdamW. Two implementations:
+//!
+//! * [`CpuTrainer`] — pure Rust, always available. Forward mirrors
+//!   `python/compile/model.py` train semantics (identical to the
+//!   inference path — soft-score weighting, hard token-choice routing);
+//!   backward is the hand-derived kernels in
+//!   [`crate::runtime::cpu::grads`]; the loss, penalty and AdamW
+//!   constants mirror `python/compile/train.py` (CE + Eq. 7 routing
+//!   penalty, global-norm clip, decoupled weight decay on matrices).
+//! * The PJRT artifact path (`pjrt` feature) — retrofitted behind the
+//!   same trait in `coordinator::trainer` (`ArtifactTrainer`), driving
+//!   the fused `{tag}_train_step` HLO executable.
+//!
+//! # Loss (mirrors `model.loss_fn` / `train.train_step`)
+//!
+//! `loss = CE + λ·Σ_l α_l·mean_i(g_attn)_{l,i}` over DTR layers, where
+//! `α_l = stopgrad(f_l / Σ f)` is the per-layer routed-load weight
+//! (`f_l` = mean hard routing decision). The hard decision `δ` is a
+//! straight-through estimator: it selects the path but receives no
+//! gradient — gradients reach the router only through the soft scale
+//! (`g_attn` on the attention path, `g_bypass` on the bypass) and the
+//! penalty.
+//!
+//! # Determinism
+//!
+//! `train_step` is **bit-identical for every thread count**: all kernels
+//! follow the disjoint-chunk/fixed-accumulation-order discipline
+//! (DESIGN.md §Parallel CPU execution), cross-sequence gradient
+//! accumulation is serial in batch order, and scalar reductions (loss,
+//! global norm) are serial f64. `rust/tests/properties_backend.rs` pins
+//! this bitwise; `rust/tests/grad_check.rs` holds every gradient to
+//! finite differences.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{LayerKind, ModelConfig, TrainConfig, Variant};
+use crate::metrics::KernelTimers;
+use crate::util::json::Json;
+use crate::util::threadpool::{self, Pool};
+
+use super::checkpoint::Checkpoint;
+use super::cpu::{
+    grads, init_weights, kernels, weights_to_checkpoint, CpuBackend, ModelWeights, RouterMode,
+    RMSNORM_EPS, ROPE_THETA,
+};
+
+/// Scalar outcomes of one optimizer step (the `train_step` artifact's
+/// metric tuple).
+#[derive(Debug, Clone)]
+pub struct TrainMetrics {
+    /// Total loss (`ce + penalty`).
+    pub loss: f64,
+    /// Cross-entropy component (nats/token).
+    pub ce: f64,
+    /// Routing-penalty component (Eq. 7, already λ-scaled).
+    pub penalty: f64,
+    /// Pre-clip global gradient norm.
+    pub grad_norm: f64,
+    /// `[L]` mean fraction of tokens routed through attention this step.
+    pub attn_frac: Vec<f64>,
+}
+
+/// An execution backend for training: owns parameters and optimizer
+/// state between steps; the coordinator drives it step by step.
+pub trait TrainBackend {
+    /// Human-readable backend name (for logs/reports).
+    fn name(&self) -> &'static str;
+
+    /// The model configuration being trained.
+    fn config(&self) -> &ModelConfig;
+
+    /// Sequences per step this backend was built for.
+    fn batch(&self) -> usize;
+
+    /// Tokens per sequence this backend was built for.
+    fn seq(&self) -> usize;
+
+    /// One optimizer step on `tokens` (`[batch*seq]` i32 row-major).
+    /// `step` is 1-based (Adam bias correction), `lr` comes from the
+    /// coordinator's schedule, `seed` feeds any stochastic layer (unused
+    /// by the deterministic CPU path; the D-LLM artifact samples with it).
+    fn train_step(&mut self, tokens: &[i32], step: usize, lr: f64, seed: u64)
+        -> Result<TrainMetrics>;
+
+    /// Export the current parameters as a DTCK checkpoint (the
+    /// `flatten_params` naming contract — loadable by every serving
+    /// path).
+    fn to_checkpoint(&self) -> Result<Checkpoint>;
+
+    /// Per-kernel wall-clock snapshot, if this backend records one
+    /// (the [`KernelTimers`] JSON schema). Default: `None`.
+    fn kernel_timings(&self) -> Option<Json> {
+        None
+    }
+}
+
+/// Saved per-layer forward activations for one sequence (what the
+/// backward pass consumes).
+struct LayerActs {
+    x_in: Vec<f32>,     // [n, d] residual stream entering the layer
+    u: Vec<f32>,        // [n, d] norm1 output
+    g: Vec<f32>,        // [n, 2] router scores (empty on dense layers)
+    delta: Vec<f32>,    // [n] hard routing decision (ones on dense)
+    qr: Vec<f32>,       // [n, d] RoPE'd queries
+    kr: Vec<f32>,       // [n, d] RoPE'd keys
+    v: Vec<f32>,        // [n, d] values (also the bypass input)
+    probs: Vec<f32>,    // [n, h, n] attention softmax probabilities
+    ctx: Vec<f32>,      // [n, d] attention context (pre-Wo)
+    attn_out: Vec<f32>, // [n, d] attention output (post-Wo)
+    byp: Vec<f32>,      // [n, d] linear bypass v·Wo (empty on dense)
+    x_mid: Vec<f32>,    // [n, d] stream after the token-mixing residual
+    h2: Vec<f32>,       // [n, d] norm2 output
+    gate_pre: Vec<f32>, // [n, ff]
+    up: Vec<f32>,       // [n, ff]
+    hmid: Vec<f32>,     // [n, ff] SiLU(gate)·up
+}
+
+/// Saved forward state for one sequence.
+struct SeqActs {
+    layers: Vec<LayerActs>,
+    x_final: Vec<f32>, // [n, d]
+    xn: Vec<f32>,      // [n, d] out_norm output
+    logits: Vec<f32>,  // [n, V]
+}
+
+/// The native CPU training backend: parameters, Adam moments, and a
+/// fused forward/backward/AdamW step over the threadpool kernels.
+pub struct CpuTrainer {
+    cfg: ModelConfig,
+    hp: TrainConfig,
+    weights: ModelWeights,
+    opt_m: ModelWeights,
+    opt_v: ModelWeights,
+    pool: Pool,
+    timers: KernelTimers,
+}
+
+impl CpuTrainer {
+    /// Build a trainer from a model config and training hyperparameters.
+    /// Parameters are seeded from `hp.seed` with the same init as
+    /// [`CpuBackend::init`], so training continues exactly the model
+    /// `demo`/`serve` would have started from at that seed.
+    pub fn new(cfg: &ModelConfig, hp: &TrainConfig) -> Result<CpuTrainer> {
+        cfg.validate()?;
+        ensure!(
+            cfg.variant == Variant::Dense || cfg.variant.is_dtr(),
+            "CPU trainer supports dense/dtr_* variants, not {:?} (MoD/D-LLM are PJRT-only)",
+            cfg.variant
+        );
+        ensure!(hp.batch >= 1, "train batch must be >= 1");
+        ensure!(hp.seq >= 2, "train seq must be >= 2 (position t predicts t+1)");
+        Ok(CpuTrainer {
+            cfg: cfg.clone(),
+            hp: hp.clone(),
+            weights: init_weights(cfg, hp.seed),
+            opt_m: ModelWeights::zeros_like(cfg),
+            opt_v: ModelWeights::zeros_like(cfg),
+            pool: threadpool::global().clone(),
+            timers: KernelTimers::default(),
+        })
+    }
+
+    /// Run kernels on an explicit pool (thread count is a throughput
+    /// knob only — `train_step` is bit-identical for every pool size).
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
+    }
+
+    /// Convenience for [`CpuTrainer::set_pool`]: a fresh pool of `n`
+    /// threads (`1` = the serial determinism baseline).
+    pub fn set_threads(&mut self, n: usize) {
+        self.pool = Pool::with_threads(n);
+    }
+
+    /// Kernel-thread concurrency this trainer currently runs with.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Per-kernel wall-clock accounting (forward, backward and optimizer
+    /// sections).
+    pub fn timers(&self) -> &KernelTimers {
+        &self.timers
+    }
+
+    /// The current parameters (gradient-check and test access).
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    /// Mutable parameter access — used by the finite-difference gradient
+    /// checks to perturb single weights; not part of the training loop.
+    pub fn weights_mut(&mut self) -> &mut ModelWeights {
+        &mut self.weights
+    }
+
+    /// Snapshot the current parameters into a serving backend (the
+    /// in-process version of the checkpoint round-trip).
+    pub fn to_backend(&self) -> Result<CpuBackend> {
+        CpuBackend::new(self.cfg.clone(), self.weights.clone(), RouterMode::TokenChoice)
+    }
+
+    /// Composite loss and parameter gradients on one `[batch*seq]` token
+    /// block, without touching optimizer state. Public for the
+    /// finite-difference gradient checks; [`TrainBackend::train_step`]
+    /// is the training entry point.
+    pub fn loss_grads(&self, tokens: &[i32]) -> Result<(f64, ModelWeights)> {
+        let (loss, _, _, grads, _) = self.loss_grads_full(tokens)?;
+        Ok((loss, grads))
+    }
+
+    /// Forward + backward over the whole batch: returns
+    /// `(loss, ce, penalty, grads, attn_frac)`.
+    fn loss_grads_full(
+        &self,
+        tokens: &[i32],
+    ) -> Result<(f64, f64, f64, ModelWeights, Vec<f64>)> {
+        let cfg = &self.cfg;
+        let (b, n) = (self.hp.batch, self.hp.seq);
+        let vocab = cfg.vocab_size;
+        let n_layers = cfg.n_layers;
+        ensure!(
+            tokens.len() == b * n,
+            "train_step expects {}x{} = {} tokens, got {}",
+            b,
+            n,
+            b * n,
+            tokens.len()
+        );
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+
+        // ---- phase 1: forward every sequence, saving activations ----
+        let mut acts_all = Vec::with_capacity(b);
+        let mut route_sum = vec![0.0f64; n_layers];
+        let mut g_sum = vec![0.0f64; n_layers];
+        let mut ce_total = 0.0f64;
+        let count = b * (n - 1);
+        for bi in 0..b {
+            let toks = &tokens[bi * n..(bi + 1) * n];
+            let acts = self.forward_acts(toks);
+            // Loss evaluation is forward-head work — keep it out of the
+            // bwd_* buckets so the fwd/bwd timing split stays honest.
+            ce_total += self
+                .timers
+                .unembed
+                .time(|| grads::xent_loss_sum(&acts.logits, toks, n, vocab));
+            for (li, la) in acts.layers.iter().enumerate() {
+                route_sum[li] += la.delta.iter().map(|&r| r as f64).sum::<f64>();
+                g_sum[li] += if la.g.is_empty() {
+                    n as f64 // dense layers: g_attn ≡ 1
+                } else {
+                    (0..n).map(|i| la.g[i * 2] as f64).sum::<f64>()
+                };
+            }
+            acts_all.push(acts);
+        }
+        let ce = ce_total / count as f64;
+
+        // Eq. 7 penalty: alpha = stopgrad(f / sum f) over DTR layers.
+        let kinds = cfg.layer_kinds();
+        let route_mean: Vec<f64> = route_sum.iter().map(|&s| s / (b * n) as f64).collect();
+        let g_mean: Vec<f64> = g_sum.iter().map(|&s| s / (b * n) as f64).collect();
+        let f_sum: f64 = (0..n_layers)
+            .filter(|&l| kinds[l] == LayerKind::Dtr)
+            .map(|l| route_mean[l])
+            .sum();
+        let alpha: Vec<f64> = (0..n_layers)
+            .map(|l| {
+                if kinds[l] == LayerKind::Dtr {
+                    route_mean[l] / (f_sum + 1e-9)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let pen: f64 = self.hp.lambda_reg
+            * (0..n_layers)
+                .filter(|&l| kinds[l] == LayerKind::Dtr)
+                .map(|l| alpha[l] * g_mean[l])
+                .sum::<f64>();
+        let loss = ce + pen;
+
+        // ---- phase 2: backward per sequence, serial batch order ----
+        let mut gacc = ModelWeights::zeros_like(cfg);
+        for bi in 0..b {
+            let toks = &tokens[bi * n..(bi + 1) * n];
+            self.backward_acts(toks, &acts_all[bi], count, &alpha, &mut gacc);
+        }
+        Ok((loss, ce, pen, gacc, route_mean))
+    }
+
+    /// Forward one sequence, saving every activation the backward pass
+    /// needs. Identical math to [`CpuBackend`]'s forward path (the
+    /// attention kernel additionally materializes its softmax rows).
+    fn forward_acts(&self, toks: &[i32]) -> SeqActs {
+        let cfg = &self.cfg;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = toks.len();
+        let pool = &self.pool;
+        let positions: Vec<f32> = (0..n).map(|i| i as f32).collect();
+
+        let mut x = Vec::with_capacity(n * d);
+        for &t in toks {
+            let t = t as usize;
+            x.extend_from_slice(&self.weights.tok_embed[t * d..(t + 1) * d]);
+        }
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for lw in &self.weights.layers {
+            let x_in = x.clone();
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
+            let (g, delta) = if lw.kind == LayerKind::Dtr {
+                let g = self
+                    .timers
+                    .router
+                    .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
+                let delta = if cfg.variant == Variant::DtrSkip {
+                    vec![0.0f32; n]
+                } else {
+                    kernels::route_decision(&g)
+                };
+                (g, delta)
+            } else {
+                (Vec::new(), vec![1.0f32; n])
+            };
+            let (qr, kr, v, probs, ctx, attn_out) = self.timers.attention.time(|| {
+                let (qr, kr, v) = kernels::qkv_rope_par(
+                    pool, &u, &lw.wq, &lw.wk, &lw.wv, &positions, n, d, heads, ROPE_THETA,
+                );
+                let (ctx, probs) =
+                    grads::routed_attention_probs(pool, &qr, &kr, &v, &delta, n, heads, hd);
+                let attn_out = kernels::matmul_par(pool, &ctx, &lw.wo, n, d, d);
+                (qr, kr, v, probs, ctx, attn_out)
+            });
+            let byp = if lw.kind == LayerKind::Dtr {
+                self.timers
+                    .bypass
+                    .time(|| kernels::matmul_par(pool, &v, &lw.wo, n, d, d))
+            } else {
+                Vec::new()
+            };
+            // Soft-score path select + residual (straight-through δ).
+            if lw.kind == LayerKind::Dtr {
+                for i in 0..n {
+                    let (w, src) = if delta[i] > 0.5 {
+                        (g[i * 2], &attn_out)
+                    } else {
+                        (g[i * 2 + 1], &byp)
+                    };
+                    for j in 0..d {
+                        x[i * d + j] += w * src[i * d + j];
+                    }
+                }
+            } else {
+                for (xv, av) in x.iter_mut().zip(&attn_out) {
+                    *xv += av;
+                }
+            }
+            let x_mid = x.clone();
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let (gate_pre, up, hmid, mlp) = self.timers.mlp.time(|| {
+                let gate_pre = kernels::matmul_par(pool, &h2, &lw.w_gate, n, d, ff);
+                let up = kernels::matmul_par(pool, &h2, &lw.w_up, n, d, ff);
+                let mut hmid = gate_pre.clone();
+                let grain = (kernels::PAR_CHUNK_FLOPS / 8).max(16);
+                pool.run_rows(&mut hmid, 1, grain, |i0, rows| {
+                    for (t, o) in rows.iter_mut().enumerate() {
+                        *o = kernels::silu(*o) * up[i0 + t];
+                    }
+                });
+                let mlp = kernels::matmul_par(pool, &hmid, &lw.w_down, n, ff, d);
+                (gate_pre, up, hmid, mlp)
+            });
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+            layers.push(LayerActs {
+                x_in,
+                u,
+                g,
+                delta,
+                qr,
+                kr,
+                v,
+                probs,
+                ctx,
+                attn_out,
+                byp,
+                x_mid,
+                h2,
+                gate_pre,
+                up,
+                hmid,
+            });
+        }
+        let x_final = x.clone();
+        let (xn, logits) = self.timers.unembed.time(|| {
+            let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+            let logits = kernels::matmul_par(pool, &xn, &self.weights.unembed, n, d, vocab);
+            (xn, logits)
+        });
+        SeqActs {
+            layers,
+            x_final,
+            xn,
+            logits,
+        }
+    }
+
+    /// Reverse-mode pass for one sequence, accumulating into `gacc`.
+    /// `count` is the batch-wide CE target count; `alpha` the stop-grad
+    /// penalty load weights.
+    fn backward_acts(
+        &self,
+        toks: &[i32],
+        acts: &SeqActs,
+        count: usize,
+        alpha: &[f64],
+        gacc: &mut ModelWeights,
+    ) {
+        let cfg = &self.cfg;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = toks.len();
+        let b = self.hp.batch;
+        let pool = &self.pool;
+        let positions: Vec<f32> = (0..n).map(|i| i as f32).collect();
+
+        // CE head + unembed + out_norm.
+        let mut dx = self.timers.bwd_unembed.time(|| {
+            let dlogits = grads::xent_bwd(pool, &acts.logits, toks, count, n, vocab);
+            let dun = grads::matmul_bwd_b(pool, &acts.xn, &dlogits, n, d, vocab);
+            grads::axpy(pool, &mut gacc.unembed, &dun);
+            grads::matmul_bwd_a(pool, &dlogits, &self.weights.unembed, n, d, vocab)
+        });
+        {
+            let (dx2, dwn) = self.timers.bwd_norm.time(|| {
+                grads::rmsnorm_bwd(pool, &acts.x_final, &self.weights.out_norm, &dx, RMSNORM_EPS)
+            });
+            grads::axpy(pool, &mut gacc.out_norm, &dwn);
+            dx = dx2;
+        }
+
+        for li in (0..cfg.n_layers).rev() {
+            let lw = &self.weights.layers[li];
+            let a = &acts.layers[li];
+            let is_dtr = lw.kind == LayerKind::Dtr;
+
+            // MLP sublayer: x_out = x_mid + SwiGLU(norm2(x_mid)).
+            let (dh2, dwg, dwu, dwd) = self.timers.bwd_mlp.time(|| {
+                grads::swiglu_bwd(
+                    pool, &a.h2, &lw.w_gate, &lw.w_up, &lw.w_down, &a.gate_pre, &a.up, &a.hmid,
+                    &dx, n, d, ff,
+                )
+            });
+            {
+                let gl = &mut gacc.layers[li];
+                grads::axpy(pool, &mut gl.w_gate, &dwg);
+                grads::axpy(pool, &mut gl.w_up, &dwu);
+                grads::axpy(pool, &mut gl.w_down, &dwd);
+            }
+            let (dxm_norm, dn2) = self
+                .timers
+                .bwd_norm
+                .time(|| grads::rmsnorm_bwd(pool, &a.x_mid, &lw.norm2, &dh2, RMSNORM_EPS));
+            grads::axpy(pool, &mut gacc.layers[li].norm2, &dn2);
+            let mut dx_mid = dx;
+            grads::axpy(pool, &mut dx_mid, &dxm_norm);
+
+            // Token-mixing sublayer: x_mid = x_in + mixed.
+            // Straight-through select: δ is constant; gradients reach g
+            // only through the soft scale of the taken path (+ penalty).
+            let mut dg = vec![0.0f32; if is_dtr { n * 2 } else { 0 }];
+            let (dctx, dv_byp) = self.timers.bwd_attention.time(|| {
+                if is_dtr {
+                    let mut dattn = vec![0.0f32; n * d];
+                    let mut dbyp = vec![0.0f32; n * d];
+                    for i in 0..n {
+                        let dm = &dx_mid[i * d..(i + 1) * d];
+                        if a.delta[i] > 0.5 {
+                            dg[i * 2] = kernels::dot(dm, &a.attn_out[i * d..(i + 1) * d]);
+                            let w = a.g[i * 2];
+                            for (o, &v) in dattn[i * d..(i + 1) * d].iter_mut().zip(dm) {
+                                *o = w * v;
+                            }
+                        } else {
+                            dg[i * 2 + 1] = kernels::dot(dm, &a.byp[i * d..(i + 1) * d]);
+                            let w = a.g[i * 2 + 1];
+                            for (o, &v) in dbyp[i * d..(i + 1) * d].iter_mut().zip(dm) {
+                                *o = w * v;
+                            }
+                        }
+                    }
+                    // Eq. 7 penalty: d pen / d g_attn_i = λ·α_l / (B·n).
+                    let pgrad = (self.hp.lambda_reg * alpha[li] / (b * n) as f64) as f32;
+                    for i in 0..n {
+                        dg[i * 2] += pgrad;
+                    }
+                    let dctx = grads::matmul_bwd_a(pool, &dattn, &lw.wo, n, d, d);
+                    let dwo = grads::matmul_bwd_b(pool, &a.ctx, &dattn, n, d, d);
+                    grads::axpy(pool, &mut gacc.layers[li].wo, &dwo);
+                    let dv_byp = grads::matmul_bwd_a(pool, &dbyp, &lw.wo, n, d, d);
+                    let dwo2 = grads::matmul_bwd_b(pool, &a.v, &dbyp, n, d, d);
+                    grads::axpy(pool, &mut gacc.layers[li].wo, &dwo2);
+                    (dctx, Some(dv_byp))
+                } else {
+                    let dctx = grads::matmul_bwd_a(pool, &dx_mid, &lw.wo, n, d, d);
+                    let dwo = grads::matmul_bwd_b(pool, &a.ctx, &dx_mid, n, d, d);
+                    grads::axpy(pool, &mut gacc.layers[li].wo, &dwo);
+                    (dctx, None)
+                }
+            });
+
+            // Attention → RoPE → projections.
+            let du = self.timers.bwd_attention.time(|| {
+                let (dqr, dkr, mut dv) = grads::routed_attention_bwd(
+                    pool, &a.qr, &a.kr, &a.v, &a.probs, &dctx, n, heads, hd,
+                );
+                if let Some(dvb) = &dv_byp {
+                    grads::axpy(pool, &mut dv, dvb);
+                }
+                let dq = grads::rope_bwd(pool, &dqr, &positions, n, heads, hd, ROPE_THETA);
+                let dk = grads::rope_bwd(pool, &dkr, &positions, n, heads, hd, ROPE_THETA);
+                let gl = &mut gacc.layers[li];
+                let dwq = grads::matmul_bwd_b(pool, &a.u, &dq, n, d, d);
+                grads::axpy(pool, &mut gl.wq, &dwq);
+                let dwk = grads::matmul_bwd_b(pool, &a.u, &dk, n, d, d);
+                grads::axpy(pool, &mut gl.wk, &dwk);
+                let dwv = grads::matmul_bwd_b(pool, &a.u, &dv, n, d, d);
+                grads::axpy(pool, &mut gl.wv, &dwv);
+                let mut du = grads::matmul_bwd_a(pool, &dq, &lw.wq, n, d, d);
+                let du_k = grads::matmul_bwd_a(pool, &dk, &lw.wk, n, d, d);
+                grads::axpy(pool, &mut du, &du_k);
+                let du_v = grads::matmul_bwd_a(pool, &dv, &lw.wv, n, d, d);
+                grads::axpy(pool, &mut du, &du_v);
+                du
+            });
+            let mut du = du;
+            if is_dtr {
+                let (du_r, dr1, dr2) = self.timers.bwd_router.time(|| {
+                    grads::router_bwd(pool, &a.u, &lw.r_w1, &lw.r_w2, &a.g, &dg, n, d, d / 2)
+                });
+                grads::axpy(pool, &mut du, &du_r);
+                let gl = &mut gacc.layers[li];
+                grads::axpy(pool, &mut gl.r_w1, &dr1);
+                grads::axpy(pool, &mut gl.r_w2, &dr2);
+            }
+            let (dx_norm, dn1) = self
+                .timers
+                .bwd_norm
+                .time(|| grads::rmsnorm_bwd(pool, &a.x_in, &lw.norm1, &du, RMSNORM_EPS));
+            grads::axpy(pool, &mut gacc.layers[li].norm1, &dn1);
+            dx = dx_mid;
+            grads::axpy(pool, &mut dx, &dx_norm);
+        }
+
+        self.timers
+            .bwd_unembed
+            .time(|| grads::embedding_bwd(&mut gacc.tok_embed, toks, &dx, d));
+    }
+}
+
+impl TrainBackend for CpuTrainer {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn batch(&self) -> usize {
+        self.hp.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.hp.seq
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        step: usize,
+        lr: f64,
+        _seed: u64,
+    ) -> Result<TrainMetrics> {
+        ensure!(step >= 1, "step is 1-based (Adam bias correction)");
+        let (loss, ce, pen, gacc, attn_frac) = self.loss_grads_full(tokens)?;
+
+        self.timers.optimizer.time(|| {
+            // Pre-clip global norm (serial f64 — part of the determinism
+            // contract), then the train.py clip-and-AdamW update.
+            let gn = {
+                let mut ss = 0.0f64;
+                for (t, _) in gacc.tensors() {
+                    for &x in t.iter() {
+                        ss += x as f64 * x as f64;
+                    }
+                }
+                ss.sqrt()
+            };
+            let scale = (self.hp.grad_clip / (gn + 1e-12)).min(1.0) as f32;
+            let b1 = self.hp.beta1 as f32;
+            let b2 = self.hp.beta2 as f32;
+            let eps = self.hp.adam_eps as f32;
+            let wd = self.hp.weight_decay as f32;
+            let lrf = lr as f32;
+            let b1c = 1.0 - b1.powi(step as i32);
+            let b2c = 1.0 - b2.powi(step as i32);
+            let pool = self.pool.clone();
+            let grain = (kernels::PAR_CHUNK_FLOPS / 8).max(64);
+            let pts = self.weights.tensors_mut();
+            let mts = self.opt_m.tensors_mut();
+            let vts = self.opt_v.tensors_mut();
+            let gts = gacc.tensors();
+            for ((pw, mw), (vw, gw)) in
+                pts.into_iter().zip(mts).zip(vts.into_iter().zip(gts))
+            {
+                let (p, is_mat) = pw;
+                let (m, _) = mw;
+                let (v, _) = vw;
+                let (g, _) = gw;
+                // m ← β1·m + (1−β1)·g̃ ;  v ← β2·v + (1−β2)·g̃²
+                pool.run_rows(m, 1, grain, |i0, rows| {
+                    for (t, mv) in rows.iter_mut().enumerate() {
+                        *mv = b1 * *mv + (1.0 - b1) * (g[i0 + t] * scale);
+                    }
+                });
+                pool.run_rows(v, 1, grain, |i0, rows| {
+                    for (t, vv) in rows.iter_mut().enumerate() {
+                        let gs = g[i0 + t] * scale;
+                        *vv = b2 * *vv + (1.0 - b2) * gs * gs;
+                    }
+                });
+                let wdp = if is_mat { wd } else { 0.0 };
+                let m_ro: &[f32] = m;
+                let v_ro: &[f32] = v;
+                pool.run_rows(p, 1, grain, |i0, rows| {
+                    for (t, pv) in rows.iter_mut().enumerate() {
+                        let mhat = m_ro[i0 + t] / b1c;
+                        let vhat = v_ro[i0 + t] / b2c;
+                        let p0 = *pv;
+                        *pv = p0 - lrf * (mhat / (vhat.sqrt() + eps) + wdp * p0);
+                    }
+                });
+            }
+            Ok(TrainMetrics {
+                loss,
+                ce,
+                penalty: pen,
+                grad_norm: gn,
+                attn_frac,
+            })
+        })
+    }
+
+    fn to_checkpoint(&self) -> Result<Checkpoint> {
+        Ok(weights_to_checkpoint(&self.cfg, &self.weights))
+    }
+
+    fn kernel_timings(&self) -> Option<Json> {
+        Some(self.timers.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Backend;
+    use crate::runtime::Tensor;
+
+    fn tiny_cfg() -> (ModelConfig, TrainConfig) {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let hp = TrainConfig {
+            steps: 4,
+            batch: 2,
+            seq: 12,
+            ..Default::default()
+        };
+        (cfg, hp)
+    }
+
+    fn toks(hp: &TrainConfig, vocab: usize, seed: u64) -> Vec<i32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..hp.batch * hp.seq).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    #[test]
+    fn train_step_runs_and_reports_finite_metrics() {
+        let (cfg, hp) = tiny_cfg();
+        let mut tr = CpuTrainer::new(&cfg, &hp).unwrap();
+        let tokens = toks(&hp, cfg.vocab_size, 1);
+        let m = tr.train_step(&tokens, 1, 1e-3, 0).unwrap();
+        assert!(m.loss.is_finite() && m.ce.is_finite() && m.penalty.is_finite());
+        assert!(m.grad_norm > 0.0);
+        assert_eq!(m.attn_frac.len(), cfg.n_layers);
+        // dense layers (first/last) always route everything
+        assert_eq!(m.attn_frac[0], 1.0);
+        assert_eq!(m.attn_frac[cfg.n_layers - 1], 1.0);
+    }
+
+    #[test]
+    fn rejects_wrong_token_count_and_bad_tokens() {
+        let (cfg, hp) = tiny_cfg();
+        let mut tr = CpuTrainer::new(&cfg, &hp).unwrap();
+        assert!(tr.train_step(&[1, 2, 3], 1, 1e-3, 0).is_err());
+        let mut tokens = toks(&hp, cfg.vocab_size, 1);
+        tokens[0] = cfg.vocab_size as i32;
+        assert!(tr.train_step(&tokens, 1, 1e-3, 0).is_err());
+    }
+
+    #[test]
+    fn trainer_init_matches_backend_init_bits() {
+        // Training continues exactly what demo/serve would start from.
+        let (cfg, hp) = tiny_cfg();
+        let tr = CpuTrainer::new(&cfg, &hp).unwrap();
+        let be = CpuBackend::init(&cfg, hp.seed).unwrap();
+        let tokens = Tensor::i32(vec![1, 8], (0..8).collect());
+        let a = tr.to_backend().unwrap().forward(&tokens).unwrap();
+        let b = be.forward(&tokens).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn short_training_reduces_loss() {
+        let (cfg, mut hp) = tiny_cfg();
+        hp.seq = 24;
+        hp.steps = 12;
+        let mut tr = CpuTrainer::new(&cfg, &hp).unwrap();
+        let tokens = toks(&hp, cfg.vocab_size, 3);
+        // repeated steps on one batch must drive its loss down
+        let first = tr.train_step(&tokens, 1, 3e-3, 0).unwrap().loss;
+        let mut last = first;
+        for s in 2..=hp.steps {
+            last = tr.train_step(&tokens, s, 3e-3, 0).unwrap().loss;
+        }
+        assert!(
+            last < first,
+            "loss did not decrease: first {first:.4} last {last:.4}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_into_serving_backend() {
+        let (cfg, hp) = tiny_cfg();
+        let mut tr = CpuTrainer::new(&cfg, &hp).unwrap();
+        let tokens = toks(&hp, cfg.vocab_size, 5);
+        tr.train_step(&tokens, 1, 1e-3, 0).unwrap();
+        let ck = TrainBackend::to_checkpoint(&tr).unwrap();
+        let re = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let be = CpuBackend::from_checkpoint(&cfg, &re).unwrap();
+        let probe = Tensor::i32(vec![1, 6], vec![1, 2, 3, 4, 5, 6]);
+        let direct = tr.to_backend().unwrap().forward(&probe).unwrap();
+        let loaded = be.forward(&probe).unwrap();
+        assert_eq!(direct.logits, loaded.logits, "checkpoint changed the weights");
+    }
+}

@@ -1,0 +1,462 @@
+//! Finite-difference gradient checks for the native training path.
+//!
+//! Two tiers:
+//!
+//! * **Per-kernel** — every backward kernel in `runtime::cpu::grads`
+//!   (matmul both operands, RMSNorm, RoPE, routed/dense attention,
+//!   SwiGLU, router, cross-entropy head) is held to a central-difference
+//!   estimate of `d⟨W, f(x)⟩/dx` on small shapes, under a multi-threaded
+//!   pool (so the checks also exercise the parallel code paths).
+//! * **Full model** — `CpuTrainer::loss_grads` (CE + Eq. 7 penalty,
+//!   straight-through routing) is probed parameter-by-parameter for
+//!   dense, dtr (mixed routed/bypassed tokens), and dtr_skip
+//!   (all-bypass) models. Token-choice routing is a step function, so a
+//!   probe that straddles a routing-decision boundary is detected by
+//!   comparing two FD step sizes and skipped (the STE gradient is
+//!   intentionally blind to the flip itself).
+
+use dtrnet::config::{ModelConfig, TrainConfig, Variant};
+use dtrnet::runtime::cpu::{grads, kernels};
+use dtrnet::runtime::CpuTrainer;
+use dtrnet::util::rng::Rng;
+use dtrnet::util::threadpool::Pool;
+
+fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Assert an analytic derivative against its FD estimate: absolute
+/// floor + 2% relative band (f32 kernels, central differences).
+fn check(fd: f64, an: f32, what: &str) {
+    let an = an as f64;
+    let err = (fd - an).abs();
+    let tol = 5e-3 + 0.02 * fd.abs().max(an.abs());
+    assert!(
+        err <= tol,
+        "{what}: fd={fd:.6e} analytic={an:.6e} err={err:.2e} tol={tol:.2e}"
+    );
+}
+
+const EPS: f32 = 1e-2;
+
+#[test]
+fn fd_matmul_both_operands() {
+    let pool = Pool::with_threads(3);
+    let mut rng = Rng::new(10);
+    let (n, k, m) = (3usize, 5usize, 4usize);
+    let mut a = randn(&mut rng, n * k, 0.8);
+    let mut b = randn(&mut rng, k * m, 0.8);
+    let wy = randn(&mut rng, n * m, 1.0);
+    let loss = |a: &[f32], b: &[f32]| -> f64 {
+        kernels::matmul(a, b, n, k, m)
+            .iter()
+            .zip(&wy)
+            .map(|(&y, &w)| y as f64 * w as f64)
+            .sum()
+    };
+    let da = grads::matmul_bwd_a(&pool, &wy, &b, n, k, m);
+    let db = grads::matmul_bwd_b(&pool, &a, &wy, n, k, m);
+    for i in 0..n * k {
+        let old = a[i];
+        a[i] = old + EPS;
+        let lp = loss(&a, &b);
+        a[i] = old - EPS;
+        let lm = loss(&a, &b);
+        a[i] = old;
+        check((lp - lm) as f64 / (2.0 * EPS as f64), da[i], &format!("dA[{i}]"));
+    }
+    for i in 0..k * m {
+        let old = b[i];
+        b[i] = old + EPS;
+        let lp = loss(&a, &b);
+        b[i] = old - EPS;
+        let lm = loss(&a, &b);
+        b[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), db[i], &format!("dB[{i}]"));
+    }
+}
+
+#[test]
+fn fd_rmsnorm() {
+    let pool = Pool::with_threads(2);
+    let mut rng = Rng::new(11);
+    let (n, d) = (4usize, 6usize);
+    let mut x = randn(&mut rng, n * d, 1.0);
+    let mut w = randn(&mut rng, d, 0.5);
+    for v in w.iter_mut() {
+        *v += 1.0; // gains near one, like real norms
+    }
+    let wy = randn(&mut rng, n * d, 1.0);
+    let eps_n = 1e-5f32;
+    let loss = |x: &[f32], w: &[f32]| -> f64 {
+        kernels::rmsnorm(x, w, eps_n)
+            .iter()
+            .zip(&wy)
+            .map(|(&y, &wv)| y as f64 * wv as f64)
+            .sum()
+    };
+    let (dx, dw) = grads::rmsnorm_bwd(&pool, &x, &w, &wy, eps_n);
+    for i in 0..n * d {
+        let old = x[i];
+        x[i] = old + EPS;
+        let lp = loss(&x, &w);
+        x[i] = old - EPS;
+        let lm = loss(&x, &w);
+        x[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dx[i], &format!("rmsnorm dx[{i}]"));
+    }
+    for j in 0..d {
+        let old = w[j];
+        w[j] = old + EPS;
+        let lp = loss(&x, &w);
+        w[j] = old - EPS;
+        let lm = loss(&x, &w);
+        w[j] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dw[j], &format!("rmsnorm dw[{j}]"));
+    }
+}
+
+#[test]
+fn fd_rope() {
+    let pool = Pool::with_threads(2);
+    let mut rng = Rng::new(12);
+    let (n, h, hd) = (5usize, 2usize, 4usize);
+    let mut x = randn(&mut rng, n * h * hd, 1.0);
+    let wy = randn(&mut rng, n * h * hd, 1.0);
+    let pos: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let loss = |x: &[f32]| -> f64 {
+        kernels::rope(x, &pos, n, h, hd, 10000.0)
+            .iter()
+            .zip(&wy)
+            .map(|(&y, &w)| y as f64 * w as f64)
+            .sum()
+    };
+    let dx = grads::rope_bwd(&pool, &wy, &pos, n, h, hd, 10000.0);
+    for i in 0..n * h * hd {
+        let old = x[i];
+        x[i] = old + EPS;
+        let lp = loss(&x);
+        x[i] = old - EPS;
+        let lm = loss(&x);
+        x[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dx[i], &format!("rope dx[{i}]"));
+    }
+}
+
+#[test]
+fn fd_attention_routed_and_dense() {
+    let pool = Pool::with_threads(3);
+    let mut rng = Rng::new(13);
+    let (n, h, hd) = (6usize, 2usize, 4usize);
+    // mixed routing and the dense (all-ones) boundary case
+    let deltas: Vec<Vec<f32>> = vec![
+        (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect(),
+        vec![1.0; n],
+    ];
+    for delta in &deltas {
+        let mut q = randn(&mut rng, n * h * hd, 0.8);
+        let mut k = randn(&mut rng, n * h * hd, 0.8);
+        let mut v = randn(&mut rng, n * h * hd, 0.8);
+        let wy = randn(&mut rng, n * h * hd, 1.0);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            kernels::routed_attention(q, k, v, delta, n, h, hd)
+                .iter()
+                .zip(&wy)
+                .map(|(&y, &w)| y as f64 * w as f64)
+                .sum()
+        };
+        // the training forward must agree with the inference kernel
+        let (out, probs) = grads::routed_attention_probs(&pool, &q, &k, &v, delta, n, h, hd);
+        assert_eq!(out, kernels::routed_attention(&q, &k, &v, delta, n, h, hd));
+        let (dq, dk, dv) = grads::routed_attention_bwd(&pool, &q, &k, &v, &probs, &wy, n, h, hd);
+        for i in (0..n * h * hd).step_by(3) {
+            let old = q[i];
+            q[i] = old + EPS;
+            let lp = loss(&q, &k, &v);
+            q[i] = old - EPS;
+            let lm = loss(&q, &k, &v);
+            q[i] = old;
+            check((lp - lm) / (2.0 * EPS as f64), dq[i], &format!("attn dq[{i}]"));
+        }
+        for i in (0..n * h * hd).step_by(3) {
+            let old = k[i];
+            k[i] = old + EPS;
+            let lp = loss(&q, &k, &v);
+            k[i] = old - EPS;
+            let lm = loss(&q, &k, &v);
+            k[i] = old;
+            check((lp - lm) / (2.0 * EPS as f64), dk[i], &format!("attn dk[{i}]"));
+        }
+        for i in (0..n * h * hd).step_by(3) {
+            let old = v[i];
+            v[i] = old + EPS;
+            let lp = loss(&q, &k, &v);
+            v[i] = old - EPS;
+            let lm = loss(&q, &k, &v);
+            v[i] = old;
+            check((lp - lm) / (2.0 * EPS as f64), dv[i], &format!("attn dv[{i}]"));
+        }
+    }
+}
+
+#[test]
+fn fd_swiglu() {
+    let pool = Pool::with_threads(3);
+    let mut rng = Rng::new(14);
+    let (n, d, ff) = (3usize, 4usize, 6usize);
+    let mut x = randn(&mut rng, n * d, 0.8);
+    let mut wg = randn(&mut rng, d * ff, 0.5);
+    let mut wu = randn(&mut rng, d * ff, 0.5);
+    let mut wd = randn(&mut rng, ff * d, 0.5);
+    let wy = randn(&mut rng, n * d, 1.0);
+    let loss = |x: &[f32], wg: &[f32], wu: &[f32], wd: &[f32]| -> f64 {
+        kernels::swiglu_mlp(x, wg, wu, wd, n, d, ff)
+            .iter()
+            .zip(&wy)
+            .map(|(&y, &w)| y as f64 * w as f64)
+            .sum()
+    };
+    let gate_pre = kernels::matmul(&x, &wg, n, d, ff);
+    let up = kernels::matmul(&x, &wu, n, d, ff);
+    let hmid: Vec<f32> = gate_pre
+        .iter()
+        .zip(&up)
+        .map(|(&g, &u)| kernels::silu(g) * u)
+        .collect();
+    let (dx, dwg, dwu, dwd) = grads::swiglu_bwd(
+        &pool, &x, &wg, &wu, &wd, &gate_pre, &up, &hmid, &wy, n, d, ff,
+    );
+    for i in 0..n * d {
+        let old = x[i];
+        x[i] = old + EPS;
+        let lp = loss(&x, &wg, &wu, &wd);
+        x[i] = old - EPS;
+        let lm = loss(&x, &wg, &wu, &wd);
+        x[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dx[i], &format!("swiglu dx[{i}]"));
+    }
+    for i in (0..d * ff).step_by(2) {
+        let old = wg[i];
+        wg[i] = old + EPS;
+        let lp = loss(&x, &wg, &wu, &wd);
+        wg[i] = old - EPS;
+        let lm = loss(&x, &wg, &wu, &wd);
+        wg[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dwg[i], &format!("swiglu dwg[{i}]"));
+    }
+    for i in (0..d * ff).step_by(2) {
+        let old = wu[i];
+        wu[i] = old + EPS;
+        let lp = loss(&x, &wg, &wu, &wd);
+        wu[i] = old - EPS;
+        let lm = loss(&x, &wg, &wu, &wd);
+        wu[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dwu[i], &format!("swiglu dwu[{i}]"));
+    }
+    for i in (0..ff * d).step_by(2) {
+        let old = wd[i];
+        wd[i] = old + EPS;
+        let lp = loss(&x, &wg, &wu, &wd);
+        wd[i] = old - EPS;
+        let lm = loss(&x, &wg, &wu, &wd);
+        wd[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dwd[i], &format!("swiglu dwd[{i}]"));
+    }
+}
+
+#[test]
+fn fd_router() {
+    let pool = Pool::with_threads(2);
+    let mut rng = Rng::new(15);
+    let (n, d) = (5usize, 8usize);
+    let dh = d / 2;
+    let mut u = randn(&mut rng, n * d, 0.8);
+    let mut w1 = randn(&mut rng, d * dh, 0.5);
+    let mut w2 = randn(&mut rng, dh * 2, 0.5);
+    let wg = randn(&mut rng, n * 2, 1.0);
+    let loss = |u: &[f32], w1: &[f32], w2: &[f32]| -> f64 {
+        kernels::router(u, w1, w2, n, d, dh)
+            .iter()
+            .zip(&wg)
+            .map(|(&y, &w)| y as f64 * w as f64)
+            .sum()
+    };
+    let g = kernels::router(&u, &w1, &w2, n, d, dh);
+    let (du, dw1, dw2) = grads::router_bwd(&pool, &u, &w1, &w2, &g, &wg, n, d, dh);
+    for i in 0..n * d {
+        let old = u[i];
+        u[i] = old + EPS;
+        let lp = loss(&u, &w1, &w2);
+        u[i] = old - EPS;
+        let lm = loss(&u, &w1, &w2);
+        u[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), du[i], &format!("router du[{i}]"));
+    }
+    for i in 0..d * dh {
+        let old = w1[i];
+        w1[i] = old + EPS;
+        let lp = loss(&u, &w1, &w2);
+        w1[i] = old - EPS;
+        let lm = loss(&u, &w1, &w2);
+        w1[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dw1[i], &format!("router dw1[{i}]"));
+    }
+    for i in 0..dh * 2 {
+        let old = w2[i];
+        w2[i] = old + EPS;
+        let lp = loss(&u, &w1, &w2);
+        w2[i] = old - EPS;
+        let lm = loss(&u, &w1, &w2);
+        w2[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dw2[i], &format!("router dw2[{i}]"));
+    }
+}
+
+#[test]
+fn fd_cross_entropy_head() {
+    let pool = Pool::with_threads(2);
+    let mut rng = Rng::new(16);
+    let (n, v) = (5usize, 7usize);
+    let mut logits = randn(&mut rng, n * v, 1.0);
+    let toks: Vec<i32> = (0..n).map(|_| rng.below(v as u64) as i32).collect();
+    let count = n - 1;
+    let loss =
+        |lg: &[f32]| -> f64 { grads::xent_loss_sum(lg, &toks, n, v) / count as f64 };
+    let dl = grads::xent_bwd(&pool, &logits, &toks, count, n, v);
+    for i in 0..n * v {
+        let old = logits[i];
+        logits[i] = old + EPS;
+        let lp = loss(&logits);
+        logits[i] = old - EPS;
+        let lm = loss(&logits);
+        logits[i] = old;
+        check((lp - lm) / (2.0 * EPS as f64), dl[i], &format!("xent dlogits[{i}]"));
+    }
+    // the last row predicts nothing — its gradient is exactly zero
+    assert!(dl[(n - 1) * v..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn embedding_bwd_scatter_adds_repeated_tokens() {
+    let d = 3;
+    let mut de = vec![0.0f32; 4 * d];
+    let dx: Vec<f32> = (0..3 * d).map(|i| i as f32).collect();
+    grads::embedding_bwd(&mut de, &[2, 0, 2], &dx, d);
+    assert_eq!(&de[0..3], &[3.0, 4.0, 5.0]); // token 0 row
+    assert_eq!(&de[6..9], &[0.0 + 6.0, 1.0 + 7.0, 2.0 + 8.0]); // token 2 twice
+    assert!(de[3..6].iter().all(|&x| x == 0.0));
+}
+
+// ---------------------------------------------------------------------------
+// Full-model checks: CpuTrainer::loss_grads vs finite differences.
+
+fn fd_cfg(variant: Variant, n_layers: usize) -> ModelConfig {
+    let mut cfg = ModelConfig::preset("xs", variant);
+    cfg.name = "fd".into();
+    cfg.vocab_size = 31;
+    cfg.d_model = 16;
+    cfg.n_layers = n_layers;
+    cfg.n_heads = 2;
+    cfg.d_ff = 24;
+    cfg.max_seq = 16;
+    cfg
+}
+
+/// Probe three weights per tensor against central differences.
+///
+/// Token-choice routing makes the loss piecewise-smooth: a probe whose
+/// ±eps evaluations land on different sides of a routing decision sees a
+/// jump the STE gradient deliberately ignores. Such probes are detected
+/// by disagreement between two FD step sizes and skipped — and the
+/// detection threshold is strictly tighter than the assert tolerance, so
+/// a jump small enough to evade detection also fits inside the assert
+/// budget.
+fn fd_full_model(variant: Variant, n_layers: usize, seed: u64) {
+    let cfg = fd_cfg(variant, n_layers);
+    let hp = TrainConfig {
+        batch: 2,
+        seq: 8,
+        seed,
+        ..Default::default()
+    };
+    let mut tr = CpuTrainer::new(&cfg, &hp).unwrap();
+    tr.set_threads(3); // exercise the parallel paths under the check
+    let mut rng = Rng::new(seed ^ 0x9E37);
+    let tokens: Vec<i32> = (0..hp.batch * hp.seq)
+        .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+        .collect();
+    let (_, gr) = tr.loss_grads(&tokens).unwrap();
+    let ganalytic: Vec<(Vec<f32>, bool)> = gr
+        .tensors()
+        .into_iter()
+        .map(|(t, m)| (t.clone(), m))
+        .collect();
+    let n_tensors = ganalytic.len();
+    let eps = 1e-2f32;
+    let mut checked = 0usize;
+    let mut skipped = 0usize;
+    for ti in 0..n_tensors {
+        let len = ganalytic[ti].0.len();
+        if len == 0 {
+            continue;
+        }
+        for s in 0..3usize {
+            let idx = (s * 7919 + ti * 131) % len;
+            let an = ganalytic[ti].0[idx] as f64;
+            let mut eval_at = |delta: f32| -> f64 {
+                {
+                    let mut ts = tr.weights_mut().tensors_mut();
+                    ts[ti].0[idx] += delta;
+                }
+                let (l, _) = tr.loss_grads(&tokens).unwrap();
+                {
+                    let mut ts = tr.weights_mut().tensors_mut();
+                    ts[ti].0[idx] -= delta;
+                }
+                l
+            };
+            let fd1 = (eval_at(eps) - eval_at(-eps)) / (2.0 * eps as f64);
+            let fd2 = (eval_at(eps / 2.0) - eval_at(-eps / 2.0)) / (eps as f64);
+            // Two step sizes disagreeing = a routing flip inside the
+            // probe interval; the STE gradient is blind to it. This
+            // threshold is tighter than the assert tolerance below.
+            let agree = (fd1 - fd2).abs() <= 1.5e-3 + 0.05 * fd1.abs().max(fd2.abs());
+            if !agree {
+                skipped += 1;
+                continue;
+            }
+            let err = (fd1 - an).abs();
+            let tol = 3e-3 + 0.07 * fd1.abs().max(an.abs());
+            assert!(
+                err <= tol,
+                "{variant:?} tensor {ti} idx {idx}: fd={fd1:.6e} analytic={an:.6e} \
+                 (err {err:.2e} > tol {tol:.2e})"
+            );
+            checked += 1;
+        }
+    }
+    assert!(
+        checked > 3 * skipped + 10,
+        "{variant:?}: too few clean probes (checked {checked}, skipped {skipped})"
+    );
+}
+
+#[test]
+fn fd_full_model_dense() {
+    fd_full_model(Variant::Dense, 3, 21);
+}
+
+#[test]
+fn fd_full_model_dtr_mixed_routing() {
+    // TDDT: two DTR layers, mixed routed/bypassed tokens — exercises the
+    // straight-through select, both path gradients, and the Eq. 7
+    // penalty with two alpha-weighted layers.
+    fd_full_model(Variant::DtrTrilayer, 4, 22);
+}
+
+#[test]
+fn fd_full_model_dtr_skip() {
+    // All tokens bypass: the Table 6 ablation — pure linear-path
+    // gradients, no attention contribution on DTR layers.
+    fd_full_model(Variant::DtrSkip, 4, 23);
+}

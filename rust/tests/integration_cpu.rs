@@ -6,11 +6,11 @@
 //! the full DTRNet block (router → routed attention / bypass → MLP →
 //! decode) with no AOT artifacts and no xla crate present.
 
-use dtrnet::config::{ModelConfig, Variant};
-use dtrnet::coordinator::SamplingParams;
+use dtrnet::config::{ModelConfig, TrainConfig, Variant};
+use dtrnet::coordinator::{SamplingParams, Trainer};
 use dtrnet::data::corpus;
 use dtrnet::data::Dataset;
-use dtrnet::runtime::{Backend, CpuBackend, RouterMode, Tensor};
+use dtrnet::runtime::{Backend, CpuBackend, CpuTrainer, RouterMode, Tensor, TrainBackend};
 use dtrnet::util::rng::Rng;
 
 fn backend(variant: Variant, seed: u64) -> CpuBackend {
@@ -206,6 +206,81 @@ fn checkpoint_file_handoff_preserves_outputs() {
         be.forward(&tok).unwrap().logits,
         re.forward(&tok).unwrap().logits
     );
+}
+
+#[test]
+fn train_checkpoint_serve_eval_roundtrip() {
+    // The offline train→serve loop end to end: orchestrated training on
+    // the CPU trainer, DTCK checkpoint to disk, reload into the serving
+    // backend, then eval + generate on the trained weights.
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let hp = TrainConfig {
+        steps: 6,
+        batch: 2,
+        seq: 24,
+        log_every: 100,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(41);
+    let data = Dataset::new(corpus::markov_corpus(&mut rng, 256, 60 * hp.seq, 12), hp.seq);
+    let mut tb = CpuTrainer::new(&cfg, &hp).unwrap();
+    let dir = std::env::temp_dir().join("dtrnet_train_roundtrip");
+    let path = dir.join("trained.dtck");
+    let report = {
+        let mut trainer = Trainer::new(&mut tb, "xs_dtr_bilayer");
+        let report = trainer.run(&hp, &data, None).unwrap();
+        trainer.save_checkpoint(&path).unwrap();
+        report
+    };
+    assert_eq!(report.steps, hp.steps);
+    assert_eq!(report.losses.len(), hp.steps);
+    assert!(report.final_loss.is_finite());
+    assert_eq!(report.attn_frac.len(), cfg.n_layers);
+    assert!(report.tokens_per_s > 0.0);
+
+    // serve path: the saved checkpoint must load and match the trainer's
+    // in-memory weights bit for bit.
+    let ck = dtrnet::runtime::Checkpoint::load(&path).unwrap();
+    let served = CpuBackend::from_checkpoint(&cfg, &ck).unwrap();
+    let probe = Tensor::i32(vec![1, 10], (0..10).map(|i| i * 11 % 256).collect());
+    assert_eq!(
+        served.forward(&probe).unwrap().logits,
+        tb.to_backend().unwrap().forward(&probe).unwrap().logits,
+        "served weights differ from trained weights"
+    );
+
+    // eval + generate run on the trained checkpoint
+    let r = dtrnet::eval::perplexity_backend(&served, &data, 2, 2).unwrap();
+    assert!(r.ppl.is_finite() && r.ppl > 1.0);
+    let mut grng = Rng::new(9);
+    let gen = served
+        .generate(&[5, 6, 7], 8, &SamplingParams::greedy(), &mut grng)
+        .unwrap();
+    assert_eq!(gen.tokens.len(), 8);
+}
+
+#[test]
+fn trained_loss_beats_init_on_fixed_batch() {
+    // Keep stepping one batch: the trained model must fit it better than
+    // the init did (the offline mirror of the CI train-smoke gate).
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let hp = TrainConfig {
+        steps: 10,
+        batch: 2,
+        seq: 20,
+        ..Default::default()
+    };
+    let mut tb = CpuTrainer::new(&cfg, &hp).unwrap();
+    let mut rng = Rng::new(17);
+    let tokens: Vec<i32> = (0..hp.batch * hp.seq)
+        .map(|_| rng.below(64) as i32)
+        .collect();
+    let first = tb.train_step(&tokens, 1, 3e-3, 0).unwrap().loss;
+    let mut last = first;
+    for s in 2..=hp.steps {
+        last = tb.train_step(&tokens, s, 3e-3, 0).unwrap().loss;
+    }
+    assert!(last < first, "training did not reduce loss: {first:.4} -> {last:.4}");
 }
 
 #[test]

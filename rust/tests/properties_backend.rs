@@ -9,13 +9,16 @@
 //! * decode/forward consistency: sequential decode with the routing-aware
 //!   KV cache reproduces the batched forward logits;
 //! * thread invariance: multi-threaded kernel execution is bit-identical
-//!   to `--threads 1` for forward, decode_batch, and prefill_chunked,
-//!   including every KV-cache byte — thread count is a throughput knob,
-//!   never a semantics knob (DESIGN.md §Benchmarking).
+//!   to `--threads 1` for forward, decode_batch, prefill_chunked AND
+//!   `train_step` (weights, Adam moments, metrics), including every
+//!   KV-cache byte — thread count is a throughput knob, never a
+//!   semantics knob (DESIGN.md §Benchmarking).
 
-use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::config::{ModelConfig, TrainConfig, Variant};
 use dtrnet::runtime::cpu::kernels;
-use dtrnet::runtime::{Backend, CpuBackend, DecodeState, RouterMode, Tensor};
+use dtrnet::runtime::{
+    Backend, CpuBackend, CpuTrainer, DecodeState, RouterMode, Tensor, TrainBackend,
+};
 use dtrnet::testing::{assert_allclose, property, Gen};
 
 fn randn_vec(g: &mut Gen, n: usize, scale: f32) -> Vec<f32> {
@@ -347,6 +350,58 @@ fn prop_threaded_bit_identical_to_single_thread() {
             for (i, (ss, st)) in states_s.iter().zip(&states_t).enumerate() {
                 assert_eq!(ss.keys, st.keys, "seq {i} cache keys diverged");
                 assert_eq!(ss.values, st.values, "seq {i} cache values diverged");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_train_step_bit_identical_across_threads() {
+    property(
+        "train_step threads=N ≡ threads=1 bitwise: weights, moments, metrics",
+        4,
+        |g| {
+            let variants = [Variant::Dense, Variant::DtrBilayer, Variant::DtrTrilayer];
+            let variant = variants[g.usize(0..variants.len())];
+            let cfg = ModelConfig::preset("xs", variant);
+            let hp = TrainConfig {
+                batch: 2,
+                seq: 8 + g.usize(0..8),
+                seed: 5000 + g.case as u64,
+                ..Default::default()
+            };
+            let mut serial = CpuTrainer::new(&cfg, &hp).unwrap();
+            serial.set_threads(1);
+            let mut threaded = CpuTrainer::new(&cfg, &hp).unwrap();
+            threaded.set_threads(g.usize(2..5));
+            for s in 1..=2usize {
+                let tokens: Vec<i32> = (0..hp.batch * hp.seq)
+                    .map(|_| g.rng.below(256) as i32)
+                    .collect();
+                let ma = serial.train_step(&tokens, s, 3e-4, 0).unwrap();
+                let mb = threaded.train_step(&tokens, s, 3e-4, 0).unwrap();
+                assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "loss bits step {s}");
+                assert_eq!(ma.ce.to_bits(), mb.ce.to_bits(), "ce bits step {s}");
+                assert_eq!(
+                    ma.penalty.to_bits(),
+                    mb.penalty.to_bits(),
+                    "penalty bits step {s}"
+                );
+                assert_eq!(
+                    ma.grad_norm.to_bits(),
+                    mb.grad_norm.to_bits(),
+                    "grad_norm bits step {s}"
+                );
+                assert_eq!(ma.attn_frac, mb.attn_frac, "attn_frac step {s}");
+            }
+            for (ti, ((ta, _), (tb, _))) in serial
+                .weights()
+                .tensors()
+                .into_iter()
+                .zip(threaded.weights().tensors())
+                .enumerate()
+            {
+                assert_eq!(ta, tb, "weight tensor {ti} bits diverged across threads");
             }
         },
     );
