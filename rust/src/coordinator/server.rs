@@ -42,7 +42,7 @@ use super::stats::RoutingStats;
 use super::workload::TimedRequest;
 use crate::metrics::Registry;
 use crate::runtime::backend::PREFILL_CHUNK;
-use crate::runtime::{Backend, DecodeState};
+use crate::runtime::{Backend, DecodeState, WeightBytes};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -184,6 +184,9 @@ pub struct ServeReport {
     /// tokens_cached / (tokens_seen × layers): the token-granular KV
     /// footprint ratio vs dense (page quantization visible via pages).
     pub kv_savings_ratio: f64,
+    /// Backend weight-memory telemetry: resident vs f32-equivalent bytes
+    /// (the int8 backend reports ~3.7× compression; f32 backends 1.0×).
+    pub weight_bytes: WeightBytes,
     /// Per-layer routing counters for the whole run.
     pub routing: RoutingStats,
     /// Per-layer fraction of tokens routed to attention (Fig. 5 y-axis).
@@ -235,6 +238,18 @@ impl ServeReport {
             ("kv_bytes_peak", Json::Num(self.pool.bytes_peak as f64)),
             ("dense_pages_peak", Json::Num(self.dense_pages_peak as f64)),
             ("kv_savings_ratio", Json::Num(self.kv_savings_ratio)),
+            (
+                "weight_bytes_resident",
+                Json::Num(self.weight_bytes.resident as f64),
+            ),
+            (
+                "weight_bytes_f32",
+                Json::Num(self.weight_bytes.f32_equiv as f64),
+            ),
+            (
+                "weight_compression",
+                Json::Num(self.weight_bytes.compression()),
+            ),
             ("attn_fracs", Json::arr_f64(&self.attn_fracs)),
             ("routing", self.routing.to_json()),
             ("requests", Json::Arr(reqs)),
@@ -712,6 +727,7 @@ impl<'b> Server<'b> {
             pool,
             dense_pages_peak: dense.pages_peak,
             kv_savings_ratio,
+            weight_bytes: self.backend.weight_bytes(),
             routing: self.routing.clone(),
             attn_fracs: self.routing.fractions(),
             requests: self.records.clone(),
@@ -761,6 +777,34 @@ mod tests {
         }
         // all pages returned after the run
         assert_eq!(srv.pool.stats().pages_allocated, 0);
+    }
+
+    #[test]
+    fn quant_backend_serves_and_reports_weight_compression() {
+        let f32_be = backend();
+        let be = f32_be.quantized().unwrap();
+        let cfg = ServerConfig {
+            slots: 2,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        for i in 0..3 {
+            assert!(srv.submit(req(i, 6, 4)));
+        }
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.completed, 3);
+        assert_eq!(rep.backend, "cpu-int8");
+        assert!(
+            rep.weight_bytes.compression() >= 3.5,
+            "int8 serve must report >=3.5x weight compression, got {:.3}",
+            rep.weight_bytes.compression()
+        );
+        // the f32 backend reports parity (resident == f32-equivalent)
+        let wb = f32_be.weight_bytes();
+        assert_eq!(wb.resident, wb.f32_equiv);
+        assert_eq!(wb.compression(), 1.0);
+        let js = rep.to_json();
+        assert!(js.path("weight_compression").unwrap().as_f64().unwrap() >= 3.5);
     }
 
     #[test]

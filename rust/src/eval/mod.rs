@@ -219,8 +219,8 @@ mod tests {
         let mut logits = vec![0.0f32; b * s * v];
         let tokens = vec![0, 1, 2];
         // position 0 predicts token 1, position 1 predicts token 2
-        logits[0 * v + 1] = 10.0;
-        logits[1 * v + 2] = 10.0;
+        logits[1] = 10.0;
+        logits[v + 2] = 10.0;
         let ce = cross_entropy(&logits, &tokens, b, s, v, None);
         assert!(ce < 0.01, "ce={ce}");
     }
@@ -231,7 +231,7 @@ mod tests {
         let mut logits = vec![0.0f32; b * s * v];
         let tokens = vec![0, 1, 2, 3, 0, 1];
         // make only the span targets (positions 4..6) predictable
-        logits[3 * v + 0] = 10.0;
+        logits[3 * v] = 10.0;
         logits[4 * v + 1] = 10.0;
         let full = cross_entropy(&logits, &tokens, b, s, v, None);
         let span = cross_entropy(&logits, &tokens, b, s, v, Some((4, 6)));

@@ -27,9 +27,10 @@
 //!   KV-memory (Fig. 6) models.
 //! - [`runtime`] — execution backends: the [`runtime::Backend`] and
 //!   [`runtime::TrainBackend`] traits, the native CPU backend and
-//!   trainer (hand-derived backward kernels in `cpu/grads.rs`), DTCK
-//!   checkpoints, and (behind `pjrt`) the PJRT artifact registry: load,
-//!   compile, execute.
+//!   trainer (hand-derived backward kernels in `cpu/grads.rs`), the
+//!   int8 quantized backend ([`runtime::quant`]: per-output-row scales,
+//!   dequant-free kernels, accuracy-gated), DTCK checkpoints, and
+//!   (behind `pjrt`) the PJRT artifact registry: load, compile, execute.
 //! - [`coordinator`] — the system contribution: the backend-generic
 //!   continuous-batching serving engine ([`coordinator::Server`]) over
 //!   the routing-aware paged KV-cache pool and the backend-generic

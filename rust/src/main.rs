@@ -17,10 +17,12 @@
 //!                                    CPU backend: synthetic workload,
 //!                                    throughput/latency/KV-page report
 //!                                    (see DESIGN.md §Serving for flags)
-//!   bench   [--test] [--out BENCH_pr4.json] — reproducible perf harness:
+//!   bench   [--test] [--out BENCH_pr5.json] — reproducible perf harness:
 //!                                    fixed-seed forward/decode/serve/
-//!                                    train scenarios swept across thread
-//!                                    counts (DESIGN.md §Benchmarking)
+//!                                    train/quant scenarios swept across
+//!                                    thread counts (DESIGN.md
+//!                                    §Benchmarking); `--quant off` skips
+//!                                    the int8 scenarios
 //!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
 //!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
 //!
@@ -29,6 +31,12 @@
 //!                 available parallelism; 1 = the single-threaded
 //!                 determinism baseline — outputs are bit-identical
 //!                 either way, only throughput changes)
+//!   --quant int8 — on demo/eval/serve: int8-quantize the weights on
+//!                 load (~3.7x smaller residency, per-output-row scales;
+//!                 DESIGN.md §Quantization). Accuracy is gated by the
+//!                 bench harness: routing decisions must match f32
+//!                 wherever the router is decisive, eval perplexity
+//!                 within 0.5%.
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer — train the fused AOT train_step
@@ -89,14 +97,18 @@ fn bench_cmd(args: &Args) -> Result<()> {
     if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         opts.threads = if n <= 1 { vec![1] } else { vec![1, n] };
     }
+    // `--quant off` skips the quant_* scenarios (they are part of the
+    // default suite: int8 accuracy gates run on every bench/CI pass).
+    opts.include_quant = parse_quant(args, "int8")?;
     println!(
-        "[bench] {} mode, thread sweep {:?} (hw {})",
+        "[bench] {} mode, thread sweep {:?} (hw {}), quant scenarios {}",
         if quick { "smoke" } else { "full" },
         opts.threads,
-        dtrnet::util::threadpool::available_threads()
+        dtrnet::util::threadpool::available_threads(),
+        if opts.include_quant { "on" } else { "off" },
     );
     let doc = dtrnet::perf::run(&opts)?;
-    let out = args.get_or("out", "BENCH_pr4.json");
+    let out = args.get_or("out", "BENCH_pr5.json");
     dtrnet::perf::write(std::path::Path::new(out), &doc)?;
     Ok(())
 }
@@ -146,6 +158,41 @@ fn make_dataset(args: &Args, seq: usize) -> Dataset {
     }
 }
 
+/// Shared `--quant` parsing: `int8` opts into the quantized path,
+/// `off`/`f32`/`none` stays full precision. `default` is the value used
+/// when the flag is absent (`"off"` for demo/eval/serve, `"int8"` for
+/// bench, whose quant scenarios are part of the default suite).
+fn parse_quant(args: &Args, default: &str) -> Result<bool> {
+    match args.get_or("quant", default) {
+        "off" | "f32" | "none" => Ok(false),
+        "int8" => Ok(true),
+        other => bail!("unknown --quant mode {other:?} (try int8 or off)"),
+    }
+}
+
+/// Build the CPU execution backend for `demo`/`eval`/`serve`: fresh
+/// seeded init or a DTCK checkpoint load, optionally int8-quantized on
+/// load (`--quant int8`; DESIGN.md §Quantization).
+fn build_backend(
+    cfg: &ModelConfig,
+    seed: u64,
+    load: Option<&str>,
+    quant: bool,
+) -> Result<Box<dyn Backend>> {
+    let be = match load {
+        Some(path) => {
+            let ck = dtrnet::runtime::Checkpoint::load(std::path::Path::new(path))?;
+            CpuBackend::from_checkpoint(cfg, &ck)?
+        }
+        None => CpuBackend::init(cfg, seed)?,
+    };
+    Ok(if quant {
+        Box::new(be.quantized()?)
+    } else {
+        Box::new(be)
+    })
+}
+
 /// Shared `--preset` / `--variant` / `--seed` parsing for the CPU-backend
 /// commands (`demo`, `serve`).
 fn parse_model(args: &Args, default_preset: &str) -> Result<(ModelConfig, Variant, u64)> {
@@ -165,14 +212,17 @@ fn parse_model(args: &Args, default_preset: &str) -> Result<(ModelConfig, Varian
 /// on any machine, no artifacts, no XLA.
 fn demo(args: &Args) -> Result<()> {
     let (cfg, variant, seed) = parse_model(args, "xs")?;
-    let backend = CpuBackend::init(&cfg, seed)?;
+    let backend = build_backend(&cfg, seed, None, parse_quant(args, "off")?)?;
+    let wb = backend.weight_bytes();
     println!(
-        "backend={} model={} variant={} layout={} params={}",
+        "backend={} model={} variant={} layout={} params={} weight_mb={:.2} ({:.2}x vs f32)",
         backend.name(),
         cfg.name,
         variant.as_str(),
         cfg.layout_string(),
-        cfg.param_count()
+        cfg.param_count(),
+        wb.resident as f64 / 1e6,
+        wb.compression(),
     );
 
     let data = make_dataset(args, cfg.max_seq.min(64));
@@ -386,21 +436,17 @@ fn eval(args: &Args) -> Result<()> {
         return eval_artifact(args);
     }
     let (cfg, variant, seed) = parse_model(args, "tiny")?;
-    let backend = if let Some(path) = args.get("load") {
-        let ck = dtrnet::runtime::Checkpoint::load(std::path::Path::new(path))?;
-        CpuBackend::from_checkpoint(&cfg, &ck)?
-    } else {
-        CpuBackend::init(&cfg, seed)?
-    };
+    let backend = build_backend(&cfg, seed, args.get("load"), parse_quant(args, "off")?)?;
     let data = make_dataset(args, args.get_usize("seq", cfg.max_seq.min(128)));
     let r = dtrnet::eval::perplexity_backend(
-        &backend,
+        backend.as_ref(),
         &data,
         args.get_usize("batch", 2),
         args.get_usize("batches", 4),
     )?;
     println!(
-        "backend=cpu model={} variant={} ppl {:.3} over {} tokens; attention fractions {:?}",
+        "backend={} model={} variant={} ppl {:.3} over {} tokens; attention fractions {:?}",
+        backend.name(),
         cfg.name,
         variant.as_str(),
         r.ppl,
@@ -456,13 +502,9 @@ fn serve(args: &Args) -> Result<()> {
         return serve_artifact(args);
     }
     let (cfg, variant, seed) = parse_model(args, "tiny")?;
-    // --load ckpt.dtck serves trained weights; default is fresh init
-    let backend = if let Some(path) = args.get("load") {
-        let ck = dtrnet::runtime::Checkpoint::load(std::path::Path::new(path))?;
-        CpuBackend::from_checkpoint(&cfg, &ck)?
-    } else {
-        CpuBackend::init(&cfg, seed)?
-    };
+    // --load ckpt.dtck serves trained weights; default is fresh init.
+    // --quant int8 quantizes the weights on load (4x smaller residency).
+    let backend = build_backend(&cfg, seed, args.get("load"), parse_quant(args, "off")?)?;
 
     let mut spec = WorkloadSpec::smoke(args.get_usize("requests", 8));
     spec.arrival_rate = args.get_f64("rate", spec.arrival_rate);
@@ -495,9 +537,9 @@ fn serve(args: &Args) -> Result<()> {
         scfg.slots,
         scfg.kv_page_size,
         scfg.prefill,
-        backend.threads(),
+        dtrnet::util::threadpool::global().threads(),
     );
-    let mut srv = Server::new(&backend, scfg)?;
+    let mut srv = Server::new(backend.as_ref(), scfg)?;
     let report = srv.run_workload(&trace, args.get_usize("max-steps", 1_000_000))?;
 
     println!(
@@ -530,6 +572,12 @@ fn serve(args: &Args) -> Result<()> {
             0.0
         },
         report.kv_savings_ratio,
+    );
+    println!(
+        "weights: {:.2} MB resident vs {:.2} MB f32-equivalent ({:.2}x compression)",
+        report.weight_bytes.resident as f64 / 1e6,
+        report.weight_bytes.f32_equiv as f64 / 1e6,
+        report.weight_bytes.compression(),
     );
     let fracs: Vec<String> = report.attn_fracs.iter().map(|f| format!("{f:.3}")).collect();
     println!(

@@ -2,10 +2,19 @@
 //!
 //! Runs a fixed set of fixed-seed scenarios (training-shape forward,
 //! autoregressive decode, native training steps, the continuous-batching
-//! serving engine) across a sweep of kernel-thread counts, and emits one
-//! machine-readable JSON document (`BENCH_pr4.json` at the repo root by
-//! convention — the recorded perf trajectory every future PR diffs
-//! against). See DESIGN.md §Benchmarking for the schema and methodology.
+//! serving engine, and the int8 `quant_*` accuracy/throughput family)
+//! across a sweep of kernel-thread counts, and emits one machine-readable
+//! JSON document (`BENCH_pr5.json` at the repo root by convention — the
+//! recorded perf trajectory every future PR diffs against; the CI
+//! `bench-regression` job regenerates and uploads it on every push). See
+//! DESIGN.md §Benchmarking for the schema and methodology.
+//!
+//! The `quant_*` scenarios double as the int8 accuracy gates: bitwise
+//! thread invariance of the quantized forward/decode paths, routing
+//! decisions matching the f32 backend wherever its router is decisive
+//! ([`crate::runtime::quant::check_routing_equivalence`]), eval
+//! perplexity within [`QUANT_PPL_GATE`] of f32, and weight-bytes
+//! compression of at least [`QUANT_MIN_COMPRESSION`]×.
 //!
 //! Two properties make the numbers comparable across PRs:
 //!
@@ -28,7 +37,9 @@ use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::{
     generate_workload, PrefillMode, Server, ServerConfig, WorkloadSpec,
 };
-use crate::runtime::{Backend, CpuBackend, CpuTrainer, Tensor, TrainBackend};
+use crate::data::{corpus, Dataset};
+use crate::runtime::quant;
+use crate::runtime::{Backend, CpuBackend, CpuTrainer, QuantizedCpuBackend, Tensor, TrainBackend};
 use crate::util::bench::bench;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -43,6 +54,14 @@ pub const MODEL_SEED: u64 = 0;
 /// Fixed seed for the serving workload trace.
 pub const WORKLOAD_SEED: u64 = 2;
 
+/// Relative perplexity drift the int8 backend is allowed vs f32 on the
+/// markov eval corpus (`quant_eval_*` gate). Measured deltas are ~0.05%.
+pub const QUANT_PPL_GATE: f64 = 0.005;
+
+/// Weight-memory compression the int8 backend must reach vs f32
+/// (`quant_forward_*` / serve-report gate; measured ~3.7×).
+pub const QUANT_MIN_COMPRESSION: f64 = 3.5;
+
 /// Harness configuration (CLI flags map onto this).
 #[derive(Debug, Clone)]
 pub struct BenchOptions {
@@ -52,17 +71,25 @@ pub struct BenchOptions {
     /// Thread counts to sweep, ascending; must start at 1 (the
     /// determinism baseline every other count is diffed against).
     pub threads: Vec<usize>,
+    /// Run the `quant_*` int8 scenarios (default on; `bench --quant off`
+    /// skips them). These carry the accuracy gates: routing equivalence
+    /// vs f32, perplexity delta, and weight-bytes compression.
+    pub include_quant: bool,
 }
 
 impl BenchOptions {
-    /// Default sweep: `[1, available_parallelism]`.
+    /// Default sweep: `[1, available_parallelism]`, quant scenarios on.
     pub fn new(quick: bool) -> BenchOptions {
         let hw = available_threads();
         let mut threads = vec![1];
         if hw > 1 {
             threads.push(hw);
         }
-        BenchOptions { quick, threads }
+        BenchOptions {
+            quick,
+            threads,
+            include_quant: true,
+        }
     }
 }
 
@@ -81,13 +108,27 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         let (tr_key, tr) = train_scenario(opts, variant)?;
         scenarios.set(&tr_key, tr);
         for &slots in serve_slot_fills(opts.quick) {
-            let (key, s) = serve_scenario(opts, variant, slots)?;
+            let (key, s) = serve_scenario_impl(opts, variant, slots, false)?;
+            scenarios.set(&key, s);
+        }
+    }
+    if opts.include_quant {
+        let variant = Variant::DtrBilayer;
+        let (key, s) = quant_forward_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+        let (key, s) = quant_decode_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+        let (key, s) = quant_eval_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+        for &slots in serve_slot_fills(opts.quick) {
+            let (key, s) = serve_scenario_impl(opts, variant, slots, true)?;
             scenarios.set(&key, s);
         }
     }
     let mut out = Json::obj();
     out.set("schema", Json::Str(SCHEMA.to_string()));
     out.set("quick", Json::Bool(opts.quick));
+    out.set("quant_included", Json::Bool(opts.include_quant));
     out.set(
         "host",
         Json::from_pairs(vec![
@@ -142,6 +183,24 @@ fn backend_with_threads(variant: Variant, quick: bool, t: usize) -> Result<CpuBa
     let mut be = CpuBackend::init(&cfg, MODEL_SEED)?;
     be.set_threads(t);
     Ok(be)
+}
+
+fn quant_backend_with_threads(
+    variant: Variant,
+    quick: bool,
+    t: usize,
+) -> Result<QuantizedCpuBackend> {
+    let cfg = ModelConfig::preset(preset(quick), variant);
+    let mut be = QuantizedCpuBackend::init(&cfg, MODEL_SEED)?;
+    be.set_threads(t);
+    Ok(be)
+}
+
+/// The markov eval corpus every accuracy scenario scores against —
+/// the same generator and data-seed as the CLI's `make_dataset`.
+fn markov_dataset(vocab: usize, seq: usize) -> Dataset {
+    let mut rng = Rng::new(7);
+    Dataset::new(corpus::markov_corpus(&mut rng, vocab, 600 * seq, 12), seq)
 }
 
 /// Training-shape forward throughput (tokens/s) per thread count, with a
@@ -300,15 +359,33 @@ fn train_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json
 
 /// The serving engine end-to-end at a given batch width: tokens/s,
 /// latency/TTFT percentiles, occupancy, per-kernel timings — plus the
-/// bitwise token-stream check across the thread sweep.
-fn serve_scenario(opts: &BenchOptions, variant: Variant, slots: usize) -> Result<(String, Json)> {
+/// bitwise token-stream check across the thread sweep. `quantized`
+/// selects the int8 backend (the `quant_serve_*` keys, which also
+/// record and gate the weight-bytes compression).
+fn serve_scenario_impl(
+    opts: &BenchOptions,
+    variant: Variant,
+    slots: usize,
+    quantized: bool,
+) -> Result<(String, Json)> {
     let n_req = if opts.quick { 4usize } else { 16 };
-    let key = format!("serve_{}_s{slots}", variant.as_str());
+    let prefix = if quantized { "quant_serve" } else { "serve" };
+    let key = format!("{prefix}_{}_s{slots}", variant.as_str());
     let mut sc = Json::obj();
     let mut baseline: Option<Vec<Vec<i32>>> = None;
     let mut tok_s = Vec::new();
     for &t in &opts.threads {
-        let be = backend_with_threads(variant, opts.quick, t)?;
+        let be_f32;
+        let be_q;
+        let be: &dyn Backend = if quantized {
+            be_q = quant_backend_with_threads(variant, opts.quick, t)?;
+            be_q.timers().reset();
+            &be_q
+        } else {
+            be_f32 = backend_with_threads(variant, opts.quick, t)?;
+            be_f32.timers().reset();
+            &be_f32
+        };
         let cfg = be.config().clone();
         let spec = WorkloadSpec {
             n_requests: n_req,
@@ -326,8 +403,7 @@ fn serve_scenario(opts: &BenchOptions, variant: Variant, slots: usize) -> Result
             prefill: PrefillMode::Chunked(32),
             ..Default::default()
         };
-        be.timers().reset();
-        let mut srv = Server::new(&be, scfg)?;
+        let mut srv = Server::new(be, scfg)?;
         let rep = srv.run_workload(&trace, 10_000_000)?;
         ensure!(
             rep.completed + rep.evicted == n_req,
@@ -359,6 +435,21 @@ fn serve_scenario(opts: &BenchOptions, variant: Variant, slots: usize) -> Result
             ("batch_occupancy", Json::Num(rep.batch_occupancy)),
             ("steps", Json::Num(rep.steps as f64)),
         ]);
+        if quantized {
+            ensure!(
+                rep.weight_bytes.compression() >= QUANT_MIN_COMPRESSION,
+                "{key}: weight compression {:.3} below the {QUANT_MIN_COMPRESSION}x gate",
+                rep.weight_bytes.compression()
+            );
+            row.set(
+                "weight_bytes_resident",
+                Json::Num(rep.weight_bytes.resident as f64),
+            );
+            row.set(
+                "weight_compression",
+                Json::Num(rep.weight_bytes.compression()),
+            );
+        }
         if let Some(kt) = &rep.kernel_timings {
             row.set("kernel_timings", kt.clone());
         }
@@ -369,6 +460,217 @@ fn serve_scenario(opts: &BenchOptions, variant: Variant, slots: usize) -> Result
         );
     }
     finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// Int8 forward: throughput + bitwise thread sweep, the
+/// routing-equivalence gate vs the f32 backend (same seed, same tokens),
+/// the weight-bytes compression gate, and an f32-vs-int8 throughput
+/// readout at the widest thread count.
+fn quant_forward_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let (b, s) = if opts.quick { (2usize, 32usize) } else { (2, 64) };
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (2, 10) };
+    let key = format!("quant_forward_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let tokens = Tensor::i32(
+        vec![b, s],
+        (0..(b * s) as i32).map(|i| i * 7 % 256).collect(),
+    );
+    let tmax = *opts.threads.last().unwrap();
+    let f32_be = backend_with_threads(variant, opts.quick, tmax)?;
+    let f32_out = f32_be.forward(&tokens)?;
+
+    let mut baseline: Option<Vec<f32>> = None;
+    let mut q_out = None;
+    let mut wb = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be = quant_backend_with_threads(variant, opts.quick, t)?;
+        wb = Some(be.weight_bytes());
+        let out = be.forward(&tokens)?;
+        match &baseline {
+            None => {
+                baseline = Some(out.logits.as_f32().to_vec());
+                q_out = Some(out);
+            }
+            Some(want) => ensure!(
+                want.as_slice() == out.logits.as_f32(),
+                "{key}: int8 logits bits diverged between threads=1 and threads={t}"
+            ),
+        }
+        let m = bench(&format!("{key}_t{t}"), warmup, iters, || {
+            be.forward(&tokens).unwrap();
+        });
+        let tps = (b * s) as f64 / m.mean_s;
+        tok_s.push(tps);
+        sc.set(
+            &format!("t{t}"),
+            Json::from_pairs(vec![
+                ("tokens_per_s", Json::Num(tps)),
+                ("mean_ms", Json::Num(m.mean_s * 1e3)),
+            ]),
+        );
+    }
+
+    // Routing-equivalence gate: decisive f32 decisions must survive
+    // quantization exactly; near-tie flips stay under the budget.
+    let eq = quant::check_routing_equivalence(&f32_out, &q_out.unwrap())
+        .map_err(|e| e.context(format!("{key}: routing-equivalence gate")))?;
+    sc.set(
+        "routing_equivalence",
+        Json::from_pairs(vec![
+            ("decisions", Json::Num(eq.decisions as f64)),
+            ("dtr_decisions", Json::Num(eq.dtr_decisions as f64)),
+            ("flips", Json::Num(eq.flips as f64)),
+            ("decisive_flips", Json::Num(eq.decisive_flips as f64)),
+            ("min_f32_margin", Json::Num(eq.min_f32_margin as f64)),
+        ]),
+    );
+
+    // Weight-bytes compression gate + f32 throughput readout.
+    let wb = wb.expect("thread sweep is non-empty");
+    ensure!(
+        wb.compression() >= QUANT_MIN_COMPRESSION,
+        "{key}: weight compression {:.3} below the {QUANT_MIN_COMPRESSION}x gate",
+        wb.compression()
+    );
+    sc.set("weight_bytes_resident", Json::Num(wb.resident as f64));
+    sc.set("weight_bytes_f32", Json::Num(wb.f32_equiv as f64));
+    sc.set("weight_compression", Json::Num(wb.compression()));
+    let mf = bench(&format!("{key}_f32_t{tmax}"), warmup, iters, || {
+        f32_be.forward(&tokens).unwrap();
+    });
+    let f32_tps = (b * s) as f64 / mf.mean_s;
+    sc.set("f32_tokens_per_s", Json::Num(f32_tps));
+    if f32_tps > 0.0 {
+        sc.set(
+            "speedup_vs_f32",
+            Json::Num(tok_s.last().copied().unwrap_or(0.0) / f32_tps),
+        );
+    }
+    println!(
+        "[bench] {key}: {} routing decisions, {} near-tie flips, compression {:.2}x",
+        eq.decisions,
+        eq.flips,
+        wb.compression()
+    );
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// Int8 autoregressive decode: steps/s with the bitwise token-stream
+/// thread sweep, plus the f32-vs-int8 decode speedup readout — the
+/// weight-bandwidth-bound hot path quantization targets.
+fn quant_decode_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let gen = if opts.quick { 8usize } else { 32 };
+    let (warmup, iters) = if opts.quick { (1, 2) } else { (1, 5) };
+    let key = format!("quant_decode_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let mut prompt_rng = Rng::new(MODEL_SEED.wrapping_add(1));
+    let prompt: Vec<i32> = (0..16).map(|_| prompt_rng.below(256) as i32).collect();
+    let mut baseline: Option<Vec<i32>> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be = quant_backend_with_threads(variant, opts.quick, t)?;
+        let mut rng = Rng::new(2);
+        let out = be.generate(&prompt, gen, &SamplingParams::greedy(), &mut rng)?;
+        match &baseline {
+            None => baseline = Some(out.tokens.clone()),
+            Some(want) => ensure!(
+                *want == out.tokens,
+                "{key}: int8 token stream diverged between threads=1 and threads={t}"
+            ),
+        }
+        let m = bench(&format!("{key}_t{t}"), warmup, iters, || {
+            let mut r = Rng::new(2);
+            be.generate(&prompt, gen, &SamplingParams::greedy(), &mut r)
+                .unwrap();
+        });
+        let sps = gen as f64 / m.mean_s;
+        tok_s.push(sps);
+        sc.set(
+            &format!("t{t}"),
+            Json::from_pairs(vec![
+                ("steps_per_s", Json::Num(sps)),
+                ("mean_ms", Json::Num(m.mean_s * 1e3)),
+            ]),
+        );
+    }
+    // f32 decode at the widest thread count: the speedup denominator.
+    let tmax = *opts.threads.last().unwrap();
+    let f32_be = backend_with_threads(variant, opts.quick, tmax)?;
+    let mf = bench(&format!("{key}_f32_t{tmax}"), warmup, iters, || {
+        let mut r = Rng::new(2);
+        f32_be
+            .generate(&prompt, gen, &SamplingParams::greedy(), &mut r)
+            .unwrap();
+    });
+    let f32_sps = gen as f64 / mf.mean_s;
+    sc.set("f32_steps_per_s", Json::Num(f32_sps));
+    if f32_sps > 0.0 {
+        let speed = tok_s.last().copied().unwrap_or(0.0) / f32_sps;
+        sc.set("speedup_vs_f32", Json::Num(speed));
+        println!("[bench] {key}: int8 decode {speed:.2}x vs f32 at threads={tmax}");
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// Int8 eval accuracy: perplexity of the f32 and int8 backends on the
+/// markov corpus must agree within [`QUANT_PPL_GATE`], and routing on a
+/// realistic eval batch must pass the equivalence gate.
+fn quant_eval_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let seq = if opts.quick { 32usize } else { 64 };
+    let (batch, batches) = if opts.quick { (2usize, 2usize) } else { (2, 4) };
+    let key = format!("quant_eval_{}", variant.as_str());
+    let mut sc = Json::obj();
+    let tmax = *opts.threads.last().unwrap();
+    let f32_be = backend_with_threads(variant, opts.quick, tmax)?;
+    let q_be = quant_backend_with_threads(variant, opts.quick, tmax)?;
+    let data = markov_dataset(f32_be.config().vocab_size, seq);
+
+    let rf = crate::eval::perplexity_backend(&f32_be, &data, batch, batches)?;
+    let rq = crate::eval::perplexity_backend(&q_be, &data, batch, batches)?;
+    let delta = (rq.ppl - rf.ppl).abs() / rf.ppl;
+    ensure!(
+        delta <= QUANT_PPL_GATE,
+        "{key}: int8 perplexity drifted {:.4}% from f32 ({:.4} vs {:.4}; gate {:.2}%)",
+        delta * 100.0,
+        rq.ppl,
+        rf.ppl,
+        QUANT_PPL_GATE * 100.0
+    );
+    // Routing equivalence on a realistic corpus batch (near-tie flips
+    // tolerated, decisive flips not — see DESIGN.md §Quantization).
+    let first = data
+        .eval_batches(batch)
+        .next()
+        .expect("markov corpus yields at least one eval batch");
+    let tokens = Tensor::i32(vec![batch, seq], first);
+    let eq = quant::check_routing_equivalence(&f32_be.forward(&tokens)?, &q_be.forward(&tokens)?)
+        .map_err(|e| e.context(format!("{key}: routing-equivalence gate")))?;
+    sc.set("f32_ppl", Json::Num(rf.ppl));
+    sc.set("int8_ppl", Json::Num(rq.ppl));
+    sc.set("ppl_delta_pct", Json::Num(delta * 100.0));
+    sc.set("ppl_gate_pct", Json::Num(QUANT_PPL_GATE * 100.0));
+    sc.set("eval_tokens", Json::Num(rf.n_tokens as f64));
+    sc.set(
+        "routing_equivalence",
+        Json::from_pairs(vec![
+            ("decisions", Json::Num(eq.decisions as f64)),
+            ("dtr_decisions", Json::Num(eq.dtr_decisions as f64)),
+            ("flips", Json::Num(eq.flips as f64)),
+            ("decisive_flips", Json::Num(eq.decisive_flips as f64)),
+        ]),
+    );
+    println!(
+        "[bench] {key}: ppl f32 {:.4} vs int8 {:.4} (delta {:.4}%), {} flips/{}",
+        rf.ppl,
+        rq.ppl,
+        delta * 100.0,
+        eq.flips,
+        eq.decisions
+    );
     Ok((key, sc))
 }
 
@@ -394,6 +696,7 @@ mod tests {
         let opts = BenchOptions {
             quick: true,
             threads: vec![1, 2],
+            include_quant: true,
         };
         let doc = run(&opts).unwrap();
         assert_eq!(doc.path("schema").unwrap().as_str(), Some(SCHEMA));
@@ -405,6 +708,9 @@ mod tests {
             "train_dense",
             "train_dtr_bilayer",
             "serve_dtr_bilayer_s2",
+            "quant_forward_dtr_bilayer",
+            "quant_decode_dtr_bilayer",
+            "quant_serve_dtr_bilayer_s2",
         ] {
             let s = sc
                 .get(key)
@@ -424,5 +730,49 @@ mod tests {
         assert!(train.path("steps_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(train.path("kernel_timings.bwd_attention.total_ms").is_some());
         assert!(train.path("kernel_timings.optimizer.total_ms").is_some());
+        // the quant scenarios must carry their accuracy-gate readouts
+        let qf = sc.path("quant_forward_dtr_bilayer").unwrap();
+        assert_eq!(
+            qf.path("routing_equivalence.decisive_flips").and_then(Json::as_f64),
+            Some(0.0),
+            "decisive routing flips must be zero (the gate would have failed)"
+        );
+        assert!(
+            qf.path("weight_compression").unwrap().as_f64().unwrap()
+                >= QUANT_MIN_COMPRESSION
+        );
+        let qe = sc.path("quant_eval_dtr_bilayer").unwrap();
+        let delta = qe.path("ppl_delta_pct").unwrap().as_f64().unwrap();
+        assert!(delta <= QUANT_PPL_GATE * 100.0, "ppl delta {delta}%");
+        assert!(doc.path("quant_included").and_then(Json::as_bool) == Some(true));
+    }
+
+    #[test]
+    fn quant_scenarios_can_be_skipped() {
+        let opts = BenchOptions {
+            quick: true,
+            threads: vec![1],
+            include_quant: false,
+        };
+        let doc = run(&opts).unwrap();
+        let sc = doc.path("scenarios").unwrap();
+        assert!(sc.get("quant_forward_dtr_bilayer").is_none());
+        assert!(doc.path("quant_included").and_then(Json::as_bool) == Some(false));
+    }
+
+    #[test]
+    fn write_creates_missing_parent_dirs() {
+        // `bench --out results/nested/bench.json` must not require the
+        // directory to exist (the CI jobs write into fresh results/).
+        let dir = std::env::temp_dir()
+            .join("dtrnet_bench_out_test")
+            .join("nested");
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("dtrnet_bench_out_test"));
+        let path = dir.join("bench.json");
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Str(SCHEMA.to_string()));
+        write(&path, &doc).unwrap();
+        let re = Json::parse_file(&path).unwrap();
+        assert_eq!(re.path("schema").unwrap().as_str(), Some(SCHEMA));
     }
 }

@@ -98,6 +98,27 @@ pub struct GenerateOutput {
 /// amortization against scratch memory; any value is correct).
 pub const PREFILL_CHUNK: usize = 32;
 
+/// Weight-memory telemetry: what a backend's parameters actually occupy
+/// versus their f32-equivalent footprint. For full-precision backends
+/// the two are equal; the int8 backend
+/// ([`crate::runtime::quant::QuantizedCpuBackend`]) reports ~3.7×
+/// compression. Folded into [`crate::coordinator::ServeReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightBytes {
+    /// Bytes the weights occupy as resident in this backend.
+    pub resident: usize,
+    /// Bytes the same parameter set occupies at f32 (4 bytes/param).
+    pub f32_equiv: usize,
+}
+
+impl WeightBytes {
+    /// Compression ratio vs f32 (`f32_equiv / resident`; 1.0 for
+    /// full-precision backends).
+    pub fn compression(&self) -> f64 {
+        self.f32_equiv as f64 / self.resident.max(1) as f64
+    }
+}
+
 /// An execution backend for the DTRNet model family.
 pub trait Backend {
     /// Human-readable backend name (for logs/reports).
@@ -114,6 +135,17 @@ pub trait Backend {
     /// harness writes it into `BENCH_*.json`. Default: `None`.
     fn kernel_timings(&self) -> Option<Json> {
         None
+    }
+
+    /// Weight-memory telemetry (resident vs f32-equivalent bytes). The
+    /// default assumes full-precision residency: `param_count × 4` on
+    /// both sides. Quantized backends override with measured bytes.
+    fn weight_bytes(&self) -> WeightBytes {
+        let bytes = self.config().param_count() * 4;
+        WeightBytes {
+            resident: bytes,
+            f32_equiv: bytes,
+        }
     }
 
     /// Batched training-shape forward. `tokens` is `[B, S]` i32.

@@ -125,6 +125,118 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
+/// f32 × i8 dot product with a single f32 accumulator walked in ascending
+/// index order — the fixed-accumulation-order core of [`matmul_q8`].
+#[inline]
+pub fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&av, &qv) in a.iter().zip(q) {
+        acc += av * qv as f32;
+    }
+    acc
+}
+
+/// Per-output-row symmetric int8 quantization of a weight matrix `w`
+/// (row-major `[k, m]`, the [`matmul`] layout). Output channel `j` gets
+/// `scale[j] = max|w[:, j]| / 127` and its column is stored as the
+/// contiguous i8 row `q[j*k .. (j+1)*k]` — transposed, so the
+/// [`matmul_q8`] inner dot walks both operands sequentially. All-zero
+/// columns get scale 1.0 (they quantize to zeros either way). Returns
+/// `(q, scales)` with `q.len() == m * k`, `scales.len() == m`.
+pub fn quantize_rows(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
+    debug_assert_eq!(w.len(), k * m);
+    let mut scales = vec![0.0f32; m];
+    for (j, s) in scales.iter_mut().enumerate() {
+        let mut amax = 0.0f32;
+        for kk in 0..k {
+            amax = amax.max(w[kk * m + j].abs());
+        }
+        *s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+    }
+    let mut q = vec![0i8; m * k];
+    for j in 0..m {
+        let s = scales[j];
+        let qrow = &mut q[j * k..(j + 1) * k];
+        for (kk, qv) in qrow.iter_mut().enumerate() {
+            *qv = (w[kk * m + j] / s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Quantized matmul: `a [n, k] (f32) @ Wq -> [n, m]`, where `Wq` is the
+/// `(q, scales)` pair from [`quantize_rows`] (`q` stored `[m, k]`
+/// output-row-major). Each output element is one [`dot_q8`] (ascending-k
+/// f32 accumulation) scaled once by its row scale — no dequantized copy
+/// of the weights ever materializes.
+pub fn matmul_q8(a: &[f32], q: &[i8], scales: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    matmul_q8_par(&Pool::serial(), a, q, scales, n, k, m)
+}
+
+/// Rows `[row0, row0 + orows.len()/m)` of [`matmul_q8`], written into
+/// `orows` — the shared loop body of the serial and pooled forms.
+fn matmul_q8_rows(
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    k: usize,
+    m: usize,
+    row0: usize,
+    orows: &mut [f32],
+) {
+    let rows = orows.len() / m;
+    for r in 0..rows {
+        let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
+        let orow = &mut orows[r * m..(r + 1) * m];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_q8(arow, &q[j * k..(j + 1) * k]) * scales[j];
+        }
+    }
+}
+
+/// [`matmul_q8`] over `pool`: multi-row inputs parallelize across output
+/// row chunks, a single-row input (the decode hot path) across output
+/// column chunks. Every output element is computed whole inside one
+/// chunk with its serial accumulation order, so the pooled form is
+/// bit-identical to the serial kernel for any thread count — the same
+/// discipline as [`matmul_par`].
+pub fn matmul_q8_par(
+    pool: &Pool,
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(q.len(), m * k);
+    debug_assert_eq!(scales.len(), m);
+    let mut out = vec![0.0f32; n * m];
+    let work = n * k * m;
+    if pool.threads() == 1 || work < PAR_MIN_FLOPS {
+        matmul_q8_rows(a, q, scales, k, m, 0, &mut out);
+        return out;
+    }
+    if n == 1 {
+        // One output row: chunk its columns; column j's dot is
+        // self-contained, so chunking cannot change any bit.
+        let grain = (PAR_CHUNK_FLOPS / k.max(1)).max(16);
+        pool.run_rows(&mut out, 1, grain, |c0, ocols| {
+            for (t, o) in ocols.iter_mut().enumerate() {
+                let j = c0 + t;
+                *o = dot_q8(a, &q[j * k..(j + 1) * k]) * scales[j];
+            }
+        });
+        return out;
+    }
+    let grain = (PAR_CHUNK_FLOPS / (k * m).max(1)).max(1);
+    pool.run_rows(&mut out, m, grain, |row0, orows| {
+        matmul_q8_rows(a, q, scales, k, m, row0, orows)
+    });
+    out
+}
+
 /// RMSNorm (ref.rmsnorm_ref): `x [n, d]`, `weight [d]`.
 pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
     rmsnorm_par(&Pool::serial(), x, weight, eps)
@@ -715,6 +827,65 @@ mod tests {
             let par = matmul_par(&pool, &a, &b, n, k, m);
             assert_eq!(serial, par, "bits diverged at n={n} k={k} m={m}");
         }
+    }
+
+    #[test]
+    fn matmul_q8_par_bit_identical_to_serial() {
+        let pool = Pool::with_threads(4);
+        let mut rng = Rng::new(21);
+        // spans the column-parallel (n == 1), row-parallel, and inline paths
+        for (n, k, m) in [(1usize, 200usize, 300usize), (7, 65, 129), (2, 3, 4)] {
+            let w = randn(&mut rng, k * m, 0.3);
+            let a = randn(&mut rng, n * k, 1.0);
+            let (q, scales) = quantize_rows(&w, k, m);
+            let serial = matmul_q8(&a, &q, &scales, n, k, m);
+            let par = matmul_q8_par(&pool, &a, &q, &scales, n, k, m);
+            assert_eq!(serial, par, "q8 bits diverged at n={n} k={k} m={m}");
+        }
+    }
+
+    #[test]
+    fn quantize_rows_is_exact_on_representable_weights() {
+        // Integer multiples of a power-of-two-friendly scale, with one
+        // entry pinned at ±127·scale per column, survive the round-trip
+        // exactly: scale = amax/127 recovers the constructed scale and
+        // every entry dequantizes to its original f32 bits.
+        let (k, m) = (8usize, 5usize);
+        let levels: [i32; 8] = [-127, -64, -32, 0, 1, 2, 64, 127];
+        let mut w = vec![0.0f32; k * m];
+        for j in 0..m {
+            let s = 0.5 * (j as f32 + 1.0);
+            for (kk, &t) in levels.iter().enumerate() {
+                w[kk * m + j] = t as f32 * s;
+            }
+        }
+        let (q, scales) = quantize_rows(&w, k, m);
+        for j in 0..m {
+            assert_eq!(scales[j], 0.5 * (j as f32 + 1.0), "col {j} scale");
+            for (kk, &t) in levels.iter().enumerate() {
+                assert_eq!(q[j * k + kk], t as i8, "col {j} level {kk}");
+                let deq = q[j * k + kk] as f32 * scales[j];
+                assert_eq!(deq, w[kk * m + j], "col {j} row {kk}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_rows_handles_zero_columns() {
+        let (k, m) = (4usize, 3usize);
+        let mut w = vec![0.0f32; k * m];
+        for kk in 0..k {
+            w[kk * m + 1] = 0.5; // only column 1 is nonzero
+        }
+        let (q, scales) = quantize_rows(&w, k, m);
+        assert_eq!(scales[0], 1.0);
+        assert_eq!(scales[2], 1.0);
+        assert!(q[..k].iter().all(|&v| v == 0), "zero column must quantize to zeros");
+        let a = vec![1.0f32; k];
+        let out = matmul_q8(&a, &q, &scales, 1, k, m);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[2], 0.0);
+        assert!((out[1] - 2.0).abs() < 1e-5);
     }
 
     #[test]

@@ -315,9 +315,11 @@ struct RowsOutput {
 /// the chunk K/V (`kernels::decode_attention_pending`), which visits
 /// keys in exactly the order a sequential attend-then-append loop would
 /// have, so the result (and the cache bytes appended afterwards) is
-/// bit-identical to that loop. Returns `[m, d]` context rows.
+/// bit-identical to that loop. Returns `[m, d]` context rows. Shared
+/// with the quantized backend (`runtime::quant`), whose step path is the
+/// same modulo projection kernels.
 #[allow(clippy::too_many_arguments)]
-fn attend_rows(
+pub(crate) fn attend_rows(
     pool: &Pool,
     q: &[f32],
     kk: &[f32],
@@ -373,51 +375,60 @@ fn attend_rows(
     ctx
 }
 
+/// Validate a (config, weights) pair for native execution: supported
+/// variant, valid config, and every tensor at its init_params shape.
+/// Shared by [`CpuBackend::new`] and the quantized backend
+/// (`runtime::quant`), which quantizes only weights that pass here.
+pub(crate) fn validate_weights(cfg: &ModelConfig, weights: &ModelWeights) -> Result<()> {
+    ensure!(
+        cfg.variant == Variant::Dense || cfg.variant.is_dtr(),
+        "CPU backend supports dense/dtr_* variants, not {:?} (MoD/D-LLM are PJRT-only)",
+        cfg.variant
+    );
+    cfg.validate()?;
+    let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+    ensure!(weights.tok_embed.len() == v * d, "tok_embed shape");
+    ensure!(weights.unembed.len() == d * v, "unembed shape");
+    ensure!(weights.out_norm.len() == d, "out_norm shape");
+    ensure!(
+        weights.layers.len() == cfg.n_layers,
+        "expected {} layers, got {}",
+        cfg.n_layers,
+        weights.layers.len()
+    );
+    for (i, (lw, kind)) in weights.layers.iter().zip(cfg.layer_kinds()).enumerate() {
+        ensure!(lw.kind == kind, "layer {i}: kind mismatch with config layout");
+        ensure!(lw.norm1.len() == d && lw.norm2.len() == d, "layer {i}: norm shape");
+        ensure!(
+            lw.wq.len() == d * d
+                && lw.wk.len() == d * d
+                && lw.wv.len() == d * d
+                && lw.wo.len() == d * d,
+            "layer {i}: attention projection shape"
+        );
+        ensure!(
+            lw.w_gate.len() == d * ff && lw.w_up.len() == d * ff && lw.w_down.len() == ff * d,
+            "layer {i}: mlp shape"
+        );
+        match kind {
+            LayerKind::Dtr => ensure!(
+                lw.r_w1.len() == d * (d / 2) && lw.r_w2.len() == (d / 2) * 2,
+                "layer {i}: router shape"
+            ),
+            LayerKind::Dense => ensure!(
+                lw.r_w1.is_empty() && lw.r_w2.is_empty(),
+                "layer {i}: dense layer must not carry router weights"
+            ),
+            _ => bail!("layer {i}: unsupported kind for CPU backend"),
+        }
+    }
+    Ok(())
+}
+
 impl CpuBackend {
     /// Build from explicit weights, validating variant support and shapes.
     pub fn new(cfg: ModelConfig, weights: ModelWeights, mode: RouterMode) -> Result<CpuBackend> {
-        ensure!(
-            cfg.variant == Variant::Dense || cfg.variant.is_dtr(),
-            "CPU backend supports dense/dtr_* variants, not {:?} (MoD/D-LLM are PJRT-only)",
-            cfg.variant
-        );
-        cfg.validate()?;
-        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
-        ensure!(weights.tok_embed.len() == v * d, "tok_embed shape");
-        ensure!(weights.unembed.len() == d * v, "unembed shape");
-        ensure!(weights.out_norm.len() == d, "out_norm shape");
-        ensure!(
-            weights.layers.len() == cfg.n_layers,
-            "expected {} layers, got {}",
-            cfg.n_layers,
-            weights.layers.len()
-        );
-        for (i, (lw, kind)) in weights.layers.iter().zip(cfg.layer_kinds()).enumerate() {
-            ensure!(lw.kind == kind, "layer {i}: kind mismatch with config layout");
-            ensure!(lw.norm1.len() == d && lw.norm2.len() == d, "layer {i}: norm shape");
-            ensure!(
-                lw.wq.len() == d * d
-                    && lw.wk.len() == d * d
-                    && lw.wv.len() == d * d
-                    && lw.wo.len() == d * d,
-                "layer {i}: attention projection shape"
-            );
-            ensure!(
-                lw.w_gate.len() == d * ff && lw.w_up.len() == d * ff && lw.w_down.len() == ff * d,
-                "layer {i}: mlp shape"
-            );
-            match kind {
-                LayerKind::Dtr => ensure!(
-                    lw.r_w1.len() == d * (d / 2) && lw.r_w2.len() == (d / 2) * 2,
-                    "layer {i}: router shape"
-                ),
-                LayerKind::Dense => ensure!(
-                    lw.r_w1.is_empty() && lw.r_w2.is_empty(),
-                    "layer {i}: dense layer must not carry router weights"
-                ),
-                _ => bail!("layer {i}: unsupported kind for CPU backend"),
-            }
-        }
+        validate_weights(&cfg, &weights)?;
         Ok(CpuBackend {
             cfg,
             weights,
@@ -483,6 +494,26 @@ impl CpuBackend {
     /// scenarios via [`KernelTimers::reset`]).
     pub fn timers(&self) -> &KernelTimers {
         &self.timers
+    }
+
+    /// The backend's full-precision parameter set (read-only — the
+    /// quantized backend is built from this view).
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    /// Int8-quantize this backend's weights into a
+    /// [`QuantizedCpuBackend`](crate::runtime::quant::QuantizedCpuBackend)
+    /// sharing the same config, router mode, and kernel pool (see
+    /// DESIGN.md §Quantization).
+    pub fn quantized(&self) -> Result<crate::runtime::quant::QuantizedCpuBackend> {
+        let mut q = crate::runtime::quant::QuantizedCpuBackend::from_weights(
+            &self.cfg,
+            &self.weights,
+            self.router_mode,
+        )?;
+        q.set_pool(self.pool.clone());
+        Ok(q)
     }
 
     /// Export weights as a DTCK checkpoint using the Python

@@ -12,6 +12,10 @@
 //!   (64-bit instruction ids); the text parser reassigns ids.
 //! * [`manifest`] — the artifact contract with `aot.py` (feature-free:
 //!   shapes/layouts are plain host data).
+//! * [`quant`] — int8 weight quantization: [`QuantMatrix`] storage, the
+//!   [`QuantizedCpuBackend`] (full [`Backend`] surface, dequant-free
+//!   kernels, ~3.7× weight-memory compression), and the f32-vs-int8
+//!   routing/perplexity accuracy gates (DESIGN.md §Quantization).
 //! * [`checkpoint`] — DTCK parameter persistence, shared by both backends.
 //! * [`train`] — the [`TrainBackend`] trait (one optimizer step:
 //!   forward + backward + AdamW) and the native [`CpuTrainer`], with
@@ -25,12 +29,14 @@ pub mod cpu;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod quant;
 pub mod tensor;
 pub mod train;
 
-pub use backend::{Backend, DecodeState, ForwardOutput, GenerateOutput, StepOutput};
+pub use backend::{Backend, DecodeState, ForwardOutput, GenerateOutput, StepOutput, WeightBytes};
 pub use checkpoint::Checkpoint;
 pub use cpu::{CpuBackend, RouterMode};
+pub use quant::{QuantMatrix, QuantizedCpuBackend};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};

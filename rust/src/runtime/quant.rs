@@ -1,0 +1,1076 @@
+//! Int8 weight quantization — the memory-bandwidth half of the serving
+//! story (DESIGN.md §Quantization).
+//!
+//! DTRNet serving skips quadratic attention for ~90% of tokens, which
+//! leaves CPU decode increasingly *weight-bandwidth*-bound — exactly the
+//! regime where 4×-smaller weights pay off. This module provides:
+//!
+//! * [`QuantMatrix`] — per-output-row symmetric int8 storage of one
+//!   weight matrix (`i8` data + one `f32` scale per output channel,
+//!   transposed so the matmul inner loop is two contiguous streams);
+//! * [`QuantizedCpuBackend`] — the full [`Backend`] surface (forward,
+//!   chunked prefill, batched decode, kernel timings) evaluated
+//!   dequant-free over quantized projections via
+//!   [`kernels::matmul_q8_par`];
+//! * [`check_routing_equivalence`] — the f32-vs-int8 routing gate the
+//!   perf harness and tests enforce.
+//!
+//! # What is quantized
+//!
+//! Every large matrix: `tok_embed`, `unembed`, and the seven per-layer
+//! projections (`wq`/`wk`/`wv`/`wo`/`w_gate`/`w_up`/`w_down`). Norm
+//! gains and the DTR router weights (`r_w1`/`r_w2`) stay f32: together
+//! they are ~3% of parameters, and the router is the component whose
+//! *decisions* the accuracy gates compare against f32 — keeping its own
+//! weights exact confines quantization noise to the router's *input*
+//! stream. Net weight-memory compression is ~3.7× (≥3.5× gated).
+//!
+//! # Determinism
+//!
+//! The quantized kernels follow the PR 3 discipline: every output
+//! element is one ascending-k f32 accumulation computed whole inside a
+//! single disjoint chunk, so forward/prefill/decode are **bit-identical
+//! across `--threads`** (property-tested in `rust/tests/quant.rs`).
+//!
+//! # Accuracy gates
+//!
+//! Quantization perturbs the residual stream by ~0.1%, so a token whose
+//! f32 router margin `|g_attn − g_bypass|` sits *below* that noise floor
+//! can legitimately flip paths — exact decision equality is not
+//! information-theoretically guaranteeable under any weight perturbation.
+//! The gate therefore demands exact equality wherever the f32 router is
+//! decisive (margin ≥ [`ROUTING_MARGIN_TOL`]) and bounds near-tie flips
+//! to [`ROUTING_MAX_FLIP_FRAC`] of DTR-layer decisions (dense layers
+//! cannot flip and are excluded); eval perplexity must stay
+//! within 0.5% of f32 (enforced by the `quant_*` perf scenarios;
+//! measured deltas are ~0.05%).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{LayerKind, ModelConfig, Variant};
+use crate::metrics::KernelTimers;
+use crate::util::json::Json;
+use crate::util::threadpool::{self, Pool};
+
+use super::backend::{Backend, DecodeState, ForwardOutput, StepOutput, WeightBytes};
+use super::checkpoint::Checkpoint;
+use super::cpu::{
+    attend_rows, init_weights, kernels, validate_weights, CpuBackend, ModelWeights, RouterMode,
+    RMSNORM_EPS, ROPE_THETA,
+};
+use super::tensor::Tensor;
+
+/// A weight matrix in per-output-row symmetric int8 form.
+///
+/// Logical shape `[k, m]` (the row-major `x @ W` layout); stored
+/// transposed as `m` contiguous i8 rows of length `k`, one f32 scale per
+/// output row: `W[kk, j] ≈ data[j*k + kk] * scales[j]`.
+#[derive(Debug, Clone)]
+pub struct QuantMatrix {
+    /// Input dimension (rows of the logical f32 matrix).
+    k: usize,
+    /// Output dimension (columns of the logical f32 matrix).
+    m: usize,
+    /// `[m, k]` output-row-major int8 codes.
+    data: Vec<i8>,
+    /// `[m]` per-output-row scales (`amax/127`; 1.0 for all-zero rows).
+    scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major `[k, m]` f32 matrix (per-output-row scales).
+    pub fn quantize(w: &[f32], k: usize, m: usize) -> QuantMatrix {
+        let (data, scales) = kernels::quantize_rows(w, k, m);
+        QuantMatrix { k, m, data, scales }
+    }
+
+    /// Quantize a matrix whose *storage rows* are already the output
+    /// channels (`[m, k]` row-major — the `tok_embed` lookup layout).
+    pub fn quantize_row_major(w: &[f32], m: usize, k: usize) -> QuantMatrix {
+        debug_assert_eq!(w.len(), m * k);
+        let mut scales = vec![0.0f32; m];
+        let mut data = vec![0i8; m * k];
+        for j in 0..m {
+            let row = &w[j * k..(j + 1) * k];
+            let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            scales[j] = s;
+            for (q, &v) in data[j * k..(j + 1) * k].iter_mut().zip(row) {
+                *q = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantMatrix { k, m, data, scales }
+    }
+
+    /// Input dimension k.
+    pub fn input_dim(&self) -> usize {
+        self.k
+    }
+
+    /// Output dimension m.
+    pub fn output_dim(&self) -> usize {
+        self.m
+    }
+
+    /// Per-output-row scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// `a [n, k] @ W -> [n, m]` without dequantizing the weights
+    /// ([`kernels::matmul_q8_par`]; bit-identical for any thread count).
+    pub fn matmul_par(&self, pool: &Pool, a: &[f32], n: usize) -> Vec<f32> {
+        kernels::matmul_q8_par(pool, a, &self.data, &self.scales, n, self.k, self.m)
+    }
+
+    /// Dequantize output row `j` into `out` (`out[i] = q[j,i] * scale[j]`,
+    /// exact f32 products — the embedding-lookup path).
+    pub fn dequant_row_into(&self, j: usize, out: &mut Vec<f32>) {
+        let s = self.scales[j];
+        let row = &self.data[j * self.k..(j + 1) * self.k];
+        out.extend(row.iter().map(|&q| q as f32 * s));
+    }
+
+    /// Reconstruct the logical `[k, m]` row-major f32 matrix.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.k * self.m];
+        for j in 0..self.m {
+            let s = self.scales[j];
+            for kk in 0..self.k {
+                w[kk * self.m + j] = self.data[j * self.k + kk] as f32 * s;
+            }
+        }
+        w
+    }
+
+    /// Resident bytes (i8 codes + f32 scales).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+
+    /// Bytes the f32 form of this matrix occupies.
+    pub fn f32_bytes(&self) -> usize {
+        4 * self.k * self.m
+    }
+}
+
+/// One layer's weights in quantized form (norms + router stay f32).
+#[derive(Debug, Clone)]
+pub struct QuantLayerWeights {
+    /// Block kind (checked against the config at construction).
+    pub kind: LayerKind,
+    /// Pre-attention RMSNorm gain `[d]` (f32).
+    pub norm1: Vec<f32>,
+    /// Pre-MLP RMSNorm gain `[d]` (f32).
+    pub norm2: Vec<f32>,
+    /// Query projection `[d, d]`.
+    pub wq: QuantMatrix,
+    /// Key projection `[d, d]`.
+    pub wk: QuantMatrix,
+    /// Value projection `[d, d]`.
+    pub wv: QuantMatrix,
+    /// Output projection `[d, d]`.
+    pub wo: QuantMatrix,
+    /// SwiGLU gate projection `[d, ff]`.
+    pub w_gate: QuantMatrix,
+    /// SwiGLU up projection `[d, ff]`.
+    pub w_up: QuantMatrix,
+    /// SwiGLU down projection `[ff, d]`.
+    pub w_down: QuantMatrix,
+    /// Router first layer `[d, d/2]` (f32; empty on dense layers).
+    pub r_w1: Vec<f32>,
+    /// Router second layer `[d/2, 2]` (f32; empty on dense layers).
+    pub r_w2: Vec<f32>,
+}
+
+/// Full parameter set in quantized form.
+#[derive(Debug, Clone)]
+pub struct QuantModelWeights {
+    /// Token embedding `[V, d]`, quantized per embedding row.
+    pub tok_embed: QuantMatrix,
+    /// Unembedding `[d, V]`, quantized per vocab column.
+    pub unembed: QuantMatrix,
+    /// Final RMSNorm gain `[d]` (f32).
+    pub out_norm: Vec<f32>,
+    /// Per-layer weights, in layer order.
+    pub layers: Vec<QuantLayerWeights>,
+}
+
+impl QuantModelWeights {
+    /// Quantize a validated f32 parameter set.
+    pub fn from_f32(cfg: &ModelConfig, w: &ModelWeights) -> QuantModelWeights {
+        let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let layers = w
+            .layers
+            .iter()
+            .map(|lw| QuantLayerWeights {
+                kind: lw.kind,
+                norm1: lw.norm1.clone(),
+                norm2: lw.norm2.clone(),
+                wq: QuantMatrix::quantize(&lw.wq, d, d),
+                wk: QuantMatrix::quantize(&lw.wk, d, d),
+                wv: QuantMatrix::quantize(&lw.wv, d, d),
+                wo: QuantMatrix::quantize(&lw.wo, d, d),
+                w_gate: QuantMatrix::quantize(&lw.w_gate, d, ff),
+                w_up: QuantMatrix::quantize(&lw.w_up, d, ff),
+                w_down: QuantMatrix::quantize(&lw.w_down, ff, d),
+                r_w1: lw.r_w1.clone(),
+                r_w2: lw.r_w2.clone(),
+            })
+            .collect();
+        QuantModelWeights {
+            tok_embed: QuantMatrix::quantize_row_major(&w.tok_embed, v, d),
+            unembed: QuantMatrix::quantize(&w.unembed, d, v),
+            out_norm: w.out_norm.clone(),
+            layers,
+        }
+    }
+
+    /// Resident vs f32-equivalent weight footprint (the ServeReport
+    /// telemetry; the f32 side counts every tensor at 4 bytes/param).
+    pub fn weight_bytes(&self) -> WeightBytes {
+        let mut resident = 4 * self.out_norm.len();
+        let mut f32_equiv = 4 * self.out_norm.len();
+        for qm in [&self.tok_embed, &self.unembed] {
+            resident += qm.bytes();
+            f32_equiv += qm.f32_bytes();
+        }
+        for lw in &self.layers {
+            let f32_side = lw.norm1.len() + lw.norm2.len() + lw.r_w1.len() + lw.r_w2.len();
+            resident += 4 * f32_side;
+            f32_equiv += 4 * f32_side;
+            for qm in [
+                &lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.w_gate, &lw.w_up, &lw.w_down,
+            ] {
+                resident += qm.bytes();
+                f32_equiv += qm.f32_bytes();
+            }
+        }
+        WeightBytes { resident, f32_equiv }
+    }
+}
+
+/// Near-tie threshold for the routing-equivalence gate: decisions whose
+/// f32 margin `|g_attn − g_bypass|` is at least this must match int8
+/// exactly; below it a flip is tolerated (the margin sits inside the
+/// quantization noise floor — measured flips occur under ~2e-3).
+pub const ROUTING_MARGIN_TOL: f32 = 0.05;
+
+/// Maximum fraction of **DTR-layer** routing decisions allowed to flip
+/// (near-tie flips included; dense layers are pinned and excluded from
+/// the denominator so the budget does not dilute with the dense share of
+/// the layout). Measured rates are ≤0.5%; the gate allows 5% — the
+/// decisive-flip rule above carries the strictness, this bounds the
+/// volume of near-tie churn.
+pub const ROUTING_MAX_FLIP_FRAC: f64 = 0.05;
+
+/// Outcome of [`compare_routing`].
+#[derive(Debug, Clone, Copy)]
+pub struct RoutingEquivalence {
+    /// Total (token, layer) routing decisions compared (dense included).
+    pub decisions: usize,
+    /// Decisions on DTR layers (`g_attn < 1.0`) — the flip-budget
+    /// denominator; dense layers are structurally unable to flip.
+    pub dtr_decisions: usize,
+    /// Decisions where the int8 path chose differently from f32.
+    pub flips: usize,
+    /// Flips at tokens where the f32 margin was ≥ [`ROUTING_MARGIN_TOL`]
+    /// — these are never acceptable.
+    pub decisive_flips: usize,
+    /// Smallest f32 margin observed on a DTR decision (diagnostics).
+    pub min_f32_margin: f32,
+}
+
+/// Compare hard routing decisions of an f32 and an int8 forward pass
+/// over the same tokens. Both outputs must have identical shapes.
+pub fn compare_routing(f32_out: &ForwardOutput, int8_out: &ForwardOutput) -> RoutingEquivalence {
+    debug_assert_eq!(f32_out.route.shape, int8_out.route.shape);
+    let rf = f32_out.route.as_f32();
+    let rq = int8_out.route.as_f32();
+    let gf = f32_out.g_attn.as_f32();
+    let mut eq = RoutingEquivalence {
+        decisions: rf.len(),
+        dtr_decisions: 0,
+        flips: 0,
+        decisive_flips: 0,
+        min_f32_margin: f32::INFINITY,
+    };
+    // zip (not indexing) so a shape mismatch that slipped past the
+    // debug_assert cannot out-of-bounds in release — the comparison just
+    // covers the common prefix (check_routing_equivalence rejects
+    // mismatched shapes up front with a real error).
+    for ((&rfi, &rqi), &gfi) in rf.iter().zip(rq).zip(gf) {
+        // Two-way softmax: g_bypass = 1 - g_attn, margin = |2g - 1|.
+        // Dense layers are pinned at g = 1.0 (margin 1, never flips).
+        let margin = (2.0 * gfi - 1.0).abs();
+        if gfi < 1.0 {
+            eq.dtr_decisions += 1;
+            eq.min_f32_margin = eq.min_f32_margin.min(margin);
+        }
+        if (rfi > 0.5) != (rqi > 0.5) {
+            eq.flips += 1;
+            if margin >= ROUTING_MARGIN_TOL {
+                eq.decisive_flips += 1;
+            }
+        }
+    }
+    eq
+}
+
+/// The routing-equivalence gate: zero decisive flips, and total flips
+/// bounded by [`ROUTING_MAX_FLIP_FRAC`]. Returns the comparison stats on
+/// success so callers can record them.
+pub fn check_routing_equivalence(
+    f32_out: &ForwardOutput,
+    int8_out: &ForwardOutput,
+) -> Result<RoutingEquivalence> {
+    ensure!(
+        f32_out.route.shape == int8_out.route.shape,
+        "routing shapes differ: {:?} vs {:?}",
+        f32_out.route.shape,
+        int8_out.route.shape
+    );
+    let eq = compare_routing(f32_out, int8_out);
+    ensure!(
+        eq.decisive_flips == 0,
+        "int8 flipped {} decisive routing decisions (f32 margin >= {ROUTING_MARGIN_TOL}) \
+         of {} — quantization noise must not override a confident router",
+        eq.decisive_flips,
+        eq.decisions
+    );
+    let frac = eq.flips as f64 / eq.dtr_decisions.max(1) as f64;
+    ensure!(
+        frac <= ROUTING_MAX_FLIP_FRAC,
+        "int8 flipped {} of {} DTR routing decisions ({:.3}% > {:.1}% budget)",
+        eq.flips,
+        eq.dtr_decisions,
+        frac * 100.0,
+        ROUTING_MAX_FLIP_FRAC * 100.0
+    );
+    Ok(eq)
+}
+
+/// Which rows of a step need logits (mirror of the f32 backend's enum).
+#[derive(Clone, Copy, PartialEq)]
+enum LogitsRows {
+    All,
+    Last,
+    None,
+}
+
+/// Output of [`QuantizedCpuBackend::step_rows`].
+struct RowsOutput {
+    logits: Vec<f32>,
+    routed: Vec<Vec<bool>>,
+    g_attn: Vec<Vec<f32>>,
+}
+
+/// The int8-quantized CPU execution backend.
+///
+/// Semantics mirror [`CpuBackend`] exactly — same block structure, same
+/// routing rules, same cache contract — with every large matmul running
+/// through [`QuantMatrix::matmul_par`]. Outputs are *not* bit-identical
+/// to the f32 backend (weights differ by construction); they are
+/// bit-identical to themselves across thread counts, and held to f32
+/// behavior by the routing-equivalence and perplexity-delta gates.
+pub struct QuantizedCpuBackend {
+    cfg: ModelConfig,
+    weights: QuantModelWeights,
+    router_mode: RouterMode,
+    pool: Pool,
+    timers: KernelTimers,
+}
+
+impl QuantizedCpuBackend {
+    /// Quantize a validated f32 parameter set into a ready backend.
+    pub fn from_weights(
+        cfg: &ModelConfig,
+        weights: &ModelWeights,
+        mode: RouterMode,
+    ) -> Result<QuantizedCpuBackend> {
+        validate_weights(cfg, weights)?;
+        Ok(QuantizedCpuBackend {
+            cfg: cfg.clone(),
+            weights: QuantModelWeights::from_f32(cfg, weights),
+            router_mode: mode,
+            pool: threadpool::global().clone(),
+            timers: KernelTimers::default(),
+        })
+    }
+
+    /// Seeded random initialization, quantized — bit-for-bit the same
+    /// f32 init as [`CpuBackend::init`] before quantization, so f32 and
+    /// int8 backends at one seed describe the same model.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Result<QuantizedCpuBackend> {
+        QuantizedCpuBackend::from_weights(cfg, &init_weights(cfg, seed), RouterMode::TokenChoice)
+    }
+
+    /// Load an f32 DTCK checkpoint and quantize on load (`--quant int8`
+    /// on the serve/eval CLI paths).
+    pub fn from_checkpoint(cfg: &ModelConfig, ck: &Checkpoint) -> Result<QuantizedCpuBackend> {
+        CpuBackend::from_checkpoint(cfg, ck)?.quantized()
+    }
+
+    /// Switch between token-choice and expert-choice routing.
+    pub fn set_router_mode(&mut self, mode: RouterMode) {
+        self.router_mode = mode;
+    }
+
+    /// The active routing mode.
+    pub fn router_mode(&self) -> RouterMode {
+        self.router_mode
+    }
+
+    /// Run kernels on an explicit pool instead of the process-wide one.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
+    }
+
+    /// Convenience for [`QuantizedCpuBackend::set_pool`]: a fresh pool of
+    /// `n` threads (`1` = the serial determinism baseline).
+    pub fn set_threads(&mut self, n: usize) {
+        self.pool = Pool::with_threads(n);
+    }
+
+    /// Kernel-thread concurrency this backend currently runs with.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Per-kernel wall-clock accounting.
+    pub fn timers(&self) -> &KernelTimers {
+        &self.timers
+    }
+
+    /// The quantized parameter set (read-only).
+    pub fn quant_weights(&self) -> &QuantModelWeights {
+        &self.weights
+    }
+
+    /// Gather embedding rows for `toks`, dequantizing each row (exact
+    /// `i8 × f32` products; the only dequantization on any path).
+    fn embed_rows(&self, toks: &[i32], out: &mut Vec<f32>) {
+        for &t in toks {
+            self.weights.tok_embed.dequant_row_into(t as usize, out);
+        }
+    }
+
+    /// Hard routing decision for one DTR layer over the full sequence
+    /// (mirror of the f32 backend's `decide`).
+    fn decide(&self, g: &[f32], n: usize) -> Vec<f32> {
+        if self.cfg.variant == Variant::DtrSkip {
+            return vec![0.0; n];
+        }
+        match self.router_mode {
+            RouterMode::TokenChoice => kernels::route_decision(g),
+            RouterMode::ExpertChoice { capacity } => {
+                let g0: Vec<f32> = (0..n).map(|i| g[i * 2]).collect();
+                let k = ((capacity * n as f64).ceil() as usize).max(1);
+                kernels::topk_mask(&g0, k)
+            }
+        }
+    }
+
+    /// Quantized SwiGLU MLP: `(SiLU(x Wg) * (x Wu)) Wd` with the same
+    /// fuse loop as `kernels::swiglu_mlp_par`.
+    fn mlp_q8(&self, lw: &QuantLayerWeights, x: &[f32], n: usize) -> Vec<f32> {
+        let pool = &self.pool;
+        let ff = lw.w_gate.output_dim();
+        let mut gate = lw.w_gate.matmul_par(pool, x, n);
+        let up = lw.w_up.matmul_par(pool, x, n);
+        let grain = (kernels::PAR_CHUNK_FLOPS / (8 * ff).max(1)).max(2);
+        pool.run_rows(&mut gate, ff, grain, |row0, rows| {
+            let base = row0 * ff;
+            for (t, g) in rows.iter_mut().enumerate() {
+                *g = kernels::silu(*g) * up[base + t];
+            }
+        });
+        lw.w_down.matmul_par(pool, &gate, n)
+    }
+
+    /// Quantized Q/K/V projection + RoPE (mirror of `kernels::qkv_rope_par`).
+    fn qkv_rope_q8(
+        &self,
+        lw: &QuantLayerWeights,
+        u: &[f32],
+        positions: &[f32],
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let pool = &self.pool;
+        let (h, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let q = kernels::rope_par(
+            pool,
+            &lw.wq.matmul_par(pool, u, n),
+            positions,
+            n,
+            h,
+            hd,
+            ROPE_THETA,
+        );
+        let k = kernels::rope_par(
+            pool,
+            &lw.wk.matmul_par(pool, u, n),
+            positions,
+            n,
+            h,
+            hd,
+            ROPE_THETA,
+        );
+        let v = lw.wv.matmul_par(pool, u, n);
+        (q, k, v)
+    }
+
+    /// Quantized linear bypass `x Wv Wo` (paper Eq. 5 core).
+    fn bypass_q8(&self, lw: &QuantLayerWeights, x: &[f32], n: usize) -> Vec<f32> {
+        let v = lw.wv.matmul_par(&self.pool, x, n);
+        lw.wo.matmul_par(&self.pool, &v, n)
+    }
+
+    /// Row-parallel step over one token per row — the quantized mirror of
+    /// `CpuBackend::step_rows` (same causality, cache, and logits-mode
+    /// contract; see that method's docs).
+    fn step_rows(
+        &self,
+        toks: &[i32],
+        positions: &[f32],
+        states: &mut [&mut DecodeState],
+        cache_of: &[usize],
+        logits: LogitsRows,
+    ) -> Result<RowsOutput> {
+        let cfg = &self.cfg;
+        let (d, vocab) = (cfg.d_model, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = toks.len();
+        ensure!(n > 0, "step_rows needs at least one row");
+        debug_assert_eq!(positions.len(), n);
+        debug_assert_eq!(cache_of.len(), n);
+        for &t in toks {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; incremental \
+             decode/prefill supports token-choice only"
+        );
+
+        let mut x = Vec::with_capacity(n * d);
+        self.embed_rows(toks, &mut x);
+
+        let pool = &self.pool;
+        let mut routed = vec![Vec::with_capacity(cfg.n_layers); n];
+        let mut g_attn = vec![Vec::with_capacity(cfg.n_layers); n];
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
+            let mut mixed = vec![0.0f32; n * d];
+            match lw.kind {
+                LayerKind::Dense => {
+                    mixed = self.timers.attention.time(|| {
+                        let (q, kk, vv) = self.qkv_rope_q8(lw, &u, positions, n);
+                        let ctx =
+                            attend_rows(pool, &q, &kk, &vv, states, cache_of, li, d, heads, hd);
+                        lw.wo.matmul_par(pool, &ctx, n)
+                    });
+                    for r in 0..n {
+                        routed[r].push(true);
+                        g_attn[r].push(1.0);
+                    }
+                }
+                LayerKind::Dtr => {
+                    let g = self
+                        .timers
+                        .router
+                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
+                    let decide =
+                        |i: usize| cfg.variant != Variant::DtrSkip && g[i * 2] > g[i * 2 + 1];
+                    let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
+                    let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
+                    if !att_idx.is_empty() {
+                        self.timers.attention.time(|| {
+                            let u_r = kernels::gather_rows(&u, &att_idx, d);
+                            let pos_r: Vec<f32> =
+                                att_idx.iter().map(|&i| positions[i]).collect();
+                            let (q, kk, vv) = self.qkv_rope_q8(lw, &u_r, &pos_r, att_idx.len());
+                            let rows_cache: Vec<usize> =
+                                att_idx.iter().map(|&i| cache_of[i]).collect();
+                            let ctx = attend_rows(
+                                pool, &q, &kk, &vv, states, &rows_cache, li, d, heads, hd,
+                            );
+                            let attn = lw.wo.matmul_par(pool, &ctx, att_idx.len());
+                            let g0: Vec<f32> = att_idx.iter().map(|&i| g[i * 2]).collect();
+                            kernels::scatter_rows_scaled(&mut mixed, &attn, &att_idx, &g0, d);
+                        });
+                    }
+                    if !byp_idx.is_empty() {
+                        self.timers.bypass.time(|| {
+                            let u_b = kernels::gather_rows(&u, &byp_idx, d);
+                            let byp = self.bypass_q8(lw, &u_b, byp_idx.len());
+                            let g1: Vec<f32> = byp_idx.iter().map(|&i| g[i * 2 + 1]).collect();
+                            kernels::scatter_rows_scaled(&mut mixed, &byp, &byp_idx, &g1, d);
+                        });
+                    }
+                    for i in 0..n {
+                        routed[i].push(decide(i));
+                        g_attn[i].push(g[i * 2]);
+                    }
+                }
+                _ => bail!("unsupported layer kind in quantized CPU backend"),
+            }
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let mlp = self.timers.mlp.time(|| self.mlp_q8(lw, &h2, n));
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+        }
+
+        let logits = self.timers.unembed.time(|| match logits {
+            LogitsRows::None => Vec::new(),
+            LogitsRows::Last => {
+                let xn = kernels::rmsnorm_par(
+                    pool,
+                    &x[(n - 1) * d..n * d],
+                    &self.weights.out_norm,
+                    RMSNORM_EPS,
+                );
+                self.weights.unembed.matmul_par(pool, &xn, 1)
+            }
+            LogitsRows::All => {
+                let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+                self.weights.unembed.matmul_par(pool, &xn, n)
+            }
+        });
+        for &c in cache_of {
+            states[c].position += 1;
+        }
+        Ok(RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        })
+    }
+
+    /// Single-sequence forward — the quantized mirror of
+    /// `CpuBackend::forward_seq`.
+    fn forward_seq(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let (d, vocab) = (cfg.d_model, cfg.vocab_size);
+        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
+        let n = tokens.len();
+        let n_layers = cfg.n_layers;
+        let positions: Vec<f32> = (0..n).map(|i| i as f32).collect();
+
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        let mut x = Vec::with_capacity(n * d);
+        self.embed_rows(tokens, &mut x);
+
+        let pool = &self.pool;
+        let mut route = vec![0.0f32; n_layers * n];
+        let mut g_attn = vec![0.0f32; n_layers * n];
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            let u = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
+            let (mixed, delta, g0): (Vec<f32>, Vec<f32>, Vec<f32>) = match lw.kind {
+                LayerKind::Dense => {
+                    let attn = self.timers.attention.time(|| {
+                        let (q, kk, vv) = self.qkv_rope_q8(lw, &u, &positions, n);
+                        let ctx = kernels::dense_attention_par(pool, &q, &kk, &vv, n, heads, hd);
+                        lw.wo.matmul_par(pool, &ctx, n)
+                    });
+                    (attn, vec![1.0; n], vec![1.0; n])
+                }
+                LayerKind::Dtr => {
+                    let g = self
+                        .timers
+                        .router
+                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
+                    let delta = self.decide(&g, n);
+                    let mixed = self.timers.attention.time(|| {
+                        // routed attention for selected tokens, bypass for
+                        // the rest, soft-score path select (Eqs. 3–5) —
+                        // the quantized form of kernels::dtr_token_mix_par
+                        let (q, kk, vv) = self.qkv_rope_q8(lw, &u, &positions, n);
+                        let ctx = kernels::routed_attention_par(
+                            pool, &q, &kk, &vv, &delta, n, heads, hd,
+                        );
+                        let attn_out = lw.wo.matmul_par(pool, &ctx, n);
+                        let byp = self.bypass_q8(lw, &u, n);
+                        let mut update = vec![0.0f32; n * d];
+                        for i in 0..n {
+                            let (w, src) = if delta[i] > 0.5 {
+                                (g[i * 2], &attn_out)
+                            } else {
+                                (g[i * 2 + 1], &byp)
+                            };
+                            for j in 0..d {
+                                update[i * d + j] = w * src[i * d + j];
+                            }
+                        }
+                        update
+                    });
+                    let g0 = (0..n).map(|i| g[i * 2]).collect();
+                    (mixed, delta, g0)
+                }
+                _ => bail!("unsupported layer kind in quantized CPU backend"),
+            };
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            let h2 = self
+                .timers
+                .norm
+                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            let mlp = self.timers.mlp.time(|| self.mlp_q8(lw, &h2, n));
+            for (xv, mv) in x.iter_mut().zip(&mlp) {
+                *xv += mv;
+            }
+            route[li * n..(li + 1) * n].copy_from_slice(&delta);
+            g_attn[li * n..(li + 1) * n].copy_from_slice(&g0);
+        }
+
+        let logits = self.timers.unembed.time(|| {
+            let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
+            self.weights.unembed.matmul_par(pool, &xn, n)
+        });
+        Ok((logits, route, g_attn))
+    }
+}
+
+impl Backend for QuantizedCpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu-int8"
+    }
+
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn kernel_timings(&self) -> Option<Json> {
+        Some(self.timers.snapshot())
+    }
+
+    fn weight_bytes(&self) -> WeightBytes {
+        self.weights.weight_bytes()
+    }
+
+    fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput> {
+        ensure!(
+            tokens.shape.len() == 2,
+            "forward expects [B, S] tokens, got shape {:?}",
+            tokens.shape
+        );
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        let n_layers = self.cfg.n_layers;
+        let vocab = self.cfg.vocab_size;
+        let ids = tokens.as_i32();
+
+        let mut logits = Vec::with_capacity(b * s * vocab);
+        let mut route = Vec::with_capacity(b * n_layers * s);
+        let mut g_attn = Vec::with_capacity(b * n_layers * s);
+        for bi in 0..b {
+            let (lg, rt, ga) = self.forward_seq(&ids[bi * s..(bi + 1) * s])?;
+            logits.extend_from_slice(&lg);
+            route.extend_from_slice(&rt);
+            g_attn.extend_from_slice(&ga);
+        }
+        let mut attn_frac = vec![0.0f64; n_layers];
+        for bi in 0..b {
+            for l in 0..n_layers {
+                let row = &route[(bi * n_layers + l) * s..(bi * n_layers + l + 1) * s];
+                attn_frac[l] += row.iter().map(|&r| r as f64).sum::<f64>() / (b * s) as f64;
+            }
+        }
+        Ok(ForwardOutput {
+            logits: Tensor::f32(vec![b, s, vocab], logits),
+            route: Tensor::f32(vec![b, n_layers, s], route),
+            g_attn: Tensor::f32(vec![b, n_layers, s], g_attn),
+            attn_frac,
+        })
+    }
+
+    fn begin_decode(&self) -> DecodeState {
+        DecodeState::new(self.cfg.n_layers)
+    }
+
+    /// One-token decode via the shared row-step core (a single row is
+    /// exactly the sequential decode semantics: same kernels, same cache
+    /// appends, same position bump).
+    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
+        let positions = [state.position as f32];
+        let mut slab = [&mut *state];
+        let RowsOutput {
+            logits,
+            mut routed,
+            mut g_attn,
+        } = self.step_rows(&[token], &positions, &mut slab, &[0], LogitsRows::All)?;
+        Ok(StepOutput {
+            logits: Tensor::f32(vec![self.cfg.vocab_size], logits),
+            routed: routed.pop().unwrap(),
+            g_attn: g_attn.pop().unwrap(),
+        })
+    }
+
+    /// Vectorized multi-sequence decode (mirror of the f32 backend's
+    /// override; bit-identical to per-sequence [`Backend::decode_step`]).
+    fn decode_batch(
+        &self,
+        states: &mut [&mut DecodeState],
+        tokens: &[i32],
+    ) -> Result<Vec<StepOutput>> {
+        ensure!(
+            states.len() == tokens.len(),
+            "decode_batch: {} states vs {} tokens",
+            states.len(),
+            tokens.len()
+        );
+        let b = states.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let positions: Vec<f32> = states.iter().map(|s| s.position as f32).collect();
+        let cache_of: Vec<usize> = (0..b).collect();
+        let RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        } = self.step_rows(tokens, &positions, states, &cache_of, LogitsRows::All)?;
+        let vocab = self.cfg.vocab_size;
+        let mut outs = Vec::with_capacity(b);
+        for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
+            outs.push(StepOutput {
+                logits: Tensor::f32(vec![vocab], logits[i * vocab..(i + 1) * vocab].to_vec()),
+                routed: r,
+                g_attn: ga,
+            });
+        }
+        Ok(outs)
+    }
+
+    /// Chunked prefill (mirror of the f32 backend's override: within-chunk
+    /// causality from row order, unembed only on the final row).
+    fn prefill_chunked(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<StepOutput> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; prefill supports token-choice only"
+        );
+        let chunk = chunk.max(1);
+        let n_chunks = tokens.len().div_ceil(chunk);
+        let mut last = None;
+        for (ci, ck) in tokens.chunks(chunk).enumerate() {
+            let positions: Vec<f32> =
+                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
+            let cache_of = vec![0usize; ck.len()];
+            let mut slab = [&mut *state];
+            let mode = if ci + 1 == n_chunks {
+                LogitsRows::Last
+            } else {
+                LogitsRows::None
+            };
+            last = Some(self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?);
+        }
+        let RowsOutput {
+            logits,
+            mut routed,
+            mut g_attn,
+        } = last.unwrap();
+        Ok(StepOutput {
+            logits: Tensor::f32(vec![vocab], logits),
+            routed: routed.pop().unwrap(),
+            g_attn: g_attn.pop().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn xs(variant: Variant) -> ModelConfig {
+        ModelConfig::preset("xs", variant)
+    }
+
+    #[test]
+    fn quant_matrix_roundtrip_error_is_bounded_per_row() {
+        let mut rng = Rng::new(5);
+        let (k, m) = (48usize, 24usize);
+        let w: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32 * 0.3).collect();
+        let qm = QuantMatrix::quantize(&w, k, m);
+        let deq = qm.dequantize();
+        for j in 0..m {
+            let half = qm.scales()[j] * 0.5;
+            for kk in 0..k {
+                let e = (deq[kk * m + j] - w[kk * m + j]).abs();
+                assert!(e <= half + 1e-7, "col {j}: error {e} > scale/2 {half}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_major_and_transposed_quantization_agree() {
+        let mut rng = Rng::new(6);
+        let (v, d) = (10usize, 8usize);
+        // tok_embed stored [V, d]: row-major quantization of it must equal
+        // transposed quantization of its [d, V] transpose.
+        let e: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut et = vec![0.0f32; d * v];
+        for r in 0..v {
+            for c in 0..d {
+                et[c * v + r] = e[r * d + c];
+            }
+        }
+        let a = QuantMatrix::quantize_row_major(&e, v, d);
+        let b = QuantMatrix::quantize(&et, d, v);
+        assert_eq!(a.scales(), b.scales());
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn rejects_unsupported_variants() {
+        assert!(QuantizedCpuBackend::init(&xs(Variant::Mod), 0).is_err());
+        assert!(QuantizedCpuBackend::init(&xs(Variant::DtrBilayer), 0).is_ok());
+    }
+
+    #[test]
+    fn weight_bytes_compression_exceeds_gate() {
+        for preset in ["xs", "tiny"] {
+            let cfg = ModelConfig::preset(preset, Variant::DtrBilayer);
+            let be = QuantizedCpuBackend::init(&cfg, 0).unwrap();
+            let wb = be.weight_bytes();
+            assert_eq!(wb.f32_equiv, 4 * cfg.param_count(), "{preset} f32 bytes");
+            assert!(
+                wb.compression() >= 3.5,
+                "{preset}: compression {:.3} below the 3.5x gate",
+                wb.compression()
+            );
+        }
+    }
+
+    #[test]
+    fn forward_is_finite_and_routes_like_a_dtr_model() {
+        let be = QuantizedCpuBackend::init(&xs(Variant::DtrBilayer), 3).unwrap();
+        let tokens = Tensor::i32(vec![1, 16], (0..16).map(|i| i * 5 % 256).collect());
+        let out = be.forward(&tokens).unwrap();
+        assert!(out.logits.as_f32().iter().all(|x| x.is_finite()));
+        for (l, kind) in be.config().layout_string().chars().enumerate() {
+            if kind == 'T' {
+                assert_eq!(out.attn_frac[l], 1.0, "dense layer {l}");
+            } else {
+                assert!(out.attn_frac[l] < 1.0, "DTR layer {l} should bypass some");
+            }
+        }
+    }
+
+    #[test]
+    fn dtr_skip_routes_nothing() {
+        let be = QuantizedCpuBackend::init(&xs(Variant::DtrSkip), 1).unwrap();
+        let tokens = Tensor::i32(vec![1, 8], (0..8).collect());
+        let out = be.forward(&tokens).unwrap();
+        for (l, kind) in be.config().layout_string().chars().enumerate() {
+            if kind == 'D' {
+                assert_eq!(out.attn_frac[l], 0.0, "dtr_skip layer {l} must bypass");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_quantize_on_load_matches_direct_quantization() {
+        let f32_be = CpuBackend::init(&xs(Variant::DtrBilayer), 7).unwrap();
+        let via_ck =
+            QuantizedCpuBackend::from_checkpoint(f32_be.config(), &f32_be.to_checkpoint())
+                .unwrap();
+        let direct = f32_be.quantized().unwrap();
+        let tokens = Tensor::i32(vec![1, 12], (0..12).map(|i| i * 3 % 256).collect());
+        assert_eq!(
+            via_ck.forward(&tokens).unwrap().logits,
+            direct.forward(&tokens).unwrap().logits,
+            "quantize-on-load must equal direct quantization bitwise"
+        );
+    }
+
+    /// Build a synthetic single-layer ForwardOutput with the given hard
+    /// decisions and soft scores (the gate only reads route/g_attn).
+    fn synth_out(route: Vec<f32>, g: Vec<f32>) -> ForwardOutput {
+        let n = route.len();
+        ForwardOutput {
+            logits: Tensor::f32(vec![1, n, 1], vec![0.0; n]),
+            route: Tensor::f32(vec![1, 1, n], route),
+            g_attn: Tensor::f32(vec![1, 1, n], g),
+            attn_frac: vec![0.0],
+        }
+    }
+
+    #[test]
+    fn routing_gate_semantics() {
+        let n = 200usize;
+        // f32 reference: alternate decisions; half decisive, half near-tie.
+        let route: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|i| {
+                let decisive = i % 4 < 2;
+                match (i % 2 == 1, decisive) {
+                    (true, true) => 0.9,    // routed, decisive
+                    (true, false) => 0.501, // routed, near-tie
+                    (false, true) => 0.1,   // bypassed, decisive
+                    (false, false) => 0.499,
+                }
+            })
+            .collect();
+        let a = synth_out(route.clone(), g.clone());
+
+        // identical decisions pass with zero flips
+        let eq = check_routing_equivalence(&a, &a).unwrap();
+        assert_eq!(eq.flips, 0);
+        assert!(eq.min_f32_margin < 0.01);
+
+        // one near-tie flip (0.5% of 200 DTR decisions) is inside budget
+        let mut r2 = route.clone();
+        r2[3] = 1.0 - r2[3]; // i=3: routed near-tie (g = 0.501)
+        let eq = check_routing_equivalence(&a, &synth_out(r2, g.clone())).unwrap();
+        assert_eq!(eq.flips, 1);
+        assert_eq!(eq.decisive_flips, 0);
+        assert_eq!(eq.dtr_decisions, n, "every synthetic decision has g < 1");
+
+        // a single decisive flip is rejected outright
+        let mut r3 = route.clone();
+        r3[1] = 1.0 - r3[1]; // i=1: routed decisive (g = 0.9)
+        assert!(check_routing_equivalence(&a, &synth_out(r3, g.clone())).is_err());
+
+        // too many near-tie flips trip the fraction budget
+        let mut r4 = route.clone();
+        for i in (0..n).filter(|i| i % 4 == 3).take(11) {
+            r4[i] = 1.0 - r4[i]; // eleven near-tie flips = 5.5% > 5%
+        }
+        assert!(check_routing_equivalence(&a, &synth_out(r4, g)).is_err());
+    }
+}

@@ -260,6 +260,67 @@ fn train_checkpoint_serve_eval_roundtrip() {
 }
 
 #[test]
+fn train_checkpoint_quantized_serve_roundtrip() {
+    // The train→quantized-serve handoff: train briefly, save a DTCK
+    // checkpoint into a directory that does not exist yet (the --save
+    // parent-dir contract), reload it int8-quantized (`--quant int8`
+    // semantics), then eval + decode on the quantized trained weights.
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let hp = TrainConfig {
+        steps: 5,
+        batch: 2,
+        seq: 24,
+        log_every: 100,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(43);
+    let data = Dataset::new(corpus::markov_corpus(&mut rng, 256, 60 * hp.seq, 12), hp.seq);
+    let mut tb = CpuTrainer::new(&cfg, &hp).unwrap();
+    let root = std::env::temp_dir().join("dtrnet_train_quant_roundtrip");
+    let _ = std::fs::remove_dir_all(&root);
+    let path = root.join("nested").join("trained.dtck");
+    {
+        let mut trainer = Trainer::new(&mut tb, "xs_dtr_bilayer_q8");
+        trainer.run(&hp, &data, None).unwrap();
+        trainer.save_checkpoint(&path).unwrap(); // must create parent dirs
+    }
+    assert!(path.exists(), "--save must create missing parent directories");
+
+    let ck = dtrnet::runtime::Checkpoint::load(&path).unwrap();
+    let f32_be = CpuBackend::from_checkpoint(&cfg, &ck).unwrap();
+    let int8_be = dtrnet::runtime::QuantizedCpuBackend::from_checkpoint(&cfg, &ck).unwrap();
+    assert!(int8_be.weight_bytes().compression() >= 3.5);
+
+    // int8 serving of the trained weights: finite perplexity, within 1%
+    // of the f32 backend on the same corpus.
+    let rf = dtrnet::eval::perplexity_backend(&f32_be, &data, 2, 2).unwrap();
+    let rq = dtrnet::eval::perplexity_backend(&int8_be, &data, 2, 2).unwrap();
+    assert!(rq.ppl.is_finite() && rq.ppl > 1.0);
+    assert!(
+        (rq.ppl - rf.ppl).abs() / rf.ppl < 0.01,
+        "trained int8 ppl drifted from f32: {} vs {}",
+        rq.ppl,
+        rf.ppl
+    );
+    // No decisive routing flips on the trained weights (near-ties may
+    // move — see DESIGN.md §Quantization — but a confident router must
+    // survive quantization).
+    let toks = Tensor::i32(vec![1, hp.seq], data.window(0));
+    let eq = dtrnet::runtime::quant::compare_routing(
+        &f32_be.forward(&toks).unwrap(),
+        &int8_be.forward(&toks).unwrap(),
+    );
+    assert_eq!(eq.decisive_flips, 0, "flips {} of {}", eq.flips, eq.decisions);
+
+    // decode runs end to end on the quantized trained model
+    let mut grng = Rng::new(3);
+    let gen = int8_be
+        .generate(&[5, 6, 7], 8, &SamplingParams::greedy(), &mut grng)
+        .unwrap();
+    assert_eq!(gen.tokens.len(), 8);
+}
+
+#[test]
 fn trained_loss_beats_init_on_fixed_batch() {
     // Keep stepping one batch: the trained model must fit it better than
     // the init did (the offline mirror of the CI train-smoke gate).

@@ -1,0 +1,286 @@
+//! Int8 quantization subsystem tests (DESIGN.md §Quantization):
+//!
+//! * round-trip property: per-output-row quantization error of a matmul
+//!   is bounded by `scale_j/2 · Σ|x_row|` — the analytical worst case of
+//!   symmetric rounding;
+//! * bitwise thread invariance of the quantized forward / chunked
+//!   prefill / batched decode paths, including every KV-cache byte
+//!   (thread count is a throughput knob on the int8 path too);
+//! * batching invariance: `decode_batch` ≡ per-sequence `decode_step`,
+//!   `prefill_chunked` ≡ the sequential decode loop, bitwise;
+//! * routing-decision equality vs the f32 backend on a pinned seeded
+//!   scenario (exact — the margins were verified decisive), plus the
+//!   margin-aware equivalence gate across seeds;
+//! * quantized decode agrees with quantized forward on the same prefix.
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::SamplingParams;
+use dtrnet::runtime::cpu::kernels;
+use dtrnet::runtime::quant::{check_routing_equivalence, compare_routing};
+use dtrnet::runtime::{Backend, CpuBackend, DecodeState, QuantizedCpuBackend, Tensor};
+use dtrnet::testing::{assert_allclose, property, Gen};
+use dtrnet::util::rng::Rng;
+use dtrnet::util::threadpool::Pool;
+
+fn randn_vec(g: &mut Gen, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| g.rng.normal() as f32 * scale).collect()
+}
+
+#[test]
+fn prop_quantized_matmul_error_bounded_by_row_scale() {
+    property("|x@W - x@Wq| <= scale_j/2 * sum|x|", 40, |g| {
+        let n = g.usize(1..5);
+        let k = g.usize(1..80);
+        let m = g.usize(1..40);
+        let w = randn_vec(g, k * m, 0.5);
+        let x = randn_vec(g, n * k, 1.0);
+        let (q, scales) = kernels::quantize_rows(&w, k, m);
+        let exact = kernels::matmul(&x, &w, n, k, m);
+        let quant = kernels::matmul_q8(&x, &q, &scales, n, k, m);
+        for i in 0..n {
+            let l1: f32 = x[i * k..(i + 1) * k].iter().map(|v| v.abs()).sum();
+            for j in 0..m {
+                let err = (exact[i * m + j] - quant[i * m + j]).abs();
+                // each weight is off by at most scale/2 (round-to-nearest),
+                // plus f32 accumulation slack on both sides
+                let bound = 0.5 * scales[j] * l1 + 1e-4 * (1.0 + l1);
+                assert!(
+                    err <= bound,
+                    "row {i} col {j}: err {err} > bound {bound} (k={k})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_matmul_q8_par_bit_identical_to_serial() {
+    property("matmul_q8 pooled == serial (bitwise)", 30, |g| {
+        let pool = Pool::with_threads(g.usize(2..5));
+        let n = if g.bool() { 1 } else { g.usize(2..9) };
+        let k = g.usize(1..200);
+        let m = g.usize(1..200);
+        let w = randn_vec(g, k * m, 0.4);
+        let x = randn_vec(g, n * k, 1.0);
+        let (q, scales) = kernels::quantize_rows(&w, k, m);
+        assert_eq!(
+            kernels::matmul_q8(&x, &q, &scales, n, k, m),
+            kernels::matmul_q8_par(&pool, &x, &q, &scales, n, k, m),
+            "n={n} k={k} m={m}"
+        );
+    });
+}
+
+#[test]
+fn prop_quant_backend_threaded_bit_identical_to_single_thread() {
+    property(
+        "int8 threads=N ≡ threads=1 bitwise: forward/prefill/decode_batch + caches",
+        5,
+        |g| {
+            let variants = [Variant::Dense, Variant::DtrBilayer, Variant::DtrTrilayer];
+            let variant = variants[g.usize(0..variants.len())];
+            let cfg = ModelConfig::preset("xs", variant);
+            let seed = 6000 + g.case as u64;
+            let mut serial = QuantizedCpuBackend::init(&cfg, seed).unwrap();
+            serial.set_threads(1);
+            let mut threaded = QuantizedCpuBackend::init(&cfg, seed).unwrap();
+            threaded.set_threads(g.usize(2..5));
+
+            let s = g.usize(2..32);
+            let tokens: Vec<i32> = (0..s).map(|_| g.rng.below(256) as i32).collect();
+            let a = serial
+                .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+                .unwrap();
+            let b = threaded
+                .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+                .unwrap();
+            assert_eq!(a.logits, b.logits, "int8 forward logits bits diverged");
+            assert_eq!(a.route, b.route, "int8 forward routing diverged");
+
+            let chunk = g.usize(1..12);
+            let mut st_s = serial.begin_decode();
+            let out_s = serial.prefill_chunked(&mut st_s, &tokens, chunk).unwrap();
+            let mut st_t = threaded.begin_decode();
+            let out_t = threaded.prefill_chunked(&mut st_t, &tokens, chunk).unwrap();
+            assert_eq!(out_s.logits, out_t.logits, "int8 prefill logits diverged");
+            assert_eq!(out_s.routed, out_t.routed);
+            assert_eq!(st_s.keys, st_t.keys, "int8 prefill cache keys diverged");
+            assert_eq!(st_s.values, st_t.values, "int8 prefill cache values diverged");
+
+            let bsz = g.usize(1..4);
+            let mut states_s: Vec<DecodeState> = Vec::new();
+            let mut states_t: Vec<DecodeState> = Vec::new();
+            for bi in 0..bsz {
+                let plen = g.usize(1..6);
+                let prompt: Vec<i32> =
+                    (0..plen).map(|i| ((bi * 31 + i * 7) % 256) as i32).collect();
+                let mut ss = serial.begin_decode();
+                serial.prefill(&mut ss, &prompt).unwrap();
+                let mut st = threaded.begin_decode();
+                threaded.prefill(&mut st, &prompt).unwrap();
+                states_s.push(ss);
+                states_t.push(st);
+            }
+            for step in 0..3 {
+                let toks: Vec<i32> = (0..bsz)
+                    .map(|i| ((step * 53 + i * 17) % 256) as i32)
+                    .collect();
+                let mut refs_s: Vec<&mut DecodeState> = states_s.iter_mut().collect();
+                let outs_s = serial.decode_batch(&mut refs_s, &toks).unwrap();
+                let mut refs_t: Vec<&mut DecodeState> = states_t.iter_mut().collect();
+                let outs_t = threaded.decode_batch(&mut refs_t, &toks).unwrap();
+                for i in 0..bsz {
+                    assert_eq!(
+                        outs_s[i].logits, outs_t[i].logits,
+                        "int8 decode_batch seq {i} step {step} diverged"
+                    );
+                    assert_eq!(outs_s[i].routed, outs_t[i].routed);
+                }
+            }
+            for (i, (ss, st)) in states_s.iter().zip(&states_t).enumerate() {
+                assert_eq!(ss.keys, st.keys, "int8 seq {i} cache keys diverged");
+                assert_eq!(ss.values, st.values, "int8 seq {i} cache values diverged");
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_quant_decode_batch_bit_identical_to_decode_step() {
+    property("int8 decode_batch == per-sequence decode_step (bitwise)", 5, |g| {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let backend = QuantizedCpuBackend::init(&cfg, 7000 + g.case as u64).unwrap();
+        let b = g.usize(1..5);
+        let mut seq_states: Vec<DecodeState> = (0..b).map(|_| backend.begin_decode()).collect();
+        for st in seq_states.iter_mut() {
+            for _ in 0..g.usize(1..6) {
+                backend.decode_step(st, g.rng.below(256) as i32).unwrap();
+            }
+        }
+        let mut bat_states = seq_states.clone();
+        for step in 0..3 {
+            let toks: Vec<i32> = (0..b).map(|i| ((step * 31 + i * 17) % 256) as i32).collect();
+            let seq_outs: Vec<_> = seq_states
+                .iter_mut()
+                .zip(&toks)
+                .map(|(s, &t)| backend.decode_step(s, t).unwrap())
+                .collect();
+            let mut refs: Vec<&mut DecodeState> = bat_states.iter_mut().collect();
+            let bat_outs = backend.decode_batch(&mut refs, &toks).unwrap();
+            for i in 0..b {
+                assert_eq!(seq_outs[i].logits, bat_outs[i].logits, "seq {i} step {step}");
+                assert_eq!(seq_outs[i].routed, bat_outs[i].routed);
+            }
+        }
+        for (i, (a, c)) in seq_states.iter().zip(&bat_states).enumerate() {
+            assert_eq!(a.keys, c.keys, "seq {i} cached keys diverged");
+            assert_eq!(a.values, c.values, "seq {i} cached values diverged");
+        }
+    });
+}
+
+#[test]
+fn prop_quant_prefill_chunked_bit_identical_to_sequential() {
+    property("int8 prefill_chunked(c) == sequential decode loop", 6, |g| {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let backend = QuantizedCpuBackend::init(&cfg, 8000 + g.case as u64).unwrap();
+        let n = g.usize(2..20);
+        let tokens: Vec<i32> = (0..n).map(|_| g.rng.below(256) as i32).collect();
+        let chunk = g.usize(1..24);
+
+        let mut s_ref = backend.begin_decode();
+        let mut last = None;
+        for &t in &tokens {
+            last = Some(backend.decode_step(&mut s_ref, t).unwrap());
+        }
+        let last = last.unwrap();
+
+        let mut s_chk = backend.begin_decode();
+        let out = backend.prefill_chunked(&mut s_chk, &tokens, chunk).unwrap();
+        assert_eq!(last.logits, out.logits, "chunk={chunk} n={n}");
+        assert_eq!(last.routed, out.routed);
+        assert_eq!(s_ref.keys, s_chk.keys, "chunk={chunk}: cache keys diverged");
+        assert_eq!(s_ref.values, s_chk.values, "chunk={chunk}: cache values diverged");
+    });
+}
+
+/// Pinned scenario whose routing margins were verified decisive (min f32
+/// margin ~6e-4 against a quantization perturbation ~1e-4): int8 must
+/// reproduce the f32 hard routing decisions *exactly* here.
+#[test]
+fn routing_decisions_match_f32_exactly_on_pinned_scenario() {
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let f32_be = CpuBackend::init(&cfg, 0).unwrap();
+    let int8_be = f32_be.quantized().unwrap();
+    let tokens: Vec<i32> = (0..24).map(|i| (i * 13) % 256).collect();
+    let t = Tensor::i32(vec![1, 24], tokens);
+    let a = f32_be.forward(&t).unwrap();
+    let b = int8_be.forward(&t).unwrap();
+    assert_eq!(a.route, b.route, "int8 flipped a routing decision on the pinned scenario");
+    let eq = compare_routing(&a, &b);
+    assert_eq!(eq.flips, 0);
+    assert!(eq.min_f32_margin > 1e-4, "margin {:.2e}", eq.min_f32_margin);
+}
+
+/// The margin-aware gate across several seeds and both incremental and
+/// batched evaluation orders: no decisive flips anywhere, near-tie flips
+/// (if any) inside the budget.
+#[test]
+fn routing_equivalence_gate_holds_across_seeds() {
+    for seed in [1u64, 2, 3] {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let f32_be = CpuBackend::init(&cfg, seed).unwrap();
+        let int8_be = f32_be.quantized().unwrap();
+        let tokens: Vec<i32> = (0..24).map(|i| ((i * 13 + seed as usize) % 256) as i32).collect();
+        let t = Tensor::i32(vec![1, 24], tokens);
+        let a = f32_be.forward(&t).unwrap();
+        let b = int8_be.forward(&t).unwrap();
+        let eq = check_routing_equivalence(&a, &b)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(eq.decisions > 0);
+    }
+}
+
+#[test]
+fn quant_decode_matches_quant_forward_prefix() {
+    // The incremental int8 path must agree with the batched int8 forward
+    // (same tolerance as the f32 backend's decode/forward property).
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let backend = QuantizedCpuBackend::init(&cfg, 5).unwrap();
+    let s = 12usize;
+    let tokens: Vec<i32> = (0..s).map(|i| ((i * 29) % 256) as i32).collect();
+    let fwd = backend
+        .forward(&Tensor::i32(vec![1, s], tokens.clone()))
+        .unwrap();
+    let mut state = backend.begin_decode();
+    let step = backend.prefill(&mut state, &tokens).unwrap();
+    let v = cfg.vocab_size;
+    let last = &fwd.logits.as_f32()[(s - 1) * v..s * v];
+    assert_allclose(step.logits.as_f32(), last, 1e-3, 1e-3);
+    // cache lens equal the forward pass's routed counts
+    let lens = state.lens(cfg.d_model);
+    for l in 0..cfg.n_layers {
+        let routed: usize = fwd.route.as_f32()[l * s..(l + 1) * s]
+            .iter()
+            .filter(|&&r| r > 0.5)
+            .count();
+        assert_eq!(lens[l], routed, "layer {l} cache len != routed count");
+    }
+}
+
+#[test]
+fn quant_greedy_generation_is_deterministic() {
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let backend = QuantizedCpuBackend::init(&cfg, 9).unwrap();
+    let prompt: Vec<i32> = (0..6).map(|i| (i * 11) % 256).collect();
+    let run = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        backend
+            .generate(&prompt, 8, &SamplingParams::greedy(), &mut rng)
+            .unwrap()
+            .tokens
+    };
+    let a = run(0);
+    assert_eq!(a.len(), 8);
+    assert_eq!(a, run(1), "greedy int8 decode must not depend on the rng");
+}
