@@ -198,6 +198,10 @@ pub struct ServeReport {
     /// CPU backend always does). Cumulative over the backend's lifetime,
     /// not just this run.
     pub kernel_timings: Option<Json>,
+    /// Active SIMD kernel tier (`--simd`, DESIGN.md §SIMD dispatch).
+    pub simd_tier: String,
+    /// Active kernel precision mode (`--precision`).
+    pub precision: String,
 }
 
 impl ServeReport {
@@ -219,6 +223,8 @@ impl ServeReport {
             .collect();
         let mut out = Json::from_pairs(vec![
             ("backend", Json::Str(self.backend.clone())),
+            ("simd_tier", Json::Str(self.simd_tier.clone())),
+            ("precision", Json::Str(self.precision.clone())),
             ("completed", Json::Num(self.completed as f64)),
             ("evicted", Json::Num(self.evicted as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
@@ -732,6 +738,8 @@ impl<'b> Server<'b> {
             attn_fracs: self.routing.fractions(),
             requests: self.records.clone(),
             kernel_timings: self.backend.kernel_timings(),
+            simd_tier: crate::util::simd::tier().name().to_string(),
+            precision: crate::util::simd::precision().name().to_string(),
         }
     }
 }

@@ -31,6 +31,15 @@
 //!                 available parallelism; 1 = the single-threaded
 //!                 determinism baseline — outputs are bit-identical
 //!                 either way, only throughput changes)
+//!   --simd {auto,avx2,neon,scalar} — SIMD kernel tier (default auto =
+//!                 best supported; also settable via DTRNET_SIMD).
+//!                 Under the default exact precision this is a pure
+//!                 throughput knob: every kernel is bit-identical
+//!                 across tiers (DESIGN.md §SIMD dispatch)
+//!   --precision {exact,fast} — fast additionally vectorizes the f32
+//!                 dot/variance reductions; not bitwise vs exact,
+//!                 gated by the bench harness's routing-equivalence +
+//!                 perplexity-delta checks
 //!   --quant int8 — on demo/eval/serve: int8-quantize the weights on
 //!                 load (~3.7x smaller residency, per-output-row scales;
 //!                 DESIGN.md §Quantization). Accuracy is gated by the
@@ -73,6 +82,21 @@ fn main() -> Result<()> {
     if let Some(n) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         dtrnet::util::threadpool::set_global_threads(n);
     }
+    // Pin the process-wide SIMD tier / precision before any pool snapshots
+    // a KernelCtx. `--simd auto` (the default) picks the best tier the host
+    // supports; explicit tiers fail fast when unsupported.
+    if let Some(s) = args.get("simd") {
+        match dtrnet::util::simd::parse_tier(s) {
+            Ok(t) => dtrnet::util::simd::set_tier(t),
+            Err(e) => bail!("--simd {s}: {e}"),
+        }
+    }
+    if let Some(s) = args.get("precision") {
+        match dtrnet::util::simd::parse_precision(s) {
+            Ok(p) => dtrnet::util::simd::set_precision(p),
+            Err(e) => bail!("--precision {s}: {e}"),
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
         "info" => info(),
@@ -101,14 +125,20 @@ fn bench_cmd(args: &Args) -> Result<()> {
     // default suite: int8 accuracy gates run on every bench/CI pass).
     opts.include_quant = parse_quant(args, "int8")?;
     println!(
-        "[bench] {} mode, thread sweep {:?} (hw {}), quant scenarios {}",
+        "[bench] {} mode, thread sweep {:?} (hw {}), quant scenarios {}, simd tier {} (detected {})",
         if quick { "smoke" } else { "full" },
         opts.threads,
         dtrnet::util::threadpool::available_threads(),
         if opts.include_quant { "on" } else { "off" },
+        dtrnet::util::simd::tier().name(),
+        dtrnet::util::simd::detect().name(),
     );
     let doc = dtrnet::perf::run(&opts)?;
-    let out = args.get_or("out", "BENCH_pr5.json");
+    // Speedup-vs-baseline readout (never a gate — the JSON written below
+    // is the artifact CI promotes into the next baseline).
+    let baseline = args.get_or("baseline", "BENCH_baseline.json");
+    dtrnet::perf::print_baseline_deltas(&doc, std::path::Path::new(baseline));
+    let out = args.get_or("out", "BENCH_pr6.json");
     dtrnet::perf::write(std::path::Path::new(out), &doc)?;
     Ok(())
 }
@@ -140,6 +170,12 @@ fn info() -> Result<()> {
     println!(
         "execution backend: native cpu (rebuild with --features pjrt for the \
          XLA/PJRT artifact path)"
+    );
+    println!(
+        "simd: active tier {} (detected {}), precision {}",
+        dtrnet::util::simd::tier().name(),
+        dtrnet::util::simd::detect().name(),
+        dtrnet::util::simd::precision().name(),
     );
     Ok(())
 }
@@ -269,7 +305,7 @@ fn train(args: &Args) -> Result<()> {
     };
     let mut backend = CpuTrainer::new(&cfg, &tcfg)?;
     println!(
-        "backend=cpu model={} variant={} layout={} params={} batch={}x{} steps={} threads={}",
+        "backend=cpu model={} variant={} layout={} params={} batch={}x{} steps={} threads={} simd={}",
         cfg.name,
         variant.as_str(),
         cfg.layout_string(),
@@ -278,6 +314,7 @@ fn train(args: &Args) -> Result<()> {
         tcfg.seq,
         tcfg.steps,
         backend.threads(),
+        dtrnet::util::simd::tier().name(),
     );
     let data = make_dataset(args, tcfg.seq);
     let n_windows = data.n_windows();
@@ -529,7 +566,7 @@ fn serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "backend={} model={} variant={} layout={} slots={} page={} prefill={:?} threads={}",
+        "backend={} model={} variant={} layout={} slots={} page={} prefill={:?} threads={} simd={} precision={}",
         backend.name(),
         cfg.name,
         variant.as_str(),
@@ -538,6 +575,8 @@ fn serve(args: &Args) -> Result<()> {
         scfg.kv_page_size,
         scfg.prefill,
         dtrnet::util::threadpool::global().threads(),
+        dtrnet::util::simd::tier().name(),
+        dtrnet::util::simd::precision().name(),
     );
     let mut srv = Server::new(backend.as_ref(), scfg)?;
     let report = srv.run_workload(&trace, args.get_usize("max-steps", 1_000_000))?;

@@ -154,6 +154,17 @@ impl KernelTimers {
         obj
     }
 
+    /// [`snapshot`](Self::snapshot) annotated with the SIMD dispatch
+    /// context the owning backend's pool runs under: string fields
+    /// `simd_tier` and `precision` so serve reports and bench rows
+    /// record which kernel tier produced the timings.
+    pub fn snapshot_with_ctx(&self, ctx: crate::util::simd::KernelCtx) -> Json {
+        let mut obj = self.snapshot();
+        obj.set("simd_tier", Json::Str(ctx.tier.name().to_string()));
+        obj.set("precision", Json::Str(ctx.precision.name().to_string()));
+        obj
+    }
+
     /// Zero every section (between bench scenarios).
     pub fn reset(&self) {
         for (_, t) in self.sections() {

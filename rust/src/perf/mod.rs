@@ -2,12 +2,25 @@
 //!
 //! Runs a fixed set of fixed-seed scenarios (training-shape forward,
 //! autoregressive decode, native training steps, the continuous-batching
-//! serving engine, and the int8 `quant_*` accuracy/throughput family)
-//! across a sweep of kernel-thread counts, and emits one machine-readable
-//! JSON document (`BENCH_pr5.json` at the repo root by convention — the
-//! recorded perf trajectory every future PR diffs against; the CI
-//! `bench-regression` job regenerates and uploads it on every push). See
-//! DESIGN.md §Benchmarking for the schema and methodology.
+//! serving engine, the int8 `quant_*` accuracy/throughput family, and
+//! the `simd_*` kernel-tier family) across a sweep of kernel-thread
+//! counts, and emits one machine-readable JSON document (`BENCH_pr6.json`
+//! at the repo root by convention — the recorded perf trajectory every
+//! future PR diffs against; the CI `bench-regression` job regenerates and
+//! uploads it on every push). [`print_baseline_deltas`] additionally
+//! diffs a fresh run against the committed `BENCH_baseline.json` and
+//! prints per-scenario speedup-vs-baseline readouts (including the
+//! simd-vs-scalar column). See DESIGN.md §Benchmarking for the schema
+//! and methodology.
+//!
+//! The `simd_*` scenarios compare a scalar-pinned pool against the
+//! detected SIMD tier side by side (per-pool [`KernelCtx`] — no
+//! process-global mutation): per-kernel micro speedups with bitwise
+//! cross-tier asserts (`simd_kernels`), end-to-end prefill/decode
+//! deltas (`simd_forward_*` / `simd_decode_*`), and the fast-precision
+//! accuracy gates (`simd_fast_eval_*`: perplexity within
+//! [`QUANT_PPL_GATE`] of exact, routing equivalence via the same
+//! margin-aware check the int8 gates use).
 //!
 //! The `quant_*` scenarios double as the int8 accuracy gates: bitwise
 //! thread invariance of the quantized forward/decode paths, routing
@@ -35,16 +48,17 @@ use anyhow::{ensure, Result};
 
 use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::{
-    generate_workload, PrefillMode, Server, ServerConfig, WorkloadSpec,
+    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, WorkloadSpec,
 };
 use crate::data::{corpus, Dataset};
+use crate::runtime::cpu::kernels;
 use crate::runtime::quant;
 use crate::runtime::{Backend, CpuBackend, CpuTrainer, QuantizedCpuBackend, Tensor, TrainBackend};
-use crate::util::bench::bench;
+use crate::util::bench::{bench, print_table};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::threadpool::available_threads;
-use crate::coordinator::SamplingParams;
+use crate::util::simd::{detect, KernelCtx, Precision, SimdTier};
+use crate::util::threadpool::{available_threads, Pool};
 
 /// Schema tag stamped into every bench document.
 pub const SCHEMA: &str = "dtrnet-bench-v1";
@@ -125,6 +139,20 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
             scenarios.set(&key, s);
         }
     }
+    {
+        // SIMD tier family: scalar-pinned vs detected-tier pools run
+        // side by side via per-pool KernelCtx overrides, so the sweep
+        // never mutates the process-wide selector.
+        let (key, s) = simd_kernels_scenario(opts)?;
+        scenarios.set(&key, s);
+        let variant = Variant::DtrBilayer;
+        let (key, s) = simd_forward_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+        let (key, s) = simd_decode_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+        let (key, s) = simd_fast_eval_scenario(opts, variant)?;
+        scenarios.set(&key, s);
+    }
     let mut out = Json::obj();
     out.set("schema", Json::Str(SCHEMA.to_string()));
     out.set("quick", Json::Bool(opts.quick));
@@ -136,6 +164,15 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
             (
                 "threads_measured",
                 Json::arr_f64(&opts.threads.iter().map(|&t| t as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "simd_tier",
+                Json::Str(crate::util::simd::tier().name().to_string()),
+            ),
+            ("simd_detected", Json::Str(detect().name().to_string())),
+            (
+                "precision",
+                Json::Str(crate::util::simd::precision().name().to_string()),
             ),
         ]),
     );
@@ -674,6 +711,408 @@ fn quant_eval_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String,
     Ok((key, sc))
 }
 
+/// A serial [`Pool`] pinned to `tier` at `precision` — the building
+/// block of every `simd_*` scenario comparison.
+fn pinned_pool(tier: SimdTier, precision: Precision) -> Pool {
+    Pool::serial().with_ctx(KernelCtx { tier, precision })
+}
+
+/// A [`CpuBackend`] whose pool is pinned to `tier` at `precision`
+/// (widest sweep thread count), without touching the process selector.
+fn backend_with_tier(
+    variant: Variant,
+    quick: bool,
+    t: usize,
+    tier: SimdTier,
+    precision: Precision,
+) -> Result<CpuBackend> {
+    let cfg = ModelConfig::preset(preset(quick), variant);
+    let mut be = CpuBackend::init(&cfg, MODEL_SEED)?;
+    be.set_pool(Pool::with_threads(t).with_ctx(KernelCtx { tier, precision }));
+    Ok(be)
+}
+
+/// Per-kernel SIMD micro-bench: the same fixed-seed problem through a
+/// scalar-pinned pool and the detected-tier pool, on serial pools so the
+/// readout isolates vectorization from threading. Asserts the
+/// determinism contract before timing anything: exact-precision kernels
+/// (`matmul` via axpy, `matmul_q8` via the striped `dot_q8`) and the
+/// fast-precision striped reductions (`rmsnorm` here) are all
+/// bit-identical across tiers at fixed precision. Records
+/// `speedup_vs_scalar` per kernel.
+fn simd_kernels_scenario(opts: &BenchOptions) -> Result<(String, Json)> {
+    let key = "simd_kernels".to_string();
+    let tier = detect();
+    let (n, k, m) = if opts.quick {
+        (8usize, 96usize, 96usize)
+    } else {
+        (32, 256, 256)
+    };
+    let (warmup, iters) = if opts.quick { (1, 5) } else { (2, 20) };
+    let mut rng = Rng::new(11);
+    let a: Vec<f32> = (0..n * k).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+    let b: Vec<f32> = (0..k * m).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+    let (q, scales) = kernels::quantize_rows(&b, k, m);
+    let norm_w: Vec<f32> = (0..m).map(|_| 0.5 + rng.f32()).collect();
+
+    let pool_s = pinned_pool(SimdTier::Scalar, Precision::Exact);
+    let pool_v = pinned_pool(tier, Precision::Exact);
+    // rmsnorm's reduction only vectorizes under fast precision; the
+    // striped scalar twin pins the summation order, so cross-tier
+    // bit-identity holds at fast precision too.
+    let fpool_s = pinned_pool(SimdTier::Scalar, Precision::Fast);
+    let fpool_v = pinned_pool(tier, Precision::Fast);
+
+    let mut sc = Json::obj();
+    sc.set("tier", Json::Str(tier.name().to_string()));
+    let mut record = |name: &str,
+                      out_s: Vec<f32>,
+                      out_v: Vec<f32>,
+                      ms_s: f64,
+                      ms_v: f64|
+     -> Result<()> {
+        ensure!(
+            out_s == out_v,
+            "{key}/{name}: bits diverged between scalar and {} tiers",
+            tier.name()
+        );
+        sc.set(
+            name,
+            Json::from_pairs(vec![
+                ("scalar_ms", Json::Num(ms_s)),
+                ("simd_ms", Json::Num(ms_v)),
+                (
+                    "speedup_vs_scalar",
+                    Json::Num(if ms_v > 0.0 { ms_s / ms_v } else { 1.0 }),
+                ),
+                ("bitwise_identical", Json::Bool(true)),
+            ]),
+        );
+        println!(
+            "[bench] {key}/{name}: {:.2}x vs scalar ({} tier)",
+            if ms_v > 0.0 { ms_s / ms_v } else { 1.0 },
+            tier.name()
+        );
+        Ok(())
+    };
+
+    let out_s = kernels::matmul_par(&pool_s, &a, &b, n, k, m);
+    let out_v = kernels::matmul_par(&pool_v, &a, &b, n, k, m);
+    let ms = bench(&format!("{key}_matmul_scalar"), warmup, iters, || {
+        kernels::matmul_par(&pool_s, &a, &b, n, k, m);
+    });
+    let mv = bench(&format!("{key}_matmul_simd"), warmup, iters, || {
+        kernels::matmul_par(&pool_v, &a, &b, n, k, m);
+    });
+    record("matmul", out_s, out_v, ms.mean_s * 1e3, mv.mean_s * 1e3)?;
+
+    let out_s = kernels::matmul_q8_par(&pool_s, &a, &q, &scales, n, k, m);
+    let out_v = kernels::matmul_q8_par(&pool_v, &a, &q, &scales, n, k, m);
+    let ms = bench(&format!("{key}_matmul_q8_scalar"), warmup, iters, || {
+        kernels::matmul_q8_par(&pool_s, &a, &q, &scales, n, k, m);
+    });
+    let mv = bench(&format!("{key}_matmul_q8_simd"), warmup, iters, || {
+        kernels::matmul_q8_par(&pool_v, &a, &q, &scales, n, k, m);
+    });
+    record("matmul_q8", out_s, out_v, ms.mean_s * 1e3, mv.mean_s * 1e3)?;
+
+    let x: Vec<f32> = (0..n * m).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+    let out_s = kernels::rmsnorm_par(&fpool_s, &x, &norm_w, 1e-5);
+    let out_v = kernels::rmsnorm_par(&fpool_v, &x, &norm_w, 1e-5);
+    let ms = bench(&format!("{key}_rmsnorm_fast_scalar"), warmup, iters, || {
+        kernels::rmsnorm_par(&fpool_s, &x, &norm_w, 1e-5);
+    });
+    let mv = bench(&format!("{key}_rmsnorm_fast_simd"), warmup, iters, || {
+        kernels::rmsnorm_par(&fpool_v, &x, &norm_w, 1e-5);
+    });
+    record("rmsnorm_fast", out_s, out_v, ms.mean_s * 1e3, mv.mean_s * 1e3)?;
+
+    drop(record);
+    Ok((key, sc))
+}
+
+/// End-to-end training-shape forward (the prefill-shaped path): scalar
+/// tier vs detected tier at the widest thread count, bitwise logits
+/// assert under exact precision, `speedup_vs_scalar` readout.
+fn simd_forward_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let (b, s) = if opts.quick { (2usize, 32usize) } else { (2, 64) };
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (2, 10) };
+    let key = format!("simd_forward_{}", variant.as_str());
+    let tier = detect();
+    let t = *opts.threads.last().unwrap();
+    let be_s = backend_with_tier(variant, opts.quick, t, SimdTier::Scalar, Precision::Exact)?;
+    let be_v = backend_with_tier(variant, opts.quick, t, tier, Precision::Exact)?;
+    let tokens = Tensor::i32(
+        vec![b, s],
+        (0..(b * s) as i32).map(|i| i * 7 % 256).collect(),
+    );
+    let ls = be_s.forward(&tokens)?.logits;
+    let lv = be_v.forward(&tokens)?.logits;
+    ensure!(
+        ls.as_f32() == lv.as_f32(),
+        "{key}: exact-precision logits bits diverged between scalar and {} tiers",
+        tier.name()
+    );
+    let ms = bench(&format!("{key}_scalar"), warmup, iters, || {
+        be_s.forward(&tokens).unwrap();
+    });
+    let mv = bench(&format!("{key}_{}", tier.name()), warmup, iters, || {
+        be_v.forward(&tokens).unwrap();
+    });
+    let scalar_tps = (b * s) as f64 / ms.mean_s;
+    let simd_tps = (b * s) as f64 / mv.mean_s;
+    let mut sc = Json::obj();
+    sc.set("tier", Json::Str(tier.name().to_string()));
+    sc.set("scalar_tokens_per_s", Json::Num(scalar_tps));
+    sc.set("simd_tokens_per_s", Json::Num(simd_tps));
+    sc.set(
+        "speedup_vs_scalar",
+        Json::Num(if scalar_tps > 0.0 { simd_tps / scalar_tps } else { 1.0 }),
+    );
+    sc.set("bitwise_identical_across_tiers", Json::Bool(true));
+    println!(
+        "[bench] {key}: {:.2}x vs scalar ({} tier, threads={t})",
+        if scalar_tps > 0.0 { simd_tps / scalar_tps } else { 1.0 },
+        tier.name()
+    );
+    Ok((key, sc))
+}
+
+/// End-to-end autoregressive decode: scalar tier vs detected tier,
+/// bitwise token-stream assert under exact precision,
+/// `speedup_vs_scalar` readout for the decode hot path.
+fn simd_decode_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let gen = if opts.quick { 8usize } else { 32 };
+    let (warmup, iters) = if opts.quick { (1, 2) } else { (1, 5) };
+    let key = format!("simd_decode_{}", variant.as_str());
+    let tier = detect();
+    let t = *opts.threads.last().unwrap();
+    let be_s = backend_with_tier(variant, opts.quick, t, SimdTier::Scalar, Precision::Exact)?;
+    let be_v = backend_with_tier(variant, opts.quick, t, tier, Precision::Exact)?;
+    let mut prompt_rng = Rng::new(MODEL_SEED.wrapping_add(1));
+    let prompt: Vec<i32> = (0..16).map(|_| prompt_rng.below(256) as i32).collect();
+    let mut rng = Rng::new(2);
+    let toks_s = be_s.generate(&prompt, gen, &SamplingParams::greedy(), &mut rng)?.tokens;
+    let mut rng = Rng::new(2);
+    let toks_v = be_v.generate(&prompt, gen, &SamplingParams::greedy(), &mut rng)?.tokens;
+    ensure!(
+        toks_s == toks_v,
+        "{key}: token stream diverged between scalar and {} tiers",
+        tier.name()
+    );
+    let ms = bench(&format!("{key}_scalar"), warmup, iters, || {
+        let mut r = Rng::new(2);
+        be_s.generate(&prompt, gen, &SamplingParams::greedy(), &mut r)
+            .unwrap();
+    });
+    let mv = bench(&format!("{key}_{}", tier.name()), warmup, iters, || {
+        let mut r = Rng::new(2);
+        be_v.generate(&prompt, gen, &SamplingParams::greedy(), &mut r)
+            .unwrap();
+    });
+    let scalar_sps = gen as f64 / ms.mean_s;
+    let simd_sps = gen as f64 / mv.mean_s;
+    let mut sc = Json::obj();
+    sc.set("tier", Json::Str(tier.name().to_string()));
+    sc.set("scalar_steps_per_s", Json::Num(scalar_sps));
+    sc.set("simd_steps_per_s", Json::Num(simd_sps));
+    sc.set(
+        "speedup_vs_scalar",
+        Json::Num(if scalar_sps > 0.0 { simd_sps / scalar_sps } else { 1.0 }),
+    );
+    sc.set("bitwise_identical_across_tiers", Json::Bool(true));
+    println!(
+        "[bench] {key}: {:.2}x vs scalar ({} tier, threads={t})",
+        if scalar_sps > 0.0 { simd_sps / scalar_sps } else { 1.0 },
+        tier.name()
+    );
+    Ok((key, sc))
+}
+
+/// The `--precision fast` accuracy gate: exact vs fast backends at the
+/// detected tier must agree within [`QUANT_PPL_GATE`] on markov-corpus
+/// perplexity, and routing decisions must pass the same margin-aware
+/// equivalence check the int8 gates use (decisive flips forbidden,
+/// near-tie flips budgeted). Also records the fast-vs-exact forward
+/// speedup (the payoff the tolerance buys).
+fn simd_fast_eval_scenario(opts: &BenchOptions, variant: Variant) -> Result<(String, Json)> {
+    let seq = if opts.quick { 32usize } else { 64 };
+    let (batch, batches) = if opts.quick { (2usize, 2usize) } else { (2, 4) };
+    let (warmup, iters) = if opts.quick { (1, 3) } else { (2, 10) };
+    let key = format!("simd_fast_eval_{}", variant.as_str());
+    let tier = detect();
+    let t = *opts.threads.last().unwrap();
+    let be_e = backend_with_tier(variant, opts.quick, t, tier, Precision::Exact)?;
+    let be_f = backend_with_tier(variant, opts.quick, t, tier, Precision::Fast)?;
+    let data = markov_dataset(be_e.config().vocab_size, seq);
+
+    let re = crate::eval::perplexity_backend(&be_e, &data, batch, batches)?;
+    let rf = crate::eval::perplexity_backend(&be_f, &data, batch, batches)?;
+    let delta = (rf.ppl - re.ppl).abs() / re.ppl;
+    ensure!(
+        delta <= QUANT_PPL_GATE,
+        "{key}: fast-precision perplexity drifted {:.4}% from exact ({:.4} vs {:.4}; gate {:.2}%)",
+        delta * 100.0,
+        rf.ppl,
+        re.ppl,
+        QUANT_PPL_GATE * 100.0
+    );
+    let first = data
+        .eval_batches(batch)
+        .next()
+        .expect("markov corpus yields at least one eval batch");
+    let tokens = Tensor::i32(vec![batch, seq], first);
+    let eq = quant::check_routing_equivalence(&be_e.forward(&tokens)?, &be_f.forward(&tokens)?)
+        .map_err(|e| e.context(format!("{key}: routing-equivalence gate")))?;
+    let me = bench(&format!("{key}_exact"), warmup, iters, || {
+        be_e.forward(&tokens).unwrap();
+    });
+    let mf = bench(&format!("{key}_fast"), warmup, iters, || {
+        be_f.forward(&tokens).unwrap();
+    });
+    let exact_tps = (batch * seq) as f64 / me.mean_s;
+    let fast_tps = (batch * seq) as f64 / mf.mean_s;
+    let mut sc = Json::obj();
+    sc.set("tier", Json::Str(tier.name().to_string()));
+    sc.set("exact_ppl", Json::Num(re.ppl));
+    sc.set("fast_ppl", Json::Num(rf.ppl));
+    sc.set("ppl_delta_pct", Json::Num(delta * 100.0));
+    sc.set("ppl_gate_pct", Json::Num(QUANT_PPL_GATE * 100.0));
+    sc.set("eval_tokens", Json::Num(re.n_tokens as f64));
+    sc.set(
+        "routing_equivalence",
+        Json::from_pairs(vec![
+            ("decisions", Json::Num(eq.decisions as f64)),
+            ("dtr_decisions", Json::Num(eq.dtr_decisions as f64)),
+            ("flips", Json::Num(eq.flips as f64)),
+            ("decisive_flips", Json::Num(eq.decisive_flips as f64)),
+        ]),
+    );
+    sc.set("exact_tokens_per_s", Json::Num(exact_tps));
+    sc.set("fast_tokens_per_s", Json::Num(fast_tps));
+    sc.set(
+        "speedup_fast_vs_exact",
+        Json::Num(if exact_tps > 0.0 { fast_tps / exact_tps } else { 1.0 }),
+    );
+    println!(
+        "[bench] {key}: ppl exact {:.4} vs fast {:.4} (delta {:.4}%), {} flips/{}, fast {:.2}x",
+        re.ppl,
+        rf.ppl,
+        delta * 100.0,
+        eq.flips,
+        eq.decisions,
+        if exact_tps > 0.0 { fast_tps / exact_tps } else { 1.0 },
+    );
+    Ok((key, sc))
+}
+
+/// The primary throughput metric of a scenario row for baseline diffs:
+/// the widest-thread `tokens_per_s`/`steps_per_s` when the scenario has
+/// a thread sweep, otherwise a scenario-level readout (`simd_*` family).
+/// Returns `(json_path_within_scenario, value)`.
+fn primary_metric(sc: &Json) -> Option<(String, f64)> {
+    if let Json::Obj(m) = sc {
+        let mut best: Option<(usize, String, f64)> = None;
+        for (k, v) in m {
+            if let Some(n) = k.strip_prefix('t').and_then(|r| r.parse::<usize>().ok()) {
+                for metric in ["tokens_per_s", "steps_per_s"] {
+                    if let Some(val) = v.get(metric).and_then(Json::as_f64) {
+                        if best.as_ref().map(|(bn, _, _)| n > *bn).unwrap_or(true) {
+                            best = Some((n, format!("{k}.{metric}"), val));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some((_, path, val)) = best {
+            return Some((path, val));
+        }
+        for metric in [
+            "simd_tokens_per_s",
+            "simd_steps_per_s",
+            "fast_tokens_per_s",
+            "matmul.speedup_vs_scalar",
+        ] {
+            if let Some(val) = sc.path(metric).and_then(Json::as_f64) {
+                return Some((metric.to_string(), val));
+            }
+        }
+    }
+    None
+}
+
+/// Diff a fresh bench document against the committed baseline
+/// (`BENCH_baseline.json`) and print a per-scenario table: the primary
+/// throughput metric now vs then (speedup-vs-baseline), plus the
+/// simd-vs-scalar speedup column where the scenario records one. A
+/// missing baseline file, a `"status": "pending-measurement"` stub
+/// (committed before the first measured run lands), or rows the
+/// baseline lacks are reported and skipped — this readout never fails a
+/// bench run.
+pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
+    let base = match Json::parse_file(baseline_path) {
+        Ok(b) => b,
+        Err(_) => {
+            println!(
+                "[bench] no baseline at {} — skipping delta readout",
+                baseline_path.display()
+            );
+            return;
+        }
+    };
+    let status = base.path("status").and_then(Json::as_str).unwrap_or("measured");
+    let cur = match doc.get("scenarios") {
+        Some(Json::Obj(m)) => m,
+        _ => return,
+    };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut compared = 0usize;
+    for (name, sc) in cur {
+        let Some((metric, val)) = primary_metric(sc) else {
+            continue;
+        };
+        let base_val = base
+            .path(&format!("scenarios.{name}.{metric}"))
+            .and_then(Json::as_f64)
+            .filter(|v| *v > 0.0);
+        let (base_cell, delta_cell) = match base_val {
+            Some(bv) => {
+                compared += 1;
+                (format!("{bv:.1}"), format!("{:+.1}%", (val / bv - 1.0) * 100.0))
+            }
+            None => ("-".to_string(), "-".to_string()),
+        };
+        let simd_cell = sc
+            .path("speedup_vs_scalar")
+            .or_else(|| sc.path("matmul.speedup_vs_scalar"))
+            .or_else(|| sc.path("speedup_fast_vs_exact"))
+            .and_then(Json::as_f64)
+            .map(|v| format!("{v:.2}x"))
+            .unwrap_or_else(|| "-".to_string());
+        rows.push(vec![
+            name.clone(),
+            metric,
+            format!("{val:.1}"),
+            base_cell,
+            delta_cell,
+            simd_cell,
+        ]);
+    }
+    print_table(
+        &format!("speedup vs baseline ({})", baseline_path.display()),
+        &["scenario", "metric", "current", "baseline", "delta", "simd-vs-scalar"],
+        &rows,
+    );
+    if compared == 0 && status == "pending-measurement" {
+        println!(
+            "[bench] baseline is a pending-measurement stub — promote a measured \
+             CI bench artifact to {} to activate deltas",
+            baseline_path.display()
+        );
+    }
+}
+
 /// Stamp the cross-thread summary: speedup of the widest sweep point
 /// over the `--threads 1` baseline, and the (already enforced) bitwise
 /// identity marker.
@@ -745,6 +1184,91 @@ mod tests {
         let delta = qe.path("ppl_delta_pct").unwrap().as_f64().unwrap();
         assert!(delta <= QUANT_PPL_GATE * 100.0, "ppl delta {delta}%");
         assert!(doc.path("quant_included").and_then(Json::as_bool) == Some(true));
+        // the simd family must record its determinism + accuracy gates
+        let sk = sc.path("simd_kernels").unwrap();
+        for kernel in ["matmul", "matmul_q8", "rmsnorm_fast"] {
+            assert_eq!(
+                sk.path(&format!("{kernel}.bitwise_identical")).and_then(Json::as_bool),
+                Some(true),
+                "simd_kernels/{kernel} lost cross-tier bit-identity"
+            );
+            assert!(
+                sk.path(&format!("{kernel}.speedup_vs_scalar")).and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+                    > 0.0,
+                "simd_kernels/{kernel} missing speedup readout"
+            );
+        }
+        for key in ["simd_forward_dtr_bilayer", "simd_decode_dtr_bilayer"] {
+            let s = sc.path(key).unwrap();
+            assert_eq!(
+                s.path("bitwise_identical_across_tiers").and_then(Json::as_bool),
+                Some(true),
+                "{key} lost cross-tier bit-identity"
+            );
+            assert!(s.path("speedup_vs_scalar").is_some(), "{key} missing speedup");
+        }
+        let fe = sc.path("simd_fast_eval_dtr_bilayer").unwrap();
+        let d = fe.path("ppl_delta_pct").unwrap().as_f64().unwrap();
+        assert!(d <= QUANT_PPL_GATE * 100.0, "fast-precision ppl delta {d}%");
+        assert_eq!(
+            fe.path("routing_equivalence.decisive_flips").and_then(Json::as_f64),
+            Some(0.0),
+            "fast precision flipped a decisive routing decision"
+        );
+        assert!(doc.path("host.simd_tier").is_some());
+        assert!(doc.path("host.simd_detected").is_some());
+    }
+
+    #[test]
+    fn primary_metric_prefers_widest_thread_sweep_point() {
+        let sc = Json::from_pairs(vec![
+            ("t1", Json::from_pairs(vec![("tokens_per_s", Json::Num(10.0))])),
+            ("t2", Json::from_pairs(vec![("tokens_per_s", Json::Num(18.0))])),
+            ("speedup_vs_t1", Json::Num(1.8)),
+        ]);
+        assert_eq!(primary_metric(&sc), Some(("t2.tokens_per_s".to_string(), 18.0)));
+        // simd-family rows have no thread sweep: scenario-level readout
+        let sd = Json::from_pairs(vec![
+            ("simd_tokens_per_s", Json::Num(40.0)),
+            ("speedup_vs_scalar", Json::Num(2.0)),
+        ]);
+        assert_eq!(primary_metric(&sd), Some(("simd_tokens_per_s".to_string(), 40.0)));
+    }
+
+    #[test]
+    fn baseline_delta_readout_tolerates_stub_and_missing_files() {
+        let mut doc = Json::obj();
+        let mut scenarios = Json::obj();
+        scenarios.set(
+            "forward_dense",
+            Json::from_pairs(vec![(
+                "t1",
+                Json::from_pairs(vec![("tokens_per_s", Json::Num(100.0))]),
+            )]),
+        );
+        doc.set("scenarios", scenarios);
+        // missing file: must not panic
+        print_baseline_deltas(&doc, Path::new("/nonexistent/BENCH_baseline.json"));
+        // pending stub with no numeric metrics: must not panic either
+        let dir = std::env::temp_dir().join("dtrnet_baseline_stub_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_baseline.json");
+        std::fs::write(
+            &path,
+            "{\"schema\": \"dtrnet-bench-v1\", \"status\": \"pending-measurement\", \
+             \"scenarios\": {}}",
+        )
+        .unwrap();
+        print_baseline_deltas(&doc, &path);
+        // a measured baseline yields a real delta row (smoke: no panic)
+        std::fs::write(
+            &path,
+            "{\"schema\": \"dtrnet-bench-v1\", \"scenarios\": {\"forward_dense\": \
+             {\"t1\": {\"tokens_per_s\": 80.0}}}}",
+        )
+        .unwrap();
+        print_baseline_deltas(&doc, &path);
     }
 
     #[test]

@@ -19,7 +19,22 @@
 //! **bit-identical** to the serial form for every thread count —
 //! `rust/tests/properties_backend.rs` pins this bitwise. Tiny regions
 //! run inline (no dispatch); see the threshold constants below.
+//!
+//! # SIMD dispatch
+//!
+//! The inner loops route through [`simd`] (AVX2 / NEON with the scalar
+//! loop as the always-available fallback), dispatched by the
+//! [`KernelCtx`](crate::util::simd::KernelCtx) carried on the [`Pool`]
+//! (the `--simd` / `--precision` CLI knobs). Under the default exact
+//! precision the tier is a pure throughput knob — every kernel is
+//! bit-identical across tiers; `--precision fast` additionally
+//! vectorizes the f32 dot/variance reductions at tolerance-gated
+//! rounding drift. See DESIGN.md §SIMD dispatch and the contract notes
+//! in [`simd`].
 
+pub mod simd;
+
+use crate::util::simd::{KernelCtx, SimdTier};
 use crate::util::threadpool::Pool;
 
 /// Large-negative instead of -inf: keeps softmax NaN-free (ref.py NEG_INF).
@@ -48,8 +63,18 @@ pub fn silu(x: f32) -> f32 {
 /// into `orows` (zero-initialized by the caller). The shared loop body
 /// of [`matmul`] / [`matmul_par`]: k is tiled in ascending [`K_BLOCK`]s
 /// and zero `a` entries skip their row of `b` exactly like the
-/// reference loop, so bits match it for any chunking.
-fn matmul_rows(a: &[f32], b: &[f32], k: usize, m: usize, row0: usize, orows: &mut [f32]) {
+/// reference loop, so bits match it for any chunking. The `m`-wide
+/// axpy step is element-wise, so its vector form ([`simd::axpy`]) is
+/// bit-identical to the scalar loop on every tier.
+fn matmul_rows(
+    tier: SimdTier,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    row0: usize,
+    orows: &mut [f32],
+) {
     let rows = orows.len() / m;
     let mut kb = 0;
     while kb < k {
@@ -62,10 +87,7 @@ fn matmul_rows(a: &[f32], b: &[f32], k: usize, m: usize, row0: usize, orows: &mu
                 if av == 0.0 {
                     continue;
                 }
-                let brow = &b[kk * m..(kk + 1) * m];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                simd::axpy(tier, orow, av, &b[kk * m..(kk + 1) * m]);
             }
         }
         kb = kend;
@@ -89,10 +111,11 @@ pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
 pub fn matmul_par(pool: &Pool, a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(b.len(), k * m);
+    let tier = pool.kernel_ctx().tier;
     let mut out = vec![0.0f32; n * m];
     let work = n * k * m;
     if pool.threads() == 1 || work < PAR_MIN_FLOPS {
-        matmul_rows(a, b, k, m, 0, &mut out);
+        matmul_rows(tier, a, b, k, m, 0, &mut out);
         return out;
     }
     if n == 1 {
@@ -104,17 +127,14 @@ pub fn matmul_par(pool: &Pool, a: &[f32], b: &[f32], n: usize, k: usize, m: usiz
                 if av == 0.0 {
                     continue;
                 }
-                let bcols = &b[kk * m + c0..kk * m + c0 + ocols.len()];
-                for (o, &bv) in ocols.iter_mut().zip(bcols) {
-                    *o += av * bv;
-                }
+                simd::axpy(tier, ocols, av, &b[kk * m + c0..kk * m + c0 + ocols.len()]);
             }
         });
         return out;
     }
     let grain = (PAR_CHUNK_FLOPS / (k * m).max(1)).max(1);
     pool.run_rows(&mut out, m, grain, |row0, orows| {
-        matmul_rows(a, b, k, m, row0, orows)
+        matmul_rows(tier, a, b, k, m, row0, orows)
     });
     out
 }
@@ -125,24 +145,30 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
-/// f32 × i8 dot product with a single f32 accumulator walked in ascending
-/// index order — the fixed-accumulation-order core of [`matmul_q8`].
+/// f32 × i8 dot product — the core of [`matmul_q8`]. Accumulates in the
+/// fixed 8-lane striped order defined by [`simd::dot_q8_scalar`] (lane
+/// partial sums + sequential tail + a pinned reduction tree), which is
+/// exactly the order the AVX2/NEON paths compute — so the result is
+/// **bit-identical on every SIMD tier**, and `--simd` never changes the
+/// int8 backend's output. Dispatches on the process-wide tier; pooled
+/// callers ([`matmul_q8_par`]) thread their own pool's tier instead.
 #[inline]
 pub fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
-    let mut acc = 0.0f32;
-    for (&av, &qv) in a.iter().zip(q) {
-        acc += av * qv as f32;
-    }
-    acc
+    simd::dot_q8(crate::util::simd::tier(), a, q)
 }
 
 /// Per-output-row symmetric int8 quantization of a weight matrix `w`
 /// (row-major `[k, m]`, the [`matmul`] layout). Output channel `j` gets
 /// `scale[j] = max|w[:, j]| / 127` and its column is stored as the
 /// contiguous i8 row `q[j*k .. (j+1)*k]` — transposed, so the
-/// [`matmul_q8`] inner dot walks both operands sequentially. All-zero
-/// columns get scale 1.0 (they quantize to zeros either way). Returns
-/// `(q, scales)` with `q.len() == m * k`, `scales.len() == m`.
+/// [`matmul_q8`] inner dot walks both operands sequentially. Degenerate
+/// output rows are pinned to a safe scale: all-zero columns get scale
+/// 1.0 (they quantize to zeros either way), and a subnormal `amax` —
+/// where `amax / 127` would round to 0.0 and poison the dequant with
+/// inf/NaN — is clamped up to `f32::MIN_POSITIVE`, so every scale is a
+/// strictly positive normal number (pinned by the degenerate-row unit
+/// test below). Returns `(q, scales)` with `q.len() == m * k`,
+/// `scales.len() == m`.
 pub fn quantize_rows(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
     debug_assert_eq!(w.len(), k * m);
     let mut scales = vec![0.0f32; m];
@@ -151,7 +177,11 @@ pub fn quantize_rows(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
         for kk in 0..k {
             amax = amax.max(w[kk * m + j].abs());
         }
-        *s = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        *s = if amax > 0.0 {
+            (amax / 127.0).max(f32::MIN_POSITIVE)
+        } else {
+            1.0
+        };
     }
     let mut q = vec![0i8; m * k];
     for j in 0..m {
@@ -166,9 +196,10 @@ pub fn quantize_rows(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
 
 /// Quantized matmul: `a [n, k] (f32) @ Wq -> [n, m]`, where `Wq` is the
 /// `(q, scales)` pair from [`quantize_rows`] (`q` stored `[m, k]`
-/// output-row-major). Each output element is one [`dot_q8`] (ascending-k
-/// f32 accumulation) scaled once by its row scale — no dequantized copy
-/// of the weights ever materializes.
+/// output-row-major). Each output element is one [`dot_q8`] (the fixed
+/// striped f32 accumulation, bit-identical on every SIMD tier) scaled
+/// once by its row scale — no dequantized copy of the weights ever
+/// materializes.
 pub fn matmul_q8(a: &[f32], q: &[i8], scales: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     matmul_q8_par(&Pool::serial(), a, q, scales, n, k, m)
 }
@@ -176,6 +207,7 @@ pub fn matmul_q8(a: &[f32], q: &[i8], scales: &[f32], n: usize, k: usize, m: usi
 /// Rows `[row0, row0 + orows.len()/m)` of [`matmul_q8`], written into
 /// `orows` — the shared loop body of the serial and pooled forms.
 fn matmul_q8_rows(
+    tier: SimdTier,
     a: &[f32],
     q: &[i8],
     scales: &[f32],
@@ -189,7 +221,7 @@ fn matmul_q8_rows(
         let arow = &a[(row0 + r) * k..(row0 + r + 1) * k];
         let orow = &mut orows[r * m..(r + 1) * m];
         for (j, o) in orow.iter_mut().enumerate() {
-            *o = dot_q8(arow, &q[j * k..(j + 1) * k]) * scales[j];
+            *o = simd::dot_q8(tier, arow, &q[j * k..(j + 1) * k]) * scales[j];
         }
     }
 }
@@ -212,10 +244,11 @@ pub fn matmul_q8_par(
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(q.len(), m * k);
     debug_assert_eq!(scales.len(), m);
+    let tier = pool.kernel_ctx().tier;
     let mut out = vec![0.0f32; n * m];
     let work = n * k * m;
     if pool.threads() == 1 || work < PAR_MIN_FLOPS {
-        matmul_q8_rows(a, q, scales, k, m, 0, &mut out);
+        matmul_q8_rows(tier, a, q, scales, k, m, 0, &mut out);
         return out;
     }
     if n == 1 {
@@ -225,14 +258,14 @@ pub fn matmul_q8_par(
         pool.run_rows(&mut out, 1, grain, |c0, ocols| {
             for (t, o) in ocols.iter_mut().enumerate() {
                 let j = c0 + t;
-                *o = dot_q8(a, &q[j * k..(j + 1) * k]) * scales[j];
+                *o = simd::dot_q8(tier, a, &q[j * k..(j + 1) * k]) * scales[j];
             }
         });
         return out;
     }
     let grain = (PAR_CHUNK_FLOPS / (k * m).max(1)).max(1);
     pool.run_rows(&mut out, m, grain, |row0, orows| {
-        matmul_q8_rows(a, q, scales, k, m, row0, orows)
+        matmul_q8_rows(tier, a, q, scales, k, m, row0, orows)
     });
     out
 }
@@ -243,7 +276,11 @@ pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
 }
 
 /// [`rmsnorm`] parallelized across row chunks (rows are independent).
+/// The variance reduction runs through [`simd::sum_sq`]: sequential
+/// order under exact precision (tier-invariant bits), striped/vector
+/// under `--precision fast`.
 pub fn rmsnorm_par(pool: &Pool, x: &[f32], weight: &[f32], eps: f32) -> Vec<f32> {
+    let ctx = pool.kernel_ctx();
     let d = weight.len();
     let n = x.len() / d;
     let mut out = vec![0.0f32; n * d];
@@ -251,7 +288,7 @@ pub fn rmsnorm_par(pool: &Pool, x: &[f32], weight: &[f32], eps: f32) -> Vec<f32>
     pool.run_rows(&mut out, d, grain, |row0, rows| {
         for (r, orow) in rows.chunks_mut(d).enumerate() {
             let row = &x[(row0 + r) * d..(row0 + r + 1) * d];
-            let var: f32 = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+            let var: f32 = simd::sum_sq(ctx, row) / d as f32;
             let inv = 1.0 / (var + eps).sqrt();
             for j in 0..d {
                 orow[j] = row[j] * inv * weight[j];
@@ -415,6 +452,7 @@ pub fn routed_attention_par(
     h: usize,
     hd: usize,
 ) -> Vec<f32> {
+    let ctx = pool.kernel_ctx();
     let scale = 1.0 / (hd as f32).sqrt();
     let width = h * hd;
     let mut out = vec![0.0f32; n * width];
@@ -432,7 +470,7 @@ pub fn routed_attention_par(
                     let allowed = j == i || (delta[i] > 0.5 && delta[j] > 0.5);
                     *lg = if allowed {
                         let kj = &k[(j * h + head) * hd..(j * h + head + 1) * hd];
-                        dot(qi, kj) * scale
+                        simd::dot_f32(ctx, qi, kj) * scale
                     } else {
                         NEG_INF
                     };
@@ -450,9 +488,7 @@ pub fn routed_attention_par(
                     }
                     let wj = w / z;
                     let vj = &v[(j * h + head) * hd..(j * h + head + 1) * hd];
-                    for (o, &vv) in orow.iter_mut().zip(vj) {
-                        *o += wj * vv;
-                    }
+                    simd::axpy(ctx.tier, orow, wj, vj);
                 }
             }
         }
@@ -497,7 +533,18 @@ pub fn decode_attention(
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; h * hd];
     decode_attention_pending(
-        q, cache_k, cache_v, &[], &[], &[], k_self, v_self, h, hd, &mut out,
+        KernelCtx::current(),
+        q,
+        cache_k,
+        cache_v,
+        &[],
+        &[],
+        &[],
+        k_self,
+        v_self,
+        h,
+        hd,
+        &mut out,
     );
     out
 }
@@ -510,9 +557,12 @@ pub fn decode_attention(
 /// run concurrently (each row reads the chunk K/V of its predecessors
 /// instead of waiting for their cache appends) while producing the same
 /// bits as the sequential loop. Accumulates into `out` (`[h*hd]`,
-/// zeroed by the caller).
+/// zeroed by the caller). `ctx` selects the SIMD tier/precision (pooled
+/// callers pass their pool's context; [`decode_attention`] uses the
+/// process-wide selection).
 #[allow(clippy::too_many_arguments)]
 pub fn decode_attention_pending(
+    ctx: KernelCtx,
     q: &[f32],
     cache_k: &[f32],
     cache_v: &[f32],
@@ -534,13 +584,13 @@ pub fn decode_attention_pending(
         let qh = &q[head * hd..(head + 1) * hd];
         for j in 0..len {
             let kj = &cache_k[j * d + head * hd..j * d + (head + 1) * hd];
-            logits[j] = dot(qh, kj) * scale;
+            logits[j] = simd::dot_f32(ctx, qh, kj) * scale;
         }
         for (t, &pj) in pending.iter().enumerate() {
             let kj = &pend_k[pj * d + head * hd..pj * d + (head + 1) * hd];
-            logits[len + t] = dot(qh, kj) * scale;
+            logits[len + t] = simd::dot_f32(ctx, qh, kj) * scale;
         }
-        logits[len + p] = dot(qh, &k_self[head * hd..(head + 1) * hd]) * scale;
+        logits[len + p] = simd::dot_f32(ctx, qh, &k_self[head * hd..(head + 1) * hd]) * scale;
         let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
         for lg in logits.iter_mut() {
@@ -558,9 +608,7 @@ pub fn decode_attention_pending(
             } else {
                 &v_self[head * hd..(head + 1) * hd]
             };
-            for (o, &vv) in orow.iter_mut().zip(vj) {
-                *o += wj * vv;
-            }
+            simd::axpy(ctx.tier, orow, wj, vj);
         }
     }
 }
@@ -889,6 +937,114 @@ mod tests {
     }
 
     #[test]
+    fn quantize_rows_degenerate_rows_stay_finite() {
+        // Degenerate output rows must never produce a zero/NaN scale:
+        // all-zero columns pin scale 1.0, and a subnormal amax — where
+        // amax/127 would underflow to 0.0 and turn the q = w/s divide
+        // into inf — is clamped to f32::MIN_POSITIVE. Locks the
+        // round-trip: finite scales, finite dot_q8/matmul_q8 outputs.
+        let (k, m) = (4usize, 4usize);
+        let mut w = vec![0.0f32; k * m];
+        for kk in 0..k {
+            w[kk * m] = 1e-43; // subnormal column (f32::MIN_POSITIVE ~ 1.2e-38)
+            w[kk * m + 1] = 0.0; // all-zero column
+            w[kk * m + 2] = 1e30; // large-magnitude column
+            w[kk * m + 3] = -0.0; // negative zero column
+        }
+        let (q, scales) = quantize_rows(&w, k, m);
+        for (j, &s) in scales.iter().enumerate() {
+            assert!(s.is_finite() && s > 0.0, "col {j} scale {s} not positive-finite");
+            assert!(s >= f32::MIN_POSITIVE, "col {j} scale {s} subnormal");
+        }
+        assert_eq!(scales[1], 1.0);
+        assert_eq!(scales[3], 1.0, "-0.0 column must behave like the zero column");
+        assert!(q[k..2 * k].iter().all(|&v| v == 0));
+        assert!(q[3 * k..4 * k].iter().all(|&v| v == 0));
+        let a = vec![1.0f32; k];
+        let out = matmul_q8(&a, &q, &scales, 1, k, m);
+        for (j, &o) in out.iter().enumerate() {
+            assert!(o.is_finite(), "matmul_q8 col {j} produced {o}");
+        }
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[3], 0.0);
+        for j in 0..m {
+            let d = simd::dot_q8(SimdTier::Scalar, &a, &q[j * k..(j + 1) * k]) * scales[j];
+            assert!(d.is_finite(), "dot_q8 col {j} produced {d}");
+        }
+    }
+
+    #[test]
+    fn matmul_bits_are_invariant_across_simd_tiers() {
+        // Exact precision: the tier is a pure throughput knob — matmul
+        // and matmul_q8 produce identical bits on scalar and vector
+        // tiers for shapes that stress the remainder loops.
+        let mut rng = Rng::new(31);
+        let scalar = Pool::serial().with_ctx(KernelCtx::scalar());
+        let simd_pool = Pool::serial().with_ctx(KernelCtx::scalar().with_tier(simd::detect()));
+        for (n, k, m) in [(1usize, 33usize, 7usize), (5, 17, 9), (4, 64, 24)] {
+            let a = randn(&mut rng, n * k, 1.0);
+            let b = randn(&mut rng, k * m, 1.0);
+            assert_eq!(
+                matmul_par(&scalar, &a, &b, n, k, m),
+                matmul_par(&simd_pool, &a, &b, n, k, m),
+                "matmul bits diverged across tiers at n={n} k={k} m={m}"
+            );
+            let w = randn(&mut rng, k * m, 0.3);
+            let (q, scales) = quantize_rows(&w, k, m);
+            assert_eq!(
+                matmul_q8_par(&scalar, &a, &q, &scales, n, k, m),
+                matmul_q8_par(&simd_pool, &a, &q, &scales, n, k, m),
+                "matmul_q8 bits diverged across tiers at n={n} k={k} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn routing_tie_breaks_identically_across_threads_and_tiers() {
+        // Equal router scores must select the same token set no matter
+        // the thread count or SIMD tier. route_decision ties break to
+        // bypass (strict >); topk_mask ties break toward the lower
+        // index; and under exact precision the scores themselves are
+        // bit-identical across tiers, so the decisions cannot diverge.
+        let g_tied = vec![0.5f32, 0.5, 0.7, 0.3, 0.2, 0.8];
+        assert_eq!(route_decision(&g_tied), vec![0.0, 1.0, 0.0]);
+        let all_equal = vec![0.25f32; 8];
+        assert_eq!(topk_mask(&all_equal, 3), {
+            let mut want = vec![0.0f32; 8];
+            want[0] = 1.0;
+            want[1] = 1.0;
+            want[2] = 1.0;
+            want
+        });
+        // End-to-end: router scores → decisions, across pools differing
+        // in thread count AND tier, must agree exactly.
+        let mut rng = Rng::new(32);
+        let (n, d) = (24usize, 16usize);
+        let x = randn(&mut rng, n * d, 1.0);
+        let w1 = randn(&mut rng, d * (d / 2), 0.4);
+        let w2 = randn(&mut rng, (d / 2) * 2, 0.4);
+        let pools = [
+            Pool::serial().with_ctx(KernelCtx::scalar()),
+            Pool::with_threads(4).with_ctx(KernelCtx::scalar()),
+            Pool::serial().with_ctx(KernelCtx::scalar().with_tier(simd::detect())),
+            Pool::with_threads(3).with_ctx(KernelCtx::scalar().with_tier(simd::detect())),
+        ];
+        let reference = router_par(&pools[0], &x, &w1, &w2, n, d, d / 2);
+        let ref_decision = route_decision(&reference);
+        let ref_topk = topk_mask(
+            &reference.iter().step_by(2).copied().collect::<Vec<_>>(),
+            n / 4,
+        );
+        for (pi, pool) in pools.iter().enumerate() {
+            let g = router_par(pool, &x, &w1, &w2, n, d, d / 2);
+            assert_eq!(g, reference, "router bits diverged in pool {pi}");
+            assert_eq!(route_decision(&g), ref_decision, "decision diverged in pool {pi}");
+            let scores: Vec<f32> = g.iter().step_by(2).copied().collect();
+            assert_eq!(topk_mask(&scores, n / 4), ref_topk, "topk diverged in pool {pi}");
+        }
+    }
+
+    #[test]
     fn router_rows_are_distributions() {
         let mut rng = Rng::new(1);
         let (n, d) = (7, 8);
@@ -998,7 +1154,17 @@ mod tests {
         // pending = first two chunk rows
         let mut out_pending = vec![0.0f32; d];
         decode_attention_pending(
-            &q, &cache_k, &cache_v, &pend_k, &pend_v, &[0, 1], &ks, &vs, h, hd,
+            KernelCtx::current(),
+            &q,
+            &cache_k,
+            &cache_v,
+            &pend_k,
+            &pend_v,
+            &[0, 1],
+            &ks,
+            &vs,
+            h,
+            hd,
             &mut out_pending,
         );
         let mut big_k = cache_k.clone();

@@ -1,0 +1,541 @@
+//! Vectorized kernel inner loops with runtime tier dispatch.
+//!
+//! Policy (tier selection, the `--simd` / `--precision` knobs) lives in
+//! [`crate::util::simd`]; this module holds the implementations plus
+//! their scalar twins, organized around the determinism contract of
+//! DESIGN.md §SIMD dispatch:
+//!
+//! * **Element-wise ops are bit-exact on every tier.** [`axpy`]
+//!   (`out[i] += s * b[i]`, the matmul/attention weighted-sum inner
+//!   loop) has no cross-lane interaction: the vector form performs the
+//!   same one-rounding multiply and one-rounding add per element as the
+//!   scalar loop, in any lane order, so the bits cannot differ. No
+//!   fused multiply-add is used — FMA's single rounding would diverge
+//!   from the scalar twin.
+//! * **The int8 dot is bit-exact by a fixed striped order.** [`dot_q8`]
+//!   defines its accumulation as [`LANES`] independent partial sums
+//!   (lane `l` sums elements `l, l+8, l+16, …` of the full 8-chunks), a
+//!   sequential tail for `len % 8` trailing elements, and one fixed
+//!   reduction tree `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7)) + tail` —
+//!   exactly the horizontal-add sequence the AVX2/NEON code performs.
+//!   The scalar fallback implements the *same* order, so every tier
+//!   agrees bitwise; `rust/tests/simd_differential.rs` pins this across
+//!   a remainder-hostile shape matrix.
+//! * **f32 reductions are tolerance-gated, not bit-exact.** [`dot_f32`]
+//!   and [`sum_sq`] keep the one-accumulator ascending scalar order
+//!   under [`Precision::Exact`]; under [`Precision::Fast`] they switch
+//!   to the striped order above, which changes rounding vs the exact
+//!   path (still deterministic per (tier, precision)). The bench
+//!   harness gates the drift via routing-equivalence + perplexity
+//!   deltas (`perf` `simd_fast_*` scenarios).
+//!
+//! All `unsafe` here is `target_feature` dispatch: the AVX2 entry
+//! points are only reachable after `is_x86_feature_detected!` proved
+//! the ISA (tier construction in `util::simd` enforces it), and every
+//! pointer access stays within caller-checked slice bounds.
+
+pub use crate::util::simd::{detect, KernelCtx, Precision, SimdTier};
+
+/// Stripe width of the fixed accumulation order (f32 lanes in a 256-bit
+/// vector; NEON uses two 128-bit halves to make up the same 8 lanes).
+pub const LANES: usize = 8;
+
+/// `out[i] += s * b[i]` — the matmul k-step / attention weighted-sum
+/// inner loop. Bit-identical across all tiers (element-wise; see module
+/// docs), so it is always dispatched, independent of precision.
+#[inline]
+pub fn axpy(tier: SimdTier, out: &mut [f32], s: f32, b: &[f32]) {
+    debug_assert_eq!(out.len(), b.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { axpy_avx2(out, s, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { axpy_neon(out, s, b) },
+        _ => axpy_scalar(out, s, b),
+    }
+}
+
+/// Scalar twin of [`axpy`] (also the fallback tier's implementation).
+#[inline]
+pub fn axpy_scalar(out: &mut [f32], s: f32, b: &[f32]) {
+    for (o, &bv) in out.iter_mut().zip(b) {
+        *o += s * bv;
+    }
+}
+
+/// f32 × i8 dot product in the fixed striped accumulation order (module
+/// docs). Bit-identical across all tiers by construction — the scalar
+/// twin and the vector paths perform the same roundings in the same
+/// order — which is what keeps the int8 backend's outputs independent
+/// of the `--simd` flag.
+#[inline]
+pub fn dot_q8(tier: SimdTier, a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { dot_q8_avx2(a, q) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { dot_q8_neon(a, q) },
+        _ => dot_q8_scalar(a, q),
+    }
+}
+
+/// Scalar twin of [`dot_q8`]: the striped order spelled out in plain
+/// loops. This *is* the reference semantics — the differential tests
+/// hold the vector paths to it bitwise.
+pub fn dot_q8_scalar(a: &[f32], q: &[i8]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        for l in 0..LANES {
+            let i = c * LANES + l;
+            lanes[l] += a[i] * q[i] as f32;
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..a.len() {
+        tail += a[i] * q[i] as f32;
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+/// f32 dot product. [`Precision::Exact`]: one-accumulator ascending
+/// order on every tier (bit-identical to the historical scalar kernel).
+/// [`Precision::Fast`]: striped order, vectorized where the tier
+/// allows.
+#[inline]
+pub fn dot_f32(ctx: KernelCtx, a: &[f32], b: &[f32]) -> f32 {
+    if ctx.precision == Precision::Exact {
+        return dot_seq(a, b);
+    }
+    match ctx.tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { dot_f32_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { dot_f32_neon(a, b) },
+        _ => dot_f32_striped(a, b),
+    }
+}
+
+/// The exact-precision reference: single accumulator, ascending index.
+#[inline]
+pub fn dot_seq(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Scalar twin of the fast-precision [`dot_f32`] (striped order).
+pub fn dot_f32_striped(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        for l in 0..LANES {
+            let i = c * LANES + l;
+            lanes[l] += a[i] * b[i];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..a.len() {
+        tail += a[i] * b[i];
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+/// Sum of squares (the rmsnorm variance reduction). Same precision
+/// split as [`dot_f32`].
+#[inline]
+pub fn sum_sq(ctx: KernelCtx, x: &[f32]) -> f32 {
+    if ctx.precision == Precision::Exact {
+        return x.iter().map(|&v| v * v).sum();
+    }
+    match ctx.tier {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { sum_sq_avx2(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { sum_sq_neon(x) },
+        _ => sum_sq_striped(x),
+    }
+}
+
+/// Scalar twin of the fast-precision [`sum_sq`] (striped order).
+pub fn sum_sq_striped(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let chunks = x.len() / LANES;
+    for c in 0..chunks {
+        for l in 0..LANES {
+            let v = x[c * LANES + l];
+            lanes[l] += v * v;
+        }
+    }
+    let mut tail = 0.0f32;
+    for &v in &x[chunks * LANES..] {
+        tail += v * v;
+    }
+    reduce_lanes(&lanes) + tail
+}
+
+/// The fixed horizontal reduction tree shared by every striped path:
+/// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the exact add sequence of
+/// the AVX2 `extractf128/movehl/shuffle` horizontal sum, so the scalar
+/// twin reproduces the vector bits.
+#[inline]
+fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86-64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::LANES;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum matching [`super::reduce_lanes`] bit-for-bit:
+    /// low/high 128-bit add gives `[l0+l4, l1+l5, l2+l6, l3+l7]`, the
+    /// movehl add gives `[s0+s2, s1+s3]`, the final shuffle add their
+    /// sum.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let s = _mm_add_ps(lo, hi);
+        let t = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let u = _mm_add_ss(t, _mm_shuffle_ps(t, t, 0b01));
+        _mm_cvtss_f32(u)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (caller dispatches via a detected tier).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], s: f32, b: &[f32]) {
+        let n = out.len().min(b.len());
+        let chunks = n / LANES;
+        let sv = _mm256_set1_ps(s);
+        let op = out.as_mut_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let bv = _mm256_loadu_ps(bp.add(i));
+            let ov = _mm256_loadu_ps(op.add(i));
+            // mul then add (not FMA): same two roundings as the scalar
+            // `*o += s * bv`, so bits match the scalar twin exactly.
+            let r = _mm256_add_ps(ov, _mm256_mul_ps(sv, bv));
+            _mm256_storeu_ps(op.add(i), r);
+        }
+        for i in chunks * LANES..n {
+            *out.get_unchecked_mut(i) += s * *b.get_unchecked(i);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
+        let n = a.len().min(q.len());
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        let ap = a.as_ptr();
+        let qp = q.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let av = _mm256_loadu_ps(ap.add(i));
+            // 8 × i8 → sign-extend → i32 → f32: exact conversions.
+            let qbytes = _mm_loadl_epi64(qp.add(i) as *const __m128i);
+            let qv = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qbytes));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, qv));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            tail += *a.get_unchecked(i) * *q.get_unchecked(i) as f32;
+        }
+        hsum(acc) + tail
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            tail += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        hsum(acc) + tail
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_sq(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        let xp = x.as_ptr();
+        for c in 0..chunks {
+            let v = _mm256_loadu_ps(xp.add(c * LANES));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            let v = *x.get_unchecked(i);
+            tail += v * v;
+        }
+        hsum(acc) + tail
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{axpy as axpy_avx2, dot_f32 as dot_f32_avx2, dot_q8 as dot_q8_avx2, sum_sq as sum_sq_avx2};
+
+// ---------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::LANES;
+    use std::arch::aarch64::*;
+
+    /// Horizontal sum matching [`super::reduce_lanes`]: the two
+    /// 128-bit halves hold lanes 0–3 and 4–7, so one vector add gives
+    /// `[s0, s1, s2, s3]` and the scalar tree finishes identically.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(lo: float32x4_t, hi: float32x4_t) -> f32 {
+        let s = vaddq_f32(lo, hi);
+        let s0 = vgetq_lane_f32(s, 0);
+        let s1 = vgetq_lane_f32(s, 1);
+        let s2 = vgetq_lane_f32(s, 2);
+        let s3 = vgetq_lane_f32(s, 3);
+        (s0 + s2) + (s1 + s3)
+    }
+
+    /// # Safety
+    /// Requires NEON (caller dispatches via a detected tier).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(out: &mut [f32], s: f32, b: &[f32]) {
+        let n = out.len().min(b.len());
+        let chunks = n / LANES;
+        let sv = vdupq_n_f32(s);
+        let op = out.as_mut_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            // mul then add (no fused op) to match scalar rounding.
+            let r0 = vaddq_f32(vld1q_f32(op.add(i)), vmulq_f32(sv, vld1q_f32(bp.add(i))));
+            let r1 = vaddq_f32(
+                vld1q_f32(op.add(i + 4)),
+                vmulq_f32(sv, vld1q_f32(bp.add(i + 4))),
+            );
+            vst1q_f32(op.add(i), r0);
+            vst1q_f32(op.add(i + 4), r1);
+        }
+        for i in chunks * LANES..n {
+            *out.get_unchecked_mut(i) += s * *b.get_unchecked(i);
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_q8(a: &[f32], q: &[i8]) -> f32 {
+        let n = a.len().min(q.len());
+        let chunks = n / LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let ap = a.as_ptr();
+        let qp = q.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            let qw = vmovl_s8(vld1_s8(qp.add(i))); // 8 × i16
+            let q_lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(qw)));
+            let q_hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(qw)));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(ap.add(i)), q_lo));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(ap.add(i + 4)), q_hi));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            tail += *a.get_unchecked(i) * *q.get_unchecked(i) as f32;
+        }
+        hsum(acc_lo, acc_hi) + tail
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        for c in 0..chunks {
+            let i = c * LANES;
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i))));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4))),
+            );
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            tail += *a.get_unchecked(i) * *b.get_unchecked(i);
+        }
+        hsum(acc_lo, acc_hi) + tail
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_sq(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let xp = x.as_ptr();
+        for c in 0..chunks {
+            let v0 = vld1q_f32(xp.add(c * LANES));
+            let v1 = vld1q_f32(xp.add(c * LANES + 4));
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(v0, v0));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(v1, v1));
+        }
+        let mut tail = 0.0f32;
+        for i in chunks * LANES..n {
+            let v = *x.get_unchecked(i);
+            tail += v * v;
+        }
+        hsum(acc_lo, acc_hi) + tail
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+use neon::{axpy as axpy_neon, dot_f32 as dot_f32_neon, dot_q8 as dot_q8_neon, sum_sq as sum_sq_neon};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    /// Shape matrix hostile to vector code: remainders around the lane
+    /// width, the empty slice, and single elements.
+    const SIZES: [usize; 12] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 257];
+
+    #[test]
+    fn axpy_bits_match_scalar_on_every_supported_tier() {
+        let mut rng = Rng::new(71);
+        for &n in &SIZES {
+            let b = randn(&mut rng, n, 1.3);
+            let base = randn(&mut rng, n, 0.7);
+            let s = rng.normal() as f32;
+            let mut want = base.clone();
+            axpy_scalar(&mut want, s, &b);
+            for t in [SimdTier::Avx2, SimdTier::Neon, SimdTier::Scalar] {
+                if !t.supported() {
+                    continue;
+                }
+                let mut got = base.clone();
+                axpy(t, &mut got, s, &b);
+                assert_eq!(want, got, "axpy bits diverged on {} at n={n}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_q8_bits_match_striped_scalar_on_every_supported_tier() {
+        let mut rng = Rng::new(72);
+        for &n in &SIZES {
+            let a = randn(&mut rng, n, 1.0);
+            let q: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let want = dot_q8_scalar(&a, &q);
+            for t in [SimdTier::Avx2, SimdTier::Neon, SimdTier::Scalar] {
+                if !t.supported() {
+                    continue;
+                }
+                let got = dot_q8(t, &a, &q);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "dot_q8 bits diverged on {} at n={n}",
+                    t.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_reductions_match_their_striped_scalar_twin_bitwise() {
+        let mut rng = Rng::new(73);
+        let fast = KernelCtx::scalar().with_precision(Precision::Fast);
+        for &n in &SIZES {
+            let a = randn(&mut rng, n, 1.0);
+            let b = randn(&mut rng, n, 1.0);
+            for t in [SimdTier::Avx2, SimdTier::Neon, SimdTier::Scalar] {
+                if !t.supported() {
+                    continue;
+                }
+                let ctx = fast.with_tier(t);
+                assert_eq!(
+                    dot_f32_striped(&a, &b).to_bits(),
+                    dot_f32(ctx, &a, &b).to_bits(),
+                    "fast dot bits diverged on {} at n={n}",
+                    t.name()
+                );
+                assert_eq!(
+                    sum_sq_striped(&a).to_bits(),
+                    sum_sq(ctx, &a).to_bits(),
+                    "fast sum_sq bits diverged on {} at n={n}",
+                    t.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_precision_ignores_the_tier() {
+        // Under Exact, dot/sum_sq use the sequential order on every
+        // tier — the whole f32 pipeline stays bit-identical across
+        // `--simd` settings.
+        let mut rng = Rng::new(74);
+        let a = randn(&mut rng, 100, 1.0);
+        let b = randn(&mut rng, 100, 1.0);
+        for t in [SimdTier::Avx2, SimdTier::Neon, SimdTier::Scalar] {
+            let ctx = KernelCtx::scalar().with_tier(t); // precision Exact
+            assert_eq!(dot_f32(ctx, &a, &b).to_bits(), dot_seq(&a, &b).to_bits());
+            let ssq: f32 = a.iter().map(|&v| v * v).sum();
+            assert_eq!(sum_sq(ctx, &a).to_bits(), ssq.to_bits());
+        }
+    }
+
+    #[test]
+    fn striped_order_is_close_to_sequential() {
+        // Sanity: striping only reorders the sum — values stay within
+        // a tight relative tolerance of the sequential reference.
+        let mut rng = Rng::new(75);
+        let a = randn(&mut rng, 1000, 1.0);
+        let b = randn(&mut rng, 1000, 1.0);
+        let seq = dot_seq(&a, &b) as f64;
+        let striped = dot_f32_striped(&a, &b) as f64;
+        assert!((seq - striped).abs() <= 1e-4 * seq.abs().max(1.0));
+    }
+}

@@ -348,11 +348,13 @@ pub(crate) fn attend_rows(
         let cached_rows: usize = views.iter().map(|(ks, _)| ks.len() / d).sum();
         let per_row = (cached_rows / m.max(1) + m / 2 + 1) * d * 2;
         let grain = (kernels::PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
+        let kctx = pool.kernel_ctx();
         pool.run_rows(&mut ctx, d, grain, |r0, rows| {
             for (i, orow) in rows.chunks_mut(d).enumerate() {
                 let r = r0 + i;
                 let (cache_k, cache_v) = views[rows_cache[r]];
                 kernels::decode_attention_pending(
+                    kctx,
                     &q[r * d..(r + 1) * d],
                     cache_k,
                     cache_v,
@@ -826,7 +828,7 @@ impl Backend for CpuBackend {
     }
 
     fn kernel_timings(&self) -> Option<Json> {
-        Some(self.timers.snapshot())
+        Some(self.timers.snapshot_with_ctx(self.pool.kernel_ctx()))
     }
 
     fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput> {

@@ -763,7 +763,7 @@ impl Backend for QuantizedCpuBackend {
     }
 
     fn kernel_timings(&self) -> Option<Json> {
-        Some(self.timers.snapshot())
+        Some(self.timers.snapshot_with_ctx(self.pool.kernel_ctx()))
     }
 
     fn weight_bytes(&self) -> WeightBytes {

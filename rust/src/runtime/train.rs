@@ -676,7 +676,7 @@ impl TrainBackend for CpuTrainer {
     }
 
     fn kernel_timings(&self) -> Option<Json> {
-        Some(self.timers.snapshot())
+        Some(self.timers.snapshot_with_ctx(self.pool.kernel_ctx()))
     }
 }
 

@@ -5,12 +5,15 @@
 //! proptest) are unavailable. This module provides the minimal, well-tested
 //! replacements the rest of the library builds on — including
 //! [`threadpool`], the scoped work-chunking pool under every parallel CPU
-//! kernel (DESIGN.md §Parallel CPU execution).
+//! kernel (DESIGN.md §Parallel CPU execution), and [`simd`], the
+//! instruction-set tier + precision selector behind the `--simd` /
+//! `--precision` flags (DESIGN.md §SIMD dispatch).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod threadpool;
 

@@ -1,0 +1,305 @@
+//! SIMD tier selection — which vector instruction set the CPU kernels
+//! dispatch to, and at which precision contract.
+//!
+//! The *implementations* live in `runtime::cpu::kernels::simd`; this
+//! module owns the policy: runtime feature detection, the process-wide
+//! selector behind the `--simd {auto,avx2,scalar}` CLI flag (and the
+//! `DTRNET_SIMD` env var CI uses to force the fallback path on AVX2
+//! runners), and the `--precision {exact,fast}` knob that gates the
+//! f32 reductions whose vector form cannot match scalar bitwise.
+//!
+//! # Determinism contract (DESIGN.md §SIMD dispatch)
+//!
+//! * [`Precision::Exact`] (default): every kernel produces the **same
+//!   bits on every tier**. Element-wise vector ops (`axpy`-style rows)
+//!   round identically to the scalar loop, and the int8 dot walks a
+//!   fixed 8-lane striped accumulation order that the scalar fallback
+//!   reproduces exactly. Switching `--simd` is a pure throughput knob.
+//! * [`Precision::Fast`]: f32 dot/sum-of-squares reductions also
+//!   vectorize (8 partial accumulators instead of one), which changes
+//!   rounding. Results stay deterministic for a fixed (tier, precision)
+//!   pair, and the bench harness gates the drift with the margin-aware
+//!   routing-equivalence and perplexity-delta checks from the
+//!   quantization work (`runtime::quant`).
+//!
+//! Like [`threadpool::set_global_threads`](crate::util::threadpool::set_global_threads),
+//! the globals here are meant to be pinned once at CLI startup; kernels
+//! snapshot them into a [`KernelCtx`] carried by the
+//! [`Pool`](crate::util::threadpool::Pool), so tests and the bench
+//! harness can pin a tier per pool without racing on process state.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which vector instruction set the CPU kernels use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Portable scalar loops — the always-available fallback and the
+    /// reference semantics every other tier is held to.
+    Scalar,
+    /// x86-64 AVX2 (+FMA present, though exact-precision kernels avoid
+    /// fused ops so their rounding matches scalar).
+    Avx2,
+    /// AArch64 NEON.
+    Neon,
+}
+
+impl SimdTier {
+    /// Stable lowercase name (CLI/env/JSON spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can execute the tier.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            SimdTier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdTier::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Best tier this host supports (what `--simd auto` resolves to).
+pub fn detect() -> SimdTier {
+    if SimdTier::Avx2.supported() {
+        SimdTier::Avx2
+    } else if SimdTier::Neon.supported() {
+        SimdTier::Neon
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// Floating-point precision contract for the vector kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Every kernel is bit-identical across tiers (default).
+    Exact,
+    /// f32 reductions (attention logits dot, rmsnorm sum-of-squares)
+    /// vectorize with striped partial accumulators — faster, not
+    /// bitwise vs [`Precision::Exact`], tolerance-gated in the bench
+    /// harness (DESIGN.md §SIMD dispatch).
+    Fast,
+}
+
+impl Precision {
+    /// Stable lowercase name (CLI/env/JSON spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Fast => "fast",
+        }
+    }
+}
+
+/// Snapshot of the (tier, precision) pair a kernel call should use.
+///
+/// Carried by [`Pool`](crate::util::threadpool::Pool) so every `_par`
+/// kernel — and the serial wrappers that run through `Pool::serial()` —
+/// dispatches consistently without re-reading process globals, and so
+/// tests can compare tiers side by side without mutating them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCtx {
+    /// Active instruction-set tier.
+    pub tier: SimdTier,
+    /// Active precision contract.
+    pub precision: Precision,
+}
+
+impl KernelCtx {
+    /// The process-wide selection (globals below, env-seeded).
+    pub fn current() -> KernelCtx {
+        KernelCtx {
+            tier: tier(),
+            precision: precision(),
+        }
+    }
+
+    /// Scalar/exact — the reference semantics.
+    pub fn scalar() -> KernelCtx {
+        KernelCtx {
+            tier: SimdTier::Scalar,
+            precision: Precision::Exact,
+        }
+    }
+
+    /// This context with a different tier.
+    pub fn with_tier(self, tier: SimdTier) -> KernelCtx {
+        KernelCtx { tier, ..self }
+    }
+
+    /// This context with a different precision.
+    pub fn with_precision(self, precision: Precision) -> KernelCtx {
+        KernelCtx { precision, ..self }
+    }
+}
+
+// Process-wide selection. 0 = unset; otherwise value + 1 of the enum's
+// discriminant-order index (Scalar=1, Avx2=2, Neon=3 / Exact=1, Fast=2).
+static TIER: AtomicU8 = AtomicU8::new(0);
+static PRECISION: AtomicU8 = AtomicU8::new(0);
+
+fn tier_to_u8(t: SimdTier) -> u8 {
+    match t {
+        SimdTier::Scalar => 1,
+        SimdTier::Avx2 => 2,
+        SimdTier::Neon => 3,
+    }
+}
+
+fn tier_from_u8(v: u8) -> Option<SimdTier> {
+    match v {
+        1 => Some(SimdTier::Scalar),
+        2 => Some(SimdTier::Avx2),
+        3 => Some(SimdTier::Neon),
+        _ => None,
+    }
+}
+
+/// Parse a `--simd` / `DTRNET_SIMD` spelling. `auto` resolves to
+/// [`detect`]; a named tier must be supported on this host.
+pub fn parse_tier(s: &str) -> Result<SimdTier, String> {
+    let t = match s {
+        "auto" => return Ok(detect()),
+        "scalar" => SimdTier::Scalar,
+        "avx2" => SimdTier::Avx2,
+        "neon" => SimdTier::Neon,
+        _ => return Err(format!("unknown simd tier '{s}' (auto|avx2|neon|scalar)")),
+    };
+    if !t.supported() {
+        return Err(format!("simd tier '{s}' is not supported on this host"));
+    }
+    Ok(t)
+}
+
+/// Parse a `--precision` / `DTRNET_PRECISION` spelling.
+pub fn parse_precision(s: &str) -> Result<Precision, String> {
+    match s {
+        "exact" => Ok(Precision::Exact),
+        "fast" => Ok(Precision::Fast),
+        _ => Err(format!("unknown precision '{s}' (exact|fast)")),
+    }
+}
+
+/// Pin the process-wide tier (the CLI `--simd` knob). Pools constructed
+/// afterwards inherit it; pools already built keep their snapshot.
+pub fn set_tier(t: SimdTier) {
+    TIER.store(tier_to_u8(t), Ordering::Relaxed);
+}
+
+/// Pin the process-wide precision (the CLI `--precision` knob).
+pub fn set_precision(p: Precision) {
+    PRECISION.store(
+        match p {
+            Precision::Exact => 1,
+            Precision::Fast => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The process-wide tier. First use seeds it from `DTRNET_SIMD`
+/// (`auto|avx2|neon|scalar`; invalid or unsupported values warn and
+/// fall back) or [`detect`].
+pub fn tier() -> SimdTier {
+    if let Some(t) = tier_from_u8(TIER.load(Ordering::Relaxed)) {
+        return t;
+    }
+    let t = match std::env::var("DTRNET_SIMD") {
+        Ok(v) => match parse_tier(&v) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("[simd] DTRNET_SIMD: {e}; using auto");
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    };
+    // First writer wins; a concurrent set_tier may already have landed.
+    let _ = TIER.compare_exchange(0, tier_to_u8(t), Ordering::Relaxed, Ordering::Relaxed);
+    tier_from_u8(TIER.load(Ordering::Relaxed)).unwrap_or(t)
+}
+
+/// The process-wide precision. First use seeds it from
+/// `DTRNET_PRECISION` (`exact|fast`) or defaults to exact.
+pub fn precision() -> Precision {
+    match PRECISION.load(Ordering::Relaxed) {
+        1 => return Precision::Exact,
+        2 => return Precision::Fast,
+        _ => {}
+    }
+    let p = match std::env::var("DTRNET_PRECISION") {
+        Ok(v) => match parse_precision(&v) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("[simd] DTRNET_PRECISION: {e}; using exact");
+                Precision::Exact
+            }
+        },
+        Err(_) => Precision::Exact,
+    };
+    let new = match p {
+        Precision::Exact => 1,
+        Precision::Fast => 2,
+    };
+    let _ = PRECISION.compare_exchange(0, new, Ordering::Relaxed, Ordering::Relaxed);
+    match PRECISION.load(Ordering::Relaxed) {
+        2 => Precision::Fast,
+        _ => Precision::Exact,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_supported() {
+        assert!(SimdTier::Scalar.supported());
+        // detect() never returns something the host can't run
+        assert!(detect().supported());
+    }
+
+    #[test]
+    fn parse_spellings_round_trip() {
+        assert_eq!(parse_tier("scalar").unwrap(), SimdTier::Scalar);
+        assert_eq!(parse_tier("auto").unwrap(), detect());
+        assert!(parse_tier("sse9").is_err());
+        assert_eq!(parse_precision("exact").unwrap(), Precision::Exact);
+        assert_eq!(parse_precision("fast").unwrap(), Precision::Fast);
+        assert!(parse_precision("loose").is_err());
+    }
+
+    #[test]
+    fn ctx_builders_compose() {
+        let c = KernelCtx::scalar().with_precision(Precision::Fast);
+        assert_eq!(c.tier, SimdTier::Scalar);
+        assert_eq!(c.precision, Precision::Fast);
+        assert_eq!(c.with_tier(detect()).tier, detect());
+        assert_eq!(SimdTier::Avx2.name(), "avx2");
+        assert_eq!(Precision::Fast.name(), "fast");
+    }
+}

@@ -44,6 +44,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
+use crate::util::simd::KernelCtx;
+
 /// A queued worker job (one helper per parallel region per worker).
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -164,16 +166,27 @@ impl Drop for Workers {
 /// Handle to a parallel execution context: either the serial inline path
 /// (`threads == 1`, no workers) or a shared set of persistent workers.
 ///
+/// The pool also carries the [`KernelCtx`] (SIMD tier + precision,
+/// DESIGN.md §SIMD dispatch) that its kernels dispatch with: it is
+/// snapshotted from the process-wide selection at construction, so the
+/// `--simd`/`--precision` flags apply to every pool built after CLI
+/// startup, while tests and the bench harness can pin a different
+/// context per pool via [`Pool::with_ctx`] without touching globals.
+///
 /// Cloning is cheap (an `Arc` bump) and clones share the same workers.
 #[derive(Clone)]
 pub struct Pool {
     workers: Option<Arc<Workers>>,
     threads: usize,
+    ctx: KernelCtx,
 }
 
 impl std::fmt::Debug for Pool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Pool").field("threads", &self.threads).finish()
+        f.debug_struct("Pool")
+            .field("threads", &self.threads)
+            .field("ctx", &self.ctx)
+            .finish()
     }
 }
 
@@ -184,6 +197,7 @@ impl Pool {
         Pool {
             workers: None,
             threads: 1,
+            ctx: KernelCtx::current(),
         }
     }
 
@@ -196,12 +210,24 @@ impl Pool {
         Pool {
             workers: Some(Arc::new(Workers::new(n - 1))),
             threads: n,
+            ctx: KernelCtx::current(),
         }
     }
 
     /// Total concurrency of this pool (including the calling thread).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The SIMD tier + precision this pool's kernels dispatch with.
+    pub fn kernel_ctx(&self) -> KernelCtx {
+        self.ctx
+    }
+
+    /// This pool with a pinned kernel context (shares the same workers).
+    pub fn with_ctx(mut self, ctx: KernelCtx) -> Pool {
+        self.ctx = ctx;
+        self
     }
 
     /// Run `body(start, end)` over disjoint chunks partitioning

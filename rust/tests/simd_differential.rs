@@ -1,0 +1,364 @@
+//! Scalar-vs-SIMD differential harness (in-repo property harness —
+//! proptest is unavailable offline; see DESIGN.md §Substitutions).
+//!
+//! Every vectorized kernel runs against its scalar twin over a seeded
+//! randomized input stream plus a hostile shape matrix: lengths that are
+//! not multiples of the 8-float lane width, n=1 decode rows, empty
+//! caches/pending selections, subnormal and large-magnitude values, and
+//! ±0.0. The determinism contract (DESIGN.md §SIMD dispatch) splits the
+//! assertions in two:
+//!
+//! * **Bit-exact paths** — `axpy` (element-wise: each lane rounds
+//!   independently, mul-then-add, never FMA) and `dot_q8` (the i8 path:
+//!   both twins implement the same fixed 8-lane striped accumulation) —
+//!   compared by `to_bits()`, so even a `-0.0` vs `+0.0` swap fails.
+//!   At *fixed* precision the fast f32 reductions are also bit-exact
+//!   across tiers (the striped scalar twin pins the summation order).
+//! * **Tolerance-gated paths** — `--precision fast` reductions vs the
+//!   exact sequential order. Reassociating a length-`n` sum moves the
+//!   result by at most ~`n · ε · Σ|termᵢ|`; the tests pin that analytic
+//!   bound with a 4× slack (see `reassociation_tol`).
+
+use dtrnet::runtime::cpu::kernels::{self, simd};
+use dtrnet::testing::{property, Gen};
+use dtrnet::util::rng::Rng;
+use dtrnet::util::simd::{detect, KernelCtx, Precision, SimdTier};
+use dtrnet::util::threadpool::Pool;
+
+/// Lengths chosen to straddle the 8-lane width: empty, sub-lane, exact
+/// multiples, off-by-one on both sides, and a long tail.
+const SIZES: [usize; 12] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 257];
+
+/// The tiers under test: scalar always, plus the detected tier when it
+/// differs (on a plain host this degenerates to scalar-vs-scalar, which
+/// keeps the harness green rather than vacuously skipped).
+fn tiers() -> Vec<SimdTier> {
+    let mut t = vec![SimdTier::Scalar];
+    if detect() != SimdTier::Scalar {
+        t.push(detect());
+    }
+    t
+}
+
+/// A value stream that keeps hitting the hostile corners: ±0.0,
+/// subnormals, large magnitudes, and ordinary noise.
+fn hostile_f32(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => 1.0e-41,  // subnormal
+        3 => -1.0e-41, // subnormal
+        4 => 1.0e30,
+        5 => -1.0e30,
+        _ => (rng.f32() - 0.5) * 4.0,
+    }
+}
+
+fn hostile_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| hostile_f32(rng)).collect()
+}
+
+/// Analytic bound for reassociating a length-`n` f32 sum: the striped
+/// order can drift from the sequential order by at most about
+/// `n · ε · Σ|termᵢ|`; we allow 4× slack on top.
+fn reassociation_tol(abs_term_sum: f32, n: usize) -> f32 {
+    4.0 * n.max(1) as f32 * f32::EPSILON * abs_term_sum
+}
+
+#[test]
+fn axpy_bitwise_across_tiers_on_hostile_inputs() {
+    for tier in tiers() {
+        let mut rng = Rng::new(0xA11);
+        for &len in &SIZES {
+            for case in 0..8u64 {
+                let b = hostile_vec(&mut rng, len);
+                let base = hostile_vec(&mut rng, len);
+                let s = hostile_f32(&mut rng);
+                let mut want = base.clone();
+                simd::axpy_scalar(&mut want, s, &b);
+                let mut got = base.clone();
+                simd::axpy(tier, &mut got, s, &b);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    wb,
+                    gb,
+                    "axpy len={len} case={case} tier={} diverged from scalar",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_q8_bitwise_across_tiers_on_hostile_inputs() {
+    for tier in tiers() {
+        let mut rng = Rng::new(0xD07);
+        for &len in &SIZES {
+            for case in 0..8u64 {
+                let a = hostile_vec(&mut rng, len);
+                let q: Vec<i8> =
+                    (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                let want = simd::dot_q8_scalar(&a, &q);
+                let got = simd::dot_q8(tier, &a, &q);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "dot_q8 len={len} case={case} tier={} diverged from striped scalar \
+                     ({want} vs {got})",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_reductions_bitwise_across_tiers_tolerance_vs_exact() {
+    // Cross-tier: the fast dot/sum_sq must reproduce the striped scalar
+    // twin bit-for-bit (the pinned reduction tree IS the contract).
+    // Cross-precision: the striped result may differ from the exact
+    // sequential order only within the reassociation bound.
+    for tier in tiers() {
+        let fast = KernelCtx {
+            tier,
+            precision: Precision::Fast,
+        };
+        let exact = KernelCtx {
+            tier,
+            precision: Precision::Exact,
+        };
+        let mut rng = Rng::new(0xFA57);
+        for &len in &SIZES {
+            // Plain noise here: a single 1e30 term legitimately swamps
+            // the sum, which makes the *relative* drift unbounded.
+            let a: Vec<f32> = (0..len).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+
+            let striped = simd::dot_f32_striped(&a, &b);
+            let got = simd::dot_f32(fast, &a, &b);
+            assert_eq!(
+                striped.to_bits(),
+                got.to_bits(),
+                "fast dot_f32 len={len} tier={} diverged from striped scalar",
+                tier.name()
+            );
+            let seq = simd::dot_f32(exact, &a, &b);
+            assert_eq!(
+                seq.to_bits(),
+                simd::dot_seq(&a, &b).to_bits(),
+                "exact dot_f32 must be the sequential order on every tier"
+            );
+            let abs_sum: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (striped - seq).abs() <= reassociation_tol(abs_sum, len),
+                "fast dot_f32 len={len}: |{striped} - {seq}| exceeds the \
+                 reassociation bound"
+            );
+
+            let striped = simd::sum_sq_striped(&a);
+            let got = simd::sum_sq(fast, &a);
+            assert_eq!(
+                striped.to_bits(),
+                got.to_bits(),
+                "fast sum_sq len={len} tier={} diverged from striped scalar",
+                tier.name()
+            );
+            let seq = simd::sum_sq(exact, &a);
+            let abs_sum: f32 = a.iter().map(|x| x * x).sum();
+            assert!(
+                (striped - seq).abs() <= reassociation_tol(abs_sum, len),
+                "fast sum_sq len={len}: |{striped} - {seq}| exceeds the \
+                 reassociation bound"
+            );
+        }
+    }
+}
+
+/// A scalar-pinned and a tier-pinned pool for side-by-side kernel runs
+/// (per-pool ctx: no process-global state touched, test-parallel safe).
+fn pool_pair(tier: SimdTier, precision: Precision) -> (Pool, Pool) {
+    let scalar = Pool::serial().with_ctx(KernelCtx {
+        tier: SimdTier::Scalar,
+        precision,
+    });
+    let vector = Pool::serial().with_ctx(KernelCtx { tier, precision });
+    (scalar, vector)
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], what: &str) {
+    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(wb, gb, "{what} diverged between scalar and SIMD tiers");
+}
+
+#[test]
+fn matmul_differential_hostile_shapes() {
+    // n=1 is the decode hot path (column-chunked); k values straddle
+    // both the lane width and the K_BLOCK tiling.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 7, 5),
+        (1, 33, 64),
+        (2, 8, 8),
+        (3, 17, 9),
+        (4, 64, 24),
+        (5, 129, 7),
+    ];
+    for tier in tiers() {
+        let (ps, pv) = pool_pair(tier, Precision::Exact);
+        let mut rng = Rng::new(0x3A7);
+        for &(n, k, m) in &shapes {
+            let a = hostile_vec(&mut rng, n * k);
+            let b = hostile_vec(&mut rng, k * m);
+            assert_bits_eq(
+                &kernels::matmul_par(&ps, &a, &b, n, k, m),
+                &kernels::matmul_par(&pv, &a, &b, n, k, m),
+                &format!("matmul {n}x{k}x{m} tier={}", tier.name()),
+            );
+            // quantize_rows runs on finite weights in practice; keep the
+            // magnitudes sane so dot_q8's scale product stays finite.
+            let wq: Vec<f32> = (0..k * m).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            let (q, scales) = kernels::quantize_rows(&wq, k, m);
+            let aq: Vec<f32> = (0..n * k).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+            assert_bits_eq(
+                &kernels::matmul_q8_par(&ps, &aq, &q, &scales, n, k, m),
+                &kernels::matmul_q8_par(&pv, &aq, &q, &scales, n, k, m),
+                &format!("matmul_q8 {n}x{k}x{m} tier={}", tier.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn rmsnorm_and_attention_differential_both_precisions() {
+    for tier in tiers() {
+        for precision in [Precision::Exact, Precision::Fast] {
+            let (ps, pv) = pool_pair(tier, precision);
+            let mut rng = Rng::new(0xA77);
+            for &(n, h, hd) in &[(1usize, 1usize, 3usize), (2, 2, 8), (5, 2, 17), (4, 3, 7)] {
+                let d = h * hd;
+                let x: Vec<f32> = (0..n * d).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                let w: Vec<f32> = (0..d).map(|_| 0.5 + rng.f32()).collect();
+                assert_bits_eq(
+                    &kernels::rmsnorm_par(&ps, &x, &w, 1e-5),
+                    &kernels::rmsnorm_par(&pv, &x, &w, 1e-5),
+                    &format!("rmsnorm n={n} d={d} tier={} {precision:?}", tier.name()),
+                );
+                let q: Vec<f32> = (0..n * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let k: Vec<f32> = (0..n * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let v: Vec<f32> = (0..n * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                // delta rows include hard zeros — tokens routed fully
+                // around attention (the "empty selection" corner).
+                let delta: Vec<f32> =
+                    (0..n).map(|i| if i % 2 == 0 { 0.0 } else { rng.f32() }).collect();
+                assert_bits_eq(
+                    &kernels::routed_attention_par(&ps, &q, &k, &v, &delta, n, h, hd),
+                    &kernels::routed_attention_par(&pv, &q, &k, &v, &delta, n, h, hd),
+                    &format!("routed_attention n={n} h={h} hd={hd} tier={}", tier.name()),
+                );
+                assert_bits_eq(
+                    &kernels::dense_attention_par(&ps, &q, &k, &v, n, h, hd),
+                    &kernels::dense_attention_par(&pv, &q, &k, &v, n, h, hd),
+                    &format!("dense_attention n={n} h={h} hd={hd} tier={}", tier.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_attention_pending_differential_empty_and_tiny_caches() {
+    for tier in tiers() {
+        for precision in [Precision::Exact, Precision::Fast] {
+            let scalar = KernelCtx {
+                tier: SimdTier::Scalar,
+                precision,
+            };
+            let vector = KernelCtx { tier, precision };
+            let mut rng = Rng::new(0xDECD);
+            for &(len, chunk, h, hd) in &[
+                (0usize, 0usize, 1usize, 3usize), // empty cache, no pending
+                (0, 2, 2, 8),                     // cold start mid-chunk
+                (1, 0, 2, 17),                    // single cached row
+                (5, 3, 2, 7),
+            ] {
+                let d = h * hd;
+                let q: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let cache_k: Vec<f32> = (0..len * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let cache_v: Vec<f32> = (0..len * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let pend_k: Vec<f32> = (0..chunk * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let pend_v: Vec<f32> = (0..chunk * d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let pending: Vec<usize> = (0..chunk).collect();
+                let k_self: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let v_self: Vec<f32> = (0..d).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+                let mut want = vec![0.0f32; d];
+                kernels::decode_attention_pending(
+                    scalar, &q, &cache_k, &cache_v, &pend_k, &pend_v, &pending, &k_self,
+                    &v_self, h, hd, &mut want,
+                );
+                let mut got = vec![0.0f32; d];
+                kernels::decode_attention_pending(
+                    vector, &q, &cache_k, &cache_v, &pend_k, &pend_v, &pending, &k_self,
+                    &v_self, h, hd, &mut got,
+                );
+                assert_bits_eq(
+                    &want,
+                    &got,
+                    &format!(
+                        "decode_attention_pending len={len} chunk={chunk} h={h} hd={hd} \
+                         tier={} {precision:?}",
+                        tier.name()
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_randomized_matmul_stays_tier_invariant() {
+    // Randomized shape/content sweep on top of the fixed hostile matrix.
+    let tier = detect();
+    property("matmul tier invariance", 60, |g: &mut Gen| {
+        let n = g.usize(1..6);
+        let k = g.usize(1..70);
+        let m = g.usize(1..40);
+        let a = g.f32_vec(n * k..n * k + 1, -3.0, 3.0);
+        let b = g.f32_vec(k * m..k * m + 1, -3.0, 3.0);
+        let (ps, pv) = pool_pair(tier, Precision::Exact);
+        assert_bits_eq(
+            &kernels::matmul_par(&ps, &a, &b, n, k, m),
+            &kernels::matmul_par(&pv, &a, &b, n, k, m),
+            &format!("random matmul {n}x{k}x{m}"),
+        );
+    });
+}
+
+#[test]
+fn quantize_rows_degenerate_then_dot_q8_differential() {
+    // The zero/subnormal-amax fix must hold on every tier: no NaN/inf
+    // out of dot_q8/matmul_q8 regardless of dispatch.
+    let (k, m) = (5usize, 4usize);
+    let mut w = vec![0.0f32; k * m];
+    for kk in 0..k {
+        w[kk * m] = 1.0e-41; // subnormal column
+        w[kk * m + 1] = 0.0; // all-zero column
+        w[kk * m + 2] = -0.0; // negative-zero column
+        w[kk * m + 3] = 1.0e30; // large-magnitude column
+    }
+    let (q, scales) = kernels::quantize_rows(&w, k, m);
+    assert!(scales.iter().all(|s| s.is_finite() && *s > 0.0 && s.is_normal()));
+    for tier in tiers() {
+        let a = vec![1.0f32; k];
+        for j in 0..m {
+            let dot = simd::dot_q8(tier, &a, &q[j * k..(j + 1) * k]) * scales[j];
+            assert!(
+                dot.is_finite(),
+                "dot_q8 column {j} produced {dot} on tier {}",
+                tier.name()
+            );
+        }
+    }
+}
