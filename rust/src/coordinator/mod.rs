@@ -41,7 +41,7 @@ pub use serve::ServeEngine;
 pub use server::{
     FinishReason, PrefillMode, RequestRecord, ServeReport, Server, ServerConfig,
 };
-pub use stats::RoutingStats;
+pub use stats::{PositionBuckets, RoutingStats};
 #[cfg(feature = "pjrt")]
 pub use trainer::ArtifactTrainer;
 pub use trainer::{TrainReport, Trainer};

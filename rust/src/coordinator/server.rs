@@ -23,7 +23,15 @@
 //!   and re-enter admission;
 //! * **telemetry** — per-request TTFT and end-to-end latency, engine-step
 //!   and throughput histograms ([`Registry`]), per-layer routing fractions
-//!   ([`RoutingStats`]), all folded into a [`ServeReport`].
+//!   ([`RoutingStats`]) resolved by token-position bucket
+//!   ([`PositionBuckets`]), router-margin histograms, per-request
+//!   routed-token counts, and the backend's measured per-layer FLOPs, all
+//!   folded into a [`ServeReport`]. When span tracing is enabled
+//!   ([`crate::telemetry`], the `--trace` flag), every engine step,
+//!   chunked prefill, and request lifecycle (admission → first token →
+//!   finish, as async spans keyed by request id) lands in the Chrome
+//!   trace; [`Server::set_metrics_log`] additionally streams per-step and
+//!   per-request JSONL rows (`--metrics-jsonl`).
 //!
 //! Determinism: sampling uses one RNG per request, seeded from
 //! `engine seed ^ request id`, so generated token streams are a function
@@ -38,11 +46,13 @@ use anyhow::{ensure, Result};
 use super::batcher::{Batcher, Request};
 use super::kv_cache::{KvPool, PoolStats};
 use super::sampling::{sample, SamplingParams};
-use super::stats::RoutingStats;
+use super::stats::{PositionBuckets, RoutingStats};
 use super::workload::TimedRequest;
-use crate::metrics::Registry;
+use crate::config::LayerKind;
+use crate::metrics::{JsonlWriter, Registry};
 use crate::runtime::backend::PREFILL_CHUNK;
 use crate::runtime::{Backend, DecodeState, WeightBytes};
+use crate::telemetry::{self, ArgValue};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -139,6 +149,10 @@ pub struct RequestRecord {
     pub latency_ms: f64,
     /// Why the request left its slot.
     pub finish: FinishReason,
+    /// Per-layer count of this request's tokens (prompt + generated) that
+    /// took the attention path — the request-granular routing telemetry.
+    /// Empty for requests cancelled before admission.
+    pub routed_tokens: Vec<u64>,
 }
 
 /// Serving run summary.
@@ -191,6 +205,19 @@ pub struct ServeReport {
     pub routing: RoutingStats,
     /// Per-layer fraction of tokens routed to attention (Fig. 5 y-axis).
     pub attn_fracs: Vec<f64>,
+    /// Attention fraction resolved by layer × token-position bucket
+    /// ([`PositionBuckets::to_json`] rows).
+    pub position_buckets: Json,
+    /// Router-margin histogram summary (`|2·g_attn − 1|` over every DTR
+    /// routing decision; near-0 margins mark tokens the router was
+    /// uncertain about). Statistics are `null` when the model has no DTR
+    /// layers.
+    pub router_margin: Json,
+    /// Measured per-layer FLOP counters from
+    /// [`Backend::flop_counters`], when the backend instruments its
+    /// kernels (both CPU backends do). Like `kernel_timings`, cumulative
+    /// over the backend's lifetime, not just this run.
+    pub measured_flops: Option<Json>,
     /// Per-request outcomes, in retirement order.
     pub requests: Vec<RequestRecord>,
     /// Per-kernel wall-clock snapshot from
@@ -218,6 +245,12 @@ impl ServeReport {
                     ("ttft_ms", Json::Num(r.ttft_ms)),
                     ("latency_ms", Json::Num(r.latency_ms)),
                     ("finish", Json::Str(r.finish.as_str().to_string())),
+                    (
+                        "routed_tokens",
+                        Json::Arr(
+                            r.routed_tokens.iter().map(|&c| Json::Num(c as f64)).collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
@@ -258,10 +291,15 @@ impl ServeReport {
             ),
             ("attn_fracs", Json::arr_f64(&self.attn_fracs)),
             ("routing", self.routing.to_json()),
+            ("position_buckets", self.position_buckets.clone()),
+            ("router_margin", self.router_margin.clone()),
             ("requests", Json::Arr(reqs)),
         ]);
         if let Some(kt) = &self.kernel_timings {
             out.set("kernel_timings", kt.clone());
+        }
+        if let Some(mf) = &self.measured_flops {
+            out.set("measured_flops", mf.clone());
         }
         out
     }
@@ -280,6 +318,16 @@ pub struct Server<'b> {
     states: Vec<Option<DecodeState>>,
     rngs: Vec<Rng>,
     routing: RoutingStats,
+    /// Attention fraction by layer × token-position bucket.
+    buckets: PositionBuckets,
+    /// Per-slot per-layer routed-token counts for the request currently
+    /// occupying the slot (taken into its [`RequestRecord`] at finish).
+    slot_routed: Vec<Vec<u64>>,
+    /// `is_dtr[l]`: layer has a router (margins are meaningless on dense
+    /// layers, whose g_attn is pinned to 1.0).
+    is_dtr: Vec<bool>,
+    /// Per-step / per-request telemetry stream (`--metrics-jsonl`).
+    metrics_log: Option<JsonlWriter>,
     registry: Registry,
     records: Vec<RequestRecord>,
     rejected: usize,
@@ -313,6 +361,11 @@ impl<'b> Server<'b> {
         let rngs = (0..cfg.slots).map(|_| Rng::new(cfg.seed)).collect();
         let slots = cfg.slots;
         let max_queue = cfg.max_queue;
+        let is_dtr = mcfg
+            .layer_kinds()
+            .iter()
+            .map(|k| !matches!(k, LayerKind::Dense))
+            .collect();
         Ok(Server {
             backend,
             cfg: ServerConfig {
@@ -326,6 +379,10 @@ impl<'b> Server<'b> {
             states: (0..slots).map(|_| None).collect(),
             rngs,
             routing: RoutingStats::new(mcfg.n_layers),
+            buckets: PositionBuckets::new(mcfg.n_layers),
+            slot_routed: vec![vec![0; mcfg.n_layers]; slots],
+            is_dtr,
+            metrics_log: None,
             registry: Registry::default(),
             records: Vec::new(),
             rejected: 0,
@@ -346,6 +403,15 @@ impl<'b> Server<'b> {
     /// Engine metrics (step/prefill histograms, queue gauges).
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// Stream per-step and per-request telemetry rows into `log` as JSONL
+    /// (the `--metrics-jsonl` flag). Step rows carry `{kind:"step", step,
+    /// batch, decode_ms, kv_pages, queue_depth}`; request rows carry
+    /// `{kind:"request", id, finish, prompt_len, n_tokens, ttft_ms,
+    /// latency_ms, routed_tokens[L]}`.
+    pub fn set_metrics_log(&mut self, log: JsonlWriter) {
+        self.metrics_log = Some(log);
     }
 
     /// Per-layer decode-cache lens of a live slot (None if vacant) — the
@@ -406,12 +472,22 @@ impl<'b> Server<'b> {
             debug_assert!(self.states[slot].is_none());
             debug_assert_eq!(self.pool.lens(slot).iter().sum::<usize>(), 0);
             self.states[slot] = Some(self.backend.begin_decode());
-            let id = self.batcher.active[slot]
-                .as_ref()
-                .expect("admitted slot is active")
-                .req
-                .id;
+            let (id, prompt_len) = {
+                let rs = self.batcher.active[slot]
+                    .as_ref()
+                    .expect("admitted slot is active");
+                (rs.req.id, rs.req.prompt.len())
+            };
             self.rngs[slot] = Rng::new(self.cfg.seed ^ id);
+            self.slot_routed[slot] = vec![0; self.n_layers];
+            telemetry::async_begin(
+                "request",
+                id,
+                vec![
+                    ("prompt_len", ArgValue::from(prompt_len)),
+                    ("slot", ArgValue::from(slot)),
+                ],
+            );
             if let PrefillMode::Chunked(chunk) = self.cfg.prefill {
                 finished += self.prefill_slot(slot, chunk)?;
             }
@@ -449,18 +525,49 @@ impl<'b> Server<'b> {
                 k += 1;
             }
         }
+        let span = telemetry::scoped("engine_step");
         let t0 = Instant::now();
         let outs = self.backend.decode_batch(&mut refs, &toks)?;
         drop(refs);
-        self.registry
-            .histogram("decode_step_ms")
-            .record(t0.elapsed().as_secs_f64() * 1e3);
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        span.end_with_args(vec![
+            ("step", ArgValue::from(self.steps)),
+            ("batch", ArgValue::from(slot_ids.len())),
+            ("kv_pages", ArgValue::from(self.pool.stats().pages_allocated)),
+        ]);
+        self.registry.histogram("decode_step_ms").record(step_ms);
         self.steps_active_sum += slot_ids.len() as u64;
+        if let Some(log) = &self.metrics_log {
+            log.write(&Json::from_pairs(vec![
+                ("kind", Json::Str("step".to_string())),
+                ("step", Json::Num(self.steps as f64)),
+                ("batch", Json::Num(slot_ids.len() as f64)),
+                ("decode_ms", Json::Num(step_ms)),
+                (
+                    "kv_pages",
+                    Json::Num(self.pool.stats().pages_allocated as f64),
+                ),
+                ("queue_depth", Json::Num(self.batcher.queue_len() as f64)),
+            ]));
+        }
 
         let now = Instant::now();
         for (out, &slot) in outs.iter().zip(&slot_ids) {
-            for (l, &r) in out.routed.iter().enumerate() {
+            // Position of the token this step just fed (advance() below
+            // is what increments it).
+            let pos = self.batcher.active[slot]
+                .as_ref()
+                .expect("slot is live")
+                .position;
+            for (l, (&r, &g)) in out.routed.iter().zip(&out.g_attn).enumerate() {
                 self.routing.record_layer(l, r as u64, 1);
+                self.buckets.record(l, pos, r);
+                self.slot_routed[slot][l] += u64::from(r);
+                if self.is_dtr[l] {
+                    self.registry
+                        .histogram("router_margin")
+                        .record(f64::from((2.0 * g - 1.0).abs()));
+                }
             }
             if !self.pool.append(slot, &out.routed) {
                 // Page budget hit — a production engine would preempt and
@@ -484,7 +591,7 @@ impl<'b> Server<'b> {
                 0
             };
             if self.batcher.advance(slot, sampled, now) {
-                self.record_finish(now, FinishReason::Completed);
+                self.record_finish(slot, now, FinishReason::Completed);
                 self.release_slot(slot);
                 finished += 1;
             } else if self.slot_at_cap(slot) {
@@ -557,6 +664,8 @@ impl<'b> Server<'b> {
                 ttft_ms: 0.0,
                 latency_ms: now.duration_since(req.arrival).as_secs_f64() * 1e3,
                 finish: FinishReason::Cancelled,
+                // Never admitted: no tokens ever fed, no routing decisions.
+                routed_tokens: Vec::new(),
             });
         }
     }
@@ -579,14 +688,30 @@ impl<'b> Server<'b> {
             .prompt
             .clone();
         let t0 = Instant::now();
+        let span = telemetry::scoped("prefill");
         let state = self.states[slot].as_mut().expect("admitted slot has state");
-        let out = self.backend.prefill_chunked(state, &prompt, chunk)?;
+        let out = self.backend.prefill_rows(state, &prompt, chunk)?;
         let lens = state.lens(self.d_model);
+        span.end_with_args(vec![
+            ("slot", ArgValue::from(slot)),
+            ("prompt_len", ArgValue::from(prompt.len())),
+        ]);
         self.registry
             .histogram("prefill_ms")
             .record(t0.elapsed().as_secs_f64() * 1e3);
-        for (l, &len) in lens.iter().enumerate() {
-            self.routing.record_layer(l, len as u64, prompt.len() as u64);
+        // Per-row routing telemetry: a freshly admitted slot starts at
+        // position 0, so row index == absolute token position.
+        for (row, (routed, g_row)) in out.routed.iter().zip(&out.g_attn).enumerate() {
+            for (l, (&r, &g)) in routed.iter().zip(g_row).enumerate() {
+                self.routing.record_layer(l, u64::from(r), 1);
+                self.buckets.record(l, row, r);
+                self.slot_routed[slot][l] += u64::from(r);
+                if self.is_dtr[l] {
+                    self.registry
+                        .histogram("router_margin")
+                        .record(f64::from((2.0 * g - 1.0).abs()));
+                }
+            }
         }
         let now = Instant::now();
         if !self.pool.append_prefill(slot, &lens, prompt.len()) {
@@ -595,9 +720,9 @@ impl<'b> Server<'b> {
         }
         self.dense_shadow
             .append_prefill(slot, &vec![prompt.len(); self.n_layers], prompt.len());
-        let sampled = self.sample_slot(slot, out.logits.as_f32());
+        let sampled = self.sample_slot(slot, out.last.logits.as_f32());
         if self.batcher.complete_prefill(slot, sampled, now) {
-            self.record_finish(now, FinishReason::Completed);
+            self.record_finish(slot, now, FinishReason::Completed);
             self.release_slot(slot);
             return Ok(1);
         }
@@ -637,15 +762,22 @@ impl<'b> Server<'b> {
     /// Force-finish a live slot (pool exhaustion / context cap).
     fn evict_slot(&mut self, slot: usize, now: Instant, reason: FinishReason) {
         if let Some(st) = self.batcher.active[slot].take() {
+            telemetry::instant(
+                "evict",
+                vec![
+                    ("slot", ArgValue::from(slot)),
+                    ("reason", ArgValue::from(reason.as_str())),
+                ],
+            );
             self.batcher.completed.push(st);
-            self.record_finish(now, reason);
+            self.record_finish(slot, now, reason);
         }
         self.release_slot(slot);
     }
 
     /// Build the [`RequestRecord`] for the request most recently pushed
-    /// onto `batcher.completed`.
-    fn record_finish(&mut self, now: Instant, reason: FinishReason) {
+    /// onto `batcher.completed` (which vacated `slot`).
+    fn record_finish(&mut self, slot: usize, now: Instant, reason: FinishReason) {
         let st = self
             .batcher
             .completed
@@ -662,6 +794,30 @@ impl<'b> Server<'b> {
         }
         self.registry.histogram("request_latency_ms").record(latency_ms);
         self.registry.counter("requests_finished").inc();
+        let routed_tokens = std::mem::take(&mut self.slot_routed[slot]);
+        telemetry::async_end(
+            "request",
+            st.req.id,
+            vec![
+                ("finish", ArgValue::from(reason.as_str())),
+                ("n_tokens", ArgValue::from(st.generated.len())),
+            ],
+        );
+        if let Some(log) = &self.metrics_log {
+            log.write(&Json::from_pairs(vec![
+                ("kind", Json::Str("request".to_string())),
+                ("id", Json::Num(st.req.id as f64)),
+                ("finish", Json::Str(reason.as_str().to_string())),
+                ("prompt_len", Json::Num(st.req.prompt.len() as f64)),
+                ("n_tokens", Json::Num(st.generated.len() as f64)),
+                ("ttft_ms", ttft.map(Json::Num).unwrap_or(Json::Null)),
+                ("latency_ms", Json::Num(latency_ms)),
+                (
+                    "routed_tokens",
+                    Json::Arr(routed_tokens.iter().map(|&c| Json::Num(c as f64)).collect()),
+                ),
+            ]));
+        }
         self.records.push(RequestRecord {
             id: st.req.id,
             prompt_len: st.req.prompt.len(),
@@ -669,6 +825,7 @@ impl<'b> Server<'b> {
             ttft_ms: ttft.unwrap_or(0.0),
             latency_ms,
             finish: reason,
+            routed_tokens,
         });
     }
 
@@ -719,12 +876,12 @@ impl<'b> Server<'b> {
             } else {
                 0.0
             },
-            decode_step_ms_p50: step_h.p50,
-            decode_step_ms_p99: step_h.p99,
-            ttft_ms_p50: ttft_h.p50,
-            ttft_ms_p99: ttft_h.p99,
-            latency_ms_p50: lat_h.p50,
-            latency_ms_p99: lat_h.p99,
+            decode_step_ms_p50: step_h.p50.unwrap_or(0.0),
+            decode_step_ms_p99: step_h.p99.unwrap_or(0.0),
+            ttft_ms_p50: ttft_h.p50.unwrap_or(0.0),
+            ttft_ms_p99: ttft_h.p99.unwrap_or(0.0),
+            latency_ms_p50: lat_h.p50.unwrap_or(0.0),
+            latency_ms_p99: lat_h.p99.unwrap_or(0.0),
             batch_occupancy: if self.steps > 0 {
                 self.steps_active_sum as f64 / (self.steps * self.cfg.slots) as f64
             } else {
@@ -736,6 +893,9 @@ impl<'b> Server<'b> {
             weight_bytes: self.backend.weight_bytes(),
             routing: self.routing.clone(),
             attn_fracs: self.routing.fractions(),
+            position_buckets: self.buckets.to_json(),
+            router_margin: self.registry.histogram("router_margin").summary().to_json(),
+            measured_flops: self.backend.flop_counters().map(|f| f.to_json()),
             requests: self.records.clone(),
             kernel_timings: self.backend.kernel_timings(),
             simd_tier: crate::util::simd::tier().name().to_string(),
@@ -813,6 +973,77 @@ mod tests {
         assert_eq!(wb.compression(), 1.0);
         let js = rep.to_json();
         assert!(js.path("weight_compression").unwrap().as_f64().unwrap() >= 3.5);
+    }
+
+    #[test]
+    fn report_carries_routing_and_flops_telemetry() {
+        let be = backend();
+        let cfg = ServerConfig {
+            slots: 2,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        be.flop_counters()
+            .expect("cpu backend measures flops")
+            .reset();
+        for i in 0..3 {
+            assert!(srv.submit(req(i, 12, 6)));
+        }
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.completed, 3);
+
+        // Per-request routed counts: one entry per layer; the tokens fed
+        // through the model are the prompt plus all generated tokens but
+        // the last (sampled without a further decode step).
+        for r in &rep.requests {
+            let fed = (r.prompt_len + r.tokens.len() - 1) as u64;
+            assert!(!r.routed_tokens.is_empty(), "routed_tokens missing");
+            for (l, &c) in r.routed_tokens.iter().enumerate() {
+                assert!(c <= fed, "layer {l}: routed {c} > fed {fed}");
+            }
+            // Dense layers (even indices in DtrBilayer) route everything.
+            assert_eq!(r.routed_tokens[0], fed, "dense layer must route all");
+        }
+
+        // Router margins were recorded for DTR layers only; all in [0, 1].
+        let margin_count = rep
+            .router_margin
+            .path("count")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(margin_count > 0.0, "no router margins recorded");
+
+        // Position buckets resolved at least one bucket row.
+        match &rep.position_buckets {
+            Json::Arr(rows) => assert!(!rows.is_empty(), "no position buckets"),
+            other => panic!("position_buckets must be an array, got {other:?}"),
+        }
+
+        // Measured FLOPs: dense layers reconcile *exactly* against the
+        // dense-equivalent tally (same terms, same actual cache lens);
+        // every layer's ratio is positive and the totals are non-zero.
+        let mf = rep.measured_flops.as_ref().expect("cpu backend flops");
+        assert!(mf.path("total").and_then(Json::as_f64).unwrap() > 0.0);
+        let layers = match mf.path("layers") {
+            Some(Json::Arr(l)) => l.clone(),
+            other => panic!("measured_flops.layers must be an array: {other:?}"),
+        };
+        for (l, row) in layers.iter().enumerate() {
+            let ratio = row.path("ratio_vs_dense").and_then(Json::as_f64).unwrap();
+            assert!(ratio > 0.0, "layer {l} ratio {ratio}");
+            if l % 2 == 0 {
+                assert!(
+                    (ratio - 1.0).abs() < 1e-9,
+                    "dense layer {l} must measure exactly dense: {ratio}"
+                );
+            }
+        }
+
+        // And the JSON document carries all three blocks.
+        let js = rep.to_json();
+        assert!(js.path("measured_flops.total").is_some());
+        assert!(js.path("position_buckets").is_some());
+        assert!(js.path("router_margin.count").is_some());
     }
 
     #[test]

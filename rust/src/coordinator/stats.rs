@@ -85,6 +85,88 @@ impl RoutingStats {
     }
 }
 
+/// Token-position bucket boundaries for [`PositionBuckets`]: each entry
+/// is the inclusive upper bound of a bucket starting after the previous
+/// one (`0-7`, `8-15`, `16-31`, `32-63`, `64-127`, `128+`).
+const BUCKET_UPPER: [usize; 5] = [7, 15, 31, 63, 127];
+
+/// Attention-fraction telemetry resolved by layer × token position
+/// bucket — shows *where in the sequence* the router spends attention
+/// (early positions are cheap context; late positions decide whether
+/// the quadratic term actually grows).
+#[derive(Debug, Clone)]
+pub struct PositionBuckets {
+    /// `attended[bucket][layer]` tokens that took the attention path.
+    attended: Vec<Vec<u64>>,
+    /// `total[bucket][layer]` tokens observed.
+    total: Vec<Vec<u64>>,
+}
+
+impl PositionBuckets {
+    /// Zeroed counters for `n_layers` layers.
+    pub fn new(n_layers: usize) -> PositionBuckets {
+        let n_buckets = BUCKET_UPPER.len() + 1;
+        PositionBuckets {
+            attended: vec![vec![0; n_layers]; n_buckets],
+            total: vec![vec![0; n_layers]; n_buckets],
+        }
+    }
+
+    /// Bucket index for an absolute token position.
+    fn bucket(pos: usize) -> usize {
+        BUCKET_UPPER
+            .iter()
+            .position(|&hi| pos <= hi)
+            .unwrap_or(BUCKET_UPPER.len())
+    }
+
+    /// Human-readable bucket labels, in index order.
+    pub fn labels() -> Vec<String> {
+        let mut lo = 0usize;
+        let mut out = Vec::with_capacity(BUCKET_UPPER.len() + 1);
+        for &hi in &BUCKET_UPPER {
+            out.push(format!("{lo}-{hi}"));
+            lo = hi + 1;
+        }
+        out.push(format!("{lo}+"));
+        out
+    }
+
+    /// Record one routing decision for the token at absolute `pos`.
+    pub fn record(&mut self, layer: usize, pos: usize, routed: bool) {
+        let b = Self::bucket(pos);
+        self.attended[b][layer] += u64::from(routed);
+        self.total[b][layer] += 1;
+    }
+
+    /// Per-bucket rows: `{bucket, fractions[L], total}` (fraction is 0.0
+    /// for layers with no tokens observed in that bucket). Buckets with
+    /// no observations at all are omitted.
+    pub fn to_json(&self) -> Json {
+        let labels = Self::labels();
+        let rows = labels
+            .iter()
+            .enumerate()
+            .filter(|&(b, _)| self.total[b].iter().any(|&t| t > 0))
+            .map(|(b, label)| {
+                let fr: Vec<f64> = self.attended[b]
+                    .iter()
+                    .zip(&self.total[b])
+                    .map(|(&a, &t)| if t == 0 { 0.0 } else { a as f64 / t as f64 })
+                    .collect();
+                let tokens: u64 = self.total[b].iter().sum::<u64>()
+                    / (self.total[b].len().max(1) as u64);
+                Json::from_pairs(vec![
+                    ("bucket", Json::Str(label.clone())),
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("fractions", Json::arr_f64(&fr)),
+                ])
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +181,37 @@ mod tests {
         assert_eq!(f[0], 1.0);
         assert_eq!(f[1], 0.25);
         assert_eq!(s.mean_fraction(&[1]), 0.25);
+    }
+
+    #[test]
+    fn position_buckets_resolve_and_label() {
+        let mut pb = PositionBuckets::new(2);
+        // position 0 (bucket 0-7): layer0 routed, layer1 not.
+        pb.record(0, 0, true);
+        pb.record(1, 0, false);
+        // position 200 (bucket 128+): both routed.
+        pb.record(0, 200, true);
+        pb.record(1, 200, true);
+        let j = pb.to_json();
+        let rows = match &j {
+            Json::Arr(r) => r,
+            _ => panic!("expected array"),
+        };
+        // Only the two touched buckets appear.
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].path("bucket").and_then(|b| b.as_str().map(String::from)),
+            Some("0-7".to_string())
+        );
+        assert_eq!(
+            rows[1].path("bucket").and_then(|b| b.as_str().map(String::from)),
+            Some("128+".to_string())
+        );
+        assert_eq!(PositionBuckets::labels().len(), 6);
+        assert_eq!(PositionBuckets::bucket(7), 0);
+        assert_eq!(PositionBuckets::bucket(8), 1);
+        assert_eq!(PositionBuckets::bucket(127), 4);
+        assert_eq!(PositionBuckets::bucket(128), 5);
     }
 
     #[test]

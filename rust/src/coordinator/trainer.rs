@@ -108,7 +108,14 @@ impl<'a> Trainer<'a> {
         for s in 1..=cfg.steps {
             let tokens = data.sample_batch(&mut rng, batch);
             let lr = cfg.lr_at(s);
+            // Trace one span per optimizer step; the backend's named
+            // kernel timers nest the fwd/bwd/optimizer phases inside it.
+            let span = crate::telemetry::scoped("train_step");
             let m = self.backend.train_step(&tokens, s, lr, cfg.seed)?;
+            span.end_with_args(vec![
+                ("step", crate::telemetry::ArgValue::from(s)),
+                ("loss", crate::telemetry::ArgValue::from(m.loss)),
+            ]);
             losses.push(m.loss);
             ces.push(m.ce);
             pens.push(m.penalty);

@@ -44,6 +44,10 @@
 //! - [`perf`] — the reproducible perf harness behind `dtrnet bench`:
 //!   fixed-seed scenarios swept across thread counts into
 //!   `BENCH_*.json` (DESIGN.md §Benchmarking).
+//! - [`telemetry`] — observability: span tracing into per-thread ring
+//!   buffers exported as Chrome trace-event JSON (`--trace`), and
+//!   measured per-layer FLOP accounting reconciled against the
+//!   [`model`] analytic predictions (DESIGN.md §Observability).
 //! - [`testing`] — in-repo property-testing harness (proptest is
 //!   unavailable offline; see DESIGN.md §Substitutions).
 
@@ -73,6 +77,7 @@ pub mod metrics;
 pub mod model;
 pub mod perf;
 pub mod runtime;
+pub mod telemetry;
 pub mod testing;
 pub mod tokenizer;
 pub mod util;

@@ -17,7 +17,7 @@
 //!                                    CPU backend: synthetic workload,
 //!                                    throughput/latency/KV-page report
 //!                                    (see DESIGN.md §Serving for flags)
-//!   bench   [--test] [--out BENCH_pr5.json] — reproducible perf harness:
+//!   bench   [--test] [--out BENCH_pr7.json] — reproducible perf harness:
 //!                                    fixed-seed forward/decode/serve/
 //!                                    train/quant scenarios swept across
 //!                                    thread counts (DESIGN.md
@@ -46,6 +46,14 @@
 //!                 bench harness: routing decisions must match f32
 //!                 wherever the router is decisive, eval perplexity
 //!                 within 0.5%.
+//!   --trace out.trace.json — on train/serve: record telemetry spans for
+//!                 the run and export Chrome trace-event JSON (load in
+//!                 Perfetto or chrome://tracing; DESIGN.md
+//!                 §Observability). Off by default: disabled tracing
+//!                 costs one relaxed atomic load per span site.
+//!   --metrics-jsonl m.jsonl — on serve: stream per-step and per-request
+//!                 metric rows as JSONL while the run progresses (train
+//!                 accepts it as an alias of --log, its per-step stream)
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer — train the fused AOT train_step
@@ -138,7 +146,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
     // is the artifact CI promotes into the next baseline).
     let baseline = args.get_or("baseline", "BENCH_baseline.json");
     dtrnet::perf::print_baseline_deltas(&doc, std::path::Path::new(baseline));
-    let out = args.get_or("out", "BENCH_pr6.json");
+    let out = args.get_or("out", "BENCH_pr7.json");
     dtrnet::perf::write(std::path::Path::new(out), &doc)?;
     Ok(())
 }
@@ -192,6 +200,30 @@ fn make_dataset(args: &Args, seq: usize) -> Dataset {
             Dataset::new(corpus::markov_corpus(&mut rng, 256, 600 * seq, 12), seq)
         }
     }
+}
+
+/// `--trace out.trace.json` handling: turn span recording on for the run
+/// and return the export path (None = tracing stays off, its disabled
+/// cost being one relaxed atomic load per span site).
+fn start_trace(args: &Args) -> Option<std::path::PathBuf> {
+    let path = args.get("trace").map(std::path::PathBuf::from);
+    if path.is_some() {
+        dtrnet::telemetry::set_enabled(true);
+    }
+    path
+}
+
+/// Export the recorded spans as Chrome trace-event JSON and disable
+/// tracing again.
+fn finish_trace(path: &std::path::Path) -> Result<()> {
+    dtrnet::telemetry::set_enabled(false);
+    println!(
+        "[trace] wrote {} events to {} ({} dropped to ring wraparound) — load in Perfetto",
+        dtrnet::telemetry::snapshot_events().len(),
+        path.display(),
+        dtrnet::telemetry::dropped_events(),
+    );
+    dtrnet::telemetry::write_chrome_trace(path)
 }
 
 /// Shared `--quant` parsing: `int8` opts into the quantized path,
@@ -328,10 +360,13 @@ fn train(args: &Args) -> Result<()> {
     // (Dataset requires strictly more than one window's tokens).
     let (train_data, eval_data) = data.split((2.5 / n_windows as f64).max(0.1));
     let label = format!("{}_{}", cfg.name, variant.as_str());
-    let log = match args.get("log") {
+    // --metrics-jsonl is an alias of --log here: train's per-step JSONL
+    // stream predates the flag and carries the same rows.
+    let log = match args.get("log").or_else(|| args.get("metrics-jsonl")) {
         Some(p) => Some(JsonlWriter::create(std::path::Path::new(p))?),
         None => None,
     };
+    let trace_path = start_trace(args);
     let report = {
         let mut trainer = Trainer::new(&mut backend, &label);
         let report = trainer.run(&tcfg, &train_data, log.as_ref())?;
@@ -340,6 +375,9 @@ fn train(args: &Args) -> Result<()> {
         }
         report
     };
+    if let Some(p) = &trace_path {
+        finish_trace(p)?;
+    }
     println!(
         "[done] {} final_loss={:.4} tokens/s={:.0} attn_frac {:?} (step-1 {:?})",
         report.tag, report.final_loss, report.tokens_per_s, report.attn_frac,
@@ -579,7 +617,14 @@ fn serve(args: &Args) -> Result<()> {
         dtrnet::util::simd::precision().name(),
     );
     let mut srv = Server::new(backend.as_ref(), scfg)?;
+    if let Some(p) = args.get("metrics-jsonl") {
+        srv.set_metrics_log(JsonlWriter::create(std::path::Path::new(p))?);
+    }
+    let trace_path = start_trace(args);
     let report = srv.run_workload(&trace, args.get_usize("max-steps", 1_000_000))?;
+    if let Some(p) = &trace_path {
+        finish_trace(p)?;
+    }
 
     println!(
         "requests: {} completed, {} evicted, {} rejected ({} steps, occupancy {:.2})",
@@ -641,6 +686,34 @@ fn serve(args: &Args) -> Result<()> {
             ms("norm"),
             ms("unembed"),
         );
+    }
+    if let Some(mf) = &report.measured_flops {
+        let f = |k: &str| mf.path(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let ratios: Vec<String> = match mf.path("layers") {
+            Some(dtrnet::util::json::Json::Arr(rows)) => rows
+                .iter()
+                .map(|r| {
+                    format!(
+                        "{:.3}",
+                        r.path("ratio_vs_dense").and_then(|v| v.as_f64()).unwrap_or(1.0)
+                    )
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        println!(
+            "measured flops: {:.1}M executed vs {:.1}M dense-equivalent \
+             ({:.3}x); per layer [{}]: {}",
+            f("total") / 1e6,
+            f("dense_equiv_total") / 1e6,
+            f("ratio_vs_dense"),
+            cfg.layout_string(),
+            ratios.join(" "),
+        );
+    }
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, report.to_json().to_string() + "\n")?;
+        println!("[json] wrote {p}");
     }
     if args.has("json") {
         println!("{}", report.to_json().to_string_pretty());

@@ -58,21 +58,51 @@ impl Gauge {
 /// atomics so `&self` hot paths (the CPU backend's kernel sections) can
 /// record from any thread with two `Instant` reads and two relaxed adds
 /// per section — cheap enough to stay on permanently.
-#[derive(Debug, Default)]
+///
+/// A [`named`](Timer::named) timer additionally emits a
+/// [`telemetry`](crate::telemetry) duration span per invocation while
+/// tracing is enabled (one relaxed load per call when it is not), which
+/// is how the serve and train loops' kernel-section boundaries appear
+/// in `--trace` output with no extra call sites.
+#[derive(Debug)]
 pub struct Timer {
     ns: AtomicU64,
     calls: AtomicU64,
+    name: &'static str,
+}
+
+impl Default for Timer {
+    fn default() -> Timer {
+        Timer::named("")
+    }
 }
 
 impl Timer {
+    /// An anonymous or named timer. A non-empty name makes every timed
+    /// invocation a `--trace` span of that name.
+    pub const fn named(name: &'static str) -> Timer {
+        Timer {
+            ns: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+            name,
+        }
+    }
+
     /// Time one invocation of `f`, folding its duration into the total.
     #[inline]
     pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let traced = !self.name.is_empty() && crate::telemetry::enabled();
+        if traced {
+            crate::telemetry::begin(self.name);
+        }
         let t0 = Instant::now();
         let r = f();
         self.ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.calls.fetch_add(1, Ordering::Relaxed);
+        if traced {
+            crate::telemetry::end(self.name);
+        }
         r
     }
 
@@ -111,7 +141,9 @@ impl Timer {
 /// [`Timer`] per hot section of the transformer block. The CPU backend
 /// owns one and wraps each kernel family; `Backend::kernel_timings`
 /// exposes the snapshot to the serve report and the bench harness.
-#[derive(Debug, Default)]
+/// Every section timer is [named](Timer::named), so with tracing
+/// enabled the same wrap points double as `--trace` spans.
+#[derive(Debug)]
 pub struct KernelTimers {
     /// RMSNorm (pre-attention, pre-MLP).
     pub norm: Timer,
@@ -139,6 +171,25 @@ pub struct KernelTimers {
     pub bwd_unembed: Timer,
     /// AdamW moment/parameter update (incl. global-norm clip).
     pub optimizer: Timer,
+}
+
+impl Default for KernelTimers {
+    fn default() -> KernelTimers {
+        KernelTimers {
+            norm: Timer::named("norm"),
+            router: Timer::named("router"),
+            attention: Timer::named("attention"),
+            bypass: Timer::named("bypass"),
+            mlp: Timer::named("mlp"),
+            unembed: Timer::named("unembed"),
+            bwd_norm: Timer::named("bwd_norm"),
+            bwd_router: Timer::named("bwd_router"),
+            bwd_attention: Timer::named("bwd_attention"),
+            bwd_mlp: Timer::named("bwd_mlp"),
+            bwd_unembed: Timer::named("bwd_unembed"),
+            optimizer: Timer::named("optimizer"),
+        }
+    }
 }
 
 impl KernelTimers {
@@ -207,43 +258,59 @@ impl Histogram {
         s.push(v);
     }
 
-    /// Count/mean/percentile summary of the recorded samples.
+    /// Count/mean/percentile summary of the recorded samples. An empty
+    /// histogram yields `count == 0` with every statistic `None` — an
+    /// explicit "no data" marker instead of fabricated zeros.
     pub fn summary(&self) -> HistSummary {
         let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return HistSummary {
+                count: 0,
+                mean: None,
+                p50: None,
+                p95: None,
+                p99: None,
+            };
+        }
         HistSummary {
             count: s.len(),
-            mean: stats::mean(&s),
-            p50: stats::percentile(&s, 50.0),
-            p95: stats::percentile(&s, 95.0),
-            p99: stats::percentile(&s, 99.0),
+            mean: Some(stats::mean(&s)),
+            p50: Some(stats::percentile(&s, 50.0)),
+            p95: Some(stats::percentile(&s, 95.0)),
+            p99: Some(stats::percentile(&s, 99.0)),
         }
     }
 }
 
 #[derive(Debug, Clone, Default)]
-/// Summary statistics of a [`Histogram`].
+/// Summary statistics of a [`Histogram`]. Every statistic is `None`
+/// when no samples were recorded (`count == 0`) — consumers that need
+/// a plain number use `.unwrap_or(0.0)` explicitly rather than being
+/// handed a silent garbage percentile.
 pub struct HistSummary {
     /// Samples recorded.
     pub count: usize,
-    /// Arithmetic mean.
-    pub mean: f64,
-    /// Median.
-    pub p50: f64,
-    /// 95th percentile.
-    pub p95: f64,
-    /// 99th percentile.
-    pub p99: f64,
+    /// Arithmetic mean (`None` when empty).
+    pub mean: Option<f64>,
+    /// Median (`None` when empty).
+    pub p50: Option<f64>,
+    /// 95th percentile (`None` when empty).
+    pub p95: Option<f64>,
+    /// 99th percentile (`None` when empty).
+    pub p99: Option<f64>,
 }
 
 impl HistSummary {
-    /// Serialize as a flat JSON object.
+    /// Serialize as a flat JSON object. Missing statistics (empty
+    /// histogram) serialize as JSON `null`, never as fake numbers.
     pub fn to_json(&self) -> Json {
+        let num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
         Json::from_pairs(vec![
             ("count", Json::Num(self.count as f64)),
-            ("mean", Json::Num(self.mean)),
-            ("p50", Json::Num(self.p50)),
-            ("p95", Json::Num(self.p95)),
-            ("p99", Json::Num(self.p99)),
+            ("mean", num(self.mean)),
+            ("p50", num(self.p50)),
+            ("p95", num(self.p95)),
+            ("p99", num(self.p99)),
         ])
     }
 }
@@ -343,9 +410,31 @@ mod tests {
         }
         let s = h.summary();
         assert_eq!(s.count, 100);
-        assert!((s.p50 - 50.5).abs() < 1.0);
+        assert!((s.p50.unwrap() - 50.5).abs() < 1.0);
         let snap = reg.snapshot();
         assert_eq!(snap.path("reqs").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn empty_histogram_summary_is_explicitly_empty() {
+        let h = Histogram::default();
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert!(s.mean.is_none() && s.p50.is_none() && s.p95.is_none() && s.p99.is_none());
+        // to_json must be safe for the empty summary: count 0, stats null.
+        let j = s.to_json();
+        assert_eq!(j.path("count").and_then(Json::as_f64), Some(0.0));
+        assert!(matches!(j.path("p50"), Some(Json::Null)));
+        assert!(matches!(j.path("mean"), Some(Json::Null)));
+        // round-trips through the parser without NaN/garbage
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert!(matches!(re.path("p99"), Some(Json::Null)));
+        // one sample flips everything to Some
+        h.record(2.5);
+        let s1 = h.summary();
+        assert_eq!(s1.count, 1);
+        assert_eq!(s1.p50, Some(2.5));
+        assert_eq!(s1.mean, Some(2.5));
     }
 
     #[test]

@@ -75,6 +75,21 @@ pub fn flops_per_layer(cfg: &ModelConfig, i: usize, n: usize, f: f64) -> FlopsBr
     }
 }
 
+/// Dense-equivalent FLOPs for a single token at absolute context length
+/// `ctx_len` (the token's position + 1): QKVO projections + attention
+/// mix over exactly `ctx_len` cached tokens + MLP. This is the per-row
+/// exact form of the dense branch of [`flops_per_layer`] — summing it
+/// over rows `p = 0..n` reproduces the averaged analytic value times `n`
+/// (Σ(p+1) = n(n+1)/2). The measured-FLOPs path
+/// ([`crate::telemetry::FlopCounters`]) accumulates this per processed
+/// row as the `dense_equiv` denominator of its per-layer
+/// FLOPs-vs-dense ratio.
+pub fn dense_flops_per_token(cfg: &ModelConfig, ctx_len: usize) -> f64 {
+    let d = cfg.d_model as f64;
+    let ff = cfg.d_ff as f64;
+    8.0 * d * d + 4.0 * d * ctx_len as f64 + 6.0 * d * ff
+}
+
 /// Total forward FLOPs per token at sequence length `n`, including the
 /// embedding/unembedding matmul. `fracs`: per-layer attention fraction
 /// override (None → analytic defaults from the config).

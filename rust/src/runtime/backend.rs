@@ -83,6 +83,18 @@ pub struct StepOutput {
     pub g_attn: Vec<f32>,
 }
 
+/// Outcome of [`Backend::prefill_rows`]: the last step's output plus the
+/// per-row routing telemetry that plain prefill discards.
+#[derive(Debug, Clone)]
+pub struct PrefillRows {
+    /// The final step's output (logits predict the token after the prompt).
+    pub last: StepOutput,
+    /// `routed[row][layer]`: did prompt token `row` take the attention path?
+    pub routed: Vec<Vec<bool>>,
+    /// `g_attn[row][layer]`: soft attention-path score per prompt token.
+    pub g_attn: Vec<Vec<f32>>,
+}
+
 /// Outcome of [`Backend::generate`].
 #[derive(Debug, Clone)]
 pub struct GenerateOutput {
@@ -134,6 +146,16 @@ pub trait Backend {
     /// it into [`crate::coordinator::ServeReport`] and the `bench`
     /// harness writes it into `BENCH_*.json`. Default: `None`.
     fn kernel_timings(&self) -> Option<Json> {
+        None
+    }
+
+    /// Measured FLOP counters ([`crate::telemetry::FlopCounters`]), if
+    /// this backend instruments its kernels. Counters accumulate across
+    /// calls; callers reset them between measurement windows. The serving
+    /// engine folds per-layer measured-vs-dense ratios into
+    /// [`crate::coordinator::ServeReport`]; tests reconcile them against
+    /// the [`crate::model::flops`] analytic model. Default: `None`.
+    fn flop_counters(&self) -> Option<&crate::telemetry::FlopCounters> {
         None
     }
 
@@ -207,6 +229,37 @@ pub trait Backend {
             last = Some(self.decode_step(state, t)?);
         }
         Ok(last.unwrap())
+    }
+
+    /// Prefill like [`Backend::prefill_chunked`] but additionally return
+    /// every prompt row's routing decision and soft score — the per-token
+    /// telemetry that plain prefill discards (it only reports the last
+    /// step). Same bit-identity contract: state/logits must equal the
+    /// sequential decode loop. The default implementation *is* that loop;
+    /// backends with batched prefill kernels override it to keep chunked
+    /// execution while collecting per-row telemetry.
+    fn prefill_rows(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<PrefillRows> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let _ = chunk;
+        let mut routed = Vec::with_capacity(tokens.len());
+        let mut g_attn = Vec::with_capacity(tokens.len());
+        let mut last = None;
+        for &t in tokens {
+            let step = self.decode_step(state, t)?;
+            routed.push(step.routed.clone());
+            g_attn.push(step.g_attn.clone());
+            last = Some(step);
+        }
+        Ok(PrefillRows {
+            last: last.unwrap(),
+            routed,
+            g_attn,
+        })
     }
 
     /// Prefill a prompt; returns the last step's output (logits predict

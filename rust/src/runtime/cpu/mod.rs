@@ -38,7 +38,9 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::{self, Pool};
 
-use super::backend::{Backend, DecodeState, ForwardOutput, StepOutput};
+use crate::telemetry::FlopCounters;
+
+use super::backend::{Backend, DecodeState, ForwardOutput, PrefillRows, StepOutput};
 use super::checkpoint::Checkpoint;
 use super::tensor::Tensor;
 
@@ -284,6 +286,10 @@ pub struct CpuBackend {
     /// Per-kernel wall-clock accounting, always on (two clock reads per
     /// section per step — negligible next to the matmuls it brackets).
     timers: KernelTimers,
+    /// Measured per-layer FLOP accounting, always on (a handful of
+    /// relaxed atomic adds per layer per call — negligible next to the
+    /// matmuls they count). Reconciled against `model/flops.rs` in tests.
+    flops: FlopCounters,
 }
 
 /// Which rows of a [`CpuBackend::step_rows`] call need logits. Only the
@@ -377,6 +383,40 @@ pub(crate) fn attend_rows(
     ctx
 }
 
+/// Total causal context (keys visited, including each row's own K/V)
+/// that [`attend_rows`] will see for these rows at layer `li`: per row,
+/// the cache's current length plus earlier chunk rows sharing its cache
+/// plus one. Must be computed **before** `attend_rows` appends. Feeds
+/// the measured `attn_mix` FLOP count (shared with `runtime::quant`).
+pub(crate) fn attend_context_rows(
+    states: &[&mut DecodeState],
+    rows_cache: &[usize],
+    li: usize,
+    d: usize,
+) -> u64 {
+    let mut total = 0u64;
+    for (r, &c) in rows_cache.iter().enumerate() {
+        let cached = states[c].keys[li].len() / d;
+        let pending = rows_cache[..r].iter().filter(|&&p| p == c).count();
+        total += (cached + pending + 1) as u64;
+    }
+    total
+}
+
+/// Dense-equivalent FLOPs for rows fed at `positions` — what a dense
+/// layer would have spent on the same rows: QKVO + attention over the
+/// full causal context (position+1 keys) + MLP. The per-layer
+/// denominator of the measured FLOPs-vs-dense ratio (the exact per-row
+/// form of `model::flops::dense_flops_per_token`; shared with
+/// `runtime::quant`).
+pub(crate) fn dense_equiv_flops(positions: &[f32], d: usize, ff: usize) -> u64 {
+    let (d, ff) = (d as u64, ff as u64);
+    positions
+        .iter()
+        .map(|&p| 8 * d * d + 4 * d * (p as u64 + 1) + 6 * d * ff)
+        .sum()
+}
+
 /// Validate a (config, weights) pair for native execution: supported
 /// variant, valid config, and every tensor at its init_params shape.
 /// Shared by [`CpuBackend::new`] and the quantized backend
@@ -431,12 +471,14 @@ impl CpuBackend {
     /// Build from explicit weights, validating variant support and shapes.
     pub fn new(cfg: ModelConfig, weights: ModelWeights, mode: RouterMode) -> Result<CpuBackend> {
         validate_weights(&cfg, &weights)?;
+        let n_layers = cfg.n_layers;
         Ok(CpuBackend {
             cfg,
             weights,
             router_mode: mode,
             pool: threadpool::global().clone(),
             timers: KernelTimers::default(),
+            flops: FlopCounters::new(n_layers),
         })
     }
 
@@ -623,9 +665,12 @@ impl CpuBackend {
         }
 
         let pool = &self.pool;
+        let (du, ffu) = (d as u64, ff as u64);
+        let dense_eq = dense_equiv_flops(positions, d, ff);
         let mut routed = vec![Vec::with_capacity(cfg.n_layers); n];
         let mut g_attn = vec![Vec::with_capacity(cfg.n_layers); n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.flops.add_dense_equiv(li, dense_eq);
             let u = self
                 .timers
                 .norm
@@ -633,6 +678,11 @@ impl CpuBackend {
             let mut mixed = vec![0.0f32; n * d];
             match lw.kind {
                 LayerKind::Dense => {
+                    self.flops.add_qkvo(li, n as u64 * 8 * du * du);
+                    self.flops.add_attn_mix(
+                        li,
+                        4 * du * attend_context_rows(states, cache_of, li, d),
+                    );
                     mixed = self.timers.attention.time(|| {
                         let (q, kk, vv) = kernels::qkv_rope_par(
                             pool, &u, &lw.wq, &lw.wk, &lw.wv, positions, n, d, heads,
@@ -648,6 +698,7 @@ impl CpuBackend {
                     }
                 }
                 LayerKind::Dtr => {
+                    self.flops.add_router(li, n as u64 * (du * du + 2 * du));
                     let g = self
                         .timers
                         .router
@@ -658,6 +709,13 @@ impl CpuBackend {
                     let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
                     let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
                     if !att_idx.is_empty() {
+                        let rows_cache: Vec<usize> =
+                            att_idx.iter().map(|&i| cache_of[i]).collect();
+                        self.flops.add_qkvo(li, att_idx.len() as u64 * 8 * du * du);
+                        self.flops.add_attn_mix(
+                            li,
+                            4 * du * attend_context_rows(states, &rows_cache, li, d),
+                        );
                         self.timers.attention.time(|| {
                             let u_r = kernels::gather_rows(&u, &att_idx, d);
                             let pos_r: Vec<f32> =
@@ -666,8 +724,6 @@ impl CpuBackend {
                                 pool, &u_r, &lw.wq, &lw.wk, &lw.wv, &pos_r, att_idx.len(), d,
                                 heads, ROPE_THETA,
                             );
-                            let rows_cache: Vec<usize> =
-                                att_idx.iter().map(|&i| cache_of[i]).collect();
                             let ctx = attend_rows(
                                 pool, &q, &kk, &vv, states, &rows_cache, li, d, heads, hd,
                             );
@@ -678,6 +734,7 @@ impl CpuBackend {
                         });
                     }
                     if !byp_idx.is_empty() {
+                        self.flops.add_bypass(li, byp_idx.len() as u64 * 4 * du * du);
                         self.timers.bypass.time(|| {
                             let u_b = kernels::gather_rows(&u, &byp_idx, d);
                             let byp =
@@ -700,6 +757,7 @@ impl CpuBackend {
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            self.flops.add_mlp(li, n as u64 * 6 * du * ffu);
             let mlp = self.timers.mlp.time(|| {
                 kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff)
             });
@@ -708,6 +766,13 @@ impl CpuBackend {
             }
         }
 
+        let logit_rows = match logits {
+            LogitsRows::None => 0,
+            LogitsRows::Last => 1,
+            LogitsRows::All => n,
+        };
+        self.flops
+            .add_unembed(logit_rows as u64 * 2 * du * vocab as u64);
         let logits = self.timers.unembed.time(|| match logits {
             LogitsRows::None => Vec::new(),
             LogitsRows::Last => {
@@ -755,15 +820,22 @@ impl CpuBackend {
         }
 
         let pool = &self.pool;
+        let (du, ffu) = (d as u64, ff as u64);
+        let dense_eq = dense_equiv_flops(&positions, d, ff);
         let mut route = vec![0.0f32; n_layers * n];
         let mut g_attn = vec![0.0f32; n_layers * n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.flops.add_dense_equiv(li, dense_eq);
             let u = self
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let (mixed, delta, g0): (Vec<f32>, Vec<f32>, Vec<f32>) = match lw.kind {
                 LayerKind::Dense => {
+                    self.flops.add_qkvo(li, n as u64 * 8 * du * du);
+                    // Causal context: row p attends over p+1 keys.
+                    self.flops
+                        .add_attn_mix(li, 4 * du * (n as u64 * (n as u64 + 1) / 2));
                     let attn = self.timers.attention.time(|| {
                         let (q, kk, vv) = kernels::qkv_rope_par(
                             pool, &u, &lw.wq, &lw.wk, &lw.wv, &positions, n, d, heads,
@@ -775,11 +847,25 @@ impl CpuBackend {
                     (attn, vec![1.0; n], vec![1.0; n])
                 }
                 LayerKind::Dtr => {
+                    self.flops.add_router(li, n as u64 * (du * du + 2 * du));
                     let g = self
                         .timers
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
                     let delta = self.decide(&g, n);
+                    // Routed rows pay QKVO + attention over the routed
+                    // prefix (only routed tokens hold KV); the rest the
+                    // bypass. Mirrors what dtr_token_mix_par executes.
+                    let (mut att, mut ctx_total) = (0u64, 0u64);
+                    for &dv in &delta {
+                        if dv > 0.5 {
+                            att += 1;
+                            ctx_total += att;
+                        }
+                    }
+                    self.flops.add_qkvo(li, att * 8 * du * du);
+                    self.flops.add_attn_mix(li, 4 * du * ctx_total);
+                    self.flops.add_bypass(li, (n as u64 - att) * 4 * du * du);
                     // shared with the golden-tested oracle mirror
                     // (kernels::dtr_token_update) — one implementation
                     let mixed = self.timers.attention.time(|| {
@@ -800,6 +886,7 @@ impl CpuBackend {
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            self.flops.add_mlp(li, n as u64 * 6 * du * ffu);
             let mlp = self.timers.mlp.time(|| {
                 kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, n, d, ff)
             });
@@ -810,6 +897,7 @@ impl CpuBackend {
             g_attn[li * n..(li + 1) * n].copy_from_slice(&g0);
         }
 
+        self.flops.add_unembed(n as u64 * 2 * du * vocab as u64);
         let logits = self.timers.unembed.time(|| {
             let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
             kernels::matmul_par(pool, &xn, &self.weights.unembed, n, d, vocab)
@@ -829,6 +917,10 @@ impl Backend for CpuBackend {
 
     fn kernel_timings(&self) -> Option<Json> {
         Some(self.timers.snapshot_with_ctx(self.pool.kernel_ctx()))
+    }
+
+    fn flop_counters(&self) -> Option<&FlopCounters> {
+        Some(&self.flops)
     }
 
     fn forward(&self, tokens: &Tensor) -> Result<ForwardOutput> {
@@ -888,16 +980,22 @@ impl Backend for CpuBackend {
 
         let pool = &self.pool;
         let t = token as usize;
+        let (du, ffu) = (d as u64, ff as u64);
+        let dense_eq = dense_equiv_flops(&pos, d, ff);
         let mut x = self.weights.tok_embed[t * d..(t + 1) * d].to_vec();
         let mut routed = Vec::with_capacity(cfg.n_layers);
         let mut g_attn = Vec::with_capacity(cfg.n_layers);
         for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.flops.add_dense_equiv(li, dense_eq);
             let u = self
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let (mixed, is_routed, gl): (Vec<f32>, bool, f32) = match lw.kind {
                 LayerKind::Dense => {
+                    let ctx_len = state.keys[li].len() as u64 / du + 1;
+                    self.flops.add_qkvo(li, 8 * du * du);
+                    self.flops.add_attn_mix(li, 4 * du * ctx_len);
                     let attn = self.timers.attention.time(|| {
                         let (q, kk, vv) = kernels::qkv_rope_par(
                             pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
@@ -919,12 +1017,16 @@ impl Backend for CpuBackend {
                     (attn, true, 1.0)
                 }
                 LayerKind::Dtr => {
+                    self.flops.add_router(li, du * du + 2 * du);
                     let g = self
                         .timers
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, 1, d, d / 2));
                     let go = cfg.variant != Variant::DtrSkip && g[0] > g[1];
                     if go {
+                        let ctx_len = state.keys[li].len() as u64 / du + 1;
+                        self.flops.add_qkvo(li, 8 * du * du);
+                        self.flops.add_attn_mix(li, 4 * du * ctx_len);
                         let attn = self.timers.attention.time(|| {
                             let (q, kk, vv) = kernels::qkv_rope_par(
                                 pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
@@ -945,6 +1047,7 @@ impl Backend for CpuBackend {
                         });
                         (attn.iter().map(|&a| g[0] * a).collect(), true, g[0])
                     } else {
+                        self.flops.add_bypass(li, 4 * du * du);
                         let byp = self
                             .timers
                             .bypass
@@ -961,6 +1064,7 @@ impl Backend for CpuBackend {
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            self.flops.add_mlp(li, 6 * du * ffu);
             let mlp = self.timers.mlp.time(|| {
                 kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, 1, d, ff)
             });
@@ -971,6 +1075,7 @@ impl Backend for CpuBackend {
             g_attn.push(gl);
         }
 
+        self.flops.add_unembed(2 * du * vocab as u64);
         let logits = self.timers.unembed.time(|| {
             let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
             kernels::matmul_par(pool, &xn, &self.weights.unembed, 1, d, vocab)
@@ -1072,6 +1177,58 @@ impl Backend for CpuBackend {
             logits: Tensor::f32(vec![vocab], logits),
             routed: routed.pop().unwrap(),
             g_attn: g_attn.pop().unwrap(),
+        })
+    }
+
+    /// Chunked prefill (same execution as [`Backend::prefill_chunked`],
+    /// bit-identical caches/logits) that keeps every chunk's per-row
+    /// routing telemetry instead of discarding all but the last row's.
+    fn prefill_rows(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<PrefillRows> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; prefill supports token-choice only"
+        );
+        let chunk = chunk.max(1);
+        let n_chunks = tokens.len().div_ceil(chunk);
+        let mut routed = Vec::with_capacity(tokens.len());
+        let mut g_attn = Vec::with_capacity(tokens.len());
+        let mut logits = Vec::new();
+        for (ci, ck) in tokens.chunks(chunk).enumerate() {
+            let positions: Vec<f32> =
+                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
+            let cache_of = vec![0usize; ck.len()];
+            let mut slab = [&mut *state];
+            let mode = if ci + 1 == n_chunks {
+                LogitsRows::Last
+            } else {
+                LogitsRows::None
+            };
+            let out = self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?;
+            routed.extend(out.routed);
+            g_attn.extend(out.g_attn);
+            logits = out.logits;
+        }
+        Ok(PrefillRows {
+            last: StepOutput {
+                logits: Tensor::f32(vec![vocab], logits),
+                routed: routed.last().unwrap().clone(),
+                g_attn: g_attn.last().unwrap().clone(),
+            },
+            routed,
+            g_attn,
         })
     }
 }

@@ -33,7 +33,9 @@ pub mod quant;
 pub mod tensor;
 pub mod train;
 
-pub use backend::{Backend, DecodeState, ForwardOutput, GenerateOutput, StepOutput, WeightBytes};
+pub use backend::{
+    Backend, DecodeState, ForwardOutput, GenerateOutput, PrefillRows, StepOutput, WeightBytes,
+};
 pub use checkpoint::Checkpoint;
 pub use cpu::{CpuBackend, RouterMode};
 pub use quant::{QuantMatrix, QuantizedCpuBackend};

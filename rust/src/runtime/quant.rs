@@ -52,11 +52,13 @@ use crate::metrics::KernelTimers;
 use crate::util::json::Json;
 use crate::util::threadpool::{self, Pool};
 
-use super::backend::{Backend, DecodeState, ForwardOutput, StepOutput, WeightBytes};
+use crate::telemetry::FlopCounters;
+
+use super::backend::{Backend, DecodeState, ForwardOutput, PrefillRows, StepOutput, WeightBytes};
 use super::checkpoint::Checkpoint;
 use super::cpu::{
-    attend_rows, init_weights, kernels, validate_weights, CpuBackend, ModelWeights, RouterMode,
-    RMSNORM_EPS, ROPE_THETA,
+    attend_context_rows, attend_rows, dense_equiv_flops, init_weights, kernels, validate_weights,
+    CpuBackend, ModelWeights, RouterMode, RMSNORM_EPS, ROPE_THETA,
 };
 use super::tensor::Tensor;
 
@@ -379,6 +381,10 @@ pub struct QuantizedCpuBackend {
     router_mode: RouterMode,
     pool: Pool,
     timers: KernelTimers,
+    /// Measured per-layer FLOP accounting (int8 MACs counted at the same
+    /// 2-FLOPs-per-MAC convention as f32 — the counters measure *work
+    /// shape*, not instruction mix).
+    flops: FlopCounters,
 }
 
 impl QuantizedCpuBackend {
@@ -395,6 +401,7 @@ impl QuantizedCpuBackend {
             router_mode: mode,
             pool: threadpool::global().clone(),
             timers: KernelTimers::default(),
+            flops: FlopCounters::new(cfg.n_layers),
         })
     }
 
@@ -560,9 +567,12 @@ impl QuantizedCpuBackend {
         self.embed_rows(toks, &mut x);
 
         let pool = &self.pool;
+        let (du, ffu) = (d as u64, cfg.d_ff as u64);
+        let dense_eq = dense_equiv_flops(positions, d, cfg.d_ff);
         let mut routed = vec![Vec::with_capacity(cfg.n_layers); n];
         let mut g_attn = vec![Vec::with_capacity(cfg.n_layers); n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.flops.add_dense_equiv(li, dense_eq);
             let u = self
                 .timers
                 .norm
@@ -570,6 +580,11 @@ impl QuantizedCpuBackend {
             let mut mixed = vec![0.0f32; n * d];
             match lw.kind {
                 LayerKind::Dense => {
+                    self.flops.add_qkvo(li, n as u64 * 8 * du * du);
+                    self.flops.add_attn_mix(
+                        li,
+                        4 * du * attend_context_rows(states, cache_of, li, d),
+                    );
                     mixed = self.timers.attention.time(|| {
                         let (q, kk, vv) = self.qkv_rope_q8(lw, &u, positions, n);
                         let ctx =
@@ -582,6 +597,7 @@ impl QuantizedCpuBackend {
                     }
                 }
                 LayerKind::Dtr => {
+                    self.flops.add_router(li, n as u64 * (du * du + 2 * du));
                     let g = self
                         .timers
                         .router
@@ -591,13 +607,18 @@ impl QuantizedCpuBackend {
                     let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
                     let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
                     if !att_idx.is_empty() {
+                        let rows_cache: Vec<usize> =
+                            att_idx.iter().map(|&i| cache_of[i]).collect();
+                        self.flops.add_qkvo(li, att_idx.len() as u64 * 8 * du * du);
+                        self.flops.add_attn_mix(
+                            li,
+                            4 * du * attend_context_rows(states, &rows_cache, li, d),
+                        );
                         self.timers.attention.time(|| {
                             let u_r = kernels::gather_rows(&u, &att_idx, d);
                             let pos_r: Vec<f32> =
                                 att_idx.iter().map(|&i| positions[i]).collect();
                             let (q, kk, vv) = self.qkv_rope_q8(lw, &u_r, &pos_r, att_idx.len());
-                            let rows_cache: Vec<usize> =
-                                att_idx.iter().map(|&i| cache_of[i]).collect();
                             let ctx = attend_rows(
                                 pool, &q, &kk, &vv, states, &rows_cache, li, d, heads, hd,
                             );
@@ -607,6 +628,7 @@ impl QuantizedCpuBackend {
                         });
                     }
                     if !byp_idx.is_empty() {
+                        self.flops.add_bypass(li, byp_idx.len() as u64 * 4 * du * du);
                         self.timers.bypass.time(|| {
                             let u_b = kernels::gather_rows(&u, &byp_idx, d);
                             let byp = self.bypass_q8(lw, &u_b, byp_idx.len());
@@ -628,12 +650,20 @@ impl QuantizedCpuBackend {
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            self.flops.add_mlp(li, n as u64 * 6 * du * ffu);
             let mlp = self.timers.mlp.time(|| self.mlp_q8(lw, &h2, n));
             for (xv, mv) in x.iter_mut().zip(&mlp) {
                 *xv += mv;
             }
         }
 
+        let logit_rows = match logits {
+            LogitsRows::None => 0,
+            LogitsRows::Last => 1,
+            LogitsRows::All => n,
+        };
+        self.flops
+            .add_unembed(logit_rows as u64 * 2 * du * vocab as u64);
         let logits = self.timers.unembed.time(|| match logits {
             LogitsRows::None => Vec::new(),
             LogitsRows::Last => {
@@ -680,15 +710,21 @@ impl QuantizedCpuBackend {
         self.embed_rows(tokens, &mut x);
 
         let pool = &self.pool;
+        let (du, ffu) = (d as u64, cfg.d_ff as u64);
+        let dense_eq = dense_equiv_flops(&positions, d, cfg.d_ff);
         let mut route = vec![0.0f32; n_layers * n];
         let mut g_attn = vec![0.0f32; n_layers * n];
         for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.flops.add_dense_equiv(li, dense_eq);
             let u = self
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
             let (mixed, delta, g0): (Vec<f32>, Vec<f32>, Vec<f32>) = match lw.kind {
                 LayerKind::Dense => {
+                    self.flops.add_qkvo(li, n as u64 * 8 * du * du);
+                    self.flops
+                        .add_attn_mix(li, 4 * du * (n as u64 * (n as u64 + 1) / 2));
                     let attn = self.timers.attention.time(|| {
                         let (q, kk, vv) = self.qkv_rope_q8(lw, &u, &positions, n);
                         let ctx = kernels::dense_attention_par(pool, &q, &kk, &vv, n, heads, hd);
@@ -697,11 +733,27 @@ impl QuantizedCpuBackend {
                     (attn, vec![1.0; n], vec![1.0; n])
                 }
                 LayerKind::Dtr => {
+                    self.flops.add_router(li, n as u64 * (du * du + 2 * du));
                     let g = self
                         .timers
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
                     let delta = self.decide(&g, n);
+                    // Measured = executed: this training-shape path runs
+                    // QKVO and the bypass for *every* row before the
+                    // soft-score select (unlike the gathered serve path),
+                    // so the counters record that dense-like projection
+                    // cost; only attn_mix shrinks with routing here.
+                    let (mut att, mut ctx_total) = (0u64, 0u64);
+                    for &dv in &delta {
+                        if dv > 0.5 {
+                            att += 1;
+                            ctx_total += att;
+                        }
+                    }
+                    self.flops.add_qkvo(li, n as u64 * 8 * du * du);
+                    self.flops.add_attn_mix(li, 4 * du * ctx_total);
+                    self.flops.add_bypass(li, n as u64 * 4 * du * du);
                     let mixed = self.timers.attention.time(|| {
                         // routed attention for selected tokens, bypass for
                         // the rest, soft-score path select (Eqs. 3–5) —
@@ -737,6 +789,7 @@ impl QuantizedCpuBackend {
                 .timers
                 .norm
                 .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
+            self.flops.add_mlp(li, n as u64 * 6 * du * ffu);
             let mlp = self.timers.mlp.time(|| self.mlp_q8(lw, &h2, n));
             for (xv, mv) in x.iter_mut().zip(&mlp) {
                 *xv += mv;
@@ -745,6 +798,7 @@ impl QuantizedCpuBackend {
             g_attn[li * n..(li + 1) * n].copy_from_slice(&g0);
         }
 
+        self.flops.add_unembed(n as u64 * 2 * du * vocab as u64);
         let logits = self.timers.unembed.time(|| {
             let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
             self.weights.unembed.matmul_par(pool, &xn, n)
@@ -764,6 +818,10 @@ impl Backend for QuantizedCpuBackend {
 
     fn kernel_timings(&self) -> Option<Json> {
         Some(self.timers.snapshot_with_ctx(self.pool.kernel_ctx()))
+    }
+
+    fn flop_counters(&self) -> Option<&FlopCounters> {
+        Some(&self.flops)
     }
 
     fn weight_bytes(&self) -> WeightBytes {
@@ -907,6 +965,58 @@ impl Backend for QuantizedCpuBackend {
             logits: Tensor::f32(vec![vocab], logits),
             routed: routed.pop().unwrap(),
             g_attn: g_attn.pop().unwrap(),
+        })
+    }
+
+    /// Chunked prefill keeping every chunk's per-row routing telemetry
+    /// (mirror of the f32 backend's override; bit-identical to
+    /// [`Backend::prefill_chunked`] on the cache/logits side).
+    fn prefill_rows(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        chunk: usize,
+    ) -> Result<PrefillRows> {
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; prefill supports token-choice only"
+        );
+        let chunk = chunk.max(1);
+        let n_chunks = tokens.len().div_ceil(chunk);
+        let mut routed = Vec::with_capacity(tokens.len());
+        let mut g_attn = Vec::with_capacity(tokens.len());
+        let mut logits = Vec::new();
+        for (ci, ck) in tokens.chunks(chunk).enumerate() {
+            let positions: Vec<f32> =
+                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
+            let cache_of = vec![0usize; ck.len()];
+            let mut slab = [&mut *state];
+            let mode = if ci + 1 == n_chunks {
+                LogitsRows::Last
+            } else {
+                LogitsRows::None
+            };
+            let out = self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?;
+            routed.extend(out.routed);
+            g_attn.extend(out.g_attn);
+            logits = out.logits;
+        }
+        Ok(PrefillRows {
+            last: StepOutput {
+                logits: Tensor::f32(vec![vocab], logits),
+                routed: routed.last().unwrap().clone(),
+                g_attn: g_attn.last().unwrap().clone(),
+            },
+            routed,
+            g_attn,
         })
     }
 }

@@ -1,0 +1,611 @@
+//! Observability: span tracing + measured-FLOP accounting.
+//!
+//! Two pillars, both designed to observe without perturbing (DESIGN.md
+//! §Observability):
+//!
+//! * **Span tracing** — start/end spans recorded into per-thread ring
+//!   buffers and exported as Chrome trace-event JSON (`--trace
+//!   out.trace.json` on `serve`/`train`; load the file in Perfetto or
+//!   chrome://tracing). Disabled by default: the only cost on every
+//!   call site is one relaxed [`AtomicBool`] load. When enabled, each
+//!   event is one uncontended per-thread mutex acquire (a single CAS —
+//!   the lock is contended only while a trace is being exported) plus a
+//!   ring push; the ring drops the **oldest** events on overflow so a
+//!   long run keeps its tail. [`metrics::Timer`](crate::metrics::Timer)
+//!   emits spans for every named kernel section automatically, so the
+//!   serve engine's decode steps and the train loop's
+//!   forward/backward/optimizer phases appear in the trace with no
+//!   extra call sites.
+//! * **Measured FLOPs** — [`FlopCounters`]: per-layer relaxed-atomic
+//!   multiply-accumulate×2 tallies the CPU backends (f32 and int8)
+//!   increment next to each kernel call with the *actual* dimensions
+//!   (routed-row counts, real cache lengths), plus a dense-equivalent
+//!   tally for the same tokens. Always on — the cost is a handful of
+//!   relaxed adds per layer per step, noise next to a matmul. The
+//!   measured numbers reconcile against the
+//!   [`model::flops`](crate::model::flops) analytic predictions in
+//!   `rust/tests/telemetry.rs`, and the measured-vs-dense ratio per
+//!   layer is the paper's Fig. 1 claim as a live number in
+//!   [`ServeReport`](crate::coordinator::ServeReport).
+//!
+//! Determinism contract: telemetry is read-only observation. Logits and
+//! token streams are bitwise identical with tracing on vs off
+//! (property-tested in `rust/tests/telemetry.rs`), and the `bench`
+//! harness gates tracing-on overhead (`telemetry_overhead` scenario).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Default per-thread ring capacity (events). At ~10 spans per layer
+/// per engine step this holds minutes of serving trace per thread.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Registry of every thread's ring, so export can drain them all.
+static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+
+thread_local! {
+    /// This thread's ring handle (registered in [`RINGS`] on first use).
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+/// Whether span recording is active (one relaxed load — the entire cost
+/// of a disabled call site).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (the `--trace` flag sets this once at
+/// CLI startup; the bench overhead scenario toggles it per run).
+pub fn set_enabled(on: bool) {
+    // Pin the epoch before the first event so timestamps are positive.
+    let _ = EPOCH.get_or_init(Instant::now);
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the per-thread ring capacity in events (applies to subsequent
+/// pushes on every ring, existing rings included). Tests use a small
+/// capacity to exercise wraparound.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAPACITY.store(cap.max(1), Ordering::Relaxed);
+}
+
+/// One span argument value.
+#[derive(Debug, Clone)]
+pub enum ArgValue {
+    /// Numeric argument.
+    Num(f64),
+    /// String argument (finish reasons, labels).
+    Str(String),
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::Num(v)
+    }
+}
+
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::Num(v as f64)
+    }
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::Num(v as f64)
+    }
+}
+
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+/// Chrome trace-event phase of a recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Duration begin (`"B"`): paired with a later [`Phase::End`] on the
+    /// same thread.
+    Begin,
+    /// Duration end (`"E"`).
+    End,
+    /// Async begin (`"b"`): request lifecycles, keyed by id — may span
+    /// threads and overlap.
+    AsyncBegin,
+    /// Async end (`"e"`).
+    AsyncEnd,
+    /// Instant marker (`"i"`): admissions, cancellations.
+    Instant,
+}
+
+impl Phase {
+    fn as_str(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::AsyncBegin => "b",
+            Phase::AsyncEnd => "e",
+            Phase::Instant => "i",
+        }
+    }
+}
+
+/// One recorded trace event (a row of the exported `traceEvents` array).
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Span/event name (static — recording allocates only for args).
+    pub name: &'static str,
+    /// Chrome trace phase.
+    pub ph: Phase,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    /// Recording thread's stable trace id.
+    pub tid: u64,
+    /// Async correlation id (request id); unused for duration events.
+    pub id: Option<u64>,
+    /// Event arguments (annotations: batch size, KV pages, …).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Fixed-capacity per-thread event buffer: overflow drops the oldest
+/// event (`pop_front`), never the newest — a long run keeps its tail.
+struct Ring {
+    tid: u64,
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        let cap = RING_CAPACITY.load(Ordering::Relaxed);
+        while self.buf.len() >= cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+fn now_us() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
+}
+
+fn record(name: &'static str, ph: Phase, id: Option<u64>, args: Vec<(&'static str, ArgValue)>) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = now_us();
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                buf: VecDeque::new(),
+                dropped: 0,
+            }));
+            RINGS
+                .get_or_init(|| Mutex::new(Vec::new()))
+                .lock()
+                .unwrap()
+                .push(Arc::clone(&ring));
+            ring
+        });
+        let mut ring = ring.lock().unwrap();
+        let tid = ring.tid;
+        ring.push(Event {
+            name,
+            ph,
+            ts_us,
+            tid,
+            id,
+            args,
+        });
+    });
+}
+
+/// Record a duration-span begin (`"B"`). Pair with [`end`] on the same
+/// thread.
+pub fn begin(name: &'static str) {
+    record(name, Phase::Begin, None, Vec::new());
+}
+
+/// Record a duration-span end (`"E"`).
+pub fn end(name: &'static str) {
+    record(name, Phase::End, None, Vec::new());
+}
+
+/// Record an instant event with arguments.
+pub fn instant(name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+    record(name, Phase::Instant, None, args);
+}
+
+/// Begin an async span correlated by `id` (request lifecycles — may
+/// overlap with other ids and cross engine steps).
+pub fn async_begin(name: &'static str, id: u64, args: Vec<(&'static str, ArgValue)>) {
+    record(name, Phase::AsyncBegin, Some(id), args);
+}
+
+/// End the async span with the matching `id`.
+pub fn async_end(name: &'static str, id: u64, args: Vec<(&'static str, ArgValue)>) {
+    record(name, Phase::AsyncEnd, Some(id), args);
+}
+
+/// RAII duration span: records `"B"` at construction (when tracing is
+/// enabled) and the matching `"E"` on drop. Arms itself only if tracing
+/// was enabled at construction, so a disabled span costs one relaxed
+/// load.
+pub struct Scoped {
+    name: &'static str,
+    armed: bool,
+}
+
+/// Open a [`Scoped`] duration span named `name`.
+pub fn scoped(name: &'static str) -> Scoped {
+    let armed = enabled();
+    if armed {
+        begin(name);
+    }
+    Scoped { name, armed }
+}
+
+impl Scoped {
+    /// Attach arguments to the span by emitting them on the closing
+    /// `"E"` event (Chrome merges begin/end args).
+    pub fn end_with_args(mut self, args: Vec<(&'static str, ArgValue)>) {
+        if self.armed {
+            record(self.name, Phase::End, None, args);
+            self.armed = false;
+        }
+    }
+}
+
+impl Drop for Scoped {
+    fn drop(&mut self) {
+        if self.armed {
+            end(self.name);
+        }
+    }
+}
+
+/// Process-wide guard serializing code paths that flip the global
+/// telemetry state (the test suites and the bench overhead scenario
+/// toggle `set_enabled`/`clear` and would otherwise race each other
+/// across parallel test threads). Recovers from poisoning so a
+/// panicking holder doesn't cascade into unrelated tests.
+#[doc(hidden)]
+pub fn state_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Total events dropped to ring wraparound across all threads.
+pub fn dropped_events() -> u64 {
+    match RINGS.get() {
+        None => 0,
+        Some(r) => r.lock().unwrap().iter().map(|r| r.lock().unwrap().dropped).sum(),
+    }
+}
+
+/// Clear every thread's ring and dropped-event counter (between bench
+/// iterations / tests). Recording threads stay registered.
+pub fn clear() {
+    if let Some(rings) = RINGS.get() {
+        for ring in rings.lock().unwrap().iter() {
+            let mut r = ring.lock().unwrap();
+            r.buf.clear();
+            r.dropped = 0;
+        }
+    }
+}
+
+/// Snapshot every ring's events (per-thread recording order preserved;
+/// rings concatenated in registration order). Non-destructive.
+pub fn snapshot_events() -> Vec<Event> {
+    let mut out = Vec::new();
+    if let Some(rings) = RINGS.get() {
+        for ring in rings.lock().unwrap().iter() {
+            let r = ring.lock().unwrap();
+            out.extend(r.buf.iter().cloned());
+        }
+    }
+    out
+}
+
+/// Export the recorded events as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`) — loadable in Perfetto
+/// (<https://ui.perfetto.dev>) or chrome://tracing. Non-destructive;
+/// call [`clear`] to reset the rings.
+pub fn export_chrome_trace() -> Json {
+    let mut events = Vec::new();
+    for ev in snapshot_events() {
+        let mut row = Json::obj();
+        row.set("name", Json::Str(ev.name.to_string()));
+        row.set("ph", Json::Str(ev.ph.as_str().to_string()));
+        row.set("ts", Json::Num(ev.ts_us));
+        row.set("pid", Json::Num(0.0));
+        row.set("tid", Json::Num(ev.tid as f64));
+        match ev.ph {
+            Phase::AsyncBegin | Phase::AsyncEnd => {
+                // Async events need a category + correlation id.
+                row.set("cat", Json::Str(ev.name.to_string()));
+                row.set("id", Json::Num(ev.id.unwrap_or(0) as f64));
+            }
+            Phase::Instant => {
+                row.set("s", Json::Str("t".to_string())); // thread scope
+            }
+            _ => {}
+        }
+        if !ev.args.is_empty() {
+            let mut args = Json::obj();
+            for (k, v) in &ev.args {
+                match v {
+                    ArgValue::Num(n) => args.set(k, Json::Num(*n)),
+                    ArgValue::Str(s) => args.set(k, Json::Str(s.clone())),
+                }
+            }
+            row.set("args", args);
+        }
+        events.push(row);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events));
+    doc.set("displayTimeUnit", Json::Str("ms".to_string()));
+    doc.set("droppedEvents", Json::Num(dropped_events() as f64));
+    doc
+}
+
+/// Write [`export_chrome_trace`] to `path` (parent dirs created).
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, export_chrome_trace().to_string() + "\n")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Measured FLOPs
+// ---------------------------------------------------------------------
+
+/// Per-layer measured-FLOP tallies for one kernel section (relaxed
+/// atomics — backends increment from their hot paths with actual
+/// dimensions; multiply-accumulates count ×2, matching
+/// [`model::flops`](crate::model::flops)).
+#[derive(Debug, Default)]
+pub struct LayerFlops {
+    /// Router MLP (DTR layers only).
+    pub router: AtomicU64,
+    /// Q/K/V/O projections for attended tokens (Q/K for routed only;
+    /// dense layers pay all four for every token).
+    pub qkvo_proj: AtomicU64,
+    /// Attention score + weighted-sum cost at the *actual* per-row
+    /// cache lengths (the quadratic term the router shrinks).
+    pub attn_mix: AtomicU64,
+    /// Linear bypass `x·Wv·Wo` for non-routed tokens.
+    pub bypass: AtomicU64,
+    /// SwiGLU MLP (every token, both paths).
+    pub mlp: AtomicU64,
+    /// What a dense layer would have spent on the same tokens at the
+    /// same positions (qkvo + full-context attention + MLP) — the
+    /// denominator of the measured FLOPs-vs-dense ratio.
+    pub dense_equiv: AtomicU64,
+}
+
+impl LayerFlops {
+    /// Sum of the measured sections (dense-equivalent excluded).
+    pub fn total(&self) -> u64 {
+        self.router.load(Ordering::Relaxed)
+            + self.qkvo_proj.load(Ordering::Relaxed)
+            + self.attn_mix.load(Ordering::Relaxed)
+            + self.bypass.load(Ordering::Relaxed)
+            + self.mlp.load(Ordering::Relaxed)
+    }
+}
+
+/// Measured-FLOP accounting for one backend instance: one
+/// [`LayerFlops`] per layer plus the unembed matmul. Owned by
+/// [`CpuBackend`](crate::runtime::CpuBackend) and
+/// [`QuantizedCpuBackend`](crate::runtime::QuantizedCpuBackend),
+/// exposed through
+/// [`Backend::flop_counters`](crate::runtime::Backend::flop_counters),
+/// folded into [`ServeReport`](crate::coordinator::ServeReport).
+#[derive(Debug)]
+pub struct FlopCounters {
+    /// Per-layer section tallies.
+    pub layers: Vec<LayerFlops>,
+    /// Final-norm + `[·, V]` unembed matmul FLOPs.
+    pub unembed: AtomicU64,
+}
+
+impl FlopCounters {
+    /// Zeroed counters for a model with `n_layers` layers.
+    pub fn new(n_layers: usize) -> FlopCounters {
+        FlopCounters {
+            layers: (0..n_layers).map(|_| LayerFlops::default()).collect(),
+            unembed: AtomicU64::new(0),
+        }
+    }
+
+    /// Add router FLOPs at `layer`.
+    #[inline]
+    pub fn add_router(&self, layer: usize, flops: u64) {
+        self.layers[layer].router.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add Q/K/V/O projection FLOPs at `layer`.
+    #[inline]
+    pub fn add_qkvo(&self, layer: usize, flops: u64) {
+        self.layers[layer].qkvo_proj.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add attention-mix FLOPs at `layer`.
+    #[inline]
+    pub fn add_attn_mix(&self, layer: usize, flops: u64) {
+        self.layers[layer].attn_mix.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add linear-bypass FLOPs at `layer`.
+    #[inline]
+    pub fn add_bypass(&self, layer: usize, flops: u64) {
+        self.layers[layer].bypass.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add SwiGLU MLP FLOPs at `layer`.
+    #[inline]
+    pub fn add_mlp(&self, layer: usize, flops: u64) {
+        self.layers[layer].mlp.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add the dense-equivalent cost for the same tokens at `layer`.
+    #[inline]
+    pub fn add_dense_equiv(&self, layer: usize, flops: u64) {
+        self.layers[layer].dense_equiv.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Add unembed FLOPs.
+    #[inline]
+    pub fn add_unembed(&self, flops: u64) {
+        self.unembed.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Measured total across layers plus unembed.
+    pub fn total(&self) -> u64 {
+        self.layers.iter().map(|l| l.total()).sum::<u64>() + self.unembed.load(Ordering::Relaxed)
+    }
+
+    /// Per-layer measured / dense-equivalent ratio (1.0 where no
+    /// dense-equivalent has been recorded).
+    pub fn ratios_vs_dense(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let de = l.dense_equiv.load(Ordering::Relaxed);
+                if de == 0 {
+                    1.0
+                } else {
+                    l.total() as f64 / de as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Zero every counter (between bench scenarios).
+    pub fn reset(&self) {
+        for l in &self.layers {
+            l.router.store(0, Ordering::Relaxed);
+            l.qkvo_proj.store(0, Ordering::Relaxed);
+            l.attn_mix.store(0, Ordering::Relaxed);
+            l.bypass.store(0, Ordering::Relaxed);
+            l.mlp.store(0, Ordering::Relaxed);
+            l.dense_equiv.store(0, Ordering::Relaxed);
+        }
+        self.unembed.store(0, Ordering::Relaxed);
+    }
+
+    /// JSON snapshot: per-layer section totals + ratio-vs-dense, plus
+    /// the aggregate (`total`, `dense_equiv_total`, `ratio_vs_dense`,
+    /// `unembed`).
+    pub fn to_json(&self) -> Json {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut dense_total = 0u64;
+        for l in &self.layers {
+            let de = l.dense_equiv.load(Ordering::Relaxed);
+            dense_total += de;
+            layers.push(Json::from_pairs(vec![
+                ("router", Json::Num(l.router.load(Ordering::Relaxed) as f64)),
+                (
+                    "qkvo_proj",
+                    Json::Num(l.qkvo_proj.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "attn_mix",
+                    Json::Num(l.attn_mix.load(Ordering::Relaxed) as f64),
+                ),
+                ("bypass", Json::Num(l.bypass.load(Ordering::Relaxed) as f64)),
+                ("mlp", Json::Num(l.mlp.load(Ordering::Relaxed) as f64)),
+                ("total", Json::Num(l.total() as f64)),
+                ("dense_equiv", Json::Num(de as f64)),
+                (
+                    "ratio_vs_dense",
+                    Json::Num(if de == 0 {
+                        1.0
+                    } else {
+                        l.total() as f64 / de as f64
+                    }),
+                ),
+            ]));
+        }
+        let layer_total: u64 = self.layers.iter().map(|l| l.total()).sum();
+        Json::from_pairs(vec![
+            ("layers", Json::Arr(layers)),
+            (
+                "unembed",
+                Json::Num(self.unembed.load(Ordering::Relaxed) as f64),
+            ),
+            ("total", Json::Num(self.total() as f64)),
+            ("dense_equiv_total", Json::Num(dense_total as f64)),
+            (
+                "ratio_vs_dense",
+                Json::Num(if dense_total == 0 {
+                    1.0
+                } else {
+                    layer_total as f64 / dense_total as f64
+                }),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_counters_accumulate_and_ratio() {
+        let fc = FlopCounters::new(2);
+        fc.add_router(0, 10);
+        fc.add_qkvo(0, 20);
+        fc.add_attn_mix(0, 30);
+        fc.add_bypass(0, 40);
+        fc.add_mlp(0, 50);
+        fc.add_dense_equiv(0, 300);
+        fc.add_unembed(7);
+        assert_eq!(fc.layers[0].total(), 150);
+        assert_eq!(fc.total(), 157);
+        let r = fc.ratios_vs_dense();
+        assert!((r[0] - 0.5).abs() < 1e-12);
+        assert_eq!(r[1], 1.0, "no dense-equiv recorded -> ratio 1.0");
+        let j = fc.to_json();
+        assert_eq!(j.path("total").and_then(Json::as_f64), Some(157.0));
+        fc.reset();
+        assert_eq!(fc.total(), 0);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_noop() {
+        let _guard = state_guard();
+        set_enabled(false);
+        let before = snapshot_events().len();
+        begin("noop");
+        end("noop");
+        instant("noop", vec![("x", ArgValue::Num(1.0))]);
+        assert_eq!(snapshot_events().len(), before, "disabled events recorded");
+    }
+}

@@ -1,0 +1,309 @@
+//! Observability contracts: the Chrome trace export format, ring-buffer
+//! wraparound semantics, the tracing-is-read-only determinism property,
+//! and measured-vs-analytic FLOP reconciliation (`model/flops.rs` as
+//! the oracle for `telemetry::FlopCounters`).
+//!
+//! Span tracing is process-global state, so every test that flips it
+//! holds `telemetry::state_guard()` — cargo's parallel test threads
+//! would otherwise race on `set_enabled`/`clear`. The FLOP counters are
+//! per-backend-instance and need no serialization.
+
+use std::collections::{HashMap, HashSet};
+
+use dtrnet::config::{LayerKind, ModelConfig, Variant};
+use dtrnet::coordinator::{
+    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, WorkloadSpec,
+};
+use dtrnet::model::flops;
+use dtrnet::runtime::{Backend, CpuBackend, QuantizedCpuBackend, Tensor};
+use dtrnet::telemetry::{self, ArgValue};
+use dtrnet::util::json::Json;
+use dtrnet::util::rng::Rng;
+
+/// Small mixed-length workload sized for the xs preset (max_seq 64).
+fn spec(n: usize, temperature: f32) -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests: n,
+        arrival_rate: 2000.0,
+        prompt_len_mean: 6,
+        prompt_len_max: 16,
+        gen_len_mean: 8,
+        gen_len_max: 20,
+        temperature,
+        vocab: 256,
+    }
+}
+
+fn serve_streams(be: &CpuBackend, workload_seed: u64) -> Vec<(u64, Vec<i32>)> {
+    let cfg = ServerConfig {
+        slots: 2,
+        seed: 5,
+        prefill: PrefillMode::Chunked(8),
+        ..Default::default()
+    };
+    let mut srv = Server::new(be, cfg).unwrap();
+    let trace = generate_workload(&spec(6, 0.0), workload_seed);
+    let mut rep = srv.run_workload(&trace, 1_000_000).unwrap();
+    rep.requests.sort_by_key(|r| r.id);
+    rep.requests.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+#[test]
+fn serve_trace_round_trips_chrome_json() {
+    let _guard = telemetry::state_guard();
+    telemetry::set_enabled(true);
+    telemetry::clear();
+    let be = CpuBackend::init(&ModelConfig::preset("xs", Variant::DtrBilayer), 3).unwrap();
+    serve_streams(&be, 13);
+    telemetry::set_enabled(false);
+    assert_eq!(telemetry::dropped_events(), 0, "small run must not wrap the ring");
+
+    let doc = telemetry::export_chrome_trace();
+    let parsed = Json::parse(&doc.to_string()).expect("exported trace must be valid JSON");
+    telemetry::clear();
+    let events = match parsed.path("traceEvents") {
+        Some(Json::Arr(evs)) => evs,
+        other => panic!("traceEvents missing or not an array: {other:?}"),
+    };
+    assert!(!events.is_empty(), "serve run recorded no trace events");
+
+    // Structural invariants of the Chrome trace-event stream: per-thread
+    // timestamps never regress (rings preserve recording order), duration
+    // B/E events nest and balance per thread, async b/e events balance
+    // per (name, id), instants carry a scope.
+    let mut depth: HashMap<i64, i64> = HashMap::new();
+    let mut last_ts: HashMap<i64, f64> = HashMap::new();
+    let mut async_open: HashMap<(String, i64), i64> = HashMap::new();
+    let mut names: HashSet<String> = HashSet::new();
+    for ev in events {
+        let name = ev.path("name").and_then(Json::as_str).expect("event name").to_string();
+        let ph = ev.path("ph").and_then(Json::as_str).expect("event phase");
+        let tid = ev.path("tid").and_then(Json::as_f64).expect("event tid") as i64;
+        let ts = ev.path("ts").and_then(Json::as_f64).expect("event ts");
+        let last = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+        assert!(ts >= *last, "ts regressed on tid {tid}: {ts} after {last}");
+        *last = ts;
+        match ph {
+            "B" => *depth.entry(tid).or_insert(0) += 1,
+            "E" => {
+                let d = depth.entry(tid).or_insert(0);
+                *d -= 1;
+                assert!(*d >= 0, "E without matching B on tid {tid} ({name})");
+            }
+            "b" | "e" => {
+                let id = ev.path("id").and_then(Json::as_f64).expect("async id") as i64;
+                let open = async_open.entry((name.clone(), id)).or_insert(0);
+                *open += if ph == "b" { 1 } else { -1 };
+                assert!(*open >= 0, "async e without b for {name}/{id}");
+            }
+            "i" => {
+                assert_eq!(ev.path("s").and_then(Json::as_str), Some("t"), "instant scope");
+            }
+            other => panic!("unexpected trace phase {other:?}"),
+        }
+        names.insert(name);
+    }
+    for (tid, d) in &depth {
+        assert_eq!(*d, 0, "unbalanced B/E spans on tid {tid}");
+    }
+    for ((name, id), d) in &async_open {
+        assert_eq!(*d, 0, "unbalanced async span {name}/{id}");
+    }
+    // The serve engine's instrumentation points must all be present.
+    for want in ["engine_step", "prefill", "request"] {
+        assert!(names.contains(want), "span {want:?} missing from trace ({names:?})");
+    }
+}
+
+#[test]
+fn ring_wraparound_drops_oldest_not_newest() {
+    let _guard = telemetry::state_guard();
+    telemetry::set_enabled(true);
+    telemetry::clear();
+    telemetry::set_ring_capacity(8);
+    for i in 0..20u64 {
+        telemetry::instant("wrap", vec![("i", ArgValue::from(i))]);
+    }
+    let kept: Vec<f64> = telemetry::snapshot_events()
+        .into_iter()
+        .filter(|e| e.name == "wrap")
+        .map(|e| match &e.args[0].1 {
+            ArgValue::Num(v) => *v,
+            other => panic!("numeric arg expected, got {other:?}"),
+        })
+        .collect();
+    let dropped = telemetry::dropped_events();
+    telemetry::set_ring_capacity(telemetry::DEFAULT_RING_CAPACITY);
+    telemetry::set_enabled(false);
+    telemetry::clear();
+
+    assert_eq!(kept.len(), 8, "ring must hold exactly its capacity");
+    let want: Vec<f64> = (12..20).map(|v| v as f64).collect();
+    assert_eq!(kept, want, "wraparound must keep the newest events");
+    assert_eq!(dropped, 12, "dropped-event counter must tally the overwritten oldest");
+}
+
+#[test]
+fn tracing_on_vs_off_is_bitwise_identical() {
+    let _guard = telemetry::state_guard();
+    let be = CpuBackend::init(&ModelConfig::preset("xs", Variant::DtrBilayer), 17).unwrap();
+    let tokens = Tensor::i32(vec![2, 24], (0..48).map(|i| i * 7 % 256).collect());
+    let prompt: Vec<i32> = (0..9).map(|i| i * 23 % 256).collect();
+
+    telemetry::set_enabled(false);
+    let logits_off = be.forward(&tokens).unwrap().logits;
+    let mut rng = Rng::new(2);
+    let gen_off = be.generate(&prompt, 10, &SamplingParams::greedy(), &mut rng).unwrap().tokens;
+    let streams_off = serve_streams(&be, 29);
+
+    telemetry::set_enabled(true);
+    telemetry::clear();
+    let logits_on = be.forward(&tokens).unwrap().logits;
+    let mut rng = Rng::new(2);
+    let gen_on = be.generate(&prompt, 10, &SamplingParams::greedy(), &mut rng).unwrap().tokens;
+    let streams_on = serve_streams(&be, 29);
+    telemetry::set_enabled(false);
+    telemetry::clear();
+
+    assert_eq!(logits_off.as_f32(), logits_on.as_f32(), "forward logits bits changed");
+    assert_eq!(gen_off, gen_on, "generate token stream changed");
+    assert_eq!(streams_off, streams_on, "serve token streams changed");
+}
+
+#[test]
+fn measured_flops_reconcile_exactly_on_dense() {
+    // Every section of the dense forward has an exact closed form, so
+    // measured-vs-analytic agreement is equality, not a tolerance: the
+    // per-row accounting sums Σ(p+1) = n(n+1)/2 back to the averaged
+    // analytic model, and the dense-equivalent denominator is the same
+    // sum — the per-layer ratio is exactly 1.0.
+    let cfg = ModelConfig::preset("xs", Variant::Dense);
+    let be = CpuBackend::init(&cfg, 0).unwrap();
+    let (b, s) = (2usize, 48usize);
+    let tokens = Tensor::i32(vec![b, s], (0..(b * s) as i32).map(|i| i * 11 % 256).collect());
+    let fc = be.flop_counters().unwrap();
+    fc.reset();
+    be.forward(&tokens).unwrap();
+    let measured = fc.to_json();
+
+    let rows = match measured.path("layers") {
+        Some(Json::Arr(rows)) => rows,
+        other => panic!("per-layer rows missing: {other:?}"),
+    };
+    assert_eq!(rows.len(), cfg.n_layers);
+    for (li, row) in rows.iter().enumerate() {
+        let total = row.path("total").and_then(Json::as_f64).unwrap();
+        let analytic = flops::flops_per_layer(&cfg, li, s, 1.0).total() * (b * s) as f64;
+        assert!(
+            (total - analytic).abs() <= 1e-9 * analytic,
+            "layer {li}: measured {total} vs analytic {analytic}"
+        );
+        let ratio = row.path("ratio_vs_dense").and_then(Json::as_f64).unwrap();
+        assert!((ratio - 1.0).abs() < 1e-12, "dense layer {li} ratio {ratio}");
+    }
+    let total = measured.path("total").and_then(Json::as_f64).unwrap();
+    let analytic_total = flops::flops_forward(&cfg, s, None) * (b * s) as f64;
+    assert!(
+        (total - analytic_total).abs() <= 1e-9 * analytic_total,
+        "whole-model measured {total} vs analytic {analytic_total}"
+    );
+}
+
+#[test]
+fn measured_flops_reconcile_with_routing_on_dtr() {
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let be = CpuBackend::init(&cfg, 0).unwrap();
+    let n = 48usize;
+    let tokens = Tensor::i32(vec![1, n], (0..n as i32).map(|i| i * 13 % 256).collect());
+    let fc = be.flop_counters().unwrap();
+    fc.reset();
+    let out = be.forward(&tokens).unwrap();
+    let measured = fc.to_json();
+
+    let (d, ff) = (cfg.d_model as f64, cfg.d_ff as f64);
+    let nn = n as f64;
+    let route = out.route.as_f32(); // [1, L, n]
+    let rows = match measured.path("layers") {
+        Some(Json::Arr(rows)) => rows,
+        other => panic!("per-layer rows missing: {other:?}"),
+    };
+    let dense_eq: f64 = (0..n).map(|p| flops::dense_flops_per_token(&cfg, p + 1)).sum();
+    for (li, kind) in cfg.layer_kinds().iter().enumerate() {
+        let row = &rows[li];
+        let get = |k: &str| row.path(k).and_then(Json::as_f64).unwrap();
+        // Exact attention context from the actual routing decisions:
+        // routed row j attends over the j routed tokens up to and
+        // including itself (only routed tokens hold KV).
+        let layer_route = &route[li * n..(li + 1) * n];
+        let att = layer_route.iter().filter(|&&v| v > 0.5).count() as f64;
+        let (mut seen, mut ctx_total) = (0.0f64, 0.0f64);
+        for &v in layer_route {
+            if v > 0.5 {
+                seen += 1.0;
+                ctx_total += seen;
+            }
+        }
+        match kind {
+            LayerKind::Dense => {
+                assert_eq!(att, nn, "dense layer {li} must route everything");
+                assert!(get("router").abs() < 0.5);
+                assert!((get("qkvo_proj") - nn * 8.0 * d * d).abs() < 0.5);
+                assert!((get("attn_mix") - 4.0 * d * nn * (nn + 1.0) / 2.0).abs() < 0.5);
+                assert!(get("bypass").abs() < 0.5);
+                assert!((get("ratio_vs_dense") - 1.0).abs() < 1e-12, "layer {li}");
+            }
+            LayerKind::Dtr => {
+                assert!((get("router") - nn * (d * d + 2.0 * d)).abs() < 0.5);
+                assert!((get("qkvo_proj") - att * 8.0 * d * d).abs() < 0.5, "layer {li}");
+                assert!((get("attn_mix") - 4.0 * d * ctx_total).abs() < 0.5, "layer {li}");
+                assert!((get("bypass") - (nn - att) * 4.0 * d * d).abs() < 0.5, "layer {li}");
+                // The analytic model with the measured routing fraction
+                // agrees within tolerance: it idealizes the attention
+                // context as f·(n+1)/2 per routed query; every other
+                // section is exact, and attn_mix is a minority term.
+                let analytic = flops::flops_per_layer(&cfg, li, n, att / nn).total() * nn;
+                let total = get("total");
+                assert!(
+                    (total - analytic).abs() / analytic < 0.15,
+                    "layer {li}: measured {total} vs analytic {analytic}"
+                );
+            }
+            other => panic!("unexpected layer kind {other:?}"),
+        }
+        assert!((get("mlp") - nn * 6.0 * d * ff).abs() < 0.5);
+        assert!((get("dense_equiv") - dense_eq).abs() < 0.5, "layer {li}");
+    }
+    let vocab = cfg.vocab_size as f64;
+    let unembed = measured.path("unembed").and_then(Json::as_f64).unwrap();
+    assert!((unembed - nn * 2.0 * d * vocab).abs() < 0.5);
+}
+
+#[test]
+fn quant_backend_counts_flops_too() {
+    let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+    let be = QuantizedCpuBackend::init(&cfg, 0).unwrap();
+    let n = 32usize;
+    let tokens = Tensor::i32(vec![1, n], (0..n as i32).map(|i| i * 5 % 256).collect());
+    let fc = be.flop_counters().unwrap();
+    fc.reset();
+    be.forward(&tokens).unwrap();
+    let measured = fc.to_json();
+    assert!(measured.path("total").and_then(Json::as_f64).unwrap() > 0.0);
+    let rows = match measured.path("layers") {
+        Some(Json::Arr(rows)) => rows,
+        other => panic!("per-layer rows missing: {other:?}"),
+    };
+    // Int8 dense layers execute exactly dense-equivalent work, so the
+    // measured ratio is exactly 1.0 there too; DTR layers record a
+    // positive ratio (the training-shape int8 path runs both branches
+    // before the select, so it is not gated below 1.0 here).
+    for (li, kind) in cfg.layer_kinds().iter().enumerate() {
+        let ratio = rows[li].path("ratio_vs_dense").and_then(Json::as_f64).unwrap();
+        match kind {
+            LayerKind::Dense => {
+                assert!((ratio - 1.0).abs() < 1e-12, "int8 dense layer {li} ratio {ratio}")
+            }
+            _ => assert!(ratio > 0.0, "int8 DTR layer {li} ratio {ratio}"),
+        }
+    }
+}
