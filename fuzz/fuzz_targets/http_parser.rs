@@ -1,0 +1,14 @@
+//! Fuzz the HTTP push parser's split-invariance oracle: one-shot,
+//! byte-by-byte, and pseudo-random-split feeds must agree bitwise, and
+//! every parsed body must satisfy the JSON oracles too.
+//!
+//! Usage: `cargo run -p dtrnet-fuzz --bin http_parser -- [iters] [seed]`
+
+use dtrnet::coordinator::http::torture::check_http_bytes;
+
+fn main() {
+    let (iters, seed) = dtrnet_fuzz::cli_args();
+    dtrnet_fuzz::run_target("http", iters, seed, |data| {
+        check_http_bytes(data);
+    });
+}

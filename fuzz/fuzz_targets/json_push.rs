@@ -1,0 +1,14 @@
+//! Fuzz the strict JSON machines: the byte-at-a-time validator must be
+//! split invariant and agree with the borrowing tree parser, and
+//! anything both accept must parse under the lenient `util::json`.
+//!
+//! Usage: `cargo run -p dtrnet-fuzz --bin json_push -- [iters] [seed]`
+
+use dtrnet::coordinator::http::torture::check_json_bytes;
+
+fn main() {
+    let (iters, seed) = dtrnet_fuzz::cli_args();
+    dtrnet_fuzz::run_target("json", iters, seed, |data| {
+        check_json_bytes(data);
+    });
+}

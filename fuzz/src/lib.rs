@@ -1,0 +1,152 @@
+//! Shared harness for the `dtrnet-fuzz` targets: corpus loading, a
+//! seeded xorshift mutation engine (built on the repo's own
+//! [`Rng`]), and a catch-unwind driver that saves crashing
+//! inputs to `fuzz/artifacts/<target>/`.
+//!
+//! The targets themselves are one-liners over the differential oracles
+//! in `dtrnet::coordinator::http::torture` — the same invariants the
+//! tier-1 `fuzz_replay` test replays over the committed corpus, so a
+//! crash found here becomes a regression seed by copying the artifact
+//! into `fuzz/corpus/<target>/`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use dtrnet::util::rng::Rng;
+
+/// Default mutation iterations when a target gets no CLI argument.
+pub const DEFAULT_ITERS: usize = 5_000;
+
+/// Inputs longer than this are truncated — parser limits trip far
+/// earlier, so growing further only slows the loop down.
+pub const MAX_LEN: usize = 8 * 1024;
+
+/// `fuzz/corpus/<name>` resolved against this crate's manifest.
+pub fn corpus_dir(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("corpus").join(name)
+}
+
+/// Load every corpus file under `dir`, sorted by file name so replay
+/// order is stable.
+pub fn load_corpus(dir: &Path) -> std::io::Result<Vec<(String, Vec<u8>)>> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.filter_map(|e| e.ok()).collect();
+    entries.sort_by_key(|e| e.file_name());
+    let mut out = Vec::new();
+    for e in entries {
+        let path = e.path();
+        if path.is_file() {
+            out.push((
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(&path)?,
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// One mutation round: 1-4 stacked edits (bit flips, inserts, deletes,
+/// slice duplication, interesting-byte overwrites, truncation).
+pub fn mutate(rng: &mut Rng, seed: &[u8]) -> Vec<u8> {
+    const INTERESTING: &[u8] = b"\0\x7f\xff\r\n\"\\{}[]:, 0";
+    let mut data = seed.to_vec();
+    for _ in 0..(1 + rng.usize_below(4)) {
+        match rng.below(6) {
+            0 if !data.is_empty() => {
+                let i = rng.usize_below(data.len());
+                data[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                let i = rng.usize_below(data.len() + 1);
+                data.insert(i, rng.below(256) as u8);
+            }
+            2 if !data.is_empty() => {
+                let i = rng.usize_below(data.len());
+                data.remove(i);
+            }
+            3 if !data.is_empty() => {
+                let start = rng.usize_below(data.len());
+                let len = 1 + rng.usize_below((data.len() - start).min(16));
+                let chunk: Vec<u8> = data[start..start + len].to_vec();
+                let at = rng.usize_below(data.len() + 1);
+                data.splice(at..at, chunk);
+            }
+            4 if !data.is_empty() => {
+                let i = rng.usize_below(data.len());
+                data[i] = INTERESTING[rng.usize_below(INTERESTING.len())];
+            }
+            _ => {
+                data.truncate(rng.usize_below(data.len() + 1));
+            }
+        }
+    }
+    data.truncate(MAX_LEN);
+    data
+}
+
+/// Replay the whole corpus, then run `iters` mutated inputs through
+/// `check`. On panic the offending input is written to
+/// `fuzz/artifacts/<target>/crash-<n>.bin` and the process exits
+/// non-zero. Fully deterministic for a given (corpus, iters, seed).
+pub fn run_target(target: &str, iters: usize, seed: u64, check: impl Fn(&[u8])) {
+    let dir = corpus_dir(target);
+    let corpus = load_corpus(&dir)
+        .unwrap_or_else(|e| panic!("cannot load corpus {}: {e}", dir.display()));
+    assert!(
+        !corpus.is_empty(),
+        "empty corpus at {} — commit seeds first",
+        dir.display()
+    );
+    let mut crashes = 0usize;
+    for (name, data) in &corpus {
+        if !shielded(&check, data) {
+            crashes += 1;
+            eprintln!("[{target}] corpus seed {name} PANICKED");
+        }
+    }
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let base = &corpus[rng.usize_below(corpus.len())].1;
+        let data = mutate(&mut rng, base);
+        if !shielded(&check, &data) {
+            crashes += 1;
+            let art_dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+                .join(target);
+            std::fs::create_dir_all(&art_dir).expect("create artifacts dir");
+            let path = art_dir.join(format!("crash-{i}.bin"));
+            std::fs::write(&path, &data).expect("write crash artifact");
+            eprintln!(
+                "[{target}] iter {i}: PANIC on {} bytes — saved {}",
+                data.len(),
+                path.display()
+            );
+            if crashes >= 8 {
+                break;
+            }
+        }
+    }
+    if crashes > 0 {
+        eprintln!("[{target}] {crashes} crashing inputs (see fuzz/artifacts/{target}/)");
+        std::process::exit(101);
+    }
+    println!(
+        "[{target}] OK: {} corpus seeds + {iters} mutations, no invariant violations",
+        corpus.len()
+    );
+}
+
+/// Run `check` shielded from panics; false = it panicked.
+fn shielded(check: &impl Fn(&[u8]), data: &[u8]) -> bool {
+    catch_unwind(AssertUnwindSafe(|| check(data))).is_ok()
+}
+
+/// Shared CLI parsing for the targets: `<bin> [iters] [seed]`.
+pub fn cli_args() -> (usize, u64) {
+    let mut args = std::env::args().skip(1);
+    let iters = args
+        .next()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_ITERS);
+    let seed = args.next().and_then(|s| s.parse().ok()).unwrap_or(0x5eed);
+    (iters, seed)
+}

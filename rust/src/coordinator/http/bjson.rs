@@ -1,0 +1,909 @@
+//! Borrowed JSON for the HTTP body path.
+//!
+//! Two coupled machines over the same strict RFC 8259 grammar:
+//!
+//! * [`parse`] — a tree parser whose string values **borrow from the
+//!   connection buffer** ([`Cow::Borrowed`]) whenever the raw bytes can
+//!   be used verbatim (no escapes), so the socket-read → JSON-value path
+//!   does zero string copies in the common case (the serde_json_bytes
+//!   design).
+//! * [`JsonPush`] — a resumable byte-at-a-time validator (the
+//!   picojson-rs push-parser design) that the connection loop feeds
+//!   while a request body is still arriving, so malformed bodies are
+//!   rejected at the first bad byte instead of after buffering
+//!   `Content-Length` bytes. It holds no references into the input:
+//!   feeding may stop and resume at **any** byte boundary.
+//!
+//! The two machines accept exactly the same set of documents (the fuzz
+//! suite's standing oracle, `torture::check_json_bytes`): strict number
+//! grammar (no leading zeros, no bare `.`/trailing `.`), strict escape
+//! set, full shortest-form UTF-8 validation, and a shared nesting bound
+//! ([`MAX_DEPTH`]). Anything they accept, the lenient
+//! [`crate::util::json::Json`] parser accepts too — strictly a subset.
+
+use std::borrow::Cow;
+
+/// Container nesting bound shared by [`parse`] and [`JsonPush`] so their
+/// verdicts agree byte-for-byte (also the recursion bound of the tree
+/// parser, making stack use on hostile input a constant).
+pub const MAX_DEPTH: usize = 64;
+
+/// Why (and where) a document was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset of the offending byte (input length for truncation).
+    pub offset: usize,
+    /// Static description of the violation.
+    pub msg: &'static str,
+}
+
+/// A parsed JSON value; strings borrow from the input when escape-free.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value<'a> {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number (strict grammar, parsed as f64).
+    Num(f64),
+    /// A string — borrowed when the raw bytes needed no unescaping.
+    Str(Cow<'a, str>),
+    /// An array.
+    Arr(Vec<Value<'a>>),
+    /// An object as key/value pairs in document order (keys borrow too).
+    Obj(Vec<(Cow<'a, str>, Value<'a>)>),
+}
+
+impl<'a> Value<'a> {
+    /// Object member by key (first match in document order).
+    pub fn get(&self, key: &str) -> Option<&Value<'a>> {
+        match self {
+            Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Element slice, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Value<'a>]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Shortest-form UTF-8 classification of a lead byte: `(continuation
+/// count, low bound, high bound)` where the bounds constrain the *first*
+/// continuation byte (later ones are always `0x80..=0xBF`). `None` for
+/// bytes that can never start a multi-byte sequence (stray continuation
+/// bytes, overlong prefixes `0xC0`/`0xC1`, and `0xF5..=0xFF`).
+fn utf8_class(b: u8) -> Option<(u8, u8, u8)> {
+    match b {
+        0xC2..=0xDF => Some((1, 0x80, 0xBF)),
+        0xE0 => Some((2, 0xA0, 0xBF)),
+        0xE1..=0xEC => Some((2, 0x80, 0xBF)),
+        0xED => Some((2, 0x80, 0x9F)),
+        0xEE..=0xEF => Some((2, 0x80, 0xBF)),
+        0xF0 => Some((3, 0x90, 0xBF)),
+        0xF1..=0xF3 => Some((3, 0x80, 0xBF)),
+        0xF4 => Some((3, 0x80, 0x8F)),
+        _ => None,
+    }
+}
+
+fn is_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\n' | b'\r')
+}
+
+// ---------------------------------------------------------------------------
+// Tree parser (borrowing)
+// ---------------------------------------------------------------------------
+
+/// Parse a complete document. Strings borrow from `input` when they
+/// contain no escapes; trailing whitespace is allowed, trailing data is
+/// not.
+pub fn parse(input: &[u8]) -> Result<Value<'_>, JsonError> {
+    let mut p = Parser { b: input, i: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing data after document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &'static str) -> JsonError {
+        JsonError { offset: self.i, msg }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && is_ws(self.b[self.i]) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                if depth >= MAX_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                self.obj(depth)
+            }
+            Some(b'[') => {
+                if depth >= MAX_DEPTH {
+                    return Err(self.err("nesting too deep"));
+                }
+                self.arr(depth)
+            }
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.literal(b"true", Value::Bool(true)),
+            Some(b'f') => self.literal(b"false", Value::Bool(false)),
+            Some(b'n') => self.literal(b"null", Value::Null),
+            Some(b'-' | b'0'..=b'9') => Ok(Value::Num(self.number()?)),
+            Some(_) => Err(self.err("expected a value")),
+            None => Err(self.err("truncated document")),
+        }
+    }
+
+    fn literal(&mut self, word: &'static [u8], v: Value<'a>) -> Result<Value<'a>, JsonError> {
+        if self.b.len() - self.i >= word.len() && &self.b[self.i..self.i + word.len()] == word {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn arr(&mut self, depth: usize) -> Result<Value<'a>, JsonError> {
+        self.i += 1; // '['
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(out));
+                }
+                Some(_) => return Err(self.err("expected ',' or ']'")),
+                None => return Err(self.err("truncated array")),
+            }
+        }
+    }
+
+    fn obj(&mut self, depth: usize) -> Result<Value<'a>, JsonError> {
+        self.i += 1; // '{'
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected object key"));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.i += 1;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            out.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(out));
+                }
+                Some(_) => return Err(self.err("expected ',' or '}'")),
+                None => return Err(self.err("truncated object")),
+            }
+        }
+    }
+
+    /// Strict number: `-? (0 | [1-9][0-9]*) (.[0-9]+)? ([eE][+-]?[0-9]+)?`.
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.i += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("bad number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("bad number fraction"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(self.err("bad number exponent"));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("number bytes are ascii");
+        s.parse::<f64>().map_err(|_| self.err("unparseable number"))
+    }
+
+    /// String body after the opening quote. Fast path: no escapes → the
+    /// value borrows the input slice verbatim (validated as UTF-8).
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.i += 1; // opening '"'
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.b.len() {
+            match self.b[j] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..j]).map_err(|e| JsonError {
+                        offset: start + e.valid_up_to(),
+                        msg: "invalid utf-8 in string",
+                    })?;
+                    self.i = j + 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                b'\\' => return self.string_slow(start),
+                c if c < 0x20 => {
+                    self.i = j;
+                    return Err(self.err("control byte in string"));
+                }
+                _ => j += 1,
+            }
+        }
+        self.i = j;
+        Err(self.err("truncated string"))
+    }
+
+    /// Escape-bearing slow path: decodes into an owned `String`.
+    fn string_slow(&mut self, start: usize) -> Result<Cow<'a, str>, JsonError> {
+        self.i = start;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err("truncated string"));
+            };
+            match c {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(Cow::Owned(out));
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("truncated escape"));
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            let ch = if (0xD800..=0xDBFF).contains(&cp) {
+                                // High surrogate: pair with a following
+                                // \uDC00..\uDFFF when present, else U+FFFD
+                                // (same policy as util::json).
+                                self.try_low_surrogate(cp)
+                            } else if (0xDC00..=0xDFFF).contains(&cp) {
+                                '\u{FFFD}'
+                            } else {
+                                char::from_u32(cp).unwrap_or('\u{FFFD}')
+                            };
+                            out.push(ch);
+                        }
+                        _ => {
+                            self.i -= 1;
+                            return Err(self.err("bad escape"));
+                        }
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("control byte in string")),
+                c if c < 0x80 => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                c => {
+                    let Some((n, lo, hi)) = utf8_class(c) else {
+                        return Err(self.err("invalid utf-8 in string"));
+                    };
+                    let n = n as usize;
+                    if self.i + n + 1 > self.b.len() {
+                        return Err(JsonError {
+                            offset: self.b.len(),
+                            msg: "truncated string",
+                        });
+                    }
+                    let seq = &self.b[self.i..self.i + n + 1];
+                    let cont_ok = seq[1] >= lo
+                        && seq[1] <= hi
+                        && seq[2..].iter().all(|&b| (0x80..=0xBF).contains(&b));
+                    if !cont_ok {
+                        return Err(self.err("invalid utf-8 in string"));
+                    }
+                    out.push_str(std::str::from_utf8(seq).expect("validated utf-8"));
+                    self.i += n + 1;
+                }
+            }
+        }
+    }
+
+    /// Peek a `\uXXXX` low surrogate right after a high one; consume and
+    /// combine when present.
+    fn try_low_surrogate(&mut self, hi: u32) -> char {
+        let b = self.b;
+        if self.i + 1 < b.len() && b[self.i] == b'\\' && b[self.i + 1] == b'u' {
+            let save = self.i;
+            self.i += 2;
+            if let Ok(lo) = self.hex4() {
+                if (0xDC00..=0xDFFF).contains(&lo) {
+                    let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                    return char::from_u32(cp).unwrap_or('\u{FFFD}');
+                }
+            }
+            // Not a low surrogate: rewind, leave it for the main loop.
+            self.i = save;
+        }
+        '\u{FFFD}'
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            self.i = self.b.len();
+            return Err(self.err("truncated \\u escape"));
+        }
+        let mut cp = 0u32;
+        for k in 0..4 {
+            let d = self.b[self.i + k];
+            let v = match d {
+                b'0'..=b'9' => d - b'0',
+                b'a'..=b'f' => d - b'a' + 10,
+                b'A'..=b'F' => d - b'A' + 10,
+                _ => {
+                    self.i += k;
+                    return Err(self.err("bad \\u escape"));
+                }
+            };
+            cp = cp * 16 + v as u32;
+        }
+        self.i += 4;
+        Ok(cp)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Push validator (resumable)
+// ---------------------------------------------------------------------------
+
+/// Number sub-state of [`JsonPush`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NumState {
+    Minus,
+    Zero,
+    Int,
+    Dot,
+    Frac,
+    Exp,
+    ExpSign,
+    ExpDigit,
+}
+
+impl NumState {
+    /// A number may legally end in this state.
+    fn terminal(self) -> bool {
+        matches!(self, NumState::Zero | NumState::Int | NumState::Frac | NumState::ExpDigit)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PushState {
+    /// Expecting a value.
+    Value,
+    /// Right after `[`: a value or `]`.
+    ValueOrClose,
+    /// A value just ended inside a container: `,` or the closer.
+    AfterValue,
+    /// Right after `{`: a key string or `}`.
+    KeyOrClose,
+    /// After `,` in an object: a key string.
+    Key,
+    /// After a key: `:`.
+    Colon,
+    /// Inside a string.
+    Str,
+    /// After a backslash.
+    StrEsc,
+    /// Inside `\uXXXX`, n hex digits remain.
+    StrHex(u8),
+    /// Inside a multi-byte UTF-8 sequence: remaining count + bounds for
+    /// the next byte.
+    Utf8(u8, u8, u8),
+    /// Inside a number.
+    Num(NumState),
+    /// Inside `true`/`false`/`null` at byte `pos`.
+    Lit(&'static [u8], u8),
+    /// Complete document seen; only whitespace may follow.
+    Done,
+}
+
+/// Resumable strict-JSON validator: feed bytes as they arrive off the
+/// socket, in segments of any size; the verdict is independent of the
+/// segmentation. Accepts exactly the documents [`parse`] accepts.
+#[derive(Debug, Clone)]
+pub struct JsonPush {
+    state: PushState,
+    /// Open containers, `b'['` / `b'{'`; capped at [`MAX_DEPTH`].
+    stack: Vec<u8>,
+    /// The string being scanned is an object key.
+    in_key: bool,
+    /// Bytes consumed so far (error offsets).
+    offset: usize,
+    err: Option<JsonError>,
+}
+
+impl Default for JsonPush {
+    fn default() -> JsonPush {
+        JsonPush::new()
+    }
+}
+
+impl JsonPush {
+    /// A fresh validator expecting a document.
+    pub fn new() -> JsonPush {
+        JsonPush {
+            state: PushState::Value,
+            stack: Vec::new(),
+            in_key: false,
+            offset: 0,
+            err: None,
+        }
+    }
+
+    /// Feed the next segment. The first violation is returned and sticky:
+    /// every later call reports the same error.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<(), JsonError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        for &b in bytes {
+            // A byte that terminates a number is re-examined in the
+            // post-value state; `step` consumes at most twice per byte.
+            loop {
+                match self.step(b) {
+                    Ok(true) => break,
+                    Ok(false) => continue,
+                    Err(e) => {
+                        self.err = Some(e);
+                        return Err(e);
+                    }
+                }
+            }
+            self.offset += 1;
+        }
+        Ok(())
+    }
+
+    /// End-of-input verdict: `Ok` iff the bytes fed so far form exactly
+    /// one complete document.
+    pub fn finish(&self) -> Result<(), JsonError> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        match self.state {
+            PushState::Done => Ok(()),
+            PushState::Num(ns) if ns.terminal() && self.stack.is_empty() => Ok(()),
+            _ => Err(JsonError {
+                offset: self.offset,
+                msg: "truncated document",
+            }),
+        }
+    }
+
+    /// The sticky error, if a violation was seen.
+    pub fn error(&self) -> Option<JsonError> {
+        self.err
+    }
+
+    fn fail(&self, msg: &'static str) -> Result<bool, JsonError> {
+        Err(JsonError {
+            offset: self.offset,
+            msg,
+        })
+    }
+
+    /// A value just completed: back to the enclosing container (or done).
+    fn close_value(&mut self) {
+        self.state = if self.stack.is_empty() {
+            PushState::Done
+        } else {
+            PushState::AfterValue
+        };
+    }
+
+    fn open(&mut self, c: u8) -> Result<bool, JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return self.fail("nesting too deep");
+        }
+        self.stack.push(c);
+        self.state = if c == b'[' {
+            PushState::ValueOrClose
+        } else {
+            PushState::KeyOrClose
+        };
+        Ok(true)
+    }
+
+    /// One byte. `Ok(true)` = consumed; `Ok(false)` = state advanced,
+    /// re-examine the same byte.
+    fn step(&mut self, b: u8) -> Result<bool, JsonError> {
+        match self.state {
+            PushState::Value | PushState::ValueOrClose => match b {
+                _ if is_ws(b) => Ok(true),
+                b'[' | b'{' => self.open(b),
+                b']' if self.state == PushState::ValueOrClose => {
+                    self.stack.pop();
+                    self.close_value();
+                    Ok(true)
+                }
+                b'"' => {
+                    self.state = PushState::Str;
+                    self.in_key = false;
+                    Ok(true)
+                }
+                b't' => {
+                    self.state = PushState::Lit(b"true", 1);
+                    Ok(true)
+                }
+                b'f' => {
+                    self.state = PushState::Lit(b"false", 1);
+                    Ok(true)
+                }
+                b'n' => {
+                    self.state = PushState::Lit(b"null", 1);
+                    Ok(true)
+                }
+                b'-' => {
+                    self.state = PushState::Num(NumState::Minus);
+                    Ok(true)
+                }
+                b'0' => {
+                    self.state = PushState::Num(NumState::Zero);
+                    Ok(true)
+                }
+                b'1'..=b'9' => {
+                    self.state = PushState::Num(NumState::Int);
+                    Ok(true)
+                }
+                _ => self.fail("expected a value"),
+            },
+            PushState::KeyOrClose => match b {
+                _ if is_ws(b) => Ok(true),
+                b'"' => {
+                    self.state = PushState::Str;
+                    self.in_key = true;
+                    Ok(true)
+                }
+                b'}' => {
+                    self.stack.pop();
+                    self.close_value();
+                    Ok(true)
+                }
+                _ => self.fail("expected object key"),
+            },
+            PushState::Key => match b {
+                _ if is_ws(b) => Ok(true),
+                b'"' => {
+                    self.state = PushState::Str;
+                    self.in_key = true;
+                    Ok(true)
+                }
+                _ => self.fail("expected object key"),
+            },
+            PushState::Colon => match b {
+                _ if is_ws(b) => Ok(true),
+                b':' => {
+                    self.state = PushState::Value;
+                    Ok(true)
+                }
+                _ => self.fail("expected ':'"),
+            },
+            PushState::AfterValue => match (b, self.stack.last()) {
+                _ if is_ws(b) => Ok(true),
+                (b',', Some(b'[')) => {
+                    self.state = PushState::Value;
+                    Ok(true)
+                }
+                (b']', Some(b'[')) => {
+                    self.stack.pop();
+                    self.close_value();
+                    Ok(true)
+                }
+                (b',', Some(b'{')) => {
+                    self.state = PushState::Key;
+                    Ok(true)
+                }
+                (b'}', Some(b'{')) => {
+                    self.stack.pop();
+                    self.close_value();
+                    Ok(true)
+                }
+                _ => self.fail("expected ',' or close"),
+            },
+            PushState::Str => match b {
+                b'"' => {
+                    if self.in_key {
+                        self.in_key = false;
+                        self.state = PushState::Colon;
+                    } else {
+                        self.close_value();
+                    }
+                    Ok(true)
+                }
+                b'\\' => {
+                    self.state = PushState::StrEsc;
+                    Ok(true)
+                }
+                _ if b < 0x20 => self.fail("control byte in string"),
+                _ if b < 0x80 => Ok(true),
+                _ => match utf8_class(b) {
+                    Some((n, lo, hi)) => {
+                        self.state = PushState::Utf8(n, lo, hi);
+                        Ok(true)
+                    }
+                    None => self.fail("invalid utf-8 in string"),
+                },
+            },
+            PushState::StrEsc => match b {
+                b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {
+                    self.state = PushState::Str;
+                    Ok(true)
+                }
+                b'u' => {
+                    self.state = PushState::StrHex(4);
+                    Ok(true)
+                }
+                _ => self.fail("bad escape"),
+            },
+            PushState::StrHex(n) => match b {
+                b'0'..=b'9' | b'a'..=b'f' | b'A'..=b'F' => {
+                    self.state = if n == 1 {
+                        PushState::Str
+                    } else {
+                        PushState::StrHex(n - 1)
+                    };
+                    Ok(true)
+                }
+                _ => self.fail("bad \\u escape"),
+            },
+            PushState::Utf8(left, lo, hi) => {
+                if b < lo || b > hi {
+                    return self.fail("invalid utf-8 in string");
+                }
+                self.state = if left == 1 {
+                    PushState::Str
+                } else {
+                    PushState::Utf8(left - 1, 0x80, 0xBF)
+                };
+                Ok(true)
+            }
+            PushState::Num(ns) => self.step_num(ns, b),
+            PushState::Lit(word, pos) => {
+                if (pos as usize) < word.len() && b == word[pos as usize] {
+                    if pos as usize + 1 == word.len() {
+                        self.close_value();
+                    } else {
+                        self.state = PushState::Lit(word, pos + 1);
+                    }
+                    Ok(true)
+                } else {
+                    self.fail("bad literal")
+                }
+            }
+            PushState::Done => {
+                if is_ws(b) {
+                    Ok(true)
+                } else {
+                    self.fail("trailing data after document")
+                }
+            }
+        }
+    }
+
+    fn step_num(&mut self, ns: NumState, b: u8) -> Result<bool, JsonError> {
+        use NumState::*;
+        let next = match (ns, b) {
+            (Minus, b'0') => Some(Zero),
+            (Minus, b'1'..=b'9') => Some(Int),
+            (Zero, b'.') | (Int, b'.') => Some(Dot),
+            (Zero, b'e' | b'E') | (Int, b'e' | b'E') => Some(Exp),
+            (Int, b'0'..=b'9') => Some(Int),
+            (Dot, b'0'..=b'9') | (Frac, b'0'..=b'9') => Some(Frac),
+            (Frac, b'e' | b'E') => Some(Exp),
+            (Exp, b'+' | b'-') => Some(ExpSign),
+            (Exp, b'0'..=b'9') | (ExpSign, b'0'..=b'9') | (ExpDigit, b'0'..=b'9') => {
+                Some(ExpDigit)
+            }
+            _ => None,
+        };
+        match next {
+            Some(s) => {
+                self.state = PushState::Num(s);
+                Ok(true)
+            }
+            None if ns.terminal() => {
+                // The number ends here; the byte belongs to the enclosing
+                // context — re-examine it there.
+                self.close_value();
+                Ok(false)
+            }
+            None => self.fail("bad number"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accept(s: &str) -> bool {
+        parse(s.as_bytes()).is_ok()
+    }
+
+    fn push_accept(data: &[u8]) -> bool {
+        let mut jp = JsonPush::new();
+        jp.feed(data).is_ok() && jp.finish().is_ok()
+    }
+
+    #[test]
+    fn strict_grammar_verdicts() {
+        for good in [
+            "null",
+            "true",
+            " false ",
+            "0",
+            "-0",
+            "12.5e-3",
+            "1E+9",
+            "\"\"",
+            "\"a\\n\\u0041\"",
+            "[]",
+            "[1,2,3]",
+            "{\"a\":[{\"b\":null}],\"a\":2}",
+            "\"\\ud83d\\ude00\"",
+            "\"\\ud800\"",
+        ] {
+            assert!(accept(good), "must accept {good:?}");
+            assert!(push_accept(good.as_bytes()), "push must accept {good:?}");
+        }
+        for bad in [
+            "", " ", "01", "1.", ".5", "+1", "-", "1e", "1e+", "tru", "nulll", "[1,]",
+            "{\"a\":}", "{\"a\" 1}", "{a:1}", "[1 2]", "\"\\x\"", "\"", "[", "{\"a\":1",
+            "1 2", "\"\u{0007}\"",
+        ] {
+            assert!(!accept(bad), "must reject {bad:?}");
+            assert!(!push_accept(bad.as_bytes()), "push must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn borrows_escape_free_strings() {
+        let doc = b"{\"key\":\"plain value\"}";
+        let v = parse(doc).unwrap();
+        let Value::Obj(pairs) = &v else { panic!("obj") };
+        assert!(matches!(pairs[0].0, Cow::Borrowed(_)), "key must borrow");
+        let Value::Str(s) = &pairs[0].1 else { panic!("str") };
+        assert!(matches!(s, Cow::Borrowed(_)), "escape-free value must borrow");
+        let v2 = parse(b"\"a\\tb\"").unwrap();
+        let Value::Str(s2) = &v2 else { panic!("str") };
+        assert!(matches!(s2, Cow::Owned(_)), "escaped value must own");
+        assert_eq!(&**s2, "a\tb");
+    }
+
+    #[test]
+    fn depth_limit_is_shared() {
+        let deep_ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        let deep_bad = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(accept(&deep_ok));
+        assert!(push_accept(deep_ok.as_bytes()));
+        assert!(!accept(&deep_bad));
+        assert!(!push_accept(deep_bad.as_bytes()));
+    }
+
+    #[test]
+    fn push_is_split_invariant() {
+        let doc = b"{\"p\":[1,2,-3.5e2],\"t\":\"x\\u00e9\",\"s\":true}";
+        let one = push_accept(doc);
+        for cut in 0..=doc.len() {
+            let mut jp = JsonPush::new();
+            let a = jp.feed(&doc[..cut]);
+            let b = jp.feed(&doc[cut..]);
+            assert_eq!(a.and(b).and(jp.finish()).is_ok(), one, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn utf8_shortest_form_enforced() {
+        // Overlong '/' (0xC0 0xAF), surrogate half (0xED 0xA0 0x80),
+        // out-of-range (0xF5 ...), bare continuation.
+        for bad in [
+            &b"\"\xC0\xAF\""[..],
+            &b"\"\xED\xA0\x80\""[..],
+            &b"\"\xF5\x80\x80\x80\""[..],
+            &b"\"\x80\""[..],
+            &b"\"\xE2\x82\""[..],
+        ] {
+            assert!(parse(bad).is_err(), "must reject {bad:?}");
+            assert!(!push_accept(bad), "push must reject {bad:?}");
+        }
+        let good = "\"\u{20AC}\u{10348}é\"".as_bytes();
+        assert!(parse(good).is_ok());
+        assert!(push_accept(good));
+    }
+}

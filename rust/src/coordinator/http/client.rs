@@ -1,0 +1,223 @@
+//! Minimal blocking HTTP/1.1 client for the perf harness and the
+//! socket-level integration tests (zero-dependency like the server).
+//!
+//! Supports exactly what the front end emits: `Content-Length` bodies
+//! and `Transfer-Encoding: chunked` streams. Chunk arrival times are
+//! recorded relative to the request send, which is how the load-test
+//! scenario measures client-side TTFT / time-to-last-token. Reads are
+//! buffered byte-exactly, so one connection can read back-to-back
+//! (keep-alive / pipelined) responses without over-consuming.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// A fully received response.
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    /// Status code from the status line.
+    pub status: u16,
+    /// Header `(name, value)` pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (chunked framing already decoded).
+    pub body: Vec<u8>,
+    /// The response used chunked transfer encoding.
+    pub chunked: bool,
+    /// Per-chunk arrival offsets in ms, measured from the last `send`
+    /// (first entry = client-side TTFT for streamed generations).
+    pub chunk_ms: Vec<f64>,
+    /// Raw undecoded response bytes (bitwise-equality torture tests).
+    pub raw: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First value of header `name`, ASCII-case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A buffered client connection.
+#[derive(Debug)]
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+    sent_at: Instant,
+}
+
+impl HttpClient {
+    /// Connect to `addr`; `timeout` bounds connect and every read.
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(HttpClient {
+            stream,
+            buf: Vec::new(),
+            pos: 0,
+            sent_at: Instant::now(),
+        })
+    }
+
+    /// Write raw request bytes and stamp the send instant.
+    pub fn send(&mut self, request: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(request)?;
+        self.sent_at = Instant::now();
+        Ok(())
+    }
+
+    /// Raw stream access (torture tests dribble partial writes).
+    pub fn stream(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Read exactly one response (head + framed body).
+    pub fn read_response(&mut self) -> std::io::Result<ClientResponse> {
+        let raw_start = self.pos;
+        let status_line = self.take_line()?;
+        let status = parse_status_line(&status_line)?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.take_line()?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some(colon) = line.iter().position(|&b| b == b':') {
+                let name = String::from_utf8_lossy(&line[..colon]).into_owned();
+                let value = String::from_utf8_lossy(&line[colon + 1..])
+                    .trim()
+                    .to_string();
+                headers.push((name, value));
+            }
+        }
+        let te_chunked = headers
+            .iter()
+            .any(|(n, v)| n.eq_ignore_ascii_case("transfer-encoding") && v.contains("chunked"));
+        let mut body = Vec::new();
+        let mut chunk_ms = Vec::new();
+        if te_chunked {
+            loop {
+                let size_line = self.take_line()?;
+                let size = usize::from_str_radix(
+                    std::str::from_utf8(&size_line)
+                        .map_err(|_| bad_data("chunk size not utf-8"))?
+                        .trim(),
+                    16,
+                )
+                .map_err(|_| bad_data("bad chunk size"))?;
+                if size == 0 {
+                    let crlf = self.take_line()?;
+                    if !crlf.is_empty() {
+                        return Err(bad_data("bad chunk terminator"));
+                    }
+                    break;
+                }
+                let payload = self.take_n(size)?;
+                chunk_ms.push(self.sent_at.elapsed().as_secs_f64() * 1e3);
+                body.extend_from_slice(&payload);
+                let crlf = self.take_n(2)?;
+                if crlf != b"\r\n" {
+                    return Err(bad_data("chunk not CRLF-terminated"));
+                }
+            }
+        } else {
+            let len = headers
+                .iter()
+                .find(|(n, _)| n.eq_ignore_ascii_case("content-length"))
+                .and_then(|(_, v)| v.parse::<usize>().ok())
+                .unwrap_or(0);
+            body = self.take_n(len)?;
+        }
+        let raw = self.buf[raw_start..self.pos].to_vec();
+        // Drop consumed bytes so long-lived connections don't grow the
+        // buffer without bound.
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+        Ok(ClientResponse {
+            status,
+            headers,
+            body,
+            chunked: te_chunked,
+            chunk_ms,
+            raw,
+        })
+    }
+
+    /// One full round trip on this connection.
+    pub fn roundtrip(&mut self, request: &[u8]) -> std::io::Result<ClientResponse> {
+        self.send(request)?;
+        self.read_response()
+    }
+
+    fn fill(&mut self) -> std::io::Result<()> {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed mid-response",
+            ));
+        }
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+
+    /// Consume through the next CRLF; returns the line without it.
+    fn take_line(&mut self) -> std::io::Result<Vec<u8>> {
+        loop {
+            let hay = &self.buf[self.pos..];
+            if let Some(i) = hay.windows(2).position(|w| w == b"\r\n") {
+                let line = hay[..i].to_vec();
+                self.pos += i + 2;
+                return Ok(line);
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Consume exactly `n` bytes.
+    fn take_n(&mut self, n: usize) -> std::io::Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            self.fill()?;
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+}
+
+fn bad_data(msg: &'static str) -> std::io::Error {
+    std::io::Error::new(ErrorKind::InvalidData, msg)
+}
+
+fn parse_status_line(line: &[u8]) -> std::io::Result<u16> {
+    let s = std::str::from_utf8(line).map_err(|_| bad_data("status line not utf-8"))?;
+    let code = s
+        .split(' ')
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| bad_data("bad status line"))?;
+    Ok(code)
+}
+
+/// Build a `POST /generate` request with the given JSON body.
+pub fn generate_request(body: &str, close: bool) -> Vec<u8> {
+    let conn = if close { "close" } else { "keep-alive" };
+    format!(
+        "POST /generate HTTP/1.1\r\nHost: dtrnet\r\nConnection: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        conn,
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+/// Build a `GET` request for `target`.
+pub fn get_request(target: &str, close: bool) -> Vec<u8> {
+    let conn = if close { "close" } else { "keep-alive" };
+    format!("GET {target} HTTP/1.1\r\nHost: dtrnet\r\nConnection: {conn}\r\n\r\n").into_bytes()
+}

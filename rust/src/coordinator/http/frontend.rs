@@ -1,0 +1,927 @@
+//! The TCP serving front end: `serve --listen ADDR`.
+//!
+//! Thread model (no `Send`/`Sync` bound on [`Backend`] needed):
+//!
+//! * the **engine loop** runs on the caller's thread — the thread that
+//!   built the backend — pumping [`super::super::server::Server`] steps
+//!   and fanning generated tokens out to per-request channels;
+//! * an **accept thread** polls the listener (non-blocking + stop flag)
+//!   and spawns one **connection thread** per socket, each owning its
+//!   [`PushParser`] and feeding complete requests to the engine over an
+//!   mpsc channel.
+//!
+//! Backpressure is the engine's own admission machinery: the connection
+//! thread submits and the engine answers `Accepted` or `Rejected`
+//! within one engine step (submissions are drained before every step),
+//! so an overloaded server returns **429 + Retry-After** promptly
+//! instead of hanging — `rejected` in the report counts them, keeping
+//! `completed + evicted + rejected == submissions` closed at the HTTP
+//! edge too.
+//!
+//! Responses deliberately carry no `Date` header: a generation under
+//! greedy sampling is a pure function of (weights, prompt, params,
+//! seed), so whole response byte streams are reproducible and the
+//! torture tests compare them bitwise across request segmentations.
+//!
+//! Status mapping (DESIGN.md §Network front end): parse failures map
+//! via [`HttpError::status`] (400/411/413/431/501/505), engine
+//! validation → 400, queue-full → 429, connection cap → 503, read
+//! deadline → 408, engine stall → 503, engine death → 500.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::super::batcher::Request;
+use super::super::server::{ServeReport, Server, ServerConfig, SubmitError};
+use super::bjson;
+use super::parser::{HttpError, Limits, ParsedRequest, PushParser};
+use crate::metrics::JsonlWriter;
+use crate::runtime::Backend;
+use crate::telemetry::{self, ArgValue};
+use crate::util::json::Json;
+
+/// Front-end configuration (`serve --listen` flags).
+#[derive(Debug, Clone)]
+pub struct ListenConfig {
+    /// Per-connection parse limits.
+    pub limits: Limits,
+    /// Concurrent-connection cap; excess connections get an immediate
+    /// 503 and a close.
+    pub max_conns: usize,
+    /// Per-read deadline in ms. Firing mid-request → 408; firing on an
+    /// idle keep-alive connection → silent close.
+    pub read_timeout_ms: u64,
+    /// How long a connection waits on the engine for the next stream
+    /// event before giving up (503 / stream abort).
+    pub stream_timeout_ms: u64,
+    /// Stop after this many responses (0 = run until stopped) — gives
+    /// CI a deterministic exit.
+    pub max_requests: u64,
+}
+
+impl Default for ListenConfig {
+    fn default() -> ListenConfig {
+        ListenConfig {
+            limits: Limits::default(),
+            max_conns: 64,
+            read_timeout_ms: 5_000,
+            stream_timeout_ms: 60_000,
+            max_requests: 0,
+        }
+    }
+}
+
+/// Socket-edge counters, merged into the run report.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Connections accepted (including ones refused at the cap).
+    pub connections: u64,
+    /// Connections refused with 503 at the concurrency cap.
+    pub conns_refused: u64,
+    /// Complete HTTP requests parsed.
+    pub requests: u64,
+    /// Responses written, by status code.
+    pub by_status: BTreeMap<u16, u64>,
+    /// Streams that terminated a connection (push-parser rejections and
+    /// mid-body JSON rejections).
+    pub parse_errors: u64,
+    /// Connections the peer dropped mid-request (no response owed).
+    pub early_closes: u64,
+    /// Bytes read off accepted sockets.
+    pub bytes_in: u64,
+    /// Bytes written to accepted sockets.
+    pub bytes_out: u64,
+}
+
+impl NetStats {
+    /// Responses with this status.
+    pub fn status(&self, code: u16) -> u64 {
+        self.by_status.get(&code).copied().unwrap_or(0)
+    }
+
+    /// JSON form (the report's `net` block).
+    pub fn to_json(&self) -> Json {
+        let statuses: BTreeMap<String, Json> = self
+            .by_status
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+            .collect();
+        Json::from_pairs(vec![
+            ("connections", Json::Num(self.connections as f64)),
+            ("conns_refused", Json::Num(self.conns_refused as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("by_status", Json::Obj(statuses)),
+            ("parse_errors", Json::Num(self.parse_errors as f64)),
+            ("early_closes", Json::Num(self.early_closes as f64)),
+            ("bytes_in", Json::Num(self.bytes_in as f64)),
+            ("bytes_out", Json::Num(self.bytes_out as f64)),
+        ])
+    }
+}
+
+/// Full `serve --listen` run summary: the engine report plus the
+/// socket-edge counters.
+#[derive(Debug, Clone)]
+pub struct HttpReport {
+    /// The engine-side serving report.
+    pub engine: ServeReport,
+    /// The socket-edge counters.
+    pub net: NetStats,
+}
+
+impl HttpReport {
+    /// The engine report's JSON with a `net` block added.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.engine.to_json();
+        j.set("net", self.net.to_json());
+        j
+    }
+}
+
+/// Cancel handle for a running front end (safe to clone across threads).
+#[derive(Debug, Clone)]
+pub struct StopHandle(Arc<AtomicBool>);
+
+impl StopHandle {
+    /// Ask the front end to stop accepting and wind down.
+    pub fn stop(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// A bound-but-not-yet-running HTTP front end.
+#[derive(Debug)]
+pub struct NetFrontend {
+    listener: TcpListener,
+    cfg: ListenConfig,
+    stop: Arc<AtomicBool>,
+}
+
+/// State shared between the accept loop and connection threads.
+struct Shared {
+    cfg: ListenConfig,
+    stop: Arc<AtomicBool>,
+    stats: Mutex<NetStats>,
+    responded: AtomicU64,
+    active_conns: AtomicUsize,
+}
+
+/// A generate submission from a connection thread to the engine loop.
+struct Submission {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    temperature: f32,
+    reply: mpsc::Sender<StreamEvent>,
+}
+
+/// Engine → connection stream protocol.
+enum StreamEvent {
+    /// Admitted with this engine request id.
+    Accepted {
+        /// Engine-assigned request id.
+        id: u64,
+    },
+    /// Refused before admission.
+    Rejected {
+        /// `true` for backpressure (429), `false` for validation (400).
+        retryable: bool,
+        /// Machine-readable reason.
+        reason: &'static str,
+    },
+    /// One generated token.
+    Token(i32),
+    /// The request retired.
+    Done {
+        /// Finish reason (`completed`, `kv_exhausted`, …).
+        finish: &'static str,
+        /// Total generated tokens.
+        n_tokens: usize,
+    },
+}
+
+static REQ_SPAN_ID: AtomicU64 = AtomicU64::new(0);
+
+impl NetFrontend {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    pub fn bind(addr: &str, cfg: ListenConfig) -> Result<NetFrontend> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("cannot bind {addr}: {e}"))?;
+        Ok(NetFrontend {
+            listener,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle that stops the front end from another thread.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle(Arc::clone(&self.stop))
+    }
+
+    /// Serve until stopped ([`StopHandle`], or
+    /// [`ListenConfig::max_requests`] responses). The engine runs on
+    /// *this* thread (the backend never crosses threads); accept and
+    /// connection handling run on their own threads and wind down
+    /// before this returns.
+    pub fn run(
+        self,
+        backend: &dyn Backend,
+        scfg: ServerConfig,
+        metrics: Option<JsonlWriter>,
+    ) -> Result<HttpReport> {
+        let t0 = Instant::now();
+        self.listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            cfg: self.cfg.clone(),
+            stop: Arc::clone(&self.stop),
+            stats: Mutex::new(NetStats::default()),
+            responded: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<Submission>();
+        let accept = {
+            let sh = Arc::clone(&shared);
+            let listener = self.listener;
+            thread::spawn(move || accept_loop(listener, tx, sh))
+        };
+        let engine = engine_loop(backend, scfg, metrics, rx, t0);
+        // Engine exit (error or drained) implies shutdown; make sure the
+        // accept thread sees it and join everything.
+        self.stop.store(true, Ordering::SeqCst);
+        accept
+            .join()
+            .map_err(|_| anyhow!("accept thread panicked"))?;
+        let net = lock_stats(&shared).clone();
+        Ok(HttpReport {
+            engine: engine?,
+            net,
+        })
+    }
+}
+
+/// Stats access that survives a poisoned mutex (a panicking connection
+/// thread must not wedge the report).
+fn lock_stats(sh: &Shared) -> std::sync::MutexGuard<'_, NetStats> {
+    match sh.stats.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn stat(sh: &Shared, f: impl FnOnce(&mut NetStats)) {
+    f(&mut lock_stats(sh));
+}
+
+// ---------------------------------------------------------------------------
+// Engine loop (caller thread)
+// ---------------------------------------------------------------------------
+
+struct Sink {
+    tx: mpsc::Sender<StreamEvent>,
+    /// Tokens already streamed.
+    sent: usize,
+    /// The receiving connection went away; keep generating (the slot
+    /// retires normally, no leak) but stop sending.
+    dead: bool,
+}
+
+fn engine_loop(
+    backend: &dyn Backend,
+    scfg: ServerConfig,
+    metrics: Option<JsonlWriter>,
+    rx: mpsc::Receiver<Submission>,
+    t0: Instant,
+) -> Result<ServeReport> {
+    let mut srv = Server::new(backend, scfg)?;
+    if let Some(m) = metrics {
+        srv.set_metrics_log(m);
+    }
+    let mut sinks: BTreeMap<u64, Sink> = BTreeMap::new();
+    let mut next_id: u64 = 1;
+    let mut cursor = 0usize;
+    let mut open = true;
+    loop {
+        // Drain every pending submission before stepping, so queue-full
+        // rejections surface within one step of latency.
+        while open {
+            match rx.try_recv() {
+                Ok(sub) => admit(&mut srv, sub, &mut next_id, &mut sinks),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if srv.batcher.idle() {
+            if !open {
+                break;
+            }
+            // Idle: block briefly for the next submission.
+            match rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(sub) => admit(&mut srv, sub, &mut next_id, &mut sinks),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+            continue;
+        }
+        srv.step()?;
+        // Stream freshly generated tokens to live sinks.
+        for rs in srv.batcher.active.iter().flatten() {
+            if let Some(sink) = sinks.get_mut(&rs.req.id) {
+                for &t in &rs.generated[sink.sent..] {
+                    if !sink.dead && sink.tx.send(StreamEvent::Token(t)).is_err() {
+                        sink.dead = true;
+                    }
+                }
+                sink.sent = rs.generated.len();
+            }
+        }
+        // Flush requests that retired this step.
+        let recs = srv.finished_since(cursor).to_vec();
+        cursor += recs.len();
+        for r in &recs {
+            let Some(sink) = sinks.remove(&r.id) else {
+                continue;
+            };
+            if sink.dead {
+                continue;
+            }
+            let mut ok = true;
+            for &t in r.tokens.get(sink.sent..).unwrap_or(&[]) {
+                if sink.tx.send(StreamEvent::Token(t)).is_err() {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                let _ = sink.tx.send(StreamEvent::Done {
+                    finish: r.finish.as_str(),
+                    n_tokens: r.tokens.len(),
+                });
+            }
+        }
+    }
+    Ok(srv.report_now(t0.elapsed().as_secs_f64()))
+}
+
+fn admit(
+    srv: &mut Server<'_>,
+    sub: Submission,
+    next_id: &mut u64,
+    sinks: &mut BTreeMap<u64, Sink>,
+) {
+    let id = *next_id;
+    let req = Request {
+        id,
+        prompt: sub.prompt,
+        max_new_tokens: sub.max_new_tokens,
+        temperature: sub.temperature,
+        arrival: Instant::now(),
+    };
+    match srv.try_submit(req) {
+        Ok(()) => {
+            *next_id += 1;
+            let _ = sub.reply.send(StreamEvent::Accepted { id });
+            sinks.insert(
+                id,
+                Sink {
+                    tx: sub.reply,
+                    sent: 0,
+                    dead: false,
+                },
+            );
+        }
+        Err(SubmitError::QueueFull) => {
+            let _ = sub.reply.send(StreamEvent::Rejected {
+                retryable: true,
+                reason: "queue full",
+            });
+        }
+        Err(SubmitError::Invalid(reason)) => {
+            let _ = sub.reply.send(StreamEvent::Rejected {
+                retryable: false,
+                reason,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop + connection threads
+// ---------------------------------------------------------------------------
+
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Submission>, sh: Arc<Shared>) {
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut conn_id: u64 = 0;
+    while !sh.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                conn_id += 1;
+                stat(&sh, |s| s.connections += 1);
+                if sh.active_conns.load(Ordering::SeqCst) >= sh.cfg.max_conns {
+                    refuse_at_cap(stream, &sh);
+                    continue;
+                }
+                sh.active_conns.fetch_add(1, Ordering::SeqCst);
+                let tx = tx.clone();
+                let sh2 = Arc::clone(&sh);
+                handles.push(thread::spawn(move || {
+                    handle_conn(stream, peer, conn_id, tx, &sh2);
+                    sh2.active_conns.fetch_sub(1, Ordering::SeqCst);
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                handles.retain(|h| !h.is_finished());
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    // `tx` drops here: once every connection is done, the engine's
+    // receiver disconnects and the engine loop drains out.
+}
+
+fn refuse_at_cap(mut stream: TcpStream, sh: &Shared) {
+    stat(sh, |s| s.conns_refused += 1);
+    let body = "{\"error\":\"too many connections\"}";
+    let resp = simple_response(503, body, false, &[("Retry-After", "1")]);
+    let _ = stream.write_all(&resp);
+    stat(sh, |s| {
+        s.bytes_out += resp.len() as u64;
+        *s.by_status.entry(503).or_insert(0) += 1;
+    });
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    peer: SocketAddr,
+    conn_id: u64,
+    tx: mpsc::Sender<Submission>,
+    sh: &Shared,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(sh.cfg.read_timeout_ms)));
+    telemetry::async_begin(
+        "http_conn",
+        conn_id,
+        vec![("peer", ArgValue::from(peer.to_string().as_str()))],
+    );
+    let mut parser = PushParser::new(sh.cfg.limits);
+    let mut body_check: Option<bjson::JsonPush> = None;
+    let mut continue_handled = false;
+    let mut served: u64 = 0;
+    let mut buf = [0u8; 4096];
+    'conn: loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match stream.read(&mut buf) {
+            Ok(0) => {
+                if parser.mid_request() {
+                    stat(sh, |s| s.early_closes += 1);
+                }
+                break;
+            }
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if parser.mid_request() {
+                    // Read deadline fired with a request in flight.
+                    write_error(&mut stream, sh, 408, "read deadline", &[]);
+                }
+                break;
+            }
+            Err(_) => break,
+        };
+        stat(sh, |s| s.bytes_in += n as u64);
+        if let Err(e) = parser.push(&buf[..n]) {
+            reject_stream(&mut stream, sh, e);
+            break;
+        }
+        // Interim 100 Continue once the head of an expecting request is
+        // parsed and its body is still outstanding.
+        if !continue_handled {
+            if let Some(h) = parser.head() {
+                if h.expect_continue && !parser.ready() {
+                    let _ = write_counted(&mut stream, sh, b"HTTP/1.1 100 Continue\r\n\r\n");
+                }
+                continue_handled = true;
+            }
+        }
+        // Incremental JSON validation while a generate body streams in:
+        // cut hopeless bodies short instead of buffering Content-Length
+        // bytes of garbage.
+        if let Some(h) = parser.head() {
+            if h.method == "POST" && h.target == "/generate" && !parser.ready() {
+                let jp = body_check.get_or_insert_with(bjson::JsonPush::new);
+                let fresh = parser.body_new_bytes();
+                if !fresh.is_empty() && jp.feed(fresh).is_err() {
+                    stat(sh, |s| s.parse_errors += 1);
+                    write_error(&mut stream, sh, 400, "malformed json body", &[]);
+                    break;
+                }
+            }
+        }
+        while let Some(req) = parser.take() {
+            body_check = None;
+            continue_handled = false;
+            stat(sh, |s| s.requests += 1);
+            served += 1;
+            let keep = respond(&mut stream, sh, &tx, &req);
+            if !keep || sh.stop.load(Ordering::SeqCst) {
+                break 'conn;
+            }
+        }
+        if let Some(e) = parser.failure() {
+            // Pipelined bytes behind a completed request went bad.
+            reject_stream(&mut stream, sh, e);
+            break;
+        }
+    }
+    telemetry::async_end("http_conn", conn_id, vec![("requests", ArgValue::from(served))]);
+}
+
+/// The byte stream is unsalvageable: respond with the mapped status and
+/// let the caller close.
+fn reject_stream(stream: &mut TcpStream, sh: &Shared, e: HttpError) {
+    stat(sh, |s| s.parse_errors += 1);
+    telemetry::instant(
+        "http_reject",
+        vec![
+            ("status", ArgValue::from(e.status() as usize)),
+            ("reason", ArgValue::from(e.reason())),
+        ],
+    );
+    write_error(stream, sh, e.status(), e.reason(), &[]);
+}
+
+/// Route one parsed request; returns whether the connection may be kept
+/// alive.
+fn respond(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    tx: &mpsc::Sender<Submission>,
+    req: &ParsedRequest,
+) -> bool {
+    let rid = REQ_SPAN_ID.fetch_add(1, Ordering::SeqCst) + 1;
+    let head = req.head();
+    telemetry::async_begin(
+        "http_request",
+        rid,
+        vec![
+            ("method", ArgValue::from(head.method.as_str())),
+            ("target", ArgValue::from(head.target.as_str())),
+        ],
+    );
+    let keep = !head.close;
+    let (status, keep) = match (head.method.as_str(), head.target.as_str()) {
+        ("GET", "/health") => {
+            write_response(stream, sh, 200, "{\"ok\":true}", keep, &[]);
+            (200, keep)
+        }
+        ("POST", "/generate") => respond_generate(stream, sh, tx, req, keep),
+        (_, "/health") => {
+            write_error(stream, sh, 405, "method not allowed", &[("Allow", "GET")]);
+            (405, keep)
+        }
+        (_, "/generate") => {
+            write_error(stream, sh, 405, "method not allowed", &[("Allow", "POST")]);
+            (405, keep)
+        }
+        _ => {
+            write_error(stream, sh, 404, "not found", &[]);
+            (404, keep)
+        }
+    };
+    telemetry::async_end(
+        "http_request",
+        rid,
+        vec![("status", ArgValue::from(status as usize))],
+    );
+    keep
+}
+
+/// Validated generate parameters extracted from the JSON body.
+struct GenParams {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    temperature: f32,
+    stream: bool,
+}
+
+fn extract_generate(v: &bjson::Value<'_>) -> Result<GenParams, &'static str> {
+    let bjson::Value::Obj(pairs) = v else {
+        return Err("body must be a json object");
+    };
+    let mut prompt: Option<Vec<i32>> = None;
+    let mut text: Option<Vec<i32>> = None;
+    let mut max_new_tokens = 16usize;
+    let mut temperature = 0.0f32;
+    let mut stream = false;
+    for (key, val) in pairs {
+        match key.as_ref() {
+            "prompt" => {
+                let arr = val.as_arr().ok_or("prompt must be an array of token ids")?;
+                let mut toks = Vec::with_capacity(arr.len());
+                for t in arr {
+                    let f = t.as_f64().ok_or("prompt tokens must be integers")?;
+                    if f.fract() != 0.0 || !(-2147483648.0..=2147483647.0).contains(&f) {
+                        return Err("prompt tokens must be integers");
+                    }
+                    toks.push(f as i32);
+                }
+                prompt = Some(toks);
+            }
+            "text" => {
+                // Byte-level tokenization: presets use a 256-way vocab,
+                // so raw bytes are the token ids.
+                let s = val.as_str().ok_or("text must be a string")?;
+                text = Some(s.bytes().map(i32::from).collect());
+            }
+            "max_new_tokens" => {
+                let f = val.as_f64().ok_or("max_new_tokens must be an integer")?;
+                if f.fract() != 0.0 || !(0.0..=1e9).contains(&f) {
+                    return Err("max_new_tokens must be an integer");
+                }
+                max_new_tokens = f as usize;
+            }
+            "temperature" => {
+                let f = val.as_f64().ok_or("temperature must be a number")?;
+                if !f.is_finite() || f < 0.0 {
+                    return Err("temperature must be finite and non-negative");
+                }
+                temperature = f as f32;
+            }
+            "stream" => {
+                stream = val.as_bool().ok_or("stream must be a boolean")?;
+            }
+            _ => return Err("unknown field"),
+        }
+    }
+    let prompt = match (prompt, text) {
+        (Some(_), Some(_)) => return Err("prompt and text are mutually exclusive"),
+        (Some(p), None) => p,
+        (None, Some(t)) => t,
+        (None, None) => return Err("missing prompt"),
+    };
+    Ok(GenParams {
+        prompt,
+        max_new_tokens,
+        temperature,
+        stream,
+    })
+}
+
+fn respond_generate(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    tx: &mpsc::Sender<Submission>,
+    req: &ParsedRequest,
+    keep: bool,
+) -> (u16, bool) {
+    let parsed = match bjson::parse(req.body()) {
+        Ok(v) => v,
+        Err(_) => {
+            write_error(stream, sh, 400, "malformed json body", &[]);
+            return (400, keep);
+        }
+    };
+    let params = match extract_generate(&parsed) {
+        Ok(p) => p,
+        Err(msg) => {
+            write_error(stream, sh, 400, msg, &[]);
+            return (400, keep);
+        }
+    };
+    // Chunked streaming needs HTTP/1.1; 1.0 clients get the buffered form.
+    let stream_mode = params.stream && req.head().http11;
+    let (etx, erx) = mpsc::channel();
+    let sent = tx.send(Submission {
+        prompt: params.prompt,
+        max_new_tokens: params.max_new_tokens,
+        temperature: params.temperature,
+        reply: etx,
+    });
+    if sent.is_err() {
+        write_error(stream, sh, 500, "engine unavailable", &[]);
+        return (500, false);
+    }
+    let deadline = Duration::from_millis(sh.cfg.stream_timeout_ms);
+    let id = match erx.recv_timeout(deadline) {
+        Ok(StreamEvent::Accepted { id }) => id,
+        Ok(StreamEvent::Rejected { retryable: true, reason }) => {
+            telemetry::instant("http_reject", vec![("reason", ArgValue::from(reason))]);
+            let body = format!("{{\"error\":\"{reason}\"}}");
+            write_response(stream, sh, 429, &body, keep, &[("Retry-After", "1")]);
+            return (429, keep);
+        }
+        Ok(StreamEvent::Rejected { retryable: false, reason }) => {
+            write_error(stream, sh, 400, reason, &[]);
+            return (400, keep);
+        }
+        Ok(_) => {
+            write_error(stream, sh, 500, "engine protocol error", &[]);
+            return (500, false);
+        }
+        Err(_) => {
+            write_error(stream, sh, 503, "engine stalled", &[]);
+            return (503, false);
+        }
+    };
+    if stream_mode {
+        stream_tokens(stream, sh, &erx, id, keep, deadline)
+    } else {
+        collect_tokens(stream, sh, &erx, id, keep, deadline)
+    }
+}
+
+/// Chunked ndjson streaming: one row per token, a final `done` row, then
+/// the zero-length terminator chunk.
+fn stream_tokens(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    erx: &mpsc::Receiver<StreamEvent>,
+    id: u64,
+    keep: bool,
+    deadline: Duration,
+) -> (u16, bool) {
+    let conn = if keep { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: {conn}\r\n\r\n"
+    );
+    note_response(sh, 200);
+    if write_counted(stream, sh, head.as_bytes()).is_err() {
+        return (200, false);
+    }
+    loop {
+        match erx.recv_timeout(deadline) {
+            Ok(StreamEvent::Token(t)) => {
+                let row = format!("{{\"token\":{t}}}\n");
+                if write_chunk(stream, sh, row.as_bytes()).is_err() {
+                    return (200, false);
+                }
+            }
+            Ok(StreamEvent::Done { finish, n_tokens }) => {
+                let row = format!(
+                    "{{\"done\":true,\"id\":{id},\"finish\":\"{finish}\",\"n_tokens\":{n_tokens}}}\n"
+                );
+                let ok = write_chunk(stream, sh, row.as_bytes()).is_ok()
+                    && write_counted(stream, sh, b"0\r\n\r\n").is_ok();
+                return (200, keep && ok);
+            }
+            Ok(_) => return (200, false),
+            Err(_) => {
+                // Engine stalled or died mid-stream: terminate the chunk
+                // stream so the client sees a clean (if short) end.
+                let _ = write_counted(stream, sh, b"0\r\n\r\n");
+                return (200, false);
+            }
+        }
+    }
+}
+
+/// Buffered (non-streaming) response: collect every token, answer once.
+fn collect_tokens(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    erx: &mpsc::Receiver<StreamEvent>,
+    id: u64,
+    keep: bool,
+    deadline: Duration,
+) -> (u16, bool) {
+    let mut tokens: Vec<i32> = Vec::new();
+    loop {
+        match erx.recv_timeout(deadline) {
+            Ok(StreamEvent::Token(t)) => tokens.push(t),
+            Ok(StreamEvent::Done { finish, .. }) => {
+                let toks = tokens
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let body = format!(
+                    "{{\"id\":{id},\"finish\":\"{finish}\",\"n_tokens\":{},\"tokens\":[{toks}]}}",
+                    tokens.len()
+                );
+                write_response(stream, sh, 200, &body, keep, &[]);
+                return (200, keep);
+            }
+            Ok(_) => {
+                write_error(stream, sh, 500, "engine protocol error", &[]);
+                return (500, false);
+            }
+            Err(_) => {
+                write_error(stream, sh, 503, "generation timed out", &[]);
+                return (503, false);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response plumbing
+// ---------------------------------------------------------------------------
+
+fn http_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+/// A sized JSON response. No `Date` header by design (see module docs).
+fn simple_response(status: u16, body: &str, keep: bool, extra: &[(&str, &str)]) -> Vec<u8> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", status, http_reason(status));
+    head.push_str("Content-Type: application/json\r\n");
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    let conn = if keep { "keep-alive" } else { "close" };
+    head.push_str(&format!("Connection: {conn}\r\n\r\n"));
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+/// Count a response toward the stats and the `max_requests` stop bound.
+fn note_response(sh: &Shared, status: u16) {
+    stat(sh, |s| *s.by_status.entry(status).or_insert(0) += 1);
+    let count = sh.responded.fetch_add(1, Ordering::SeqCst) + 1;
+    if sh.cfg.max_requests > 0 && count >= sh.cfg.max_requests {
+        sh.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    status: u16,
+    body: &str,
+    keep: bool,
+    extra: &[(&str, &str)],
+) {
+    note_response(sh, status);
+    let bytes = simple_response(status, body, keep, extra);
+    let _ = write_counted(stream, sh, &bytes);
+}
+
+/// An error response with a `{"error": …}` body; connection policy is
+/// the caller's call.
+fn write_error(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    status: u16,
+    msg: &str,
+    extra: &[(&str, &str)],
+) {
+    let body = format!("{{\"error\":\"{msg}\"}}");
+    // Error paths close the connection except pure routing errors, which
+    // keep framing intact; the caller decides by its return value — the
+    // wire header always says close only when the caller will close.
+    let keep = matches!(status, 400 | 404 | 405 | 429);
+    note_response(sh, status);
+    let bytes = simple_response(status, &body, keep, extra);
+    let _ = write_counted(stream, sh, &bytes);
+}
+
+fn write_counted(stream: &mut TcpStream, sh: &Shared, bytes: &[u8]) -> std::io::Result<()> {
+    stream.write_all(bytes)?;
+    stat(sh, |s| s.bytes_out += bytes.len() as u64);
+    Ok(())
+}
+
+fn write_chunk(stream: &mut TcpStream, sh: &Shared, payload: &[u8]) -> std::io::Result<()> {
+    let framed = format!("{:x}\r\n", payload.len());
+    let mut out = framed.into_bytes();
+    out.extend_from_slice(payload);
+    out.extend_from_slice(b"\r\n");
+    write_counted(stream, sh, &out)
+}

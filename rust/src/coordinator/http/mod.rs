@@ -1,0 +1,29 @@
+//! Zero-dependency HTTP/1.1 serving front end.
+//!
+//! Everything here is built on `std::net` — no external crates — and
+//! splits into five pieces:
+//!
+//! * [`parser`] — the incremental **push parser** for request heads:
+//!   resumable at any byte boundary, strict CRLF framing, per-connection
+//!   limits, zero-copy body handoff.
+//! * [`bjson`] — the strict JSON machines: a borrowing tree parser
+//!   ([`bjson::parse`], `Cow` strings when escape-free) and a
+//!   byte-at-a-time validator ([`bjson::JsonPush`]) that accept exactly
+//!   the same documents.
+//! * [`frontend`] — the socket front end behind `serve --listen`:
+//!   accept/connection threads, chunked token streaming, engine
+//!   backpressure mapped to HTTP statuses (429 on queue-full, …).
+//! * [`client`] — a minimal blocking client used by the perf load-test
+//!   scenario and the integration tests.
+//! * [`torture`] — the differential split-invariance oracles shared by
+//!   the tests and the `dtrnet-fuzz` fuzzers.
+
+pub mod bjson;
+pub mod client;
+pub mod frontend;
+pub mod parser;
+pub mod torture;
+
+pub use client::{generate_request, get_request, ClientResponse, HttpClient};
+pub use frontend::{HttpReport, ListenConfig, NetFrontend, NetStats, StopHandle};
+pub use parser::{Head, HttpError, Limits, ParsedRequest, PushParser};

@@ -1,0 +1,588 @@
+//! Incremental (push) HTTP/1.1 request parser.
+//!
+//! The connection loop feeds raw socket reads into [`PushParser::push`];
+//! the parser is resumable at **any** byte boundary — head and body both
+//! — and its outcome (parsed requests, terminal error, leftover bytes)
+//! is invariant under the segmentation, which `tests/http_parser.rs`
+//! pins at every split point and the fuzz suite hammers with random
+//! splits.
+//!
+//! Zero-copy body handoff: the parser owns one contiguous buffer per
+//! in-flight request. When a request completes, [`PushParser::take`]
+//! detaches that buffer wholesale (`split_off` keeps any pipelined bytes
+//! for the next request) and [`ParsedRequest::body`] is a slice into it —
+//! body bytes are never copied between the socket read and the JSON
+//! parse ([`super::bjson`]).
+//!
+//! Framing is strict (DESIGN.md §Network front end): CRLF line endings
+//! only, token header names (which also rejects obs-fold continuations),
+//! single-value `Content-Length`, no request `Transfer-Encoding`. Every
+//! rejection maps to a definite status via [`HttpError::status`].
+
+/// Per-connection parse limits.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Request-head bound in bytes (request line + headers + terminator).
+    pub max_head_bytes: usize,
+    /// Body bound, enforced against `Content-Length` before any body
+    /// byte arrives (an oversized declaration is refused up front).
+    pub max_body_bytes: usize,
+    /// Header-count bound (header bombs → 431).
+    pub max_headers: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_head_bytes: 16 * 1024,
+            max_body_bytes: 256 * 1024,
+            max_headers: 64,
+        }
+    }
+}
+
+/// Terminal parse failures, each with a definite HTTP status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HttpError {
+    /// Request line is not `METHOD SP TARGET SP HTTP/1.x`.
+    BadRequestLine,
+    /// A line ended with a bare LF, or a stray CR appeared mid-line.
+    BadLineEnding,
+    /// Header line is not `token ":" value` with printable value bytes.
+    BadHeader,
+    /// `Content-Length` is non-numeric, overlong, or conflicting.
+    BadContentLength,
+    /// Head grew past [`Limits::max_head_bytes`].
+    HeadTooLarge,
+    /// More than [`Limits::max_headers`] header lines.
+    TooManyHeaders,
+    /// Declared `Content-Length` exceeds [`Limits::max_body_bytes`].
+    BodyTooLarge,
+    /// Body-bearing method without a `Content-Length`.
+    LengthRequired,
+    /// `Transfer-Encoding` on a request (this server never accepts
+    /// chunked *requests*; responses are chunked, requests are sized).
+    UnsupportedTransferEncoding,
+    /// HTTP version other than 1.0 / 1.1.
+    UnsupportedVersion,
+}
+
+impl HttpError {
+    /// The response status this failure maps to.
+    pub fn status(self) -> u16 {
+        match self {
+            HttpError::BadRequestLine
+            | HttpError::BadLineEnding
+            | HttpError::BadHeader
+            | HttpError::BadContentLength => 400,
+            HttpError::HeadTooLarge | HttpError::TooManyHeaders => 431,
+            HttpError::BodyTooLarge => 413,
+            HttpError::LengthRequired => 411,
+            HttpError::UnsupportedTransferEncoding => 501,
+            HttpError::UnsupportedVersion => 505,
+        }
+    }
+
+    /// Short machine-readable name (error-body payload).
+    pub fn reason(self) -> &'static str {
+        match self {
+            HttpError::BadRequestLine => "bad request line",
+            HttpError::BadLineEnding => "bad line ending",
+            HttpError::BadHeader => "bad header",
+            HttpError::BadContentLength => "bad content-length",
+            HttpError::HeadTooLarge => "request head too large",
+            HttpError::TooManyHeaders => "too many headers",
+            HttpError::BodyTooLarge => "body too large",
+            HttpError::LengthRequired => "length required",
+            HttpError::UnsupportedTransferEncoding => "transfer-encoding not supported",
+            HttpError::UnsupportedVersion => "http version not supported",
+        }
+    }
+}
+
+/// Parsed request head (everything before the body).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Head {
+    /// Method, verbatim (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target (origin-form path), verbatim.
+    pub target: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    /// `(name, value)` pairs in arrival order, names verbatim.
+    pub headers: Vec<(String, String)>,
+    /// Declared body length (0 when no `Content-Length` was sent).
+    pub content_length: usize,
+    /// Client sent `Expect: 100-continue` and wants an interim response
+    /// before transmitting the body.
+    pub expect_continue: bool,
+    /// The connection must close after this response (`Connection:
+    /// close`, or HTTP/1.0 without `keep-alive`).
+    pub close: bool,
+}
+
+impl Head {
+    /// First value of header `name`, ASCII-case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A complete request detached from the connection buffer. Owns exactly
+/// its own bytes (head + body); the body accessor is a zero-copy slice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsedRequest {
+    head: Head,
+    buf: Vec<u8>,
+    body_start: usize,
+}
+
+impl ParsedRequest {
+    /// The parsed head.
+    pub fn head(&self) -> &Head {
+        &self.head
+    }
+
+    /// The body bytes (borrowed from the request's own buffer).
+    pub fn body(&self) -> &[u8] {
+        &self.buf[self.body_start..]
+    }
+
+    /// The raw request bytes, head included (torture tests compare these
+    /// bitwise across read segmentations).
+    pub fn raw(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Scanning the request line.
+    RequestLine,
+    /// Scanning header lines.
+    Headers,
+    /// Head parsed; waiting for `content_length` body bytes.
+    Body,
+    /// A full request is buffered; `take()` will detach it.
+    Ready,
+    /// Terminal failure (sticky).
+    Failed(HttpError),
+}
+
+/// The incremental request parser; one per connection.
+#[derive(Debug)]
+pub struct PushParser {
+    limits: Limits,
+    /// Bytes of the *current* request (compacted on `take`), plus any
+    /// already-received pipelined bytes beyond it.
+    buf: Vec<u8>,
+    /// Scan cursor: first byte not yet examined for a line terminator.
+    scan: usize,
+    /// Start of the line currently being scanned.
+    line_start: usize,
+    state: State,
+    head: Option<Head>,
+    /// Byte length of the head (through the blank line) once parsed.
+    head_len: usize,
+    /// Body bytes already handed out via [`PushParser::body_new_bytes`].
+    body_seen: usize,
+    headers_parsed: usize,
+}
+
+impl PushParser {
+    /// A fresh parser with `limits`.
+    pub fn new(limits: Limits) -> PushParser {
+        PushParser {
+            limits,
+            buf: Vec::new(),
+            scan: 0,
+            line_start: 0,
+            state: State::RequestLine,
+            head: None,
+            head_len: 0,
+            body_seen: 0,
+            headers_parsed: 0,
+        }
+    }
+
+    /// Feed the next socket read. Errors are sticky: once a connection's
+    /// byte stream is bad, it stays bad (the caller responds and closes).
+    pub fn push(&mut self, bytes: &[u8]) -> Result<(), HttpError> {
+        if let State::Failed(e) = self.state {
+            return Err(e);
+        }
+        self.buf.extend_from_slice(bytes);
+        self.process()
+    }
+
+    /// A complete request is buffered and `take()` will return it.
+    pub fn ready(&self) -> bool {
+        self.state == State::Ready
+    }
+
+    /// The sticky failure, if the stream went bad (possibly while
+    /// resuming on pipelined bytes inside `take()`).
+    pub fn failure(&self) -> Option<HttpError> {
+        match self.state {
+            State::Failed(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// The parsed head of the in-flight request, available as soon as the
+    /// blank line arrives (used for `Expect: 100-continue` and for
+    /// incremental body validation while the body is still arriving).
+    pub fn head(&self) -> Option<&Head> {
+        self.head.as_ref()
+    }
+
+    /// Bytes currently buffered (torture outcome: leftover accounting).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// A request (or part of one) is in flight — a read deadline firing
+    /// now warrants a 408 rather than a silent idle close.
+    pub fn mid_request(&self) -> bool {
+        !self.buf.is_empty() || self.state != State::RequestLine
+    }
+
+    /// Body bytes that arrived since the last call (and were not yet
+    /// handed out), for incremental JSON validation during reads.
+    /// Empty while the head is still being parsed.
+    pub fn body_new_bytes(&mut self) -> &[u8] {
+        let (avail, start) = match self.state {
+            State::Body | State::Ready => {
+                let head = self.head.as_ref().expect("body state has a head");
+                let have = self.buf.len() - self.head_len;
+                (have.min(head.content_length), self.head_len)
+            }
+            _ => return &[],
+        };
+        let from = self.body_seen;
+        self.body_seen = avail;
+        &self.buf[start + from..start + avail]
+    }
+
+    /// Detach the completed request, then resume parsing any pipelined
+    /// bytes that arrived behind it (check [`PushParser::ready`] /
+    /// [`PushParser::failure`] afterwards).
+    pub fn take(&mut self) -> Option<ParsedRequest> {
+        if self.state != State::Ready {
+            return None;
+        }
+        let head = self.head.take().expect("ready state has a head");
+        let total = self.head_len + head.content_length;
+        let rest = self.buf.split_off(total);
+        let reqbuf = std::mem::replace(&mut self.buf, rest);
+        let req = ParsedRequest {
+            head,
+            buf: reqbuf,
+            body_start: self.head_len,
+        };
+        self.state = State::RequestLine;
+        self.scan = 0;
+        self.line_start = 0;
+        self.head_len = 0;
+        self.body_seen = 0;
+        self.headers_parsed = 0;
+        // Resume on the pipelined remainder; a failure becomes sticky and
+        // surfaces through `failure()` / the next `push`.
+        let _ = self.process();
+        Some(req)
+    }
+
+    fn fail(&mut self, e: HttpError) -> Result<(), HttpError> {
+        self.state = State::Failed(e);
+        Err(e)
+    }
+
+    fn process(&mut self) -> Result<(), HttpError> {
+        loop {
+            match self.state {
+                State::RequestLine | State::Headers => {
+                    while self.scan < self.buf.len() && self.buf[self.scan] != b'\n' {
+                        self.scan += 1;
+                    }
+                    if self.scan > self.limits.max_head_bytes {
+                        return self.fail(HttpError::HeadTooLarge);
+                    }
+                    if self.scan >= self.buf.len() {
+                        return Ok(()); // incomplete line: wait for more
+                    }
+                    // Line terminator found; strict CRLF framing.
+                    let line = &self.buf[self.line_start..self.scan];
+                    if line.last() != Some(&b'\r') {
+                        return self.fail(HttpError::BadLineEnding);
+                    }
+                    let content = &line[..line.len() - 1];
+                    if content.contains(&b'\r') {
+                        return self.fail(HttpError::BadLineEnding);
+                    }
+                    let content = content.to_vec();
+                    self.scan += 1;
+                    self.line_start = self.scan;
+                    if self.state == State::RequestLine {
+                        let head = match parse_request_line(&content) {
+                            Ok(h) => h,
+                            Err(e) => return self.fail(e),
+                        };
+                        self.head = Some(head);
+                        self.state = State::Headers;
+                    } else if content.is_empty() {
+                        // Blank line: head complete.
+                        self.head_len = self.scan;
+                        let head = self.head.as_mut().expect("headers state has a head");
+                        if let Err(e) = finalize_head(head, &self.limits) {
+                            return self.fail(e);
+                        }
+                        self.state = State::Body;
+                    } else {
+                        if self.headers_parsed >= self.limits.max_headers {
+                            return self.fail(HttpError::TooManyHeaders);
+                        }
+                        let head = self.head.as_mut().expect("headers state has a head");
+                        if let Err(e) = parse_header_line(&content, head) {
+                            return self.fail(e);
+                        }
+                        self.headers_parsed += 1;
+                    }
+                }
+                State::Body => {
+                    let want = self.head.as_ref().expect("body state has a head").content_length;
+                    if self.buf.len() - self.head_len >= want {
+                        self.state = State::Ready;
+                    }
+                    return Ok(());
+                }
+                // Parsing pauses until `take()` detaches the request;
+                // pipelined bytes simply accumulate behind it.
+                State::Ready => return Ok(()),
+                State::Failed(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// RFC 7230 token byte (header names, methods).
+fn is_tchar(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+fn parse_request_line(line: &[u8]) -> Result<Head, HttpError> {
+    let mut parts = line.split(|&b| b == b' ');
+    let method = parts.next().unwrap_or(b"");
+    let target = parts.next().ok_or(HttpError::BadRequestLine)?;
+    let version = parts.next().ok_or(HttpError::BadRequestLine)?;
+    if parts.next().is_some() {
+        return Err(HttpError::BadRequestLine);
+    }
+    if method.is_empty() || !method.iter().all(|&b| is_tchar(b)) {
+        return Err(HttpError::BadRequestLine);
+    }
+    if target.is_empty() || !target.iter().all(|&b| (0x21..=0x7E).contains(&b)) {
+        return Err(HttpError::BadRequestLine);
+    }
+    let http11 = match version {
+        b"HTTP/1.1" => true,
+        b"HTTP/1.0" => false,
+        v if v.starts_with(b"HTTP/") => return Err(HttpError::UnsupportedVersion),
+        _ => return Err(HttpError::BadRequestLine),
+    };
+    Ok(Head {
+        method: String::from_utf8(method.to_vec()).expect("tchars are ascii"),
+        target: String::from_utf8(target.to_vec()).expect("visible ascii"),
+        http11,
+        headers: Vec::new(),
+        content_length: 0,
+        expect_continue: false,
+        close: !http11, // refined by finalize_head from Connection
+    })
+}
+
+fn parse_header_line(line: &[u8], head: &mut Head) -> Result<(), HttpError> {
+    let colon = line
+        .iter()
+        .position(|&b| b == b':')
+        .ok_or(HttpError::BadHeader)?;
+    let name = &line[..colon];
+    // Token-only names also reject obs-fold: a folded continuation line
+    // starts with SP/HTAB, which is not a tchar.
+    if name.is_empty() || !name.iter().all(|&b| is_tchar(b)) {
+        return Err(HttpError::BadHeader);
+    }
+    let mut value = &line[colon + 1..];
+    while value.first() == Some(&b' ') || value.first() == Some(&b'\t') {
+        value = &value[1..];
+    }
+    while value.last() == Some(&b' ') || value.last() == Some(&b'\t') {
+        value = &value[..value.len() - 1];
+    }
+    if !value.iter().all(|&b| b == b'\t' || (0x20..=0x7E).contains(&b)) {
+        return Err(HttpError::BadHeader);
+    }
+    head.headers.push((
+        String::from_utf8(name.to_vec()).expect("tchars are ascii"),
+        String::from_utf8(value.to_vec()).expect("printable ascii"),
+    ));
+    Ok(())
+}
+
+/// Resolve framing once the blank line arrives: Content-Length,
+/// Transfer-Encoding rejection, Expect, Connection semantics, and the
+/// up-front body-size check.
+fn finalize_head(head: &mut Head, limits: &Limits) -> Result<(), HttpError> {
+    let mut content_length: Option<usize> = None;
+    for (name, value) in &head.headers {
+        if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Err(HttpError::UnsupportedTransferEncoding);
+        }
+        if name.eq_ignore_ascii_case("content-length") {
+            if value.is_empty() || value.len() > 18 {
+                return Err(HttpError::BadContentLength);
+            }
+            if !value.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(HttpError::BadContentLength);
+            }
+            let n: usize = value.parse().map_err(|_| HttpError::BadContentLength)?;
+            // Duplicate Content-Length headers must agree (RFC 7230 §3.3.2).
+            if content_length.is_some_and(|prev| prev != n) {
+                return Err(HttpError::BadContentLength);
+            }
+            content_length = Some(n);
+        }
+        if name.eq_ignore_ascii_case("expect") && value.eq_ignore_ascii_case("100-continue") {
+            head.expect_continue = true;
+        }
+        if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                head.close = true;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                head.close = false;
+            }
+        }
+    }
+    match content_length {
+        Some(n) if n > limits.max_body_bytes => return Err(HttpError::BodyTooLarge),
+        Some(n) => head.content_length = n,
+        None => {
+            if matches!(head.method.as_str(), "POST" | "PUT" | "PATCH") {
+                return Err(HttpError::LengthRequired);
+            }
+            head.content_length = 0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_shot(data: &[u8]) -> (Vec<ParsedRequest>, Option<HttpError>) {
+        let mut p = PushParser::new(Limits::default());
+        let mut reqs = Vec::new();
+        let err = p.push(data).err();
+        while let Some(r) = p.take() {
+            reqs.push(r);
+        }
+        (reqs, err.or_else(|| p.failure()))
+    }
+
+    #[test]
+    fn parses_a_simple_get() {
+        let (reqs, err) = one_shot(b"GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(err, None);
+        assert_eq!(reqs.len(), 1);
+        let h = reqs[0].head();
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.target, "/health");
+        assert!(h.http11);
+        assert!(!h.close);
+        assert_eq!(h.header("host"), Some("x"));
+        assert!(reqs[0].body().is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_pipelined_get() {
+        let data =
+            b"POST /generate HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET / HTTP/1.1\r\n\r\n";
+        let (reqs, err) = one_shot(data);
+        assert_eq!(err, None);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].body(), b"hello");
+        assert_eq!(reqs[1].head().method, "GET");
+        assert!(reqs[1].body().is_empty());
+    }
+
+    #[test]
+    fn error_mapping() {
+        let cases: Vec<(&[u8], HttpError)> = vec![
+            (b"GET\r\n\r\n", HttpError::BadRequestLine),
+            (b"GET / HTTP/2.0\r\n\r\n", HttpError::UnsupportedVersion),
+            (b"GET / HTTP/1.1\nHost: x\r\n\r\n", HttpError::BadLineEnding),
+            (b"GET / HTTP/1.1\r\nBad Header: x\r\n\r\n", HttpError::BadHeader),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: zzz\r\n\r\n",
+                HttpError::BadContentLength,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 6\r\n\r\n",
+                HttpError::BadContentLength,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n",
+                HttpError::BodyTooLarge,
+            ),
+            (b"POST / HTTP/1.1\r\nHost: x\r\n\r\n", HttpError::LengthRequired),
+            (
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+                HttpError::UnsupportedTransferEncoding,
+            ),
+        ];
+        for (data, want) in cases {
+            let (_, err) = one_shot(data);
+            assert_eq!(err, Some(want), "input {:?}", String::from_utf8_lossy(data));
+        }
+    }
+
+    #[test]
+    fn head_limit_trips_without_a_newline() {
+        let mut p = PushParser::new(Limits {
+            max_head_bytes: 64,
+            ..Limits::default()
+        });
+        let junk = vec![b'a'; 100];
+        assert_eq!(p.push(&junk), Err(HttpError::HeadTooLarge));
+    }
+
+    #[test]
+    fn header_bomb_trips_the_count_limit() {
+        let mut p = PushParser::new(Limits {
+            max_headers: 4,
+            ..Limits::default()
+        });
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..6 {
+            req.extend_from_slice(format!("H{i}: v\r\n").as_bytes());
+        }
+        req.extend_from_slice(b"\r\n");
+        assert_eq!(p.push(&req), Err(HttpError::TooManyHeaders));
+    }
+
+    #[test]
+    fn body_new_bytes_is_incremental_and_complete() {
+        let data = b"POST / HTTP/1.1\r\nContent-Length: 8\r\n\r\nabcdefgh";
+        let mut p = PushParser::new(Limits::default());
+        let mut seen = Vec::new();
+        for &b in data.iter() {
+            p.push(&[b]).unwrap();
+            seen.extend_from_slice(p.body_new_bytes());
+        }
+        assert_eq!(seen, b"abcdefgh");
+        assert!(p.ready());
+    }
+}

@@ -1,0 +1,225 @@
+//! Differential torture oracles shared by the split-read tests, the
+//! corpus replay test, and the `dtrnet-fuzz` mutational fuzzers.
+//!
+//! Two entry points, both taking arbitrary bytes and panicking only if
+//! an *invariant* breaks (never on malformed input — malformed input is
+//! the point):
+//!
+//! * [`check_http_bytes`]: the [`PushParser`] must produce the same
+//!   outcome — same parsed requests, same error, same leftover count —
+//!   whether fed in one shot, byte by byte, or at pseudo-random split
+//!   points derived deterministically from the input hash.
+//! * [`check_json_bytes`]: the [`JsonPush`] validator must be split
+//!   invariant, must agree with the tree parser [`bjson::parse`] on
+//!   accept/reject, and anything it accepts must also parse under the
+//!   lenient [`Json::parse`] (strictness is one-directional: the
+//!   lenient parser accepts e.g. `01`, so only strict-accept ⟹
+//!   lenient-accept is checked).
+//!
+//! No wall-clock or OS randomness is used anywhere: the pseudo-random
+//! splits are seeded from an FNV-1a hash of the input, so every run —
+//! CI replay included — sees identical behaviour for identical bytes.
+
+use super::bjson::{self, JsonPush};
+use super::parser::{Head, HttpError, Limits, PushParser};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Everything observable about feeding one byte stream to the parser.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpOutcome {
+    /// Completed requests in order: parsed head + raw body bytes.
+    pub requests: Vec<(Head, Vec<u8>)>,
+    /// The sticky error, if the stream went bad.
+    pub error: Option<HttpError>,
+    /// Bytes left buffered (a trailing incomplete request).
+    pub buffered: usize,
+}
+
+/// Limits small enough that fuzz inputs can actually trip them.
+pub fn torture_limits() -> Limits {
+    Limits {
+        max_head_bytes: 2048,
+        max_body_bytes: 4096,
+        max_headers: 32,
+    }
+}
+
+/// Feed `data` split at `splits` (ascending byte offsets) and collect
+/// the outcome. Completed requests are drained after every segment, so
+/// zero-copy buffer handoff and pipelining carry-over are exercised at
+/// each boundary.
+pub fn http_outcome(data: &[u8], splits: &[usize]) -> HttpOutcome {
+    let mut parser = PushParser::new(torture_limits());
+    let mut out = HttpOutcome {
+        requests: Vec::new(),
+        error: None,
+        buffered: 0,
+    };
+    let mut prev = 0usize;
+    let mut bounds: Vec<usize> = splits.to_vec();
+    bounds.push(data.len());
+    for b in bounds {
+        let b = b.min(data.len()).max(prev);
+        if parser.push(&data[prev..b]).is_err() {
+            break;
+        }
+        prev = b;
+        while let Some(req) = parser.take() {
+            out.requests
+                .push((req.head().clone(), req.body().to_vec()));
+        }
+        if parser.failure().is_some() {
+            break;
+        }
+    }
+    out.error = parser.failure();
+    out.buffered = parser.buffered();
+    out
+}
+
+/// Deterministic pseudo-random split offsets for `data`: FNV-1a of the
+/// bytes seeds the repo's own [`Rng`], which picks up to 16 cut points.
+pub fn pseudo_splits(data: &[u8]) -> Vec<usize> {
+    if data.len() < 2 {
+        return Vec::new();
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Rng::new(h | 1);
+    let n = (data.len() / 7).clamp(1, 16);
+    let mut cuts: Vec<usize> = (0..n).map(|_| 1 + rng.usize_below(data.len() - 1)).collect();
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts
+}
+
+/// The HTTP invariant bundle. Panics (with context) iff the push parser
+/// is split sensitive. Returns the one-shot outcome for further checks.
+pub fn check_http_bytes(data: &[u8]) -> HttpOutcome {
+    let oneshot = http_outcome(data, &[]);
+    let bytewise: Vec<usize> = (1..data.len()).collect();
+    let by_byte = http_outcome(data, &bytewise);
+    assert_eq!(
+        oneshot, by_byte,
+        "push parser is split sensitive (byte-by-byte) for {data:?}"
+    );
+    let random = http_outcome(data, &pseudo_splits(data));
+    assert_eq!(
+        oneshot, random,
+        "push parser is split sensitive (pseudo-random splits) for {data:?}"
+    );
+    // Every parsed body must itself hold up under the JSON oracles — the
+    // real server validates generate bodies with exactly these machines.
+    for (_, body) in &oneshot.requests {
+        check_json_bytes(body);
+    }
+    oneshot
+}
+
+/// The JSON invariant bundle: push-validator split invariance, push vs
+/// tree agreement, and strict ⊆ lenient. Returns the strict verdict.
+pub fn check_json_bytes(data: &[u8]) -> bool {
+    let mut oneshot = JsonPush::new();
+    let oneshot_ok = oneshot.feed(data).is_ok() && oneshot.finish().is_ok();
+
+    let mut bytewise = JsonPush::new();
+    let mut fed_ok = true;
+    for &b in data {
+        if bytewise.feed(&[b]).is_err() {
+            fed_ok = false;
+            break;
+        }
+    }
+    let bytewise_ok = fed_ok && bytewise.finish().is_ok();
+    assert_eq!(
+        oneshot_ok, bytewise_ok,
+        "JsonPush is split sensitive for {data:?}"
+    );
+
+    let mut random = JsonPush::new();
+    let mut prev = 0usize;
+    let mut ok = true;
+    let mut bounds = pseudo_splits(data);
+    bounds.push(data.len());
+    for b in bounds {
+        let b = b.min(data.len()).max(prev);
+        if random.feed(&data[prev..b]).is_err() {
+            ok = false;
+            break;
+        }
+        prev = b;
+    }
+    let random_ok = ok && random.finish().is_ok();
+    assert_eq!(
+        oneshot_ok, random_ok,
+        "JsonPush is split sensitive (pseudo-random splits) for {data:?}"
+    );
+
+    let tree_ok = bjson::parse(data).is_ok();
+    assert_eq!(
+        oneshot_ok, tree_ok,
+        "JsonPush and bjson::parse disagree for {data:?}"
+    );
+
+    if oneshot_ok {
+        let text = std::str::from_utf8(data)
+            .expect("strict JSON machines accepted non-UTF-8 input");
+        assert!(
+            Json::parse(text).is_ok(),
+            "strict machines accepted what the lenient parser rejects: {text:?}"
+        );
+    }
+    oneshot_ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_passes_on_a_mixed_stream() {
+        let data = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"prompt\":[1,2]}GET /health HTTP/1.1\r\n\r\n";
+        // Body length is deliberately off by one from the JSON text so
+        // the second request starts with a stray byte — the oracle must
+        // stay split invariant even on that degenerate framing.
+        let out = check_http_bytes(data);
+        assert_eq!(out.requests.len(), 1);
+    }
+
+    #[test]
+    fn oracle_passes_on_clean_pipelining() {
+        let body = "{\"prompt\":[1,2]}";
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let data = format!("{req}{req}GET /health HTTP/1.1\r\n\r\n");
+        let out = check_http_bytes(data.as_bytes());
+        assert_eq!(out.requests.len(), 3);
+        assert_eq!(out.error, None);
+        assert_eq!(out.buffered, 0);
+    }
+
+    #[test]
+    fn oracle_is_quiet_on_garbage() {
+        check_http_bytes(b"\xff\xfe garbage \r\n\r\n");
+        check_json_bytes(b"\xff\xfe");
+        assert!(check_json_bytes(b"{\"a\":[1,2.5e3,null,true,\"x\"]}"));
+        assert!(!check_json_bytes(b"{\"a\":01}"));
+    }
+
+    #[test]
+    fn pseudo_splits_are_deterministic_and_in_range() {
+        let data = b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let a = pseudo_splits(data);
+        let b = pseudo_splits(data);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&c| c >= 1 && c < data.len()));
+        assert!(!a.is_empty());
+    }
+}

@@ -13,6 +13,9 @@
 //!   attention — the mechanism behind the paper's Fig. 6 memory savings.
 //! * [`batcher`] — continuous batching: slot assignment, admission,
 //!   completion recycling.
+//! * [`http`] — the zero-dependency HTTP/1.1 front end behind
+//!   `serve --listen`: incremental push parser, strict JSON machines,
+//!   chunked token streaming, backpressure → status mapping.
 //! * [`workload`] — synthetic serving traces (Poisson arrivals,
 //!   heavy-tailed lengths), deterministic per seed.
 //! * [`stats`] — routing statistics (Fig. 5 telemetry).
@@ -24,6 +27,7 @@
 //!   batched decode executable (device-resident KV literals).
 
 pub mod batcher;
+pub mod http;
 pub mod kv_cache;
 pub mod sampling;
 #[cfg(feature = "pjrt")]
@@ -34,12 +38,13 @@ pub mod trainer;
 pub mod workload;
 
 pub use batcher::{Batcher, Request, RequestState};
+pub use http::{HttpReport, ListenConfig, NetFrontend};
 pub use kv_cache::{KvPool, PoolStats};
 pub use sampling::{sample, SamplingParams};
 #[cfg(feature = "pjrt")]
 pub use serve::ServeEngine;
 pub use server::{
-    FinishReason, PrefillMode, RequestRecord, ServeReport, Server, ServerConfig,
+    FinishReason, PrefillMode, RequestRecord, ServeReport, Server, ServerConfig, SubmitError,
 };
 pub use stats::{PositionBuckets, RoutingStats};
 #[cfg(feature = "pjrt")]

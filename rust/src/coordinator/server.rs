@@ -108,6 +108,16 @@ impl Default for ServerConfig {
     }
 }
 
+/// Why [`Server::try_submit`] refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at capacity — retryable backpressure
+    /// (HTTP 429 at the network edge).
+    QueueFull,
+    /// The request can never be served — a client error (HTTP 400).
+    Invalid(&'static str),
+}
+
 /// Why a request left its slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
@@ -438,28 +448,63 @@ impl<'b> Server<'b> {
     }
 
     /// Enqueue a request. Returns false (and drops it) when the queue is
-    /// full or the request is malformed: empty prompt, zero tokens, an
-    /// out-of-vocabulary prompt token (which would make the backend error
-    /// mid-run and kill every other in-flight request), or a prompt
-    /// longer than the position cap. The cap check keeps the two prefill
-    /// modes equivalent — chunked prefill would otherwise ingest the
-    /// whole oversized prompt while stepwise prefill stops at the cap
-    /// mid-prompt, diverging streams and RoPE positions. Every refusal
-    /// is counted into [`ServeReport::rejected`], so `completed +
-    /// evicted + rejected` equals submissions on every run path.
+    /// full or the request is malformed — see [`Server::try_submit`] for
+    /// the distinction; this form collapses both into a bool.
     pub fn submit(&mut self, req: Request) -> bool {
-        let malformed = req.prompt.is_empty()
-            || req.max_new_tokens == 0
-            || req.prompt.len() > self.cfg.max_seq
-            || req
-                .prompt
-                .iter()
-                .any(|&t| t < 0 || (t as usize) >= self.vocab);
-        if malformed || !self.batcher.submit(req) {
+        self.try_submit(req).is_ok()
+    }
+
+    /// Enqueue a request, telling refusals apart: `Invalid` for
+    /// malformed requests (empty prompt, zero tokens, an
+    /// out-of-vocabulary prompt token — which would make the backend
+    /// error mid-run and kill every other in-flight request — or a
+    /// prompt longer than the position cap) and `QueueFull` for
+    /// backpressure. The HTTP front end maps these to 400 vs 429. The
+    /// cap check keeps the two prefill modes equivalent — chunked
+    /// prefill would otherwise ingest the whole oversized prompt while
+    /// stepwise prefill stops at the cap mid-prompt, diverging streams
+    /// and RoPE positions. Every refusal is counted into
+    /// [`ServeReport::rejected`], so `completed + evicted + rejected`
+    /// equals submissions on every run path.
+    pub fn try_submit(&mut self, req: Request) -> Result<(), SubmitError> {
+        let invalid = if req.prompt.is_empty() {
+            Some("empty prompt")
+        } else if req.max_new_tokens == 0 {
+            Some("max_new_tokens must be positive")
+        } else if req.prompt.len() > self.cfg.max_seq {
+            Some("prompt exceeds context cap")
+        } else if req
+            .prompt
+            .iter()
+            .any(|&t| t < 0 || (t as usize) >= self.vocab)
+        {
+            Some("prompt token out of vocabulary")
+        } else {
+            None
+        };
+        if let Some(reason) = invalid {
             self.rejected += 1;
-            return false;
+            return Err(SubmitError::Invalid(reason));
         }
-        true
+        if !self.batcher.submit(req) {
+            self.rejected += 1;
+            return Err(SubmitError::QueueFull);
+        }
+        Ok(())
+    }
+
+    /// Records of requests retired after index `from` (in retirement
+    /// order). Streaming callers keep a cursor and poll this after each
+    /// [`Server::step`] to flush completions.
+    pub fn finished_since(&self, from: usize) -> &[RequestRecord] {
+        self.records.get(from..).unwrap_or(&[])
+    }
+
+    /// The serving report as of now, with `wall_s` as the elapsed wall
+    /// clock — the open-ended (`--listen`) counterpart of the
+    /// run-to-completion report.
+    pub fn report_now(&self, wall_s: f64) -> ServeReport {
+        self.report(wall_s)
     }
 
     /// One engine iteration: admit (+ chunked prefill) → batched decode →

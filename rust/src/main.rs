@@ -17,6 +17,11 @@
 //!                                    CPU backend: synthetic workload,
 //!                                    throughput/latency/KV-page report
 //!                                    (see DESIGN.md §Serving for flags)
+//!   serve   --listen 127.0.0.1:8080 — same engine behind the
+//!                                    zero-dependency HTTP/1.1 front end:
+//!                                    JSON generate requests, chunked
+//!                                    token streaming, 429 backpressure
+//!                                    (DESIGN.md §Network front end)
 //!   bench   [--test] [--out BENCH_pr7.json] — reproducible perf harness:
 //!                                    fixed-seed forward/decode/serve/
 //!                                    train/quant scenarios swept across
@@ -580,6 +585,9 @@ fn serve(args: &Args) -> Result<()> {
     // --load ckpt.dtck serves trained weights; default is fresh init.
     // --quant int8 quantizes the weights on load (4x smaller residency).
     let backend = build_backend(&cfg, seed, args.get("load"), parse_quant(args, "off")?)?;
+    if let Some(addr) = args.get("listen") {
+        return serve_listen(args, &cfg, variant, seed, backend.as_ref(), addr);
+    }
 
     let mut spec = WorkloadSpec::smoke(args.get_usize("requests", 8));
     spec.arrival_rate = args.get_f64("rate", spec.arrival_rate);
@@ -711,6 +719,100 @@ fn serve(args: &Args) -> Result<()> {
             ratios.join(" "),
         );
     }
+    if let Some(p) = args.get("json-out") {
+        std::fs::write(p, report.to_json().to_string() + "\n")?;
+        println!("[json] wrote {p}");
+    }
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+/// `serve --listen ADDR`: the continuous-batching engine behind the
+/// zero-dependency HTTP/1.1 front end. Requests arrive as JSON over real
+/// TCP, tokens stream back via chunked transfer encoding, and engine
+/// backpressure surfaces as prompt 429s (DESIGN.md §Network front end).
+fn serve_listen(
+    args: &Args,
+    cfg: &ModelConfig,
+    variant: Variant,
+    seed: u64,
+    backend: &dyn Backend,
+    addr: &str,
+) -> Result<()> {
+    use dtrnet::coordinator::http::{Limits, ListenConfig, NetFrontend};
+    let chunk = args.get_usize("prefill-chunk", 32);
+    let scfg = ServerConfig {
+        slots: args.get_usize("slots", 4),
+        max_queue: args.get_usize("queue", 4096),
+        kv_page_size: args.get_usize("page", 16),
+        prefill: if chunk == 0 {
+            PrefillMode::Decode
+        } else {
+            PrefillMode::Chunked(chunk)
+        },
+        seed,
+        ..Default::default()
+    };
+    let lcfg = ListenConfig {
+        limits: Limits {
+            max_head_bytes: args.get_usize("max-head", 16 * 1024),
+            max_body_bytes: args.get_usize("max-body", 256 * 1024),
+            max_headers: args.get_usize("max-headers", 64),
+        },
+        max_conns: args.get_usize("max-conns", 64),
+        read_timeout_ms: args.get_u64("read-timeout-ms", 5_000),
+        stream_timeout_ms: args.get_u64("stream-timeout-ms", 60_000),
+        max_requests: args.get_u64("max-requests", 0),
+    };
+    let metrics = match args.get("metrics-jsonl") {
+        Some(p) => Some(JsonlWriter::create(std::path::Path::new(p))?),
+        None => None,
+    };
+    let fe = NetFrontend::bind(addr, lcfg)?;
+    println!(
+        "[listen] http://{} backend={} model={} variant={} slots={} queue={} (POST /generate, GET /health)",
+        fe.local_addr()?,
+        backend.name(),
+        cfg.name,
+        variant.as_str(),
+        scfg.slots,
+        scfg.max_queue,
+    );
+    let trace_path = start_trace(args);
+    let report = fe.run(backend, scfg, metrics)?;
+    if let Some(p) = &trace_path {
+        finish_trace(p)?;
+    }
+    let statuses: Vec<String> = report
+        .net
+        .by_status
+        .iter()
+        .map(|(k, v)| format!("{k}:{v}"))
+        .collect();
+    println!(
+        "[net] {} conns ({} refused), {} requests, statuses {{{}}}, {} parse errors, {} early closes, {}/{} bytes in/out",
+        report.net.connections,
+        report.net.conns_refused,
+        report.net.requests,
+        statuses.join(" "),
+        report.net.parse_errors,
+        report.net.early_closes,
+        report.net.bytes_in,
+        report.net.bytes_out,
+    );
+    println!(
+        "[engine] {} completed, {} evicted, {} rejected; {} tokens in {:.3}s -> {:.1} tok/s; kv pages now {} (peak {})",
+        report.engine.completed,
+        report.engine.evicted,
+        report.engine.rejected,
+        report.engine.tokens_generated,
+        report.engine.wall_s,
+        report.engine.tokens_per_s,
+        report.engine.pool.pages_allocated,
+        report.engine.pool.pages_peak,
+    );
     if let Some(p) = args.get("json-out") {
         std::fs::write(p, report.to_json().to_string() + "\n")?;
         println!("[json] wrote {p}");

@@ -1,0 +1,296 @@
+//! HTTP front-end load scenarios: real TCP connections against
+//! `serve --listen`, measuring client-observed streaming latency and
+//! gating the overload behaviour the ISSUE demands — prompt bounded-
+//! latency 429s under backpressure, accepted streams finishing, and KV
+//! pool accounting back to idle afterward.
+//!
+//! The server runs in a plain spawned thread that builds its own
+//! backend ([`crate::runtime::Backend`] never crosses threads), binds
+//! an ephemeral loopback port, and reports the address back over a
+//! channel. Clients are the crate's own blocking
+//! [`HttpClient`], whose per-chunk arrival stamps give client-side TTFT
+//! and time-to-last-token without any server cooperation.
+
+use std::net::SocketAddr;
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{preset, BenchOptions, MODEL_SEED};
+use crate::config::{ModelConfig, Variant};
+use crate::coordinator::http::{
+    generate_request, HttpClient, HttpReport, ListenConfig, NetFrontend, StopHandle,
+};
+use crate::coordinator::{PrefillMode, ServerConfig};
+use crate::runtime::CpuBackend;
+use crate::util::json::Json;
+
+struct TestServer {
+    addr: SocketAddr,
+    stop: StopHandle,
+    handle: thread::JoinHandle<Result<HttpReport>>,
+}
+
+impl TestServer {
+    /// Stop the front end and collect its final report.
+    fn shutdown(self) -> Result<HttpReport> {
+        self.stop.stop();
+        self.handle
+            .join()
+            .map_err(|_| anyhow!("http server thread panicked"))?
+    }
+}
+
+/// Spawn a `serve --listen`-equivalent server on an ephemeral loopback
+/// port; the backend is constructed inside the server thread.
+fn spawn_server(
+    variant: Variant,
+    quick: bool,
+    threads: usize,
+    scfg: ServerConfig,
+    lcfg: ListenConfig,
+) -> Result<TestServer> {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || -> Result<HttpReport> {
+        let cfg = ModelConfig::preset(preset(quick), variant);
+        let mut be = CpuBackend::init(&cfg, MODEL_SEED)?;
+        be.set_threads(threads);
+        let fe = NetFrontend::bind("127.0.0.1:0", lcfg)?;
+        let _ = tx.send((fe.local_addr()?, fe.stop_handle()));
+        fe.run(&be, scfg, None)
+    });
+    match rx.recv() {
+        Ok((addr, stop)) => Ok(TestServer { addr, stop, handle }),
+        Err(_) => {
+            // The server thread died before binding; surface its error.
+            let err = handle
+                .join()
+                .map_err(|_| anyhow!("http server thread panicked during startup"))?;
+            Err(err.err().unwrap_or_else(|| anyhow!("server exited before binding")))
+        }
+    }
+}
+
+fn pctl(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    xs[((xs.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Streaming load test: N concurrent keep-alive connections, each
+/// running several chunked generate requests back to back. Records
+/// client-observed TTFT / time-to-last-token percentiles and gates that
+/// every stream finished (`done` row seen) with pool accounting idle.
+pub(super) fn http_serve_scenario(opts: &BenchOptions) -> Result<(String, Json)> {
+    let key = "http_serve".to_string();
+    let variant = Variant::DtrBilayer;
+    let (clients, per_client, gen) = if opts.quick {
+        (3usize, 2usize, 6usize)
+    } else {
+        (8, 4, 24)
+    };
+    let t = *opts.threads.last().unwrap();
+    let scfg = ServerConfig {
+        slots: 4,
+        prefill: PrefillMode::Chunked(32),
+        ..Default::default()
+    };
+    let srv = spawn_server(variant, opts.quick, t, scfg, ListenConfig::default())?;
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        let addr = srv.addr;
+        workers.push(thread::spawn(move || -> Result<Vec<(f64, f64, usize)>> {
+            let mut cl = HttpClient::connect(addr, Duration::from_secs(60))?;
+            let mut out = Vec::new();
+            for r in 0..per_client {
+                let prompt: Vec<String> = (0..8)
+                    .map(|i| ((c * 31 + r * 7 + i) % 256).to_string())
+                    .collect();
+                let body = format!(
+                    "{{\"prompt\":[{}],\"max_new_tokens\":{gen},\"stream\":true}}",
+                    prompt.join(",")
+                );
+                let resp = cl.roundtrip(&generate_request(&body, false))?;
+                ensure!(resp.status == 200, "client {c} req {r}: status {}", resp.status);
+                ensure!(
+                    resp.chunked && !resp.chunk_ms.is_empty(),
+                    "client {c} req {r}: expected a chunked token stream"
+                );
+                let text = String::from_utf8_lossy(&resp.body).into_owned();
+                ensure!(
+                    text.contains("\"done\":true"),
+                    "client {c} req {r}: stream ended without a done row"
+                );
+                let n_tokens = text.lines().filter(|l| l.contains("\"token\":")).count();
+                let last = *resp.chunk_ms.last().unwrap();
+                out.push((resp.chunk_ms[0], last, n_tokens));
+            }
+            Ok(out)
+        }));
+    }
+    let mut ttft = Vec::new();
+    let mut ttlt = Vec::new();
+    let mut tokens = 0usize;
+    for w in workers {
+        let rows = w.join().map_err(|_| anyhow!("{key}: client thread panicked"))??;
+        for (first, last, n) in rows {
+            ttft.push(first);
+            ttlt.push(last);
+            tokens += n;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = srv.shutdown()?;
+
+    let n_req = (clients * per_client) as u64;
+    ensure!(
+        report.net.status(200) == n_req,
+        "{key}: {} of {n_req} requests returned 200",
+        report.net.status(200)
+    );
+    ensure!(
+        report.engine.completed + report.engine.evicted == n_req as usize,
+        "{key}: engine retired {} of {n_req} accepted requests",
+        report.engine.completed + report.engine.evicted
+    );
+    ensure!(
+        report.engine.pool.pages_allocated == 0,
+        "{key}: {} KV pages still allocated after shutdown",
+        report.engine.pool.pages_allocated
+    );
+    let mut sc = Json::obj();
+    sc.set("clients", Json::Num(clients as f64));
+    sc.set("requests", Json::Num(n_req as f64));
+    sc.set("client_ttft_ms_p50", Json::Num(pctl(&mut ttft, 0.5)));
+    sc.set("client_ttft_ms_p99", Json::Num(pctl(&mut ttft, 0.99)));
+    sc.set("client_ttlt_ms_p50", Json::Num(pctl(&mut ttlt, 0.5)));
+    sc.set("client_ttlt_ms_p99", Json::Num(pctl(&mut ttlt, 0.99)));
+    sc.set(
+        "client_tokens_per_s",
+        Json::Num(if wall > 0.0 { tokens as f64 / wall } else { 0.0 }),
+    );
+    sc.set("server_tokens_per_s", Json::Num(report.engine.tokens_per_s));
+    sc.set("bytes_out", Json::Num(report.net.bytes_out as f64));
+    sc.set("all_streams_finished", Json::Bool(true));
+    println!(
+        "[bench] {key}: {n_req} streamed requests over {clients} conns, ttft p50 {:.1} ms \
+         p99 {:.1} ms, ttlt p99 {:.1} ms, {:.1} client tok/s",
+        pctl(&mut ttft, 0.5),
+        pctl(&mut ttft, 0.99),
+        pctl(&mut ttlt, 0.99),
+        if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
+    );
+    Ok((key, sc))
+}
+
+/// Overload gate: a tiny engine (1 slot, queue depth 1) hit with a
+/// simultaneous burst. Backpressure must surface as prompt 429s — not
+/// hangs — while every accepted request still finishes, and the KV pool
+/// must be idle afterward with `completed + rejected` covering the
+/// whole burst.
+pub(super) fn http_overload_scenario(opts: &BenchOptions) -> Result<(String, Json)> {
+    let key = "http_overload".to_string();
+    let variant = Variant::DtrBilayer;
+    let (burst, gen) = if opts.quick { (6usize, 8usize) } else { (12, 32) };
+    // 429s must arrive well before a full generation could complete;
+    // generous enough for a loaded CI box, tight enough to catch a
+    // "rejection waits for the queue" bug.
+    let deadline_ms = 2_500.0;
+    let t = *opts.threads.last().unwrap();
+    let scfg = ServerConfig {
+        slots: 1,
+        max_queue: 1,
+        prefill: PrefillMode::Chunked(32),
+        ..Default::default()
+    };
+    let srv = spawn_server(variant, opts.quick, t, scfg, ListenConfig::default())?;
+    let barrier = Arc::new(Barrier::new(burst));
+    let mut workers = Vec::new();
+    for c in 0..burst {
+        let addr = srv.addr;
+        let barrier = Arc::clone(&barrier);
+        workers.push(thread::spawn(move || -> Result<(u16, f64, bool)> {
+            let mut cl = HttpClient::connect(addr, Duration::from_secs(60))?;
+            let prompt: Vec<String> = (0..8).map(|i| ((c * 13 + i) % 256).to_string()).collect();
+            let body = format!(
+                "{{\"prompt\":[{}],\"max_new_tokens\":{gen}}}",
+                prompt.join(",")
+            );
+            let req = generate_request(&body, true);
+            barrier.wait();
+            let t0 = Instant::now();
+            let resp = cl.roundtrip(&req)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let finished = resp.status == 200
+                && String::from_utf8_lossy(&resp.body).contains("\"finish\":");
+            Ok((resp.status, ms, finished))
+        }));
+    }
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    let mut reject_ms = Vec::new();
+    let mut accept_ms = Vec::new();
+    for w in workers {
+        let (status, ms, finished) =
+            w.join().map_err(|_| anyhow!("{key}: client thread panicked"))??;
+        match status {
+            200 => {
+                ensure!(finished, "{key}: an accepted request never finished");
+                accepted += 1;
+                accept_ms.push(ms);
+            }
+            429 => {
+                rejected += 1;
+                reject_ms.push(ms);
+            }
+            other => anyhow::bail!("{key}: unexpected status {other} under overload"),
+        }
+    }
+    let report = srv.shutdown()?;
+
+    ensure!(accepted >= 1, "{key}: overload burst starved every request");
+    ensure!(
+        rejected >= 1,
+        "{key}: a 1-slot/1-queue engine absorbed a burst of {burst} without a 429"
+    );
+    let worst_reject = reject_ms.iter().cloned().fold(0.0f64, f64::max);
+    ensure!(
+        worst_reject <= deadline_ms,
+        "{key}: slowest 429 took {worst_reject:.0} ms (deadline {deadline_ms:.0} ms) — \
+         backpressure is not prompt"
+    );
+    ensure!(
+        report.engine.rejected as u64 == rejected,
+        "{key}: engine counted {} rejections, clients saw {rejected}",
+        report.engine.rejected
+    );
+    ensure!(
+        (report.engine.completed + report.engine.evicted) as u64 == accepted,
+        "{key}: engine retired {}, clients saw {accepted} accepted",
+        report.engine.completed + report.engine.evicted
+    );
+    ensure!(
+        report.engine.pool.pages_allocated == 0,
+        "{key}: {} KV pages leaked across the overload burst",
+        report.engine.pool.pages_allocated
+    );
+    let mut sc = Json::obj();
+    sc.set("burst", Json::Num(burst as f64));
+    sc.set("accepted", Json::Num(accepted as f64));
+    sc.set("rejected_429", Json::Num(rejected as f64));
+    sc.set("reject_ms_worst", Json::Num(worst_reject));
+    sc.set("reject_deadline_ms", Json::Num(deadline_ms));
+    sc.set("accept_ms_worst", Json::Num(accept_ms.iter().cloned().fold(0.0, f64::max)));
+    sc.set("kv_pages_after", Json::Num(report.engine.pool.pages_allocated as f64));
+    sc.set("accounting_closed", Json::Bool(true));
+    println!(
+        "[bench] {key}: burst {burst} -> {accepted} accepted / {rejected} x 429 \
+         (worst 429 {worst_reject:.0} ms, deadline {deadline_ms:.0} ms)"
+    );
+    Ok((key, sc))
+}

@@ -41,6 +41,8 @@
 //!   reporting speedups. A bench run that breaks bit-identity fails
 //!   loudly instead of recording tainted numbers.
 
+mod http_load;
+
 use std::path::Path;
 use std::time::Instant;
 
@@ -156,6 +158,14 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
     }
     {
         let (key, s) = telemetry_overhead_scenario(opts, Variant::DtrBilayer)?;
+        scenarios.set(&key, s);
+    }
+    {
+        // HTTP front-end family: real TCP load test + the overload/429
+        // backpressure gate (ISSUE 8's bounded-latency acceptance bar).
+        let (key, s) = http_load::http_serve_scenario(opts)?;
+        scenarios.set(&key, s);
+        let (key, s) = http_load::http_overload_scenario(opts)?;
         scenarios.set(&key, s);
     }
     let mut out = Json::obj();
@@ -1334,6 +1344,18 @@ mod tests {
         assert!(to.path("events_per_run").unwrap().as_f64().unwrap() > 0.0);
         assert!(to.path("overhead_pct").unwrap().as_f64().unwrap() >= 0.0);
         assert!(!crate::telemetry::enabled(), "bench left telemetry enabled");
+        // the http family must record its latency readouts and gates
+        let hs = sc.path("http_serve").unwrap();
+        assert!(hs.path("client_ttft_ms_p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(hs.path("client_ttlt_ms_p99").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            hs.path("all_streams_finished").and_then(Json::as_bool),
+            Some(true)
+        );
+        let ho = sc.path("http_overload").unwrap();
+        assert!(ho.path("rejected_429").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(ho.path("kv_pages_after").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(ho.path("accounting_closed").and_then(Json::as_bool), Some(true));
     }
 
     #[test]

@@ -311,17 +311,27 @@ impl<'a> Parser<'a> {
                             let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
                             self.i += 4;
                             // Surrogate pairs: join with the low half if present.
-                            let cp = if (0xd800..0xdc00).contains(&cp)
+                            // Only consume the second escape when it really is a
+                            // low surrogate — a high surrogate followed by e.g.
+                            // A must fall back to U+FFFD + 'A', not
+                            // underflow the pair arithmetic.
+                            let lo = if (0xd800..0xdc00).contains(&cp)
+                                && self.i + 6 <= self.b.len()
                                 && self.b[self.i..].starts_with(b"\\u")
                             {
-                                let lo_hex =
-                                    std::str::from_utf8(&self.b[self.i + 2..self.i + 6])
-                                        .map_err(|_| "bad \\u")?;
-                                let lo = u32::from_str_radix(lo_hex, 16).map_err(|_| "bad \\u")?;
-                                self.i += 6;
-                                0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00)
+                                std::str::from_utf8(&self.b[self.i + 2..self.i + 6])
+                                    .ok()
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .filter(|lo| (0xdc00..0xe000).contains(lo))
                             } else {
-                                cp
+                                None
+                            };
+                            let cp = match lo {
+                                Some(lo) => {
+                                    self.i += 6;
+                                    0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00)
+                                }
+                                None => cp,
                             };
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }

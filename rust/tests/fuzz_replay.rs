@@ -1,0 +1,100 @@
+//! Deterministic replay of the committed fuzz corpus — tier-1 CI
+//! exercises every seed (plus a cheap bit-flip sweep around each one)
+//! through the differential oracles without any fuzzer toolchain.
+//!
+//! The mutational fuzzers live in the `dtrnet-fuzz` workspace member;
+//! when one finds a crash it writes the input to `fuzz/artifacts/` and
+//! the fix lands with the input promoted into `fuzz/corpus/`, where
+//! this test keeps it pinned forever.
+
+use std::path::PathBuf;
+
+use dtrnet::coordinator::http::torture::{check_http_bytes, check_json_bytes};
+
+/// Load `fuzz/corpus/<name>` sorted by file name (root manifest dir —
+/// the corpus is shared with the `dtrnet-fuzz` member).
+fn corpus(name: &str) -> Vec<(String, Vec<u8>)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fuzz")
+        .join("corpus")
+        .join(name);
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("missing corpus {}: {e}", dir.display()))
+        .filter_map(|e| e.ok())
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    entries
+        .into_iter()
+        .filter(|e| e.path().is_file())
+        .map(|e| {
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).expect("read corpus file"),
+            )
+        })
+        .collect()
+}
+
+/// Run `check` on every seed and on a deterministic single-bit-flip
+/// sweep of it (stride keeps the sweep bounded for longer seeds).
+fn replay(seeds: &[(String, Vec<u8>)], check: impl Fn(&[u8])) {
+    for (name, data) in seeds {
+        check(data);
+        let stride = (data.len() / 64).max(1);
+        for i in (0..data.len()).step_by(stride) {
+            for bit in [0u8, 2, 5, 7] {
+                let mut m = data.clone();
+                m[i] ^= 1 << bit;
+                // A panic here names the seed via the unwind payload of
+                // the oracle; the outer assert message adds the file.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&m)));
+                assert!(r.is_ok(), "oracle panicked on {name} with byte {i} bit {bit} flipped");
+            }
+        }
+    }
+}
+
+#[test]
+fn http_corpus_replays_clean() {
+    let seeds = corpus("http");
+    assert!(seeds.len() >= 12, "http corpus shrank to {} seeds", seeds.len());
+    replay(&seeds, |d| {
+        check_http_bytes(d);
+    });
+}
+
+#[test]
+fn json_corpus_replays_clean() {
+    let seeds = corpus("json");
+    assert!(seeds.len() >= 8, "json corpus shrank to {} seeds", seeds.len());
+    replay(&seeds, |d| {
+        check_json_bytes(d);
+    });
+}
+
+#[test]
+fn corpus_has_both_verdicts() {
+    // The corpus must keep exercising both sides of each oracle:
+    // at least one JSON seed each machine accepts and one it rejects,
+    // and at least one HTTP seed that parses a request cleanly and one
+    // that trips a protocol error.
+    let json = corpus("json");
+    let accepted = json.iter().filter(|(_, d)| check_json_bytes(d)).count();
+    assert!(accepted >= 1, "no accepted JSON seeds left");
+    assert!(accepted < json.len(), "no rejected JSON seeds left");
+
+    let http = corpus("http");
+    let mut ok_requests = 0usize;
+    let mut errors = 0usize;
+    for (_, d) in &http {
+        let out = check_http_bytes(d);
+        if !out.requests.is_empty() {
+            ok_requests += 1;
+        }
+        if out.error.is_some() {
+            errors += 1;
+        }
+    }
+    assert!(ok_requests >= 3, "corpus lost its well-formed HTTP seeds");
+    assert!(errors >= 3, "corpus lost its malformed HTTP seeds");
+}

@@ -1,0 +1,400 @@
+//! Socket-level integration tests for the HTTP/1.1 front end: real TCP
+//! connections against a live engine, covering streamed and buffered
+//! generation, bitwise response stability under arbitrary request
+//! chunking, the malformed-input status matrix, premature closes, read
+//! deadlines, keep-alive/pipelining, and overload backpressure — with
+//! the final [`HttpReport`] reconciled against what the clients saw
+//! (and KV slot accounting back at idle) after every scenario.
+
+use std::io::Write;
+use std::net::SocketAddr;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::http::frontend::StopHandle;
+use dtrnet::coordinator::http::{generate_request, get_request, HttpClient};
+use dtrnet::coordinator::{HttpReport, ListenConfig, NetFrontend, PrefillMode, ServerConfig};
+use dtrnet::runtime::CpuBackend;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+struct TestServer {
+    addr: SocketAddr,
+    stop: StopHandle,
+    handle: thread::JoinHandle<anyhow::Result<HttpReport>>,
+}
+
+/// Bind on an ephemeral loopback port and serve from a background
+/// thread that owns the backend (the engine runs on that thread; the
+/// front end spawns its own accept/connection threads).
+fn start(scfg: ServerConfig, lcfg: ListenConfig) -> TestServer {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let cfg = ModelConfig::preset("xs", Variant::DtrBilayer);
+        let be = CpuBackend::init(&cfg, 42)?;
+        let fe = NetFrontend::bind("127.0.0.1:0", lcfg)?;
+        let _ = tx.send((fe.local_addr()?, fe.stop_handle()));
+        fe.run(&be, scfg, None)
+    });
+    match rx.recv() {
+        Ok((addr, stop)) => TestServer { addr, stop, handle },
+        Err(_) => {
+            let err = handle.join().expect("server thread panicked");
+            panic!("server failed to start: {:?}", err.err());
+        }
+    }
+}
+
+impl TestServer {
+    fn client(&self) -> HttpClient {
+        HttpClient::connect(self.addr, TIMEOUT).expect("connect")
+    }
+
+    fn finish(self) -> HttpReport {
+        self.stop.stop();
+        self.handle
+            .join()
+            .expect("server thread panicked")
+            .expect("server errored")
+    }
+}
+
+fn scfg() -> ServerConfig {
+    ServerConfig {
+        slots: 2,
+        prefill: PrefillMode::Chunked(16),
+        ..Default::default()
+    }
+}
+
+/// NDJSON rows of a streamed response body.
+fn rows(body: &[u8]) -> Vec<String> {
+    std::str::from_utf8(body)
+        .expect("stream body must be utf-8")
+        .lines()
+        .map(|l| l.to_string())
+        .collect()
+}
+
+#[test]
+fn streamed_generation_roundtrips_over_tcp() {
+    let srv = start(scfg(), ListenConfig::default());
+    let mut c = srv.client();
+
+    let body = "{\"prompt\":[7,11,13],\"max_new_tokens\":6,\"stream\":true}";
+    let resp = c.roundtrip(&generate_request(body, false)).expect("stream roundtrip");
+    assert_eq!(resp.status, 200);
+    assert!(resp.chunked, "stream=true must use chunked transfer encoding");
+    assert_eq!(resp.header("content-type"), Some("application/x-ndjson"));
+    let rows = rows(&resp.body);
+    assert_eq!(rows.len(), 7, "6 token rows + 1 done row: {rows:?}");
+    for row in &rows[..6] {
+        assert!(row.starts_with("{\"token\":"), "bad token row {row}");
+    }
+    let done = &rows[6];
+    assert!(done.contains("\"done\":true"), "bad done row {done}");
+    assert!(done.contains("\"n_tokens\":6"), "bad done row {done}");
+    assert!(done.contains("\"finish\":"), "bad done row {done}");
+    assert!(resp.chunk_ms.len() >= 2, "tokens must arrive as separate chunks");
+
+    // Keep-alive: same connection serves a buffered generate and a
+    // health probe afterwards.
+    let resp = c
+        .roundtrip(&generate_request("{\"text\":\"hi\",\"max_new_tokens\":3}", false))
+        .expect("buffered roundtrip");
+    assert_eq!(resp.status, 200);
+    assert!(!resp.chunked);
+    let text = String::from_utf8(resp.body).unwrap();
+    assert!(text.contains("\"tokens\":["), "buffered body must inline tokens: {text}");
+    assert!(text.contains("\"n_tokens\":3"), "{text}");
+
+    let resp = c.roundtrip(&get_request("/health", true)).expect("health");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, b"{\"ok\":true}");
+
+    drop(c);
+    let rep = srv.finish();
+    assert_eq!(rep.net.status(200), 3);
+    assert_eq!(rep.net.requests, 3);
+    assert_eq!(rep.net.connections, 1);
+    assert_eq!(rep.engine.completed, 2);
+    assert_eq!(rep.engine.rejected, 0);
+    assert_eq!(rep.engine.pool.pages_allocated, 0, "KV pages must drain to idle");
+}
+
+#[test]
+fn response_bytes_are_identical_under_request_chunking() {
+    // No Date header, greedy decoding, one request at a time: the exact
+    // response bytes must not depend on how the request bytes arrive.
+    let srv = start(scfg(), ListenConfig::default());
+    let streamed =
+        generate_request("{\"prompt\":[3,5,8],\"max_new_tokens\":5,\"stream\":true}", true);
+    let buffered = generate_request("{\"prompt\":[3,5,8],\"max_new_tokens\":5}", true);
+
+    for req in [&streamed, &buffered] {
+        let mut raws: Vec<Vec<u8>> = Vec::new();
+        // One-shot, 16-byte dribble, and 1-byte dribble of the head
+        // with the body split in two.
+        let plans: Vec<Vec<&[u8]>> = vec![
+            vec![&req[..]],
+            req.chunks(16).collect(),
+            {
+                let head_end = req.len() - 8;
+                let mut plan: Vec<&[u8]> = req[..head_end].chunks(1).collect();
+                plan.push(&req[head_end..]);
+                plan
+            },
+        ];
+        for plan in plans {
+            let mut c = srv.client();
+            for (i, seg) in plan.iter().enumerate() {
+                c.stream().write_all(seg).expect("dribble write");
+                if i % 8 == 0 {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            }
+            let resp = c.read_response().expect("read after dribble");
+            assert_eq!(resp.status, 200);
+            raws.push(resp.raw);
+        }
+        assert_eq!(raws[0], raws[1], "response changed under 16-byte chunking");
+        assert_eq!(raws[0], raws[2], "response changed under byte dribble");
+    }
+
+    let rep = srv.finish();
+    assert_eq!(rep.net.status(200), 6);
+    assert_eq!(rep.engine.completed, 6);
+    assert_eq!(rep.engine.pool.pages_allocated, 0);
+}
+
+#[test]
+fn pipelined_requests_on_one_connection() {
+    let srv = start(scfg(), ListenConfig::default());
+    let mut c = srv.client();
+
+    // Two generates and a health probe written back-to-back in a single
+    // write; responses must come back in order on the same connection.
+    let mut batch = Vec::new();
+    batch.extend_from_slice(&generate_request("{\"prompt\":[1],\"max_new_tokens\":2}", false));
+    batch.extend_from_slice(&generate_request("{\"prompt\":[2],\"max_new_tokens\":2}", false));
+    batch.extend_from_slice(&get_request("/health", true));
+    c.send(&batch).expect("pipelined send");
+
+    let first = c.read_response().expect("first pipelined");
+    let second = c.read_response().expect("second pipelined");
+    let third = c.read_response().expect("third pipelined");
+    assert_eq!(first.status, 200);
+    assert_eq!(second.status, 200);
+    assert_eq!(third.body, b"{\"ok\":true}");
+    assert!(String::from_utf8(first.body).unwrap().contains("\"n_tokens\":2"));
+
+    drop(c);
+    let rep = srv.finish();
+    assert_eq!(rep.net.status(200), 3);
+    assert_eq!(rep.net.connections, 1);
+    assert_eq!(rep.engine.completed, 2);
+    assert_eq!(rep.engine.pool.pages_allocated, 0);
+}
+
+#[test]
+fn malformed_requests_map_to_specific_statuses() {
+    let srv = start(scfg(), ListenConfig::default());
+
+    fn post(body_bytes: &[u8]) -> Vec<u8> {
+        let mut req = format!(
+            "POST /generate HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n",
+            body_bytes.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(body_bytes);
+        req
+    }
+
+    let cases: Vec<(&str, Vec<u8>, u16)> = vec![
+        ("garbage request line", b"NOT HTTP AT ALL\r\n\r\n".to_vec(), 400),
+        ("http/2.0", b"GET /health HTTP/2.0\r\nHost: t\r\n\r\n".to_vec(), 505),
+        (
+            "transfer-encoding request",
+            b"POST /generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n".to_vec(),
+            501,
+        ),
+        (
+            "post without content-length",
+            b"POST /generate HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(),
+            411,
+        ),
+        (
+            "oversized content-length",
+            b"POST /generate HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n".to_vec(),
+            413,
+        ),
+        ("header bomb", {
+            let mut b = b"GET /health HTTP/1.1\r\n".to_vec();
+            for i in 0..100 {
+                b.extend_from_slice(format!("X-Bomb-{i}: x\r\n").as_bytes());
+            }
+            b.extend_from_slice(b"\r\n");
+            b
+        }, 431),
+        ("truncated json body", post(b"{\"prompt\":[1"), 400),
+        ("invalid utf-8 body", post(b"{\"text\":\"\xff\xfe\"}"), 400),
+        ("unknown field", post(b"{\"prompt\":[1],\"bogus\":1}"), 400),
+        ("prompt and text together", post(b"{\"prompt\":[1],\"text\":\"x\"}"), 400),
+        ("neither prompt nor text", post(b"{\"max_new_tokens\":2}"), 400),
+        ("out-of-vocab prompt", post(b"{\"prompt\":[999999]}"), 400),
+        ("empty prompt", post(b"{\"prompt\":[]}"), 400),
+        ("method not allowed", get_request("/generate", true), 405),
+        ("unknown target", get_request("/nowhere", true), 404),
+    ];
+
+    for (name, req, want) in &cases {
+        let mut c = srv.client();
+        let resp = c.roundtrip(req).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(resp.status, *want, "{name}");
+        let text = String::from_utf8_lossy(&resp.body).into_owned();
+        assert!(text.contains("\"error\":"), "{name}: body must carry an error: {text}");
+        if *want == 405 {
+            assert_eq!(resp.header("allow"), Some("POST"), "{name}");
+        }
+    }
+
+    // The server must still be fully alive afterwards.
+    let mut c = srv.client();
+    let resp = c
+        .roundtrip(&generate_request("{\"prompt\":[1,2],\"max_new_tokens\":2}", true))
+        .expect("post-matrix generate");
+    assert_eq!(resp.status, 200);
+
+    let rep = srv.finish();
+    // Stream-level rejections: garbage, 2.0, TE, no-CL, big-CL, bomb,
+    // plus the invalid-UTF-8 body caught by the incremental JSON check.
+    assert_eq!(rep.net.parse_errors, 7);
+    assert_eq!(rep.net.status(400), 8);
+    for code in [404, 405, 411, 413, 431, 501, 505] {
+        assert_eq!(rep.net.status(code), 1, "status {code} count");
+    }
+    // `requests` counts fully parsed requests only: the 7 stream-level
+    // rejections above never complete one.
+    assert_eq!(rep.net.requests, cases.len() as u64 - 7 + 1);
+    assert_eq!(rep.engine.completed, 1);
+    assert_eq!(rep.engine.pool.pages_allocated, 0, "no malformed request may leak pages");
+}
+
+#[test]
+fn premature_close_and_read_deadline_are_handled() {
+    let lcfg = ListenConfig {
+        read_timeout_ms: 150,
+        ..Default::default()
+    };
+    let srv = start(scfg(), lcfg);
+
+    // Half a request, then the client vanishes: clean early-close drop.
+    {
+        let mut c = srv.client();
+        c.stream()
+            .write_all(b"POST /generate HTTP/1.1\r\nContent-Le")
+            .expect("partial write");
+    }
+    thread::sleep(Duration::from_millis(50));
+
+    // Half a request, then the client stalls: 408 within the deadline.
+    let mut c = srv.client();
+    c.send(b"POST /generate HTTP/1.1\r\nContent-Le").expect("partial send");
+    let resp = c.read_response().expect("deadline response");
+    assert_eq!(resp.status, 408);
+
+    // An idle keep-alive connection timing out is NOT an error: no
+    // response, just a quiet close (the read_response fails cleanly).
+    let mut idle = srv.client();
+    idle.send(&get_request("/health", false)).expect("health send");
+    assert_eq!(idle.read_response().expect("health").status, 200);
+    assert!(idle.read_response().is_err(), "idle close must not carry a response");
+
+    // And the server still serves.
+    let mut c = srv.client();
+    assert_eq!(c.roundtrip(&get_request("/health", true)).expect("alive").status, 200);
+
+    let rep = srv.finish();
+    assert!(rep.net.early_closes >= 1, "early close must be counted");
+    assert_eq!(rep.net.status(408), 1);
+    assert_eq!(rep.net.status(200), 2);
+    assert_eq!(rep.engine.pool.pages_allocated, 0);
+}
+
+#[test]
+fn overload_sheds_load_with_429_and_recovers() {
+    // One slot, one queue entry: a concurrent burst must see a mix of
+    // 200s and prompt 429s, and the engine accounting must close.
+    let scfg = ServerConfig {
+        slots: 1,
+        max_queue: 1,
+        prefill: PrefillMode::Chunked(16),
+        ..Default::default()
+    };
+    let srv = start(scfg, ListenConfig::default());
+    let addr = srv.addr;
+
+    let burst = 6;
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(burst));
+    let mut workers = Vec::new();
+    for i in 0..burst {
+        let barrier = std::sync::Arc::clone(&barrier);
+        workers.push(thread::spawn(move || {
+            let mut c = HttpClient::connect(addr, TIMEOUT).expect("connect");
+            let body = format!("{{\"prompt\":[{}],\"max_new_tokens\":12}}", i + 1);
+            barrier.wait();
+            c.roundtrip(&generate_request(&body, true)).expect("burst roundtrip")
+        }));
+    }
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    for w in workers {
+        let resp = w.join().expect("client thread panicked");
+        match resp.status {
+            200 => {
+                ok += 1;
+                assert!(String::from_utf8(resp.body).unwrap().contains("\"n_tokens\":12"));
+            }
+            429 => {
+                rejected += 1;
+                assert!(resp.header("retry-after").is_some(), "429 must carry Retry-After");
+            }
+            other => panic!("unexpected status {other} under overload"),
+        }
+    }
+    assert!(ok >= 1, "some of the burst must be served");
+    assert!(rejected >= 1, "a 1-deep queue must shed load");
+
+    let rep = srv.finish();
+    assert_eq!(rep.net.status(200), ok);
+    assert_eq!(rep.net.status(429), rejected);
+    assert_eq!(rep.engine.rejected as u64, rejected, "engine and edge must agree on rejects");
+    assert_eq!((rep.engine.completed + rep.engine.evicted) as u64, ok);
+    assert_eq!(rep.engine.pool.pages_allocated, 0, "overload must not leak KV pages");
+}
+
+#[test]
+fn max_requests_drains_and_exits_on_its_own() {
+    let lcfg = ListenConfig {
+        max_requests: 2,
+        ..Default::default()
+    };
+    let srv = start(scfg(), lcfg);
+    let mut c = srv.client();
+    assert_eq!(c.roundtrip(&get_request("/health", false)).expect("one").status, 200);
+    let mut c2 = srv.client();
+    assert_eq!(c2.roundtrip(&get_request("/health", true)).expect("two").status, 200);
+    drop(c);
+    drop(c2);
+
+    // No stop() — the front end must wind down by itself.
+    let rep = srv
+        .handle
+        .join()
+        .expect("server thread panicked")
+        .expect("server errored");
+    assert_eq!(rep.net.requests, 2);
+    assert_eq!(rep.net.status(200), 2);
+}

@@ -1,0 +1,211 @@
+//! Split-read torture tests for the HTTP/1.1 push parser and the
+//! strict JSON push validator: every fixture is replayed one-shot,
+//! byte by byte, and split at *every* single boundary, and the parsed
+//! requests must come out bitwise identical each time. Malformed
+//! inputs get the same treatment and must map to the same specific
+//! protocol error at every split.
+
+use dtrnet::coordinator::http::torture::{check_http_bytes, check_json_bytes, http_outcome};
+use dtrnet::coordinator::http::{HttpError, Limits, PushParser};
+
+fn limits() -> Limits {
+    Limits {
+        max_head_bytes: 2048,
+        max_body_bytes: 4096,
+        max_headers: 32,
+    }
+}
+
+/// Feed `data` with a single split at every possible boundary and
+/// demand the outcome matches the one-shot parse exactly (the oracle
+/// already covers byte-by-byte and pseudo-random splits).
+fn every_single_split(data: &[u8]) {
+    let oneshot = check_http_bytes(data);
+    for cut in 0..=data.len() {
+        let split = http_outcome(data, &[cut]);
+        assert_eq!(oneshot, split, "outcome changed when split at byte {cut}");
+    }
+    // Every pair of splits in a sliding window around the head/body
+    // boundary region — two partial reads are the common socket case.
+    for a in 0..data.len() {
+        let b = (a + 7).min(data.len());
+        let split = http_outcome(data, &[a, b]);
+        assert_eq!(oneshot, split, "outcome changed when split at {a},{b}");
+    }
+}
+
+fn post_generate(body: &str) -> Vec<u8> {
+    format!(
+        "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+#[test]
+fn valid_fixtures_are_split_invariant() {
+    let fixtures: Vec<Vec<u8>> = vec![
+        b"GET /health HTTP/1.1\r\nHost: t\r\n\r\n".to_vec(),
+        b"GET / HTTP/1.0\r\n\r\n".to_vec(),
+        post_generate("{\"prompt\":[72,105],\"max_new_tokens\":4}"),
+        post_generate("{\"text\":\"caf\\u00e9 \\ud83d\\ude00\",\"stream\":true}"),
+        post_generate("{}"),
+        b"POST /generate HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n{}".to_vec(),
+        b"GET /health HTTP/1.1\r\nConnection: close\r\nX-Pad:   spaced   \r\n\r\n".to_vec(),
+    ];
+    for data in &fixtures {
+        every_single_split(data);
+        let out = check_http_bytes(data);
+        assert_eq!(out.requests.len(), 1, "fixture must parse as one request");
+        assert_eq!(out.error, None);
+        assert_eq!(out.buffered, 0);
+    }
+}
+
+#[test]
+fn parsed_head_fields_survive_any_chunking() {
+    let data = post_generate("{\"prompt\":[1,2,3]}");
+    let oneshot = check_http_bytes(&data);
+    let (head, body) = &oneshot.requests[0];
+    assert_eq!(head.method, "POST");
+    assert_eq!(head.target, "/generate");
+    assert!(head.http11);
+    assert!(!head.close);
+    assert_eq!(head.content_length, body.len());
+    assert_eq!(head.header("content-type"), Some("application/json"));
+    assert_eq!(body.as_slice(), b"{\"prompt\":[1,2,3]}");
+    // check_http_bytes already compared byte-by-byte and random splits
+    // against this exact (head, body) pair bitwise.
+}
+
+#[test]
+fn pipelined_requests_share_one_read() {
+    let one = post_generate("{\"prompt\":[1]}");
+    let two = b"GET /health HTTP/1.1\r\n\r\n".to_vec();
+    let three = post_generate("{\"text\":\"x\"}");
+    let mut data = one.clone();
+    data.extend_from_slice(&two);
+    data.extend_from_slice(&three);
+
+    every_single_split(&data);
+    let out = check_http_bytes(&data);
+    assert_eq!(out.requests.len(), 3);
+    assert_eq!(out.requests[0].0.method, "POST");
+    assert_eq!(out.requests[1].0.method, "GET");
+    assert_eq!(out.requests[1].1, b"");
+    assert_eq!(out.requests[2].1, b"{\"text\":\"x\"}");
+    assert_eq!(out.error, None);
+    assert_eq!(out.buffered, 0);
+}
+
+#[test]
+fn malformed_inputs_fail_identically_at_every_split() {
+    // (input, expected status) — each must produce the same sticky
+    // error no matter how the bytes arrive.
+    let cases: Vec<(Vec<u8>, u16)> = vec![
+        (b"BOGUS\r\n\r\n".to_vec(), 400),
+        (b"GET / HTTP/2.0\r\n\r\n".to_vec(), 505),
+        (b"GET / HTTP/1.1\nHost: a\n\n".to_vec(), 400),
+        (b"POST / HTTP/1.1\r\nHost: a\r\n\r\n".to_vec(), 411),
+        (b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(), 400),
+        (b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n".to_vec(), 400),
+        (
+            b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n".to_vec(),
+            400,
+        ),
+        (b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n".to_vec(), 413),
+        (
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n".to_vec(),
+            501,
+        ),
+        (b"GET / HTTP/1.1\r\nBad Header: x\r\n\r\n".to_vec(), 400),
+        (b"GET / HTTP/1.1\r\n: novalue\r\n\r\n".to_vec(), 400),
+    ];
+    for (data, status) in &cases {
+        let oneshot = check_http_bytes(data);
+        let err = oneshot
+            .error
+            .unwrap_or_else(|| panic!("{data:?} must fail"));
+        assert_eq!(err.status(), *status, "wrong status for {data:?}");
+        assert_eq!(oneshot.requests.len(), 0);
+        every_single_split(data);
+    }
+}
+
+#[test]
+fn limits_trip_deterministically() {
+    // Header bomb: more headers than the cap.
+    let mut bomb = b"GET / HTTP/1.1\r\n".to_vec();
+    for i in 0..40 {
+        bomb.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+    }
+    bomb.extend_from_slice(b"\r\n");
+    let out = check_http_bytes(&bomb);
+    assert_eq!(out.error.map(|e| e.status()), Some(431));
+    every_single_split(&bomb);
+
+    // Head larger than max_head_bytes without ever finishing.
+    let huge = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(4000)).into_bytes();
+    let out = check_http_bytes(&huge);
+    assert_eq!(out.error.map(|e| e.status()), Some(431));
+
+    // An error is sticky: pushes after it keep failing with the same error.
+    let mut p = PushParser::new(limits());
+    let first = p.push(b"GET / HTTP/9.9\r\n\r\n").unwrap_err();
+    assert_eq!(first, HttpError::UnsupportedVersion);
+    assert_eq!(p.push(b"GET / HTTP/1.1\r\n\r\n").unwrap_err(), first);
+    assert_eq!(p.failure(), Some(first));
+    assert!(p.take().is_none());
+}
+
+#[test]
+fn incremental_body_bytes_reassemble_exactly() {
+    // body_new_bytes() must hand out each body byte exactly once, in
+    // order, regardless of how pushes line up with the head/body split.
+    let body = b"{\"prompt\":[10,20,30],\"max_new_tokens\":7}";
+    let data = post_generate(std::str::from_utf8(body).unwrap());
+    for cut in 0..=data.len() {
+        let mut p = PushParser::new(limits());
+        let mut seen: Vec<u8> = Vec::new();
+        for seg in [&data[..cut], &data[cut..]] {
+            p.push(seg).unwrap();
+            seen.extend_from_slice(p.body_new_bytes());
+        }
+        assert!(p.ready());
+        assert_eq!(seen, body, "body bytes diverged when split at {cut}");
+        let req = p.take().unwrap();
+        assert_eq!(req.body(), body);
+    }
+}
+
+#[test]
+fn json_push_is_split_invariant_everywhere() {
+    let docs: Vec<&[u8]> = vec![
+        b"{\"prompt\":[1,2,3],\"max_new_tokens\":16,\"stream\":false}",
+        b"{\"text\":\"caf\\u00e9 \\ud83d\\ude00 \\\" \\\\ \\n\",\"temperature\":0.5}",
+        b"[1,-2.5e-3,0.125,true,false,null,[],{}]",
+        b"\"\\ud800\"",
+        b"{\"a\":{\"b\":{\"c\":[{\"d\":null}]}}}",
+        b"01",
+        b"{\"a\":1,}",
+        b"{\"a\"",
+        b"\xff\xfe",
+        b"{\"utf8\":\"caf\xc3\xa9 \xf0\x9f\x98\x80\"}",
+    ];
+    for doc in &docs {
+        // The oracle covers one-shot vs byte-by-byte vs pseudo-random.
+        let verdict = check_json_bytes(doc);
+        // Additionally: the verdict must be identical for every single
+        // split position (feed [..i] then [i..]).
+        for i in 0..=doc.len() {
+            use dtrnet::coordinator::http::bjson::JsonPush;
+            let mut p = JsonPush::new();
+            let ok = p.feed(&doc[..i]).is_ok()
+                && p.feed(&doc[i..]).is_ok()
+                && p.finish().is_ok();
+            assert_eq!(ok, verdict, "JsonPush verdict changed at split {i} for {doc:?}");
+        }
+    }
+}
