@@ -25,8 +25,13 @@
 //!
 //! Status mapping (DESIGN.md §Network front end): parse failures map
 //! via [`HttpError::status`] (400/411/413/431/501/505), engine
-//! validation → 400, queue-full → 429, connection cap → 503, read
-//! deadline → 408, engine stall → 503, engine death → 500.
+//! validation → 400, queue-full → 429, connection cap → 503,
+//! mid-request read deadline → 408, engine stall → 503, engine death
+//! → 500. `HEAD` answers with the matching `GET`'s headers and no body;
+//! `OPTIONS` answers 204 + `Allow`. Two distinct silence timeouts: the
+//! mid-request read deadline (stalled half-request → 408) and the
+//! longer idle keep-alive timeout (quiet connection between requests →
+//! silent close).
 
 use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
@@ -55,9 +60,17 @@ pub struct ListenConfig {
     /// Concurrent-connection cap; excess connections get an immediate
     /// 503 and a close.
     pub max_conns: usize,
-    /// Per-read deadline in ms. Firing mid-request → 408; firing on an
-    /// idle keep-alive connection → silent close.
+    /// Mid-request read deadline in ms: longest silence tolerated after
+    /// a request has started arriving before the connection gets a 408
+    /// and a close. Idle keep-alive connections are governed by
+    /// [`ListenConfig::idle_timeout_ms`] instead.
     pub read_timeout_ms: u64,
+    /// Idle keep-alive timeout in ms: how long a connection may sit
+    /// between requests (no request bytes in flight) before a silent
+    /// close. Deliberately separate from — and typically much longer
+    /// than — the mid-request read deadline: a quiet keep-alive socket
+    /// is normal client behavior, a stalled half-request is not.
+    pub idle_timeout_ms: u64,
     /// How long a connection waits on the engine for the next stream
     /// event before giving up (503 / stream abort).
     pub stream_timeout_ms: u64,
@@ -72,6 +85,7 @@ impl Default for ListenConfig {
             limits: Limits::default(),
             max_conns: 64,
             read_timeout_ms: 5_000,
+            idle_timeout_ms: 30_000,
             stream_timeout_ms: 60_000,
             max_requests: 0,
         }
@@ -473,7 +487,12 @@ fn handle_conn(
     sh: &Shared,
 ) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(sh.cfg.read_timeout_ms)));
+    // Short socket poll under the logical deadlines: each wakeup checks
+    // the stop flag and whichever timeout currently applies — the
+    // mid-request read deadline while request bytes are in flight, the
+    // (typically much longer) idle keep-alive timeout between requests.
+    let poll_ms = sh.cfg.read_timeout_ms.min(sh.cfg.idle_timeout_ms).clamp(10, 100);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(poll_ms)));
     telemetry::async_begin(
         "http_conn",
         conn_id,
@@ -484,6 +503,7 @@ fn handle_conn(
     let mut continue_handled = false;
     let mut served: u64 = 0;
     let mut buf = [0u8; 4096];
+    let mut last_activity = Instant::now();
     'conn: loop {
         if sh.stop.load(Ordering::SeqCst) {
             break;
@@ -495,13 +515,24 @@ fn handle_conn(
                 }
                 break;
             }
-            Ok(n) => n,
+            Ok(n) => {
+                last_activity = Instant::now();
+                n
+            }
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                let silent_ms = last_activity.elapsed().as_millis() as u64;
                 if parser.mid_request() {
-                    // Read deadline fired with a request in flight.
-                    write_error(&mut stream, sh, 408, "read deadline", &[]);
+                    if silent_ms >= sh.cfg.read_timeout_ms {
+                        // Read deadline fired with a request in flight.
+                        write_error(&mut stream, sh, 408, "read deadline", &[]);
+                        break;
+                    }
+                } else if silent_ms >= sh.cfg.idle_timeout_ms {
+                    // Quiet keep-alive connection past its window: close
+                    // silently — no response is owed.
+                    break;
                 }
-                break;
+                continue;
             }
             Err(_) => break,
         };
@@ -540,6 +571,9 @@ fn handle_conn(
             stat(sh, |s| s.requests += 1);
             served += 1;
             let keep = respond(&mut stream, sh, &tx, &req);
+            // The idle window starts when the response finishes, not at
+            // the last read — generation time must not eat into it.
+            last_activity = Instant::now();
             if !keep || sh.stop.load(Ordering::SeqCst) {
                 break 'conn;
             }
@@ -591,14 +625,38 @@ fn respond(
             write_response(stream, sh, 200, "{\"ok\":true}", keep, &[]);
             (200, keep)
         }
+        ("HEAD", "/health") => {
+            // HEAD mirrors the GET headers (Content-Length included)
+            // without the body (RFC 9110 §9.3.2).
+            write_head_only(stream, sh, 200, "{\"ok\":true}".len(), keep, &[]);
+            (200, keep)
+        }
+        ("OPTIONS", "/health") => {
+            write_options(stream, sh, keep, "GET, HEAD, OPTIONS");
+            (204, keep)
+        }
         ("POST", "/generate") => respond_generate(stream, sh, tx, req, keep),
+        ("OPTIONS", "/generate") => {
+            write_options(stream, sh, keep, "POST, OPTIONS");
+            (204, keep)
+        }
         (_, "/health") => {
-            write_error(stream, sh, 405, "method not allowed", &[("Allow", "GET")]);
+            write_error(
+                stream,
+                sh,
+                405,
+                "method not allowed",
+                &[("Allow", "GET, HEAD, OPTIONS")],
+            );
             (405, keep)
         }
         (_, "/generate") => {
-            write_error(stream, sh, 405, "method not allowed", &[("Allow", "POST")]);
+            write_error(stream, sh, 405, "method not allowed", &[("Allow", "POST, OPTIONS")]);
             (405, keep)
+        }
+        ("HEAD", _) => {
+            write_head_only(stream, sh, 404, "{\"error\":\"not found\"}".len(), keep, &[]);
+            (404, keep)
         }
         _ => {
             write_error(stream, sh, 404, "not found", &[]);
@@ -837,6 +895,7 @@ fn collect_tokens(
 fn http_reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        204 => "No Content",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
@@ -853,8 +912,10 @@ fn http_reason(status: u16) -> &'static str {
     }
 }
 
-/// A sized JSON response. No `Date` header by design (see module docs).
-fn simple_response(status: u16, body: &str, keep: bool, extra: &[(&str, &str)]) -> Vec<u8> {
+/// Status line + headers of a sized JSON response — shared by the full
+/// form and the `HEAD` headers-only form. No `Date` header by design
+/// (see module docs).
+fn response_head(status: u16, body_len: usize, keep: bool, extra: &[(&str, &str)]) -> String {
     let mut head = format!("HTTP/1.1 {} {}\r\n", status, http_reason(status));
     head.push_str("Content-Type: application/json\r\n");
     for (name, value) in extra {
@@ -863,12 +924,43 @@ fn simple_response(status: u16, body: &str, keep: bool, extra: &[(&str, &str)]) 
         head.push_str(value);
         head.push_str("\r\n");
     }
-    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    head.push_str(&format!("Content-Length: {body_len}\r\n"));
     let conn = if keep { "keep-alive" } else { "close" };
     head.push_str(&format!("Connection: {conn}\r\n\r\n"));
-    let mut out = head.into_bytes();
+    head
+}
+
+/// A sized JSON response.
+fn simple_response(status: u16, body: &str, keep: bool, extra: &[(&str, &str)]) -> Vec<u8> {
+    let mut out = response_head(status, body.len(), keep, extra).into_bytes();
     out.extend_from_slice(body.as_bytes());
     out
+}
+
+/// Headers-only response for `HEAD`: identical status line and headers
+/// (`Content-Length` describing the body the `GET` form would carry),
+/// no body bytes on the wire.
+fn write_head_only(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    status: u16,
+    body_len: usize,
+    keep: bool,
+    extra: &[(&str, &str)],
+) {
+    note_response(sh, status);
+    let bytes = response_head(status, body_len, keep, extra).into_bytes();
+    let _ = write_counted(stream, sh, &bytes);
+}
+
+/// `OPTIONS` answer: 204 No Content plus the target's `Allow` set.
+fn write_options(stream: &mut TcpStream, sh: &Shared, keep: bool, allow: &str) {
+    note_response(sh, 204);
+    let conn = if keep { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 204 No Content\r\nAllow: {allow}\r\nContent-Length: 0\r\nConnection: {conn}\r\n\r\n"
+    );
+    let _ = write_counted(stream, sh, head.as_bytes());
 }
 
 /// Count a response toward the stats and the `max_requests` stop bound.

@@ -42,6 +42,17 @@ struct SlotLayer {
     pages: usize,
 }
 
+/// Snapshot of one slot's page lists plus the pool-wide counters, taken
+/// by [`KvPool::spec_begin`] before a speculative draft window. Opaque
+/// to callers: hand it back to [`KvPool::spec_rollback`] to undo every
+/// append the window made.
+#[derive(Debug, Clone)]
+pub struct SpecMark {
+    slot: usize,
+    layers: Vec<SlotLayer>,
+    stats: PoolStats,
+}
+
 /// Paged KV pool over `n_slots` concurrent sequences × `n_layers`.
 #[derive(Debug)]
 pub struct KvPool {
@@ -127,6 +138,32 @@ impl KvPool {
         }
         self.refresh_peaks();
         true
+    }
+
+    /// Open a speculative window on `slot`: snapshot its page lists and
+    /// the pool-wide counters so every append made inside the window
+    /// (draft rows, verify rows) can be undone bitwise by
+    /// [`KvPool::spec_rollback`]. Only `slot` may be appended to while
+    /// the window is open — the snapshot covers the shared counters, so
+    /// a rollback would also revert appends made to other slots.
+    pub fn spec_begin(&self, slot: usize) -> SpecMark {
+        SpecMark {
+            slot,
+            layers: self.slots[slot].clone(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Close a speculative window: restore the marked slot's page lists
+    /// and the pool counters to their [`KvPool::spec_begin`] snapshot,
+    /// releasing every page the window allocated. The restore is bitwise
+    /// — peaks included — so a rejected draft leaves no trace and the
+    /// committed accounting (and the pages-to-zero shutdown invariant)
+    /// matches a run that never speculated. Callers re-append the
+    /// accepted rows after rolling back.
+    pub fn spec_rollback(&mut self, mark: &SpecMark) {
+        self.slots[mark.slot] = mark.layers.clone();
+        self.stats = mark.stats.clone();
     }
 
     /// Release everything held by `slot` (sequence finished / evicted).
@@ -263,6 +300,60 @@ mod tests {
         let before = p.stats().pages_allocated;
         assert!(!p.append(0, &all));
         assert_eq!(p.stats().pages_allocated, before);
+    }
+
+    #[test]
+    fn spec_rollback_restores_accounting_bitwise() {
+        let mut p = pool();
+        for i in 0..21 {
+            let dtr = i % 3 == 0;
+            assert!(p.append(0, &[true, dtr, true, dtr, true, true]));
+            assert!(p.append(1, &[true, false, true, false, true, true]));
+        }
+        let before = p.stats();
+        let lens_before = p.lens(0);
+        let mark = p.spec_begin(0);
+        for _ in 0..9 {
+            assert!(p.append(0, &[true; 6]));
+        }
+        assert_ne!(p.lens(0), lens_before, "window must have allocated");
+        p.spec_rollback(&mark);
+        let after = p.stats();
+        assert_eq!(p.lens(0), lens_before);
+        assert_eq!(after.pages_allocated, before.pages_allocated);
+        assert_eq!(after.pages_peak, before.pages_peak, "peaks rewind too");
+        assert_eq!(after.bytes_peak, before.bytes_peak);
+        assert_eq!(after.tokens_cached, before.tokens_cached);
+        assert_eq!(after.tokens_seen, before.tokens_seen);
+        assert_eq!(after.bytes_allocated, before.bytes_allocated);
+    }
+
+    #[test]
+    fn spec_commit_equals_never_speculated() {
+        // rollback + re-append of the accepted prefix must leave the pool
+        // bitwise identical to a run that only ever appended the prefix.
+        let mut spec = pool();
+        let mut plain = pool();
+        let rows: Vec<[bool; 6]> = (0..7)
+            .map(|i| [true, i % 2 == 0, true, i % 3 == 0, true, true])
+            .collect();
+        let accepted = 3usize;
+        let mark = spec.spec_begin(0);
+        for r in &rows {
+            assert!(spec.append(0, r));
+        }
+        spec.spec_rollback(&mark);
+        for r in rows.iter().take(accepted) {
+            assert!(spec.append(0, r));
+            assert!(plain.append(0, r));
+        }
+        assert_eq!(spec.lens(0), plain.lens(0));
+        let (a, b) = (spec.stats(), plain.stats());
+        assert_eq!(a.pages_allocated, b.pages_allocated);
+        assert_eq!(a.pages_peak, b.pages_peak);
+        assert_eq!(a.bytes_peak, b.bytes_peak);
+        assert_eq!(a.tokens_cached, b.tokens_cached);
+        assert_eq!(a.tokens_seen, b.tokens_seen);
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * [`http`] — the zero-dependency HTTP/1.1 front end behind
 //!   `serve --listen`: incremental push parser, strict JSON machines,
 //!   chunked token streaming, backpressure → status mapping.
+//! * [`speculate`] — bypass-path self-speculative decoding: draft tokens
+//!   on the linear bypass (the free draft model inside the weights),
+//!   verify the window in one batched full-router pass, accept the
+//!   longest matching prefix, roll rejected KV back (DESIGN.md
+//!   §Speculative decoding).
 //! * [`workload`] — synthetic serving traces (Poisson arrivals,
 //!   heavy-tailed lengths), deterministic per seed.
 //! * [`stats`] — routing statistics (Fig. 5 telemetry).
@@ -33,19 +38,21 @@ pub mod sampling;
 #[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod server;
+pub mod speculate;
 pub mod stats;
 pub mod trainer;
 pub mod workload;
 
 pub use batcher::{Batcher, Request, RequestState};
 pub use http::{HttpReport, ListenConfig, NetFrontend};
-pub use kv_cache::{KvPool, PoolStats};
+pub use kv_cache::{KvPool, PoolStats, SpecMark};
 pub use sampling::{sample, SamplingParams};
 #[cfg(feature = "pjrt")]
 pub use serve::ServeEngine;
 pub use server::{
     FinishReason, PrefillMode, RequestRecord, ServeReport, Server, ServerConfig, SubmitError,
 };
+pub use speculate::{SpecIteration, SpecStats, SpeculativeDecoder};
 pub use stats::{PositionBuckets, RoutingStats};
 #[cfg(feature = "pjrt")]
 pub use trainer::ArtifactTrainer;

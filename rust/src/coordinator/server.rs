@@ -46,6 +46,7 @@ use anyhow::{ensure, Result};
 use super::batcher::{Batcher, Request};
 use super::kv_cache::{KvPool, PoolStats};
 use super::sampling::{sample, SamplingParams};
+use super::speculate::{SpecStats, SpeculativeDecoder};
 use super::stats::{PositionBuckets, RoutingStats};
 use super::workload::TimedRequest;
 use crate::config::LayerKind;
@@ -91,6 +92,12 @@ pub struct ServerConfig {
     pub sampling: SamplingParams,
     /// Seed for the per-request sampling RNGs.
     pub seed: u64,
+    /// Self-speculative decode depth: draft up to this many tokens per
+    /// iteration on the bypass path and verify them in one full-router
+    /// pass (`--speculate`). 0 disables. Only greedy (temperature 0)
+    /// requests speculate — others take the plain batched-decode path —
+    /// and emitted streams stay bitwise identical either way.
+    pub speculate: usize,
 }
 
 impl Default for ServerConfig {
@@ -104,6 +111,7 @@ impl Default for ServerConfig {
             prefill: PrefillMode::Chunked(PREFILL_CHUNK),
             sampling: SamplingParams::greedy(),
             seed: 0x5e11,
+            speculate: 0,
         }
     }
 }
@@ -163,6 +171,12 @@ pub struct RequestRecord {
     /// took the attention path — the request-granular routing telemetry.
     /// Empty for requests cancelled before admission.
     pub routed_tokens: Vec<u64>,
+    /// Draft tokens proposed for this request (`--speculate`; 0 when
+    /// speculation was off or never applied).
+    pub spec_drafted: u64,
+    /// Draft tokens the verifier accepted for this request
+    /// (`spec_drafted - spec_accepted` is the rejected count).
+    pub spec_accepted: u64,
 }
 
 /// Serving run summary.
@@ -228,6 +242,9 @@ pub struct ServeReport {
     /// kernels (both CPU backends do). Like `kernel_timings`, cumulative
     /// over the backend's lifetime, not just this run.
     pub measured_flops: Option<Json>,
+    /// Engine-wide speculative-decode acceptance totals (`--speculate`;
+    /// all zero when speculation is off).
+    pub spec: SpecStats,
     /// Per-request outcomes, in retirement order.
     pub requests: Vec<RequestRecord>,
     /// Per-kernel wall-clock snapshot from
@@ -261,6 +278,8 @@ impl ServeReport {
                             r.routed_tokens.iter().map(|&c| Json::Num(c as f64)).collect(),
                         ),
                     ),
+                    ("spec_drafted", Json::Num(r.spec_drafted as f64)),
+                    ("spec_accepted", Json::Num(r.spec_accepted as f64)),
                 ])
             })
             .collect();
@@ -299,6 +318,14 @@ impl ServeReport {
                 "weight_compression",
                 Json::Num(self.weight_bytes.compression()),
             ),
+            ("spec_drafted", Json::Num(self.spec.drafted as f64)),
+            ("spec_accepted", Json::Num(self.spec.accepted as f64)),
+            ("spec_iterations", Json::Num(self.spec.iterations as f64)),
+            ("spec_acceptance_rate", Json::Num(self.spec.acceptance_rate())),
+            (
+                "spec_mean_accepted_len",
+                Json::Num(self.spec.mean_accepted_len()),
+            ),
             ("attn_fracs", Json::arr_f64(&self.attn_fracs)),
             ("routing", self.routing.to_json()),
             ("position_buckets", self.position_buckets.clone()),
@@ -333,6 +360,11 @@ pub struct Server<'b> {
     /// Per-slot per-layer routed-token counts for the request currently
     /// occupying the slot (taken into its [`RequestRecord`] at finish).
     slot_routed: Vec<Vec<u64>>,
+    /// Engine-wide speculative acceptance totals (`cfg.speculate`).
+    spec: SpecStats,
+    /// Per-slot speculative stats for the occupying request (taken into
+    /// its [`RequestRecord`] at finish).
+    slot_spec: Vec<SpecStats>,
     /// `is_dtr[l]`: layer has a router (margins are meaningless on dense
     /// layers, whose g_attn is pinned to 1.0).
     is_dtr: Vec<bool>,
@@ -391,6 +423,8 @@ impl<'b> Server<'b> {
             routing: RoutingStats::new(mcfg.n_layers),
             buckets: PositionBuckets::new(mcfg.n_layers),
             slot_routed: vec![vec![0; mcfg.n_layers]; slots],
+            spec: SpecStats::default(),
+            slot_spec: vec![SpecStats::default(); slots],
             is_dtr,
             metrics_log: None,
             registry: Registry::default(),
@@ -525,6 +559,7 @@ impl<'b> Server<'b> {
             };
             self.rngs[slot] = Rng::new(self.cfg.seed ^ id);
             self.slot_routed[slot] = vec![0; self.n_layers];
+            self.slot_spec[slot] = SpecStats::default();
             telemetry::async_begin(
                 "request",
                 id,
@@ -542,16 +577,24 @@ impl<'b> Server<'b> {
             return Ok(finished);
         }
 
-        // Gather the active slots into one batched decode call.
+        // Partition the active slots: speculative slots run their own
+        // draft/verify window (multi-row, single sequence); everyone else
+        // shares one batched decode call. Streams are bitwise identical
+        // either way, so the mix never changes any request's tokens.
         let mut slot_ids = Vec::with_capacity(self.cfg.slots);
         let mut toks = Vec::with_capacity(self.cfg.slots);
+        let mut spec_slots = Vec::new();
         for (slot, st) in self.batcher.active.iter().enumerate() {
             if let Some(rs) = st {
-                slot_ids.push(slot);
-                toks.push(rs.next_input());
+                if self.cfg.speculate > 0 && !rs.in_prefill() && rs.req.temperature == 0.0 {
+                    spec_slots.push(slot);
+                } else {
+                    slot_ids.push(slot);
+                    toks.push(rs.next_input());
+                }
             }
         }
-        if slot_ids.is_empty() {
+        if slot_ids.is_empty() && spec_slots.is_empty() {
             // Everything admitted this step already finished in prefill;
             // queued requests (if any) admit next step. Not counted as a
             // step: `steps` tallies decode iterations only, so occupancy
@@ -562,6 +605,22 @@ impl<'b> Server<'b> {
             return Ok(finished);
         }
         self.steps += 1;
+        self.steps_active_sum += (slot_ids.len() + spec_slots.len()) as u64;
+        if !slot_ids.is_empty() {
+            finished += self.decode_batch_slots(&slot_ids, &toks)?;
+        }
+        for slot in spec_slots {
+            finished += self.spec_step_slot(slot)?;
+        }
+        self.update_gauges();
+        Ok(finished)
+    }
+
+    /// One batched decode pass over the non-speculative active slots:
+    /// per-row routing telemetry, KV paging, sampling, and batcher
+    /// advance. Returns the number of requests finished.
+    fn decode_batch_slots(&mut self, slot_ids: &[usize], toks: &[i32]) -> Result<usize> {
+        let mut finished = 0;
         let mut refs: Vec<&mut DecodeState> = Vec::with_capacity(slot_ids.len());
         let mut k = 0;
         for (slot, st) in self.states.iter_mut().enumerate() {
@@ -572,7 +631,7 @@ impl<'b> Server<'b> {
         }
         let span = telemetry::scoped("engine_step");
         let t0 = Instant::now();
-        let outs = self.backend.decode_batch(&mut refs, &toks)?;
+        let outs = self.backend.decode_batch(&mut refs, toks)?;
         drop(refs);
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
         span.end_with_args(vec![
@@ -581,7 +640,6 @@ impl<'b> Server<'b> {
             ("kv_pages", ArgValue::from(self.pool.stats().pages_allocated)),
         ]);
         self.registry.histogram("decode_step_ms").record(step_ms);
-        self.steps_active_sum += slot_ids.len() as u64;
         if let Some(log) = &self.metrics_log {
             log.write(&Json::from_pairs(vec![
                 ("kind", Json::Str("step".to_string())),
@@ -597,7 +655,7 @@ impl<'b> Server<'b> {
         }
 
         let now = Instant::now();
-        for (out, &slot) in outs.iter().zip(&slot_ids) {
+        for (out, &slot) in outs.iter().zip(slot_ids.iter()) {
             // Position of the token this step just fed (advance() below
             // is what increments it).
             let pos = self.batcher.active[slot]
@@ -644,8 +702,117 @@ impl<'b> Server<'b> {
                 finished += 1;
             }
         }
-        self.update_gauges();
         Ok(finished)
+    }
+
+    /// One speculative draft/verify iteration for `slot` (greedy request,
+    /// past prefill): draft up to `cfg.speculate` tokens on the bypass,
+    /// verify them in one batched full-router pass, commit the accepted
+    /// prefix. Transient windows (draft rows, then the verify rows) are
+    /// written into the KV pool and rolled back, so speculative pages are
+    /// released exactly on rejection while the committed accounting —
+    /// peaks included — stays bitwise that of a plain decode run. Returns
+    /// the number of requests finished (0 or 1).
+    fn spec_step_slot(&mut self, slot: usize) -> Result<usize> {
+        let (last, budget, history) = {
+            let rs = self.batcher.active[slot].as_ref().expect("spec slot is live");
+            let remaining = rs.req.max_new_tokens - rs.generated.len();
+            // Cap the window at the engine's position cap so eviction
+            // fires at exactly the token count of a plain run.
+            let cap_room = self.cfg.max_seq.saturating_sub(rs.position).max(1);
+            (rs.next_input(), remaining.min(cap_room), rs.generated.clone())
+        };
+        let params = SamplingParams {
+            temperature: 0.0,
+            ..self.cfg.sampling
+        };
+        let mut dec = SpeculativeDecoder::new(self.backend, self.cfg.speculate)?;
+        let span = telemetry::scoped("spec_verify");
+        let t0 = Instant::now();
+        let state = self.states[slot].as_mut().expect("spec slot has state");
+        let it = dec.step(state, last, budget, &params, &history, &mut self.rngs[slot])?;
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        span.end_with_args(vec![
+            ("slot", ArgValue::from(slot)),
+            ("drafted", ArgValue::from(it.drafted)),
+            ("accepted", ArgValue::from(it.accepted)),
+            ("emitted", ArgValue::from(it.emitted.len())),
+        ]);
+        self.registry.histogram("decode_step_ms").record(step_ms);
+        self.registry
+            .histogram("spec_accepted_len")
+            .record(it.emitted.len() as f64);
+        let ds = SpecStats {
+            drafted: it.drafted as u64,
+            accepted: it.accepted as u64,
+            iterations: 1,
+            emitted: it.emitted.len() as u64,
+        };
+        self.slot_spec[slot].merge(&ds);
+        self.spec.merge(&ds);
+
+        // Speculative KV pages live only inside their window.
+        self.spec_window(slot, &it.draft_routed);
+        self.spec_window(slot, &it.verify_routed);
+
+        // Commit the accepted rows: the same telemetry → paging → advance
+        // sequence the plain decode path runs once per engine step.
+        let now = Instant::now();
+        let mut pos = self.batcher.active[slot]
+            .as_ref()
+            .expect("spec slot is live")
+            .position;
+        for (row, &tok) in it.rows.iter().zip(&it.emitted) {
+            for (l, (&r, &g)) in row.routed.iter().zip(&row.g_attn).enumerate() {
+                self.routing.record_layer(l, r as u64, 1);
+                self.buckets.record(l, pos, r);
+                self.slot_routed[slot][l] += u64::from(r);
+                if self.is_dtr[l] {
+                    self.registry
+                        .histogram("router_margin")
+                        .record(f64::from((2.0 * g - 1.0).abs()));
+                }
+            }
+            if !self.pool.append(slot, &row.routed) {
+                // The committed row a plain run would also have failed
+                // on; eviction releases the cache rows past it too.
+                self.evict_slot(slot, now, FinishReason::KvExhausted);
+                return Ok(1);
+            }
+            self.dense_shadow.append(slot, &self.all_routed);
+            pos += 1;
+            if self.batcher.advance(slot, tok, now) {
+                self.record_finish(slot, now, FinishReason::Completed);
+                self.release_slot(slot);
+                return Ok(1);
+            }
+        }
+        if self.slot_at_cap(slot) {
+            self.evict_slot(slot, now, FinishReason::ContextCap);
+            return Ok(1);
+        }
+        Ok(0)
+    }
+
+    /// Write a transient speculative window into the pool, then roll it
+    /// back: draft/rejected pages exist only between `spec_begin` and
+    /// `spec_rollback`, and committed stats (peaks included) stay bitwise
+    /// those of a never-speculated run. A window the budget cannot hold
+    /// is simply abandoned — transient pages must never evict anyone.
+    fn spec_window(&mut self, slot: usize, rows: &[Vec<bool>]) {
+        if rows.is_empty() {
+            return;
+        }
+        let pmark = self.pool.spec_begin(slot);
+        let dmark = self.dense_shadow.spec_begin(slot);
+        for r in rows {
+            if !self.pool.append(slot, r) {
+                break;
+            }
+            self.dense_shadow.append(slot, &self.all_routed);
+        }
+        self.pool.spec_rollback(&pmark);
+        self.dense_shadow.spec_rollback(&dmark);
     }
 
     /// Run until every already-submitted request finishes. If the
@@ -711,6 +878,8 @@ impl<'b> Server<'b> {
                 finish: FinishReason::Cancelled,
                 // Never admitted: no tokens ever fed, no routing decisions.
                 routed_tokens: Vec::new(),
+                spec_drafted: 0,
+                spec_accepted: 0,
             });
         }
     }
@@ -840,6 +1009,7 @@ impl<'b> Server<'b> {
         self.registry.histogram("request_latency_ms").record(latency_ms);
         self.registry.counter("requests_finished").inc();
         let routed_tokens = std::mem::take(&mut self.slot_routed[slot]);
+        let spec = std::mem::take(&mut self.slot_spec[slot]);
         telemetry::async_end(
             "request",
             st.req.id,
@@ -861,6 +1031,8 @@ impl<'b> Server<'b> {
                     "routed_tokens",
                     Json::Arr(routed_tokens.iter().map(|&c| Json::Num(c as f64)).collect()),
                 ),
+                ("spec_drafted", Json::Num(spec.drafted as f64)),
+                ("spec_accepted", Json::Num(spec.accepted as f64)),
             ]));
         }
         self.records.push(RequestRecord {
@@ -871,6 +1043,8 @@ impl<'b> Server<'b> {
             latency_ms,
             finish: reason,
             routed_tokens,
+            spec_drafted: spec.drafted,
+            spec_accepted: spec.accepted,
         });
     }
 
@@ -941,6 +1115,7 @@ impl<'b> Server<'b> {
             position_buckets: self.buckets.to_json(),
             router_margin: self.registry.histogram("router_margin").summary().to_json(),
             measured_flops: self.backend.flop_counters().map(|f| f.to_json()),
+            spec: self.spec,
             requests: self.records.clone(),
             kernel_timings: self.backend.kernel_timings(),
             simd_tier: crate::util::simd::tier().name().to_string(),
@@ -1148,6 +1323,71 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(PrefillMode::Decode), run(PrefillMode::Chunked(4)));
+    }
+
+    #[test]
+    fn speculative_serve_matches_plain_and_frees_pages() {
+        let be = backend();
+        let run = |speculate| {
+            let cfg = ServerConfig {
+                slots: 2,
+                speculate,
+                ..Default::default()
+            };
+            let mut srv = Server::new(&be, cfg).unwrap();
+            for i in 0..4 {
+                assert!(srv.submit(req(i, 7, 6)));
+            }
+            let mut rep = srv.run_to_completion(10_000).unwrap();
+            assert_eq!(srv.pool.stats().pages_allocated, 0, "pages-to-zero");
+            assert_eq!(srv.dense_shadow.stats().pages_allocated, 0);
+            rep.requests.sort_by_key(|r| r.id);
+            rep
+        };
+        let plain = run(0);
+        let spec = run(3);
+        let toks = |rep: &ServeReport| {
+            rep.requests.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(toks(&spec), toks(&plain), "greedy streams must be bitwise equal");
+        assert_eq!(plain.spec, SpecStats::default());
+        assert!(spec.spec.drafted > 0, "speculation never engaged");
+        assert!(spec.spec.accepted <= spec.spec.drafted);
+        // Every iteration emits at least one token, so speculation can
+        // only cut engine steps (strictly, when any draft is accepted).
+        assert!(spec.steps <= plain.steps);
+        // Committed accounting — peaks included — matches the plain run.
+        assert_eq!(spec.pool.pages_peak, plain.pool.pages_peak);
+        assert_eq!(spec.pool.tokens_cached, plain.pool.tokens_cached);
+        assert_eq!(spec.pool.tokens_seen, plain.pool.tokens_seen);
+        assert_eq!(spec.attn_fracs, plain.attn_fracs);
+        // Per-request counters sum to the engine totals and land in JSON.
+        let drafted: u64 = spec.requests.iter().map(|r| r.spec_drafted).sum();
+        let accepted: u64 = spec.requests.iter().map(|r| r.spec_accepted).sum();
+        assert_eq!(drafted, spec.spec.drafted);
+        assert_eq!(accepted, spec.spec.accepted);
+        let js = spec.to_json();
+        let rate = js.path("spec_acceptance_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(js.path("spec_mean_accepted_len").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn speculative_serve_respects_context_cap() {
+        let be = backend();
+        let cfg = ServerConfig {
+            slots: 1,
+            max_seq: 16,
+            speculate: 4,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        srv.submit(req(0, 8, 1000));
+        let rep = srv.run_to_completion(10_000).unwrap();
+        assert_eq!(rep.requests[0].finish, FinishReason::ContextCap);
+        // The window cap keeps fed tokens at exactly the plain-run count.
+        assert!(rep.requests[0].prompt_len + rep.requests[0].tokens.len() <= 17);
+        assert_eq!(srv.pool.stats().pages_allocated, 0);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Bypass-path self-speculative decoding.
+//!
+//! DTRNet's linear bypass is a free draft model living inside the target
+//! model's own weights: a decode step with every DTR layer forced onto the
+//! bypass ([`RouteOverride::ForceBypass`], router weights untouched) skips
+//! all attention mixing, so a draft token costs only the linear path. The
+//! [`SpeculativeDecoder`] turns that into standard draft/verify decoding:
+//!
+//! 1. **Draft** up to `k` tokens by greedy argmax over force-bypassed
+//!    steps, then rewind the KV cache to the pre-draft mark
+//!    ([`DecodeState::rollback`]) — draft KV (dense layers still cache)
+//!    is transient by construction.
+//! 2. **Verify** the window `[last, c1..ck]` in one batched full-router
+//!    pass ([`Backend::decode_rows`]), the same multi-row machinery
+//!    chunked prefill rides on.
+//! 3. **Accept** the longest prefix whose sampled verify tokens equal the
+//!    drafts, plus the bonus token from the first mismatching row, then
+//!    truncate the cache to exactly the committed rows' routed lens
+//!    ([`DecodeState::truncate_to`]).
+//!
+//! Every emitted token is sampled from full-router logits conditioned on
+//! previously emitted tokens only, drafts never touch the RNG, and
+//! [`sample`] runs exactly once per emitted token in stream order — so
+//! the emitted stream is bitwise identical to plain decode at any
+//! temperature. At temperature 0 this is the greedy-identity contract
+//! `tests/speculative.rs` pins (DESIGN.md §Speculative decoding).
+
+use anyhow::{ensure, Result};
+
+use super::sampling::{sample, SamplingParams};
+use crate::runtime::{Backend, DecodeState, GenerateOutput, RouteOverride, StepOutput};
+use crate::util::rng::Rng;
+
+/// Cumulative acceptance accounting for a speculative decode run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed across all iterations.
+    pub drafted: u64,
+    /// Draft tokens accepted by verification.
+    pub accepted: u64,
+    /// Draft/verify iterations executed (plain fallback steps included).
+    pub iterations: u64,
+    /// Tokens emitted across all iterations.
+    pub emitted: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verifier accepted (1.0 when nothing
+    /// was drafted — an empty speculation run is vacuously perfect).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Mean tokens emitted per iteration — the speedup lever: each
+    /// iteration costs one bypass draft pass plus one full verify pass.
+    pub fn mean_accepted_len(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.iterations as f64
+        }
+    }
+
+    /// Fold `other` into `self` (per-request → engine-wide totals).
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.iterations += other.iterations;
+        self.emitted += other.emitted;
+    }
+}
+
+/// One draft/verify iteration's outcome.
+#[derive(Debug)]
+pub struct SpecIteration {
+    /// Tokens emitted this iteration, in stream order (never empty).
+    pub emitted: Vec<i32>,
+    /// Verify-pass outputs for the committed rows only
+    /// (`rows.len() == emitted.len()`); row `i` fed the token *before*
+    /// `emitted[i]` and carries the routed flags the KV pool must mirror.
+    pub rows: Vec<StepOutput>,
+    /// Per-layer routed flags of every draft step (transient KV: dense
+    /// layers cache, DTR layers bypass) — rolled back before verification.
+    pub draft_routed: Vec<Vec<bool>>,
+    /// Per-layer routed flags of every verify row, rejected rows included
+    /// — rows past `emitted.len()` were truncated out of the cache.
+    pub verify_routed: Vec<Vec<bool>>,
+    /// Draft tokens proposed this iteration.
+    pub drafted: usize,
+    /// Draft tokens accepted this iteration.
+    pub accepted: usize,
+}
+
+/// Draft-on-bypass / verify-with-router speculative decoder over any
+/// [`Backend`] that implements the [`RouteOverride::ForceBypass`] hook
+/// (both CPU backends do).
+pub struct SpeculativeDecoder<'b> {
+    backend: &'b dyn Backend,
+    k: usize,
+    d_model: usize,
+    max_seq: usize,
+    /// Cumulative acceptance statistics across every call.
+    pub stats: SpecStats,
+}
+
+impl<'b> SpeculativeDecoder<'b> {
+    /// A decoder drafting up to `k` tokens per iteration on `backend`.
+    pub fn new(backend: &'b dyn Backend, k: usize) -> Result<SpeculativeDecoder<'b>> {
+        ensure!(k > 0, "speculation depth k must be positive");
+        let cfg = backend.config();
+        Ok(SpeculativeDecoder {
+            backend,
+            k,
+            d_model: cfg.d_model,
+            max_seq: cfg.max_seq,
+            stats: SpecStats::default(),
+        })
+    }
+
+    /// One draft/verify iteration. `last` is the most recently emitted
+    /// (not yet fed) token, `budget` caps how many tokens may still be
+    /// emitted, `history` is every token generated so far (feeds the
+    /// repetition penalty exactly as the plain decode loop would).
+    /// Degenerates to a plain [`Backend::decode_step`] when the budget or
+    /// the position cap leaves no room to speculate.
+    pub fn step(
+        &mut self,
+        state: &mut DecodeState,
+        last: i32,
+        budget: usize,
+        params: &SamplingParams,
+        history: &[i32],
+        rng: &mut Rng,
+    ) -> Result<SpecIteration> {
+        ensure!(budget > 0, "speculative step needs a positive token budget");
+        self.stats.iterations += 1;
+        let headroom = self.max_seq.saturating_sub(state.position);
+        let k_rows = (self.k + 1).min(budget).min(headroom.max(1));
+        if k_rows < 2 {
+            // No room to speculate — the baseline path, bit for bit.
+            let out = self.backend.decode_step(state, last)?;
+            let tok = sample(out.logits.as_f32(), params, history, rng);
+            self.stats.emitted += 1;
+            return Ok(SpecIteration {
+                emitted: vec![tok],
+                rows: vec![out],
+                draft_routed: Vec::new(),
+                verify_routed: Vec::new(),
+                drafted: 0,
+                accepted: 0,
+            });
+        }
+
+        // Draft k_rows-1 tokens on the bypass, then rewind the cache.
+        let mark = state.mark(self.d_model);
+        let mut drafts: Vec<i32> = Vec::with_capacity(k_rows - 1);
+        let mut draft_routed: Vec<Vec<bool>> = Vec::with_capacity(k_rows - 1);
+        let mut cur = last;
+        for _ in 0..k_rows - 1 {
+            let out = self
+                .backend
+                .decode_step_routed(state, cur, RouteOverride::ForceBypass)?;
+            cur = argmax(out.logits.as_f32());
+            drafts.push(cur);
+            draft_routed.push(out.routed);
+        }
+        state.rollback(&mark, self.d_model);
+
+        // One batched full-router pass over the whole window.
+        let mut window: Vec<i32> = Vec::with_capacity(k_rows);
+        window.push(last);
+        window.extend_from_slice(&drafts);
+        let mut outs = self.backend.decode_rows(state, &window)?;
+        let verify_routed: Vec<Vec<bool>> = outs.iter().map(|o| o.routed.clone()).collect();
+
+        // Longest matching prefix, plus the bonus token from the row that
+        // broke the match (or the final row when everything matched).
+        let mut hist: Vec<i32> = history.to_vec();
+        let mut emitted: Vec<i32> = Vec::with_capacity(k_rows);
+        let mut accepted = 0usize;
+        for (i, out) in outs.iter().enumerate() {
+            let tok = sample(out.logits.as_f32(), params, &hist, rng);
+            emitted.push(tok);
+            hist.push(tok);
+            if i + 1 < k_rows && tok == drafts[i] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+
+        // Commit exactly the rows that fed an emitted token: per-layer
+        // lens grow by the committed rows' routed flags only, so the
+        // cache ends bitwise where a plain decode loop would leave it.
+        let m = emitted.len();
+        let mut keep = mark.lens.clone();
+        for out in outs.iter().take(m) {
+            for (l, &r) in out.routed.iter().enumerate() {
+                keep[l] += usize::from(r);
+            }
+        }
+        state.truncate_to(&keep, mark.position + m, self.d_model);
+        outs.truncate(m);
+
+        self.stats.drafted += (k_rows - 1) as u64;
+        self.stats.accepted += accepted as u64;
+        self.stats.emitted += m as u64;
+        Ok(SpecIteration {
+            emitted,
+            rows: outs,
+            draft_routed,
+            verify_routed,
+            drafted: k_rows - 1,
+            accepted,
+        })
+    }
+
+    /// Speculative counterpart of [`Backend::generate`]: prefill, sample
+    /// the first token from the prefill logits, then emit the rest
+    /// through draft/verify iterations. Token stream and `attn_frac` are
+    /// bitwise identical to the plain path (the committed rows are the
+    /// same fed tokens with the same routing decisions).
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        params: &SamplingParams,
+        rng: &mut Rng,
+    ) -> Result<GenerateOutput> {
+        let mut state = self.backend.begin_decode();
+        let step = self.backend.prefill(&mut state, prompt)?;
+        let mut routed_counts: Vec<u64> = state
+            .lens(self.d_model)
+            .iter()
+            .map(|&len| len as u64)
+            .collect();
+        let mut total_steps = prompt.len() as u64;
+
+        let mut out_tokens: Vec<i32> = Vec::with_capacity(max_new_tokens);
+        if max_new_tokens > 0 {
+            let first = sample(step.logits.as_f32(), params, &out_tokens, rng);
+            out_tokens.push(first);
+            while out_tokens.len() < max_new_tokens {
+                let budget = max_new_tokens - out_tokens.len();
+                let last = *out_tokens.last().expect("stream is non-empty");
+                let it = self.step(&mut state, last, budget, params, &out_tokens, rng)?;
+                for row in &it.rows {
+                    total_steps += 1;
+                    for (l, &r) in row.routed.iter().enumerate() {
+                        routed_counts[l] += u64::from(r);
+                    }
+                }
+                out_tokens.extend_from_slice(&it.emitted);
+            }
+        }
+
+        let attn_frac = routed_counts
+            .iter()
+            .map(|&c| c as f64 / (total_steps as f64).max(1.0))
+            .collect();
+        Ok(GenerateOutput {
+            tokens: out_tokens,
+            attn_frac,
+        })
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Variant};
+    use crate::runtime::CpuBackend;
+
+    fn backend() -> CpuBackend {
+        CpuBackend::init(&ModelConfig::preset("xs", Variant::DtrBilayer), 11).unwrap()
+    }
+
+    fn prompt(seed: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| (i * 13 + seed * 7) % 256).collect()
+    }
+
+    #[test]
+    fn greedy_stream_bitwise_identical_to_plain_decode() {
+        let be = backend();
+        let params = SamplingParams::greedy();
+        for k in [1, 2, 4, 7] {
+            for p in 0..3 {
+                let pr = prompt(p, 9 + p as usize);
+                let base = be
+                    .generate(&pr, 20, &params, &mut Rng::new(5))
+                    .unwrap();
+                let mut dec = SpeculativeDecoder::new(&be, k).unwrap();
+                let spec = dec.generate(&pr, 20, &params, &mut Rng::new(5)).unwrap();
+                assert_eq!(spec.tokens, base.tokens, "k={k} prompt {p}");
+                assert_eq!(spec.attn_frac, base.attn_frac, "k={k} prompt {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_stream_matches_plain_decode_with_same_seed() {
+        // Drafts never touch the RNG and sample() runs once per emitted
+        // token, so identity holds beyond temperature 0 too.
+        let be = backend();
+        let params = SamplingParams {
+            temperature: 0.8,
+            top_k: 12,
+            repetition_penalty: 1.2,
+            ..Default::default()
+        };
+        let pr = prompt(1, 8);
+        let base = be.generate(&pr, 16, &params, &mut Rng::new(42)).unwrap();
+        let mut dec = SpeculativeDecoder::new(&be, 3).unwrap();
+        let spec = dec.generate(&pr, 16, &params, &mut Rng::new(42)).unwrap();
+        assert_eq!(spec.tokens, base.tokens);
+    }
+
+    #[test]
+    fn stats_account_for_every_token() {
+        let be = backend();
+        let mut dec = SpeculativeDecoder::new(&be, 4).unwrap();
+        let out = dec
+            .generate(&prompt(2, 10), 24, &SamplingParams::greedy(), &mut Rng::new(0))
+            .unwrap();
+        let s = dec.stats;
+        // First token comes from prefill; the rest from iterations.
+        assert_eq!(s.emitted, out.tokens.len() as u64 - 1);
+        assert!(s.accepted <= s.drafted, "{s:?}");
+        assert!(s.iterations > 0);
+        assert!((0.0..=1.0).contains(&s.acceptance_rate()));
+        assert!(s.mean_accepted_len() >= 1.0, "{s:?}");
+    }
+
+    #[test]
+    fn draft_rollback_restores_state_bitwise() {
+        let be = backend();
+        let d = be.config().d_model;
+        let mut state = be.begin_decode();
+        be.prefill(&mut state, &prompt(3, 7)).unwrap();
+        let before = state.clone();
+        let mark = state.mark(d);
+        let mut cur = 5i32;
+        for _ in 0..4 {
+            let out = be
+                .decode_step_routed(&mut state, cur, RouteOverride::ForceBypass)
+                .unwrap();
+            cur = argmax(out.logits.as_f32());
+        }
+        assert_ne!(state.position, before.position);
+        state.rollback(&mark, d);
+        assert_eq!(state.position, before.position);
+        assert_eq!(state.keys, before.keys);
+        assert_eq!(state.values, before.values);
+    }
+
+    #[test]
+    fn force_bypass_skips_dtr_caching_but_not_dense() {
+        let be = backend();
+        let mut state = be.begin_decode();
+        be.prefill(&mut state, &prompt(0, 6)).unwrap();
+        let out = be
+            .decode_step_routed(&mut state, 3, RouteOverride::ForceBypass)
+            .unwrap();
+        for (l, &r) in out.routed.iter().enumerate() {
+            // DtrBilayer: even layers dense (always cache), odd layers DTR
+            // (forced onto the bypass, never cache).
+            assert_eq!(r, l % 2 == 0, "layer {l}");
+        }
+    }
+}

@@ -24,10 +24,16 @@
 //!                                    (DESIGN.md §Network front end)
 //!   bench   [--test] [--out BENCH_pr7.json] — reproducible perf harness:
 //!                                    fixed-seed forward/decode/serve/
-//!                                    train/quant scenarios swept across
-//!                                    thread counts (DESIGN.md
-//!                                    §Benchmarking); `--quant off` skips
-//!                                    the int8 scenarios
+//!                                    train/quant/spec-decode scenarios
+//!                                    swept across thread counts
+//!                                    (DESIGN.md §Benchmarking);
+//!                                    `--quant off` skips the int8
+//!                                    scenarios; `--gate-pct 20` turns
+//!                                    the baseline-delta readout into a
+//!                                    regression gate (nonzero exit when
+//!                                    any scenario's primary throughput
+//!                                    metric falls more than 20% below
+//!                                    `--baseline BENCH_baseline.json`)
 //!   flops   [--preset smollm-1b3]  — Fig. 4 analytical table
 //!   kvmem   [--preset smollm-1b3]  — Fig. 6 analytical table
 //!
@@ -51,6 +57,13 @@
 //!                 bench harness: routing decisions must match f32
 //!                 wherever the router is decisive, eval perplexity
 //!                 within 0.5%.
+//!   --speculate K — on demo/eval/serve: bypass-path self-speculative
+//!                 decoding — draft K tokens per iteration with every DTR
+//!                 layer forced onto the linear bypass, then verify the
+//!                 window in one batched full-router pass. Greedy token
+//!                 streams are bitwise unchanged; acceptance telemetry
+//!                 lands in the serve report (DESIGN.md §Speculative
+//!                 decoding)
 //!   --trace out.trace.json — on train/serve: record telemetry spans for
 //!                 the run and export Chrome trace-event JSON (load in
 //!                 Perfetto or chrome://tracing; DESIGN.md
@@ -71,7 +84,8 @@ use anyhow::{bail, Result};
 
 use dtrnet::config::{ModelConfig, TrainConfig, Variant};
 use dtrnet::coordinator::{
-    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, Trainer, WorkloadSpec,
+    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, SpeculativeDecoder,
+    Trainer, WorkloadSpec,
 };
 use dtrnet::data::{corpus, Dataset};
 use dtrnet::metrics::JsonlWriter;
@@ -147,12 +161,24 @@ fn bench_cmd(args: &Args) -> Result<()> {
         dtrnet::util::simd::detect().name(),
     );
     let doc = dtrnet::perf::run(&opts)?;
-    // Speedup-vs-baseline readout (never a gate — the JSON written below
-    // is the artifact CI promotes into the next baseline).
+    // Speedup-vs-baseline readout. Without --gate-pct it is informational
+    // only; with it, scenarios whose primary throughput metric fell more
+    // than that many percent below the baseline fail the run (the CI
+    // bench-regression gate). The JSON is written either way — it is the
+    // artifact CI promotes into the next baseline
+    // (cp results/bench_ci.json BENCH_baseline.json).
     let baseline = args.get_or("baseline", "BENCH_baseline.json");
-    dtrnet::perf::print_baseline_deltas(&doc, std::path::Path::new(baseline));
+    let gate = args.get("gate-pct").and_then(|v| v.parse::<f64>().ok());
+    let regressions =
+        dtrnet::perf::print_baseline_deltas(&doc, std::path::Path::new(baseline), gate);
     let out = args.get_or("out", "BENCH_pr7.json");
     dtrnet::perf::write(std::path::Path::new(out), &doc)?;
+    if regressions > 0 {
+        bail!(
+            "{regressions} scenario(s) regressed more than {:.1}% vs {baseline} (--gate-pct)",
+            gate.unwrap_or(0.0)
+        );
+    }
     Ok(())
 }
 
@@ -318,6 +344,30 @@ fn demo(args: &Args) -> Result<()> {
         prompt, gen.tokens
     );
     println!("[decode] per-layer attention fractions {:?}", gen.attn_frac);
+
+    let speculate = args.get_usize("speculate", 0);
+    if speculate > 0 {
+        let gen_len = args.get_usize("gen", 16);
+        let base = backend.generate(&prompt, gen_len, &sampling, &mut Rng::new(seed))?;
+        let mut dec = SpeculativeDecoder::new(backend.as_ref(), speculate)?;
+        let spec = dec.generate(&prompt, gen_len, &sampling, &mut Rng::new(seed))?;
+        anyhow::ensure!(
+            spec.tokens == base.tokens,
+            "speculative stream diverged from plain decode"
+        );
+        let s = dec.stats;
+        println!(
+            "[speculate] k={} identical stream over {} tokens; drafted {} accepted {} \
+             (rate {:.2}, mean {:.2} tok/iter over {} iterations)",
+            speculate,
+            spec.tokens.len(),
+            s.drafted,
+            s.accepted,
+            s.acceptance_rate(),
+            s.mean_accepted_len(),
+            s.iterations,
+        );
+    }
     Ok(())
 }
 
@@ -533,6 +583,30 @@ fn eval(args: &Args) -> Result<()> {
         r.n_tokens,
         r.routing.fractions()
     );
+    let speculate = args.get_usize("speculate", 0);
+    if speculate > 0 {
+        let mut rng = Rng::new(seed.wrapping_add(1));
+        let prompt: Vec<i32> = (0..8)
+            .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+            .collect();
+        let gen_len = args.get_usize("gen", 32);
+        let params = SamplingParams::greedy();
+        let base = backend.generate(&prompt, gen_len, &params, &mut Rng::new(0))?;
+        let mut dec = SpeculativeDecoder::new(backend.as_ref(), speculate)?;
+        let spec = dec.generate(&prompt, gen_len, &params, &mut Rng::new(0))?;
+        anyhow::ensure!(
+            spec.tokens == base.tokens,
+            "speculative stream diverged from plain decode"
+        );
+        let s = dec.stats;
+        println!(
+            "[speculate] k={speculate} greedy identity holds over {} tokens; \
+             acceptance {:.2}, mean {:.2} tok/iter",
+            spec.tokens.len(),
+            s.acceptance_rate(),
+            s.mean_accepted_len(),
+        );
+    }
     Ok(())
 }
 
@@ -609,6 +683,7 @@ fn serve(args: &Args) -> Result<()> {
             PrefillMode::Chunked(chunk)
         },
         seed,
+        speculate: args.get_usize("speculate", 0),
         ..Default::default()
     };
     println!(
@@ -651,6 +726,18 @@ fn serve(args: &Args) -> Result<()> {
         report.decode_step_ms_p50,
         report.decode_step_ms_p99,
     );
+    if report.spec.iterations > 0 {
+        println!(
+            "speculate: drafted {} accepted {} rejected {} (rate {:.2}, \
+             mean accepted len {:.2} over {} iterations)",
+            report.spec.drafted,
+            report.spec.accepted,
+            report.spec.drafted - report.spec.accepted,
+            report.spec.acceptance_rate(),
+            report.spec.mean_accepted_len(),
+            report.spec.iterations,
+        );
+    }
     let saved = report.dense_pages_peak.saturating_sub(report.pool.pages_peak);
     println!(
         "kv pages: peak {} vs dense-equivalent {} ({} pages saved, {:.1}%); \
@@ -753,6 +840,7 @@ fn serve_listen(
             PrefillMode::Chunked(chunk)
         },
         seed,
+        speculate: args.get_usize("speculate", 0),
         ..Default::default()
     };
     let lcfg = ListenConfig {
@@ -763,6 +851,7 @@ fn serve_listen(
         },
         max_conns: args.get_usize("max-conns", 64),
         read_timeout_ms: args.get_u64("read-timeout-ms", 5_000),
+        idle_timeout_ms: args.get_u64("idle-timeout-ms", 30_000),
         stream_timeout_ms: args.get_u64("stream-timeout-ms", 60_000),
         max_requests: args.get_u64("max-requests", 0),
     };

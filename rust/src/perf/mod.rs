@@ -2,16 +2,28 @@
 //!
 //! Runs a fixed set of fixed-seed scenarios (training-shape forward,
 //! autoregressive decode, native training steps, the continuous-batching
-//! serving engine, the int8 `quant_*` accuracy/throughput family, and
-//! the `simd_*` kernel-tier family) across a sweep of kernel-thread
-//! counts, and emits one machine-readable JSON document (`BENCH_pr7.json`
+//! serving engine, the int8 `quant_*` accuracy/throughput family, the
+//! `simd_*` kernel-tier family, and the `spec_decode_*` self-speculative
+//! serving family) across a sweep of kernel-thread counts, and emits one
+//! machine-readable JSON document (`BENCH_pr7.json`
 //! at the repo root by convention — the recorded perf trajectory every
 //! future PR diffs against; the CI `bench-regression` job regenerates and
 //! uploads it on every push). [`print_baseline_deltas`] additionally
 //! diffs a fresh run against the committed `BENCH_baseline.json` and
 //! prints per-scenario speedup-vs-baseline readouts (including the
-//! simd-vs-scalar column). See DESIGN.md §Benchmarking for the schema
+//! simd-vs-scalar column) plus per-kernel wall-clock deltas; armed with
+//! a regression threshold it counts scenarios whose primary throughput
+//! metric fell below baseline by more than the threshold, which
+//! `bench --gate-pct` turns into a nonzero exit (the CI
+//! `bench-regression` gate). See DESIGN.md §Benchmarking for the schema
 //! and methodology.
+//!
+//! The `spec_decode_*` scenarios run the serving engine with
+//! `--speculate k` against the plain engine on the same greedy trace:
+//! token streams must be bitwise identical per request and across the
+//! thread sweep, KV pages must drain to zero at shutdown (rejected
+//! draft pages released), and the rows record acceptance rate, mean
+//! accepted length, and the tokens/s delta speculation buys.
 //!
 //! The `simd_*` scenarios compare a scalar-pinned pool against the
 //! detected SIMD tier side by side (per-pool [`KernelCtx`] — no
@@ -50,7 +62,8 @@ use anyhow::{ensure, Result};
 
 use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::{
-    generate_workload, PrefillMode, SamplingParams, Server, ServerConfig, WorkloadSpec,
+    generate_workload, PrefillMode, SamplingParams, ServeReport, Server, ServerConfig,
+    WorkloadSpec,
 };
 use crate::data::{corpus, Dataset};
 use crate::runtime::cpu::kernels;
@@ -141,6 +154,16 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
             let (key, s) = serve_scenario_impl(opts, variant, slots, true)?;
             scenarios.set(&key, s);
         }
+        let (key, s) = spec_decode_scenario_impl(opts, variant, true)?;
+        scenarios.set(&key, s);
+    }
+    {
+        // Self-speculative decoding family: the serving engine drafting
+        // on the linear bypass and verifying with the full router, vs
+        // the plain engine on the same greedy trace (bitwise-identical
+        // streams enforced; acceptance + speedup recorded).
+        let (key, s) = spec_decode_scenario_impl(opts, Variant::DtrBilayer, false)?;
+        scenarios.set(&key, s);
     }
     {
         // SIMD tier family: scalar-pinned vs detected-tier pools run
@@ -509,6 +532,132 @@ fn serve_scenario_impl(
         println!(
             "[bench] {key} threads={t}: {:.1} tok/s (p50 {:.2} ms, occupancy {:.2})",
             rep.tokens_per_s, rep.latency_ms_p50, rep.batch_occupancy
+        );
+    }
+    finish_scenario(&mut sc, &tok_s);
+    Ok((key, sc))
+}
+
+/// The self-speculative serving engine (`--speculate k`) against the
+/// plain engine on the same fixed-seed greedy trace. Gates enforced per
+/// sweep point: per-request token streams bitwise identical to the
+/// plain run (the determinism contract of bypass-draft / full-router
+/// verify) and across the thread sweep, KV pages drained to zero at
+/// shutdown (rejected draft pages released), and draft accounting
+/// closed (`accepted <= drafted`, drafting actually engaged). Rows
+/// record acceptance rate, mean accepted length, and the tokens/s
+/// speedup accepted drafts buy. `quantized` selects the int8 backend
+/// (the `quant_spec_decode_*` keys).
+fn spec_decode_scenario_impl(
+    opts: &BenchOptions,
+    variant: Variant,
+    quantized: bool,
+) -> Result<(String, Json)> {
+    let k = 4usize;
+    let n_req = if opts.quick { 4usize } else { 12 };
+    let prefix = if quantized { "quant_spec_decode" } else { "spec_decode" };
+    let key = format!("{prefix}_{}", variant.as_str());
+    let mut sc = Json::obj();
+    sc.set("k", Json::Num(k as f64));
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    let mut tok_s = Vec::new();
+    for &t in &opts.threads {
+        let be_f32;
+        let be_q;
+        let be: &dyn Backend = if quantized {
+            be_q = quant_backend_with_threads(variant, opts.quick, t)?;
+            &be_q
+        } else {
+            be_f32 = backend_with_threads(variant, opts.quick, t)?;
+            &be_f32
+        };
+        let spec = WorkloadSpec {
+            n_requests: n_req,
+            arrival_rate: 10_000.0,
+            prompt_len_mean: 12,
+            prompt_len_max: 32,
+            gen_len_mean: if opts.quick { 8 } else { 24 },
+            gen_len_max: if opts.quick { 16 } else { 48 },
+            temperature: 0.0,
+            vocab: be.config().vocab_size,
+        };
+        let trace = generate_workload(&spec, WORKLOAD_SEED);
+        let run = |speculate: usize| -> Result<ServeReport> {
+            let scfg = ServerConfig {
+                slots: 2,
+                prefill: PrefillMode::Chunked(32),
+                speculate,
+                ..Default::default()
+            };
+            let mut srv = Server::new(be, scfg)?;
+            srv.run_workload(&trace, 10_000_000)
+        };
+        let base_rep = run(0)?;
+        let spec_rep = run(k)?;
+        for rep in [&base_rep, &spec_rep] {
+            ensure!(
+                rep.completed + rep.evicted == n_req,
+                "{key}: requests lost at threads={t}"
+            );
+        }
+        ensure!(
+            spec_rep.pool.pages_allocated == 0,
+            "{key}: {} KV pages leaked after the speculative run at threads={t}",
+            spec_rep.pool.pages_allocated
+        );
+        ensure!(
+            spec_rep.spec.drafted > 0 && spec_rep.spec.accepted <= spec_rep.spec.drafted,
+            "{key}: speculative draft accounting broken at threads={t} \
+             (drafted {}, accepted {})",
+            spec_rep.spec.drafted,
+            spec_rep.spec.accepted
+        );
+        let streams = |rep: &ServeReport| -> Vec<Vec<i32>> {
+            let mut s: Vec<(u64, Vec<i32>)> =
+                rep.requests.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            s.sort_by_key(|(id, _)| *id);
+            s.into_iter().map(|(_, toks)| toks).collect()
+        };
+        ensure!(
+            streams(&base_rep) == streams(&spec_rep),
+            "{key}: speculative token streams diverged from plain decode at threads={t}"
+        );
+        let spec_streams = streams(&spec_rep);
+        match &baseline {
+            None => baseline = Some(spec_streams),
+            Some(want) => ensure!(
+                *want == spec_streams,
+                "{key}: token streams diverged between threads=1 and threads={t}"
+            ),
+        }
+        tok_s.push(spec_rep.tokens_per_s);
+        let speedup = if base_rep.tokens_per_s > 0.0 {
+            spec_rep.tokens_per_s / base_rep.tokens_per_s
+        } else {
+            1.0
+        };
+        sc.set(
+            &format!("t{t}"),
+            Json::from_pairs(vec![
+                ("tokens_per_s", Json::Num(spec_rep.tokens_per_s)),
+                ("baseline_tokens_per_s", Json::Num(base_rep.tokens_per_s)),
+                ("speedup_vs_plain", Json::Num(speedup)),
+                ("acceptance_rate", Json::Num(spec_rep.spec.acceptance_rate())),
+                ("mean_accepted_len", Json::Num(spec_rep.spec.mean_accepted_len())),
+                ("drafted", Json::Num(spec_rep.spec.drafted as f64)),
+                ("accepted", Json::Num(spec_rep.spec.accepted as f64)),
+                ("steps", Json::Num(spec_rep.steps as f64)),
+                ("baseline_steps", Json::Num(base_rep.steps as f64)),
+                ("kv_pages_after", Json::Num(spec_rep.pool.pages_allocated as f64)),
+            ]),
+        );
+        println!(
+            "[bench] {key} threads={t}: {:.1} tok/s vs plain {:.1} ({:.2}x; accept {:.2}, mean len {:.2})",
+            spec_rep.tokens_per_s,
+            base_rep.tokens_per_s,
+            speedup,
+            spec_rep.spec.acceptance_rate(),
+            spec_rep.spec.mean_accepted_len()
         );
     }
     finish_scenario(&mut sc, &tok_s);
@@ -1154,15 +1303,68 @@ fn primary_metric(sc: &Json) -> Option<(String, f64)> {
     None
 }
 
+/// Collect `(json_path_within_scenario, kernel_label)` pairs for the
+/// per-kernel delta table: the widest thread row's
+/// `kernel_timings.<kernel>.total_ms` sections (serve/train scenarios),
+/// plus the `simd_kernels` micro-bench `<kernel>.simd_ms` rows.
+fn kernel_metric_paths(sc: &Json) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    if let Json::Obj(m) = sc {
+        let mut best: Option<(usize, &Json)> = None;
+        for (k, v) in m {
+            if let Some(n) = k.strip_prefix('t').and_then(|r| r.parse::<usize>().ok()) {
+                if v.get("kernel_timings").is_some()
+                    && best.as_ref().map(|(bn, _)| n > *bn).unwrap_or(true)
+                {
+                    best = Some((n, v));
+                }
+            }
+        }
+        if let Some((n, row)) = best {
+            if let Some(Json::Obj(kt)) = row.get("kernel_timings") {
+                for (kernel, v) in kt {
+                    if v.path("total_ms").and_then(Json::as_f64).is_some() {
+                        out.push((
+                            format!("t{n}.kernel_timings.{kernel}.total_ms"),
+                            kernel.clone(),
+                        ));
+                    }
+                }
+            }
+        }
+        for (kernel, v) in m {
+            if v.path("simd_ms").and_then(Json::as_f64).is_some() {
+                out.push((format!("{kernel}.simd_ms"), kernel.clone()));
+            }
+        }
+    }
+    out
+}
+
 /// Diff a fresh bench document against the committed baseline
-/// (`BENCH_baseline.json`) and print a per-scenario table: the primary
-/// throughput metric now vs then (speedup-vs-baseline), plus the
-/// simd-vs-scalar speedup column where the scenario records one. A
-/// missing baseline file, a `"status": "pending-measurement"` stub
-/// (committed before the first measured run lands), or rows the
-/// baseline lacks are reported and skipped — this readout never fails a
-/// bench run.
-pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
+/// (`BENCH_baseline.json`) and print the delta readout: a per-scenario
+/// table (the primary throughput metric now vs then, plus the
+/// simd-vs-scalar speedup column where the scenario records one),
+/// followed by a per-kernel wall-clock table from every scenario that
+/// embeds `kernel_timings` (and the `simd_kernels` micro-bench rows).
+///
+/// `regression_gate_pct` arms the regression gate: a scenario whose
+/// primary throughput metric fell more than that many percent below
+/// baseline is flagged `REGRESSED` in the table and counted in the
+/// return value — `bench --gate-pct` maps a nonzero count onto a
+/// nonzero process exit (the CI `bench-regression` job's gate).
+/// Per-kernel rows are informational only; per-kernel wall-clock is too
+/// noisy to gate. With `None` the readout never fails anything (the
+/// historical behavior). A missing baseline file, a
+/// `"status": "pending-measurement"` stub (committed before the first
+/// measured run lands — promote one with
+/// `cp results/bench_ci.json BENCH_baseline.json`), or rows the
+/// baseline lacks are reported and skipped, and count zero regressions.
+pub fn print_baseline_deltas(
+    doc: &Json,
+    baseline_path: &Path,
+    regression_gate_pct: Option<f64>,
+) -> usize {
     let base = match Json::parse_file(baseline_path) {
         Ok(b) => b,
         Err(_) => {
@@ -1170,7 +1372,7 @@ pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
                 "[bench] no baseline at {} — skipping delta readout",
                 baseline_path.display()
             );
-            return;
+            return 0;
         }
     };
     // A pending-measurement stub (committed before the first measured CI
@@ -1186,12 +1388,13 @@ pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
             "[bench] promote a measured CI artifact with: cp results/bench_ci.json {}",
             baseline_path.display()
         );
-        return;
+        return 0;
     }
     let cur = match doc.get("scenarios") {
         Some(Json::Obj(m)) => m,
-        _ => return,
+        _ => return 0,
     };
+    let mut regressions = 0usize;
     let mut rows: Vec<Vec<String>> = Vec::new();
     for (name, sc) in cur {
         let Some((metric, val)) = primary_metric(sc) else {
@@ -1201,9 +1404,18 @@ pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
             .path(&format!("scenarios.{name}.{metric}"))
             .and_then(Json::as_f64)
             .filter(|v| *v > 0.0);
-        let (base_cell, delta_cell) = match base_val {
-            Some(bv) => (format!("{bv:.1}"), format!("{:+.1}%", (val / bv - 1.0) * 100.0)),
-            None => ("-".to_string(), "-".to_string()),
+        let delta_pct = base_val.map(|bv| (val / bv - 1.0) * 100.0);
+        let (base_cell, delta_cell) = match (base_val, delta_pct) {
+            (Some(bv), Some(d)) => (format!("{bv:.1}"), format!("{d:+.1}%")),
+            _ => ("-".to_string(), "-".to_string()),
+        };
+        let status_cell = match (regression_gate_pct, delta_pct) {
+            (Some(gate), Some(d)) if d < -gate => {
+                regressions += 1;
+                "REGRESSED".to_string()
+            }
+            (Some(_), Some(_)) => "ok".to_string(),
+            _ => "-".to_string(),
         };
         let simd_cell = sc
             .path("speedup_vs_scalar")
@@ -1219,13 +1431,58 @@ pub fn print_baseline_deltas(doc: &Json, baseline_path: &Path) {
             base_cell,
             delta_cell,
             simd_cell,
+            status_cell,
         ]);
     }
     print_table(
         &format!("speedup vs baseline ({})", baseline_path.display()),
-        &["scenario", "metric", "current", "baseline", "delta", "simd-vs-scalar"],
+        &[
+            "scenario",
+            "metric",
+            "current",
+            "baseline",
+            "delta",
+            "simd-vs-scalar",
+            "status",
+        ],
         &rows,
     );
+    let mut krows: Vec<Vec<String>> = Vec::new();
+    for (name, sc) in cur {
+        for (path, kernel) in kernel_metric_paths(sc) {
+            let Some(val) = sc.path(&path).and_then(Json::as_f64) else {
+                continue;
+            };
+            let base_val = base
+                .path(&format!("scenarios.{name}.{path}"))
+                .and_then(Json::as_f64)
+                .filter(|v| *v > 0.0);
+            let (base_cell, delta_cell) = match base_val {
+                Some(bv) => (format!("{bv:.2}"), format!("{:+.1}%", (val / bv - 1.0) * 100.0)),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            krows.push(vec![
+                name.clone(),
+                kernel,
+                format!("{val:.2}"),
+                base_cell,
+                delta_cell,
+            ]);
+        }
+    }
+    if !krows.is_empty() {
+        print_table(
+            "per-kernel wall-clock vs baseline (informational)",
+            &["scenario", "kernel", "current_ms", "baseline_ms", "delta"],
+            &krows,
+        );
+    }
+    if let Some(gate) = regression_gate_pct {
+        println!(
+            "[bench] regression gate: {regressions} scenario(s) more than {gate:.1}% below baseline"
+        );
+    }
+    regressions
 }
 
 /// Stamp the cross-thread summary: speedup of the widest sweep point
@@ -1265,6 +1522,8 @@ mod tests {
             "quant_forward_dtr_bilayer",
             "quant_decode_dtr_bilayer",
             "quant_serve_dtr_bilayer_s2",
+            "spec_decode_dtr_bilayer",
+            "quant_spec_decode_dtr_bilayer",
         ] {
             let s = sc
                 .get(key)
@@ -1299,6 +1558,25 @@ mod tests {
         let delta = qe.path("ppl_delta_pct").unwrap().as_f64().unwrap();
         assert!(delta <= QUANT_PPL_GATE * 100.0, "ppl delta {delta}%");
         assert!(doc.path("quant_included").and_then(Json::as_bool) == Some(true));
+        // the spec_decode family must carry its acceptance readouts and
+        // the pages-to-zero marker (the bitwise gates already ran inside
+        // the scenario — a run that broke them would have errored)
+        for key in ["spec_decode_dtr_bilayer", "quant_spec_decode_dtr_bilayer"] {
+            let sd = sc.path(key).unwrap();
+            let rate = sd.path("t2.acceptance_rate").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&rate), "{key} acceptance rate {rate}");
+            assert!(
+                sd.path("t2.mean_accepted_len").unwrap().as_f64().unwrap() >= 1.0,
+                "{key}: every iteration emits at least one token"
+            );
+            assert!(sd.path("t2.speedup_vs_plain").unwrap().as_f64().unwrap() > 0.0);
+            assert!(sd.path("t2.drafted").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(
+                sd.path("t2.kv_pages_after").and_then(Json::as_f64),
+                Some(0.0),
+                "{key} leaked KV pages"
+            );
+        }
         // the simd family must record its determinism + accuracy gates
         let sk = sc.path("simd_kernels").unwrap();
         for kernel in ["matmul", "matmul_q8", "rmsnorm_fast"] {
@@ -1386,8 +1664,12 @@ mod tests {
             )]),
         );
         doc.set("scenarios", scenarios);
-        // missing file: must not panic
-        print_baseline_deltas(&doc, Path::new("/nonexistent/BENCH_baseline.json"));
+        // missing file: must not panic, and counts zero regressions even
+        // with the gate armed
+        assert_eq!(
+            print_baseline_deltas(&doc, Path::new("/nonexistent/BENCH_baseline.json"), Some(5.0)),
+            0
+        );
         // pending stub with no numeric metrics: must not panic either
         let dir = std::env::temp_dir().join("dtrnet_baseline_stub_test");
         let _ = std::fs::create_dir_all(&dir);
@@ -1398,15 +1680,91 @@ mod tests {
              \"scenarios\": {}}",
         )
         .unwrap();
-        print_baseline_deltas(&doc, &path);
-        // a measured baseline yields a real delta row (smoke: no panic)
+        assert_eq!(print_baseline_deltas(&doc, &path, Some(5.0)), 0);
+        // a measured baseline yields a real delta row; 100 vs 80 is an
+        // improvement, so the gate stays quiet
         std::fs::write(
             &path,
             "{\"schema\": \"dtrnet-bench-v1\", \"scenarios\": {\"forward_dense\": \
              {\"t1\": {\"tokens_per_s\": 80.0}}}}",
         )
         .unwrap();
-        print_baseline_deltas(&doc, &path);
+        assert_eq!(print_baseline_deltas(&doc, &path, None), 0);
+        assert_eq!(print_baseline_deltas(&doc, &path, Some(5.0)), 0);
+    }
+
+    #[test]
+    fn baseline_delta_gate_counts_regressions_beyond_threshold() {
+        let dir = std::env::temp_dir().join("dtrnet_baseline_gate_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_baseline.json");
+        std::fs::write(
+            &path,
+            "{\"schema\": \"dtrnet-bench-v1\", \"scenarios\": {\"forward_dense\": \
+             {\"t1\": {\"tokens_per_s\": 80.0}}}}",
+        )
+        .unwrap();
+        // current 60 vs baseline 80 is -25%: regressed past a 5% gate,
+        // tolerated by a 50% gate, and never counted without a gate
+        let mut doc = Json::obj();
+        let mut scenarios = Json::obj();
+        scenarios.set(
+            "forward_dense",
+            Json::from_pairs(vec![(
+                "t1",
+                Json::from_pairs(vec![("tokens_per_s", Json::Num(60.0))]),
+            )]),
+        );
+        doc.set("scenarios", scenarios);
+        assert_eq!(print_baseline_deltas(&doc, &path, Some(5.0)), 1);
+        assert_eq!(print_baseline_deltas(&doc, &path, Some(50.0)), 0);
+        assert_eq!(print_baseline_deltas(&doc, &path, None), 0);
+    }
+
+    #[test]
+    fn kernel_metric_paths_find_timing_sections_and_simd_rows() {
+        // serve/train-shaped scenario: widest thread row wins
+        let sc = Json::from_pairs(vec![
+            (
+                "t1",
+                Json::from_pairs(vec![(
+                    "kernel_timings",
+                    Json::from_pairs(vec![
+                        ("total_ms", Json::Num(9.0)),
+                        ("attention", Json::from_pairs(vec![("total_ms", Json::Num(5.0))])),
+                    ]),
+                )]),
+            ),
+            (
+                "t4",
+                Json::from_pairs(vec![(
+                    "kernel_timings",
+                    Json::from_pairs(vec![
+                        ("total_ms", Json::Num(4.0)),
+                        ("attention", Json::from_pairs(vec![("total_ms", Json::Num(2.0))])),
+                    ]),
+                )]),
+            ),
+        ]);
+        assert_eq!(
+            kernel_metric_paths(&sc),
+            vec![(
+                "t4.kernel_timings.attention.total_ms".to_string(),
+                "attention".to_string()
+            )]
+        );
+        // simd_kernels-shaped scenario: per-kernel simd_ms rows
+        let sk = Json::from_pairs(vec![
+            ("tier", Json::Str("avx2".to_string())),
+            (
+                "matmul",
+                Json::from_pairs(vec![("scalar_ms", Json::Num(3.0)), ("simd_ms", Json::Num(1.0))]),
+            ),
+        ]);
+        assert_eq!(
+            kernel_metric_paths(&sk),
+            vec![("matmul.simd_ms".to_string(), "matmul".to_string())]
+        );
     }
 
     #[test]
@@ -1419,6 +1777,9 @@ mod tests {
         let doc = run(&opts).unwrap();
         let sc = doc.path("scenarios").unwrap();
         assert!(sc.get("quant_forward_dtr_bilayer").is_none());
+        assert!(sc.get("quant_spec_decode_dtr_bilayer").is_none());
+        // the f32 spec_decode scenario is not part of the quant family
+        assert!(sc.get("spec_decode_dtr_bilayer").is_some());
         assert!(doc.path("quant_included").and_then(Json::as_bool) == Some(false));
     }
 

@@ -69,6 +69,63 @@ impl DecodeState {
     pub fn lens(&self, d_model: usize) -> Vec<usize> {
         self.keys.iter().map(|k| k.len() / d_model).collect()
     }
+
+    /// Snapshot the current extent (position + per-layer cached token
+    /// counts) for a later [`DecodeState::rollback`]. Cheap by design:
+    /// the caches are append-only, so an extent snapshot is enough to
+    /// restore the exact pre-draft bytes — no copy of the rows
+    /// themselves is needed.
+    pub fn mark(&self, d_model: usize) -> StateMark {
+        StateMark {
+            position: self.position,
+            lens: self.lens(d_model),
+        }
+    }
+
+    /// Roll the state back to `lens` cached tokens per layer and
+    /// `position` tokens fed. Because the caches are append-only,
+    /// truncation is a bitwise restore of any earlier extent — the
+    /// speculative-decode rejection path.
+    pub fn truncate_to(&mut self, lens: &[usize], position: usize, d_model: usize) {
+        for (l, &len) in lens.iter().enumerate() {
+            self.keys[l].truncate(len * d_model);
+            self.values[l].truncate(len * d_model);
+        }
+        self.position = position;
+    }
+
+    /// Roll back to a [`StateMark`] taken earlier on this state.
+    pub fn rollback(&mut self, mark: &StateMark, d_model: usize) {
+        self.truncate_to(&mark.lens, mark.position, d_model);
+    }
+}
+
+/// Extent snapshot of a [`DecodeState`], taken via [`DecodeState::mark`]
+/// before a speculative draft window so the state can be rolled back
+/// bitwise on rejection ([`DecodeState::rollback`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateMark {
+    /// `position` at snapshot time.
+    pub position: usize,
+    /// Per-layer cached token count at snapshot time.
+    pub lens: Vec<usize>,
+}
+
+/// Per-call routing override for [`Backend::decode_step_routed`].
+///
+/// `Router` follows the model's routing decisions unchanged (exactly
+/// [`Backend::decode_step`]). `ForceBypass` pins every DTR layer onto
+/// the linear bypass path — the router weights are untouched and its
+/// soft score still scales the bypass update, but no DTR layer attends
+/// or caches KV. Dense layers always attend (and cache) either way.
+/// ForceBypass turns a decode step into the cheap draft pass of
+/// bypass-path speculative decoding (DESIGN.md §Speculative decoding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteOverride {
+    /// Follow the router (normal decode).
+    Router,
+    /// Pin every DTR layer onto the linear bypass (draft mode).
+    ForceBypass,
 }
 
 /// One decode step's outputs — mirrors the decode artifact tuple
@@ -179,6 +236,44 @@ pub trait Backend {
     /// Feed one token at the state's current position; returns next-token
     /// logits and the per-layer routing decisions that updated the cache.
     fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput>;
+
+    /// Like [`Backend::decode_step`] but with a per-call routing
+    /// override. [`RouteOverride::Router`] must behave exactly like
+    /// `decode_step`; [`RouteOverride::ForceBypass`] runs the draft
+    /// pass of speculative decoding (every DTR layer takes the linear
+    /// bypass; router weights untouched). Draft-mode KV writes (dense
+    /// layers still cache) land in `state` like any other step —
+    /// callers roll them back with [`DecodeState::rollback`]. Backends
+    /// without a bypass-override path reject `ForceBypass`.
+    fn decode_step_routed(
+        &self,
+        state: &mut DecodeState,
+        token: i32,
+        route: RouteOverride,
+    ) -> Result<StepOutput> {
+        match route {
+            RouteOverride::Router => self.decode_step(state, token),
+            RouteOverride::ForceBypass => anyhow::bail!(
+                "backend {} does not support the ForceBypass routing override",
+                self.name()
+            ),
+        }
+    }
+
+    /// Feed `tokens` to one sequence and return **every** row's step
+    /// output (per-row logits, routing decision, soft score) — the
+    /// batched verification pass of speculative decoding.
+    ///
+    /// Same bit-identity contract as [`Backend::decode_batch`]: the
+    /// outputs and cache updates must equal a sequential
+    /// [`Backend::decode_step`] loop over `tokens`. The default
+    /// implementation is that loop; the CPU backends override it with
+    /// one batched all-rows step so a k-token draft is verified in a
+    /// single full-router pass.
+    fn decode_rows(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<Vec<StepOutput>> {
+        ensure!(!tokens.is_empty(), "decode_rows needs at least one token");
+        tokens.iter().map(|&t| self.decode_step(state, t)).collect()
+    }
 
     /// Batched multi-sequence decode: feed one token to each sequence in
     /// `states` (a slab of independent per-sequence decode states) and

@@ -40,7 +40,9 @@ use crate::util::threadpool::{self, Pool};
 
 use crate::telemetry::FlopCounters;
 
-use super::backend::{Backend, DecodeState, ForwardOutput, PrefillRows, StepOutput};
+use super::backend::{
+    Backend, DecodeState, ForwardOutput, PrefillRows, RouteOverride, StepOutput,
+};
 use super::checkpoint::Checkpoint;
 use super::tensor::Tensor;
 
@@ -630,7 +632,11 @@ impl CpuBackend {
     /// row-independent, so outputs and cache bits are identical to a
     /// sequential [`Backend::decode_step`] loop. `logits` selects which
     /// rows pay the unembed matmul (the prefill fast path). Each row
-    /// advances its cache's position by one.
+    /// advances its cache's position by one. `route` is the per-call
+    /// routing override: [`RouteOverride::ForceBypass`] pins every DTR
+    /// row onto the linear bypass (the speculative draft pass — router
+    /// weights still evaluated, their soft score still scales the
+    /// bypass update).
     fn step_rows(
         &self,
         toks: &[i32],
@@ -638,6 +644,7 @@ impl CpuBackend {
         states: &mut [&mut DecodeState],
         cache_of: &[usize],
         logits: LogitsRows,
+        route: RouteOverride,
     ) -> Result<RowsOutput> {
         let cfg = &self.cfg;
         let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
@@ -704,7 +711,9 @@ impl CpuBackend {
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
                     let decide = |i: usize| {
-                        cfg.variant != Variant::DtrSkip && g[i * 2] > g[i * 2 + 1]
+                        route == RouteOverride::Router
+                            && cfg.variant != Variant::DtrSkip
+                            && g[i * 2] > g[i * 2 + 1]
                     };
                     let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
                     let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
@@ -963,6 +972,20 @@ impl Backend for CpuBackend {
     }
 
     fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
+        self.decode_step_routed(state, token, RouteOverride::Router)
+    }
+
+    /// Single-row decode with a per-call routing override:
+    /// [`RouteOverride::ForceBypass`] is the speculative draft pass —
+    /// every DTR layer takes the linear bypass (router still evaluated,
+    /// its soft score still scales the bypass update); dense layers
+    /// still attend and cache.
+    fn decode_step_routed(
+        &self,
+        state: &mut DecodeState,
+        token: i32,
+        route: RouteOverride,
+    ) -> Result<StepOutput> {
         let cfg = &self.cfg;
         let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
         let (heads, hd) = (cfg.n_heads, cfg.head_dim());
@@ -1022,7 +1045,9 @@ impl Backend for CpuBackend {
                         .timers
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, 1, d, d / 2));
-                    let go = cfg.variant != Variant::DtrSkip && g[0] > g[1];
+                    let go = route == RouteOverride::Router
+                        && cfg.variant != Variant::DtrSkip
+                        && g[0] > g[1];
                     if go {
                         let ctx_len = state.keys[li].len() as u64 / du + 1;
                         self.flops.add_qkvo(li, 8 * du * du);
@@ -1114,9 +1139,63 @@ impl Backend for CpuBackend {
             logits,
             routed,
             g_attn,
-        } = self.step_rows(tokens, &positions, states, &cache_of, LogitsRows::All)?;
+        } = self.step_rows(
+            tokens,
+            &positions,
+            states,
+            &cache_of,
+            LogitsRows::All,
+            RouteOverride::Router,
+        )?;
         let vocab = self.cfg.vocab_size;
         let mut outs = Vec::with_capacity(b);
+        for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
+            outs.push(StepOutput {
+                logits: Tensor::f32(vec![vocab], logits[i * vocab..(i + 1) * vocab].to_vec()),
+                routed: r,
+                g_attn: ga,
+            });
+        }
+        Ok(outs)
+    }
+
+    /// Batched single-sequence multi-row decode — the speculative
+    /// verification pass. All rows run through one
+    /// [`CpuBackend::step_rows`] call mapped to the one sequence's
+    /// cache (row order is causal order) with every row paying the
+    /// unembed, so a k-token draft is verified under the full router in
+    /// a single batched step. Bit-identical to a sequential
+    /// [`Backend::decode_step`] loop.
+    fn decode_rows(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<Vec<StepOutput>> {
+        ensure!(!tokens.is_empty(), "decode_rows needs at least one token");
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; decode supports token-choice only"
+        );
+        let n = tokens.len();
+        let positions: Vec<f32> = (0..n).map(|i| (state.position + i) as f32).collect();
+        let cache_of = vec![0usize; n];
+        let mut slab = [&mut *state];
+        let RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        } = self.step_rows(
+            tokens,
+            &positions,
+            &mut slab,
+            &cache_of,
+            LogitsRows::All,
+            RouteOverride::Router,
+        )?;
+        let mut outs = Vec::with_capacity(n);
         for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
             outs.push(StepOutput {
                 logits: Tensor::f32(vec![vocab], logits[i * vocab..(i + 1) * vocab].to_vec()),
@@ -1166,7 +1245,14 @@ impl Backend for CpuBackend {
             } else {
                 LogitsRows::None
             };
-            last = Some(self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?);
+            last = Some(self.step_rows(
+                ck,
+                &positions,
+                &mut slab,
+                &cache_of,
+                mode,
+                RouteOverride::Router,
+            )?);
         }
         let RowsOutput {
             logits,
@@ -1216,7 +1302,8 @@ impl Backend for CpuBackend {
             } else {
                 LogitsRows::None
             };
-            let out = self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?;
+            let out =
+                self.step_rows(ck, &positions, &mut slab, &cache_of, mode, RouteOverride::Router)?;
             routed.extend(out.routed);
             g_attn.extend(out.g_attn);
             logits = out.logits;

@@ -34,7 +34,8 @@ pub mod tensor;
 pub mod train;
 
 pub use backend::{
-    Backend, DecodeState, ForwardOutput, GenerateOutput, PrefillRows, StepOutput, WeightBytes,
+    Backend, DecodeState, ForwardOutput, GenerateOutput, PrefillRows, RouteOverride, StateMark,
+    StepOutput, WeightBytes,
 };
 pub use checkpoint::Checkpoint;
 pub use cpu::{CpuBackend, RouterMode};

@@ -54,7 +54,9 @@ use crate::util::threadpool::{self, Pool};
 
 use crate::telemetry::FlopCounters;
 
-use super::backend::{Backend, DecodeState, ForwardOutput, PrefillRows, StepOutput, WeightBytes};
+use super::backend::{
+    Backend, DecodeState, ForwardOutput, PrefillRows, RouteOverride, StepOutput, WeightBytes,
+};
 use super::checkpoint::Checkpoint;
 use super::cpu::{
     attend_context_rows, attend_rows, dense_equiv_flops, init_weights, kernels, validate_weights,
@@ -534,8 +536,8 @@ impl QuantizedCpuBackend {
     }
 
     /// Row-parallel step over one token per row — the quantized mirror of
-    /// `CpuBackend::step_rows` (same causality, cache, and logits-mode
-    /// contract; see that method's docs).
+    /// `CpuBackend::step_rows` (same causality, cache, logits-mode, and
+    /// routing-override contract; see that method's docs).
     fn step_rows(
         &self,
         toks: &[i32],
@@ -543,6 +545,7 @@ impl QuantizedCpuBackend {
         states: &mut [&mut DecodeState],
         cache_of: &[usize],
         logits: LogitsRows,
+        route: RouteOverride,
     ) -> Result<RowsOutput> {
         let cfg = &self.cfg;
         let (d, vocab) = (cfg.d_model, cfg.vocab_size);
@@ -602,8 +605,11 @@ impl QuantizedCpuBackend {
                         .timers
                         .router
                         .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, n, d, d / 2));
-                    let decide =
-                        |i: usize| cfg.variant != Variant::DtrSkip && g[i * 2] > g[i * 2 + 1];
+                    let decide = |i: usize| {
+                        route == RouteOverride::Router
+                            && cfg.variant != Variant::DtrSkip
+                            && g[i * 2] > g[i * 2 + 1]
+                    };
                     let att_idx: Vec<usize> = (0..n).filter(|&i| decide(i)).collect();
                     let byp_idx: Vec<usize> = (0..n).filter(|&i| !decide(i)).collect();
                     if !att_idx.is_empty() {
@@ -871,18 +877,73 @@ impl Backend for QuantizedCpuBackend {
     /// exactly the sequential decode semantics: same kernels, same cache
     /// appends, same position bump).
     fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
+        self.decode_step_routed(state, token, RouteOverride::Router)
+    }
+
+    /// Single-row decode with a per-call routing override (mirror of the
+    /// f32 backend's override; [`RouteOverride::ForceBypass`] is the
+    /// speculative draft pass).
+    fn decode_step_routed(
+        &self,
+        state: &mut DecodeState,
+        token: i32,
+        route: RouteOverride,
+    ) -> Result<StepOutput> {
         let positions = [state.position as f32];
         let mut slab = [&mut *state];
         let RowsOutput {
             logits,
             mut routed,
             mut g_attn,
-        } = self.step_rows(&[token], &positions, &mut slab, &[0], LogitsRows::All)?;
+        } = self.step_rows(&[token], &positions, &mut slab, &[0], LogitsRows::All, route)?;
         Ok(StepOutput {
             logits: Tensor::f32(vec![self.cfg.vocab_size], logits),
             routed: routed.pop().unwrap(),
             g_attn: g_attn.pop().unwrap(),
         })
+    }
+
+    /// Batched single-sequence multi-row decode — the speculative
+    /// verification pass (mirror of the f32 backend's override;
+    /// bit-identical to a sequential [`Backend::decode_step`] loop).
+    fn decode_rows(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<Vec<StepOutput>> {
+        ensure!(!tokens.is_empty(), "decode_rows needs at least one token");
+        let vocab = self.cfg.vocab_size;
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token id {t} out of range for vocab {vocab}"
+            );
+        }
+        ensure!(
+            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
+            "expert-choice routing needs the full sequence; decode supports token-choice only"
+        );
+        let n = tokens.len();
+        let positions: Vec<f32> = (0..n).map(|i| (state.position + i) as f32).collect();
+        let cache_of = vec![0usize; n];
+        let mut slab = [&mut *state];
+        let RowsOutput {
+            logits,
+            routed,
+            g_attn,
+        } = self.step_rows(
+            tokens,
+            &positions,
+            &mut slab,
+            &cache_of,
+            LogitsRows::All,
+            RouteOverride::Router,
+        )?;
+        let mut outs = Vec::with_capacity(n);
+        for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
+            outs.push(StepOutput {
+                logits: Tensor::f32(vec![vocab], logits[i * vocab..(i + 1) * vocab].to_vec()),
+                routed: r,
+                g_attn: ga,
+            });
+        }
+        Ok(outs)
     }
 
     /// Vectorized multi-sequence decode (mirror of the f32 backend's
@@ -908,7 +969,14 @@ impl Backend for QuantizedCpuBackend {
             logits,
             routed,
             g_attn,
-        } = self.step_rows(tokens, &positions, states, &cache_of, LogitsRows::All)?;
+        } = self.step_rows(
+            tokens,
+            &positions,
+            states,
+            &cache_of,
+            LogitsRows::All,
+            RouteOverride::Router,
+        )?;
         let vocab = self.cfg.vocab_size;
         let mut outs = Vec::with_capacity(b);
         for (i, (r, ga)) in routed.into_iter().zip(g_attn).enumerate() {
@@ -954,7 +1022,14 @@ impl Backend for QuantizedCpuBackend {
             } else {
                 LogitsRows::None
             };
-            last = Some(self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?);
+            last = Some(self.step_rows(
+                ck,
+                &positions,
+                &mut slab,
+                &cache_of,
+                mode,
+                RouteOverride::Router,
+            )?);
         }
         let RowsOutput {
             logits,
@@ -1004,7 +1079,8 @@ impl Backend for QuantizedCpuBackend {
             } else {
                 LogitsRows::None
             };
-            let out = self.step_rows(ck, &positions, &mut slab, &cache_of, mode)?;
+            let out =
+                self.step_rows(ck, &positions, &mut slab, &cache_of, mode, RouteOverride::Router)?;
             routed.extend(out.routed);
             g_attn.extend(out.g_attn);
             logits = out.logits;

@@ -256,7 +256,7 @@ fn malformed_requests_map_to_specific_statuses() {
         let text = String::from_utf8_lossy(&resp.body).into_owned();
         assert!(text.contains("\"error\":"), "{name}: body must carry an error: {text}");
         if *want == 405 {
-            assert_eq!(resp.header("allow"), Some("POST"), "{name}");
+            assert_eq!(resp.header("allow"), Some("POST, OPTIONS"), "{name}");
         }
     }
 
@@ -284,8 +284,14 @@ fn malformed_requests_map_to_specific_statuses() {
 
 #[test]
 fn premature_close_and_read_deadline_are_handled() {
+    // The mid-request read deadline (150 ms) is deliberately much
+    // shorter than the idle keep-alive window (1500 ms): a stalled
+    // half-request must 408 fast, while a quiet keep-alive connection
+    // outlives the read deadline and only closes (silently) at the
+    // idle timeout.
     let lcfg = ListenConfig {
         read_timeout_ms: 150,
+        idle_timeout_ms: 1_500,
         ..Default::default()
     };
     let srv = start(scfg(), lcfg);
@@ -305,11 +311,19 @@ fn premature_close_and_read_deadline_are_handled() {
     let resp = c.read_response().expect("deadline response");
     assert_eq!(resp.status, 408);
 
-    // An idle keep-alive connection timing out is NOT an error: no
-    // response, just a quiet close (the read_response fails cleanly).
+    // An idle keep-alive connection survives silence well past the
+    // mid-request read deadline...
     let mut idle = srv.client();
     idle.send(&get_request("/health", false)).expect("health send");
     assert_eq!(idle.read_response().expect("health").status, 200);
+    thread::sleep(Duration::from_millis(500));
+    idle.send(&get_request("/health", false)).expect("post-idle send");
+    assert_eq!(
+        idle.read_response().expect("idle connection must outlive the read deadline").status,
+        200
+    );
+    // ...and then timing out idle is NOT an error: no response, just a
+    // quiet close (the read_response fails cleanly, no 408 recorded).
     assert!(idle.read_response().is_err(), "idle close must not carry a response");
 
     // And the server still serves.
@@ -318,9 +332,76 @@ fn premature_close_and_read_deadline_are_handled() {
 
     let rep = srv.finish();
     assert!(rep.net.early_closes >= 1, "early close must be counted");
-    assert_eq!(rep.net.status(408), 1);
-    assert_eq!(rep.net.status(200), 2);
+    assert_eq!(rep.net.status(408), 1, "the idle close must not add a 408");
+    assert_eq!(rep.net.status(200), 3);
     assert_eq!(rep.engine.pool.pages_allocated, 0);
+}
+
+#[test]
+fn head_and_options_are_answered() {
+    use std::io::Read;
+
+    let srv = start(scfg(), ListenConfig::default());
+
+    // HEAD /health: the GET response's status line and headers
+    // (Content-Length included), no body bytes on the wire. Read the
+    // raw head manually — the client helper would wait for a body.
+    let mut c = srv.client();
+    c.send(b"HEAD /health HTTP/1.1\r\nHost: t\r\n\r\n").expect("head send");
+    let mut raw = Vec::new();
+    let mut byte = [0u8; 1];
+    while !raw.ends_with(b"\r\n\r\n") {
+        c.stream().read_exact(&mut byte).expect("head response bytes");
+        raw.push(byte[0]);
+        assert!(raw.len() < 4096, "unterminated HEAD response head");
+    }
+    let head = String::from_utf8(raw).expect("ascii head");
+    assert!(head.starts_with("HTTP/1.1 200 OK\r\n"), "{head}");
+    assert!(
+        head.contains(&format!("Content-Length: {}\r\n", "{\"ok\":true}".len())),
+        "HEAD must carry the GET body's Content-Length: {head}"
+    );
+    // Framing stays intact: the same connection serves a normal GET.
+    let resp = c.roundtrip(&get_request("/health", false)).expect("get after head");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, b"{\"ok\":true}");
+
+    // OPTIONS: 204 + the target's Allow set, empty body.
+    let resp = c
+        .roundtrip(b"OPTIONS /generate HTTP/1.1\r\nHost: t\r\n\r\n")
+        .expect("options generate");
+    assert_eq!(resp.status, 204);
+    assert_eq!(resp.header("allow"), Some("POST, OPTIONS"));
+    assert!(resp.body.is_empty());
+    let resp = c
+        .roundtrip(b"OPTIONS /health HTTP/1.1\r\nHost: t\r\n\r\n")
+        .expect("options health");
+    assert_eq!(resp.status, 204);
+    assert_eq!(resp.header("allow"), Some("GET, HEAD, OPTIONS"));
+
+    // HEAD of an unknown target: 404 headers only, connection reusable.
+    c.send(b"HEAD /nowhere HTTP/1.1\r\nHost: t\r\n\r\n").expect("head 404 send");
+    let mut raw = Vec::new();
+    while !raw.ends_with(b"\r\n\r\n") {
+        c.stream().read_exact(&mut byte).expect("head 404 bytes");
+        raw.push(byte[0]);
+        assert!(raw.len() < 4096, "unterminated HEAD response head");
+    }
+    assert!(
+        String::from_utf8(raw).expect("ascii head").starts_with("HTTP/1.1 404"),
+        "HEAD on an unknown target must 404"
+    );
+    let resp = c.roundtrip(&get_request("/health", true)).expect("get after 404 head");
+    assert_eq!(resp.status, 200);
+
+    drop(c);
+    let rep = srv.finish();
+    assert_eq!(rep.net.status(200), 3);
+    assert_eq!(rep.net.status(204), 2);
+    assert_eq!(rep.net.status(404), 1);
+    assert_eq!(rep.net.requests, 6);
+    assert_eq!(rep.net.connections, 1);
+    assert_eq!(rep.net.parse_errors, 0);
 }
 
 #[test]

@@ -1,0 +1,281 @@
+//! End-to-end contracts of bypass-path self-speculative decoding
+//! (DESIGN.md §Speculative decoding):
+//!
+//! * determinism — the emitted greedy stream is bitwise identical to
+//!   plain decode on both CPU backends and at every thread count;
+//! * KV hygiene — a rejected draft window of any length leaves the
+//!   paged pool (and the dense shadow pool) bitwise where it started,
+//!   and a speculative serve still retires with zero pages held;
+//! * telemetry — the serving engine reports per-request and engine-wide
+//!   acceptance counters consistent with each other.
+
+use dtrnet::config::{ModelConfig, Variant};
+use dtrnet::coordinator::{
+    generate_workload, KvPool, PrefillMode, SamplingParams, Server, ServerConfig,
+    SpeculativeDecoder, WorkloadSpec,
+};
+use dtrnet::runtime::{Backend, CpuBackend, QuantizedCpuBackend};
+use dtrnet::testing::{property, Gen};
+use dtrnet::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn xs_cfg() -> ModelConfig {
+    ModelConfig::preset("xs", Variant::DtrBilayer)
+}
+
+fn prompt(seed: i32, len: usize) -> Vec<i32> {
+    (0..len as i32).map(|i| (i * 13 + seed * 7) % 256).collect()
+}
+
+/// Spec-vs-plain and cross-thread identity for one backend constructor.
+fn assert_greedy_identity<B, F>(make: F, tag: &str)
+where
+    B: Backend,
+    F: Fn(usize) -> B,
+{
+    let params = SamplingParams::greedy();
+    let mut reference: Option<Vec<Vec<i32>>> = None;
+    for threads in THREADS {
+        let be = make(threads);
+        let mut streams = Vec::new();
+        for (p, k) in [(0, 1), (1, 3), (2, 4), (3, 7)] {
+            let pr = prompt(p, 7 + p as usize);
+            let base = be.generate(&pr, 18, &params, &mut Rng::new(5)).unwrap();
+            let mut dec = SpeculativeDecoder::new(&be, k).unwrap();
+            let spec = dec.generate(&pr, 18, &params, &mut Rng::new(5)).unwrap();
+            assert_eq!(
+                spec.tokens, base.tokens,
+                "{tag}: spec stream diverged (threads={threads} k={k} prompt={p})"
+            );
+            assert_eq!(spec.attn_frac, base.attn_frac, "{tag}: attn_frac diverged");
+            streams.push(spec.tokens);
+        }
+        match &reference {
+            None => reference = Some(streams),
+            Some(r) => assert_eq!(
+                &streams, r,
+                "{tag}: streams not thread-invariant at threads={threads}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn greedy_identity_across_threads_f32() {
+    assert_greedy_identity(
+        |t| {
+            let mut be = CpuBackend::init(&xs_cfg(), 17).unwrap();
+            be.set_threads(t);
+            be
+        },
+        "f32",
+    );
+}
+
+#[test]
+fn greedy_identity_across_threads_int8() {
+    assert_greedy_identity(
+        |t| {
+            let mut be = QuantizedCpuBackend::init(&xs_cfg(), 17).unwrap();
+            be.set_threads(t);
+            be
+        },
+        "int8",
+    );
+}
+
+/// Serve-level contract: `--speculate k` changes throughput mechanics
+/// only — every greedy request's token stream matches the plain engine,
+/// acceptance counters are consistent, and no pages outlive the run.
+fn assert_serve_identity(be: &dyn Backend) {
+    let trace = generate_workload(
+        &WorkloadSpec {
+            n_requests: 8,
+            arrival_rate: 10_000.0,
+            prompt_len_mean: 8,
+            prompt_len_max: 16,
+            gen_len_mean: 10,
+            gen_len_max: 20,
+            temperature: 0.0,
+            vocab: 256,
+        },
+        23,
+    );
+    let run = |speculate: usize| {
+        let cfg = ServerConfig {
+            slots: 2,
+            prefill: PrefillMode::Chunked(16),
+            speculate,
+            ..Default::default()
+        };
+        let mut server = Server::new(be, cfg).unwrap();
+        server.run_workload(&trace, 200_000).unwrap()
+    };
+    let base = run(0);
+    let spec = run(4);
+    assert_eq!(base.completed + base.evicted, 8);
+    assert_eq!(spec.completed + spec.evicted, 8);
+
+    let streams = |rep: &dtrnet::coordinator::ServeReport| {
+        let mut s: Vec<(u64, Vec<i32>)> =
+            rep.requests.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        s.sort_by_key(|(id, _)| *id);
+        s
+    };
+    assert_eq!(streams(&spec), streams(&base), "speculation changed a stream");
+
+    // Plain engine never speculates; the speculative one must have, and
+    // per-request counters must sum to the engine-wide totals.
+    assert_eq!(base.spec.drafted, 0);
+    assert!(spec.spec.drafted > 0, "no drafts despite --speculate 4");
+    assert!(spec.spec.accepted <= spec.spec.drafted);
+    assert!((0.0..=1.0).contains(&spec.spec.acceptance_rate()));
+    let (d, a) = spec
+        .requests
+        .iter()
+        .fold((0u64, 0u64), |(d, a), r| (d + r.spec_drafted, a + r.spec_accepted));
+    assert_eq!(d, spec.spec.drafted, "per-request drafted != engine total");
+    assert_eq!(a, spec.spec.accepted, "per-request accepted != engine total");
+
+    // Pages-to-zero shutdown invariant survives speculation.
+    assert_eq!(spec.pool.pages_allocated, 0, "leaked KV pages");
+    assert_eq!(base.pool.pages_allocated, 0);
+}
+
+#[test]
+fn serve_speculative_matches_plain_f32() {
+    assert_serve_identity(&CpuBackend::init(&xs_cfg(), 29).unwrap());
+}
+
+#[test]
+fn serve_speculative_matches_plain_int8() {
+    assert_serve_identity(&QuantizedCpuBackend::init(&xs_cfg(), 29).unwrap());
+}
+
+/// Satellite property: a rejected draft window of *any* length — random
+/// routing patterns, random page geometry, capacity-limited pools where
+/// some appends are refused — rolls the routed pool and the dense shadow
+/// pool back bitwise to their pre-draft accounting.
+#[test]
+fn prop_rejected_draft_restores_pool_accounting() {
+    let cfg = ModelConfig::preset("tiny", Variant::DtrBilayer);
+    property("rejected draft pool rollback", 120, |g: &mut Gen| {
+        let page = g.usize(1..24);
+        let max_pages = g.usize(12..400);
+        let mut pool = KvPool::new(&cfg, 2, page, max_pages);
+        let mut shadow = KvPool::new(&cfg, 2, page, usize::MAX / 2);
+        let dense = vec![true; cfg.n_layers];
+
+        // Random committed history on both slots (capacity refusals are
+        // atomic, so ignoring the result keeps the pool consistent).
+        for _ in 0..g.usize(0..48) {
+            let slot = g.usize(0..2);
+            let routed: Vec<bool> = (0..cfg.n_layers).map(|_| g.bool()).collect();
+            let _ = pool.append(slot, &routed);
+            assert!(shadow.append(slot, &dense));
+        }
+        let slot = g.usize(0..2);
+        let before = (pool.stats(), pool.lens(0), pool.lens(1));
+        let shadow_before = (shadow.stats(), shadow.lens(0), shadow.lens(1));
+
+        // A draft window of arbitrary length, then full rejection.
+        let mark = pool.spec_begin(slot);
+        let smark = shadow.spec_begin(slot);
+        for _ in 0..g.usize(0..24) {
+            let routed: Vec<bool> = (0..cfg.n_layers).map(|_| g.bool()).collect();
+            let _ = pool.append(slot, &routed);
+            assert!(shadow.append(slot, &dense));
+        }
+        pool.spec_rollback(&mark);
+        shadow.spec_rollback(&smark);
+
+        let after = (pool.stats(), pool.lens(0), pool.lens(1));
+        let shadow_after = (shadow.stats(), shadow.lens(0), shadow.lens(1));
+        let sides = [
+            ("pool", &before, &after),
+            ("shadow", &shadow_before, &shadow_after),
+        ];
+        for (which, b, a) in sides {
+            assert_eq!(b.1, a.1, "{which}: slot 0 lens changed");
+            assert_eq!(b.2, a.2, "{which}: slot 1 lens changed");
+            assert_eq!(b.0.pages_allocated, a.0.pages_allocated, "{which}");
+            assert_eq!(b.0.pages_peak, a.0.pages_peak, "{which}: peak must rewind");
+            assert_eq!(b.0.bytes_allocated, a.0.bytes_allocated, "{which}");
+            assert_eq!(b.0.bytes_peak, a.0.bytes_peak, "{which}");
+            assert_eq!(b.0.tokens_cached, a.0.tokens_cached, "{which}");
+            assert_eq!(b.0.tokens_seen, a.0.tokens_seen, "{which}");
+        }
+
+        // The pool stays live after a rollback: release everything and
+        // the shutdown invariant holds.
+        pool.release(0);
+        pool.release(1);
+        shadow.release(0);
+        shadow.release(1);
+        assert_eq!(pool.stats().pages_allocated, 0);
+        assert_eq!(shadow.stats().pages_allocated, 0);
+    });
+}
+
+/// The thread-count leg of the satellite property: drive a *real* draft
+/// window (backend spec iteration) at several thread counts, mirror its
+/// routed rows into a pool + dense shadow the way the serving engine
+/// does, and require (a) bitwise pool restoration after rejection and
+/// (b) thread-invariant routing decisions.
+#[test]
+fn rejected_real_draft_windows_are_thread_invariant() {
+    let cfg = xs_cfg();
+    let pr = prompt(4, 10);
+    let params = SamplingParams::greedy();
+    let mut reference: Option<(Vec<i32>, Vec<Vec<bool>>, Vec<Vec<bool>>)> = None;
+    for threads in THREADS {
+        let mut be = CpuBackend::init(&cfg, 31).unwrap();
+        be.set_threads(threads);
+        let mut state = be.begin_decode();
+        be.prefill(&mut state, &pr).unwrap();
+
+        // Charge the pools for the prefill, then run one draft/verify
+        // iteration and mirror both transient windows.
+        let mut pool = KvPool::new(&cfg, 1, 8, 10_000);
+        let mut shadow = KvPool::new(&cfg, 1, 8, usize::MAX / 2);
+        let lens = state.lens(cfg.d_model);
+        assert!(pool.append_prefill(0, &lens, pr.len()));
+        assert!(shadow.append_prefill(0, &vec![pr.len(); cfg.n_layers], pr.len()));
+
+        let mut dec = SpeculativeDecoder::new(&be, 4).unwrap();
+        let it = dec
+            .step(&mut state, 3, 16, &params, &[3], &mut Rng::new(0))
+            .unwrap();
+        assert!(it.drafted > 0, "window must have drafted");
+
+        let before = (pool.stats(), pool.lens(0), shadow.stats(), shadow.lens(0));
+        for window in [&it.draft_routed, &it.verify_routed] {
+            let mark = pool.spec_begin(0);
+            let smark = shadow.spec_begin(0);
+            for routed in window.iter() {
+                assert!(pool.append(0, routed));
+                assert!(shadow.append(0, &vec![true; cfg.n_layers]));
+            }
+            pool.spec_rollback(&mark);
+            shadow.spec_rollback(&smark);
+        }
+        let after = (pool.stats(), pool.lens(0), shadow.stats(), shadow.lens(0));
+        assert_eq!(before.1, after.1, "threads={threads}: pool lens changed");
+        assert_eq!(before.3, after.3, "threads={threads}: shadow lens changed");
+        for (b, a) in [(&before.0, &after.0), (&before.2, &after.2)] {
+            assert_eq!(b.pages_allocated, a.pages_allocated, "threads={threads}");
+            assert_eq!(b.pages_peak, a.pages_peak, "threads={threads}");
+            assert_eq!(b.tokens_cached, a.tokens_cached, "threads={threads}");
+            assert_eq!(b.tokens_seen, a.tokens_seen, "threads={threads}");
+        }
+
+        // Routing (and therefore page traffic) must not depend on the
+        // thread count.
+        let got = (it.emitted.clone(), it.draft_routed.clone(), it.verify_routed.clone());
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(&got, r, "threads={threads}: window not invariant"),
+        }
+    }
+}
