@@ -184,6 +184,13 @@ impl Batcher {
         self.queue.drain(..).collect()
     }
 
+    /// Remove one queued request by id (client cancelled before
+    /// admission). Returns it if it was still waiting.
+    pub fn remove_queued(&mut self, id: u64) -> Option<Request> {
+        let idx = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(idx)
+    }
+
     /// No queued work and no active slots.
     pub fn idle(&self) -> bool {
         self.n_active() == 0 && self.queue.is_empty()

@@ -32,6 +32,14 @@
 //! mid-request read deadline (stalled half-request → 408) and the
 //! longer idle keep-alive timeout (quiet connection between requests →
 //! silent close).
+//!
+//! A client that disconnects mid-stream cancels its generation: the
+//! engine loop notices the dead sink on its next pass and calls
+//! [`Server::cancel_request`], draining the slot and every KV page it
+//! held. `GET /metrics` serves live counters — the socket-edge
+//! [`NetStats`] plus the engine loop's latest counters snapshot — as
+//! one JSON document, readable from any connection thread without
+//! touching the engine.
 
 use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
@@ -183,6 +191,10 @@ struct Shared {
     cfg: ListenConfig,
     stop: Arc<AtomicBool>,
     stats: Mutex<NetStats>,
+    /// Live engine-counters snapshot (`GET /metrics`), refreshed by the
+    /// engine loop after every step — connection threads read it without
+    /// ever touching the engine itself.
+    engine: Mutex<Json>,
     responded: AtomicU64,
     active_conns: AtomicUsize,
 }
@@ -261,6 +273,7 @@ impl NetFrontend {
             cfg: self.cfg.clone(),
             stop: Arc::clone(&self.stop),
             stats: Mutex::new(NetStats::default()),
+            engine: Mutex::new(Json::Null),
             responded: AtomicU64::new(0),
             active_conns: AtomicUsize::new(0),
         });
@@ -270,7 +283,7 @@ impl NetFrontend {
             let listener = self.listener;
             thread::spawn(move || accept_loop(listener, tx, sh))
         };
-        let engine = engine_loop(backend, scfg, metrics, rx, t0);
+        let engine = engine_loop(backend, scfg, metrics, rx, t0, &shared);
         // Engine exit (error or drained) implies shutdown; make sure the
         // accept thread sees it and join everything.
         self.stop.store(true, Ordering::SeqCst);
@@ -298,6 +311,14 @@ fn stat(sh: &Shared, f: impl FnOnce(&mut NetStats)) {
     f(&mut lock_stats(sh));
 }
 
+/// Engine-snapshot access with the same poison tolerance as the stats.
+fn lock_engine(sh: &Shared) -> std::sync::MutexGuard<'_, Json> {
+    match sh.engine.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Engine loop (caller thread)
 // ---------------------------------------------------------------------------
@@ -306,8 +327,10 @@ struct Sink {
     tx: mpsc::Sender<StreamEvent>,
     /// Tokens already streamed.
     sent: usize,
-    /// The receiving connection went away; keep generating (the slot
-    /// retires normally, no leak) but stop sending.
+    /// The receiving connection went away mid-stream. The engine loop
+    /// cancels the request on the next pass ([`Server::cancel_request`])
+    /// so its slot and KV pages drain instead of generating tokens
+    /// nobody will read.
     dead: bool,
 }
 
@@ -317,11 +340,13 @@ fn engine_loop(
     metrics: Option<JsonlWriter>,
     rx: mpsc::Receiver<Submission>,
     t0: Instant,
+    sh: &Shared,
 ) -> Result<ServeReport> {
     let mut srv = Server::new(backend, scfg)?;
     if let Some(m) = metrics {
         srv.set_metrics_log(m);
     }
+    *lock_engine(sh) = srv.counters_json();
     let mut sinks: BTreeMap<u64, Sink> = BTreeMap::new();
     let mut next_id: u64 = 1;
     let mut cursor = 0usize;
@@ -360,6 +385,18 @@ fn engine_loop(
                 sink.sent = rs.generated.len();
             }
         }
+        // A dead sink means the client disconnected mid-stream: cancel
+        // the request so its slot and every KV page it held drain now.
+        let gone: Vec<u64> = sinks
+            .iter()
+            .filter(|(_, s)| s.dead)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in gone {
+            sinks.remove(&id);
+            srv.cancel_request(id);
+        }
+        *lock_engine(sh) = srv.counters_json();
         // Flush requests that retired this step.
         let recs = srv.finished_since(cursor).to_vec();
         cursor += recs.len();
@@ -640,6 +677,29 @@ fn respond(
             write_options(stream, sh, keep, "POST, OPTIONS");
             (204, keep)
         }
+        ("GET", "/metrics") => {
+            let body = metrics_body(sh);
+            write_response(stream, sh, 200, &body, keep, &[]);
+            (200, keep)
+        }
+        ("HEAD", "/metrics") => {
+            write_head_only(stream, sh, 200, metrics_body(sh).len(), keep, &[]);
+            (200, keep)
+        }
+        ("OPTIONS", "/metrics") => {
+            write_options(stream, sh, keep, "GET, HEAD, OPTIONS");
+            (204, keep)
+        }
+        (_, "/metrics") => {
+            write_error(
+                stream,
+                sh,
+                405,
+                "method not allowed",
+                &[("Allow", "GET, HEAD, OPTIONS")],
+            );
+            (405, keep)
+        }
         (_, "/health") => {
             write_error(
                 stream,
@@ -669,6 +729,14 @@ fn respond(
         vec![("status", ArgValue::from(status as usize))],
     );
     keep
+}
+
+/// The `GET /metrics` body: live socket-edge counters plus the engine
+/// loop's latest counters snapshot, as one JSON document.
+fn metrics_body(sh: &Shared) -> String {
+    let net = lock_stats(sh).to_json();
+    let engine = lock_engine(sh).clone();
+    Json::from_pairs(vec![("net", net), ("engine", engine)]).to_string()
 }
 
 /// Validated generate parameters extracted from the JSON body.

@@ -33,13 +33,23 @@ pub struct PoolStats {
     pub tokens_seen: usize,
 }
 
-/// Per-(slot, layer) page list.
+/// Per-(slot, layer) cache accounting.
+///
+/// Stores only the real cached length — the same quantity the decode
+/// artifact's [`crate::runtime::KvCache`] reports for this layer. Page
+/// counts are *derived* (`len.div_ceil(page_size)`) rather than tracked
+/// as shadow state, so pool accounting can never drift from storage.
 #[derive(Debug, Clone, Default)]
 struct SlotLayer {
     /// Number of cached (routed) tokens at this layer.
     len: usize,
-    /// Allocated pages (each holds `page_size` token entries).
-    pages: usize,
+}
+
+impl SlotLayer {
+    /// Pages backing `len` tokens (each page holds `page_size` entries).
+    fn pages(&self, page_size: usize) -> usize {
+        self.len.div_ceil(page_size)
+    }
 }
 
 /// Snapshot of one slot's page lists plus the pool-wide counters, taken
@@ -81,13 +91,12 @@ impl KvPool {
     /// exceed `max_pages` — the engine treats that as slot exhaustion.
     pub fn append(&mut self, slot: usize, routed: &[bool]) -> bool {
         // Dry-run the page demand first so failure is atomic.
+        let ps = self.page_size;
         let mut new_pages = 0;
         for (l, &r) in routed.iter().enumerate() {
             if r {
                 let sl = &self.slots[slot][l];
-                if sl.len + 1 > sl.pages * self.page_size {
-                    new_pages += 1;
-                }
+                new_pages += (sl.len + 1).div_ceil(ps) - sl.pages(ps);
             }
         }
         if self.stats.pages_allocated + new_pages > self.max_pages {
@@ -97,11 +106,9 @@ impl KvPool {
         for (l, &r) in routed.iter().enumerate() {
             if r {
                 let sl = &mut self.slots[slot][l];
-                if sl.len + 1 > sl.pages * self.page_size {
-                    sl.pages += 1;
-                    self.stats.pages_allocated += 1;
-                }
+                let before = sl.pages(ps);
                 sl.len += 1;
+                self.stats.pages_allocated += sl.pages(ps) - before;
                 self.stats.tokens_cached += 1;
             }
         }
@@ -119,10 +126,11 @@ impl KvPool {
         routed_counts: &[usize],
         n_tokens: usize,
     ) -> bool {
+        let ps = self.page_size;
         let mut new_pages = 0;
         for (l, &cnt) in routed_counts.iter().enumerate() {
             let sl = &self.slots[slot][l];
-            new_pages += (sl.len + cnt).div_ceil(self.page_size) - sl.pages;
+            new_pages += (sl.len + cnt).div_ceil(ps) - sl.pages(ps);
         }
         if self.stats.pages_allocated + new_pages > self.max_pages {
             return false;
@@ -130,10 +138,9 @@ impl KvPool {
         self.stats.tokens_seen += n_tokens;
         for (l, &cnt) in routed_counts.iter().enumerate() {
             let sl = &mut self.slots[slot][l];
-            let need = (sl.len + cnt).div_ceil(self.page_size);
-            self.stats.pages_allocated += need - sl.pages;
-            sl.pages = need;
+            let before = sl.pages(ps);
             sl.len += cnt;
+            self.stats.pages_allocated += sl.pages(ps) - before;
             self.stats.tokens_cached += cnt;
         }
         self.refresh_peaks();
@@ -168,8 +175,9 @@ impl KvPool {
 
     /// Release everything held by `slot` (sequence finished / evicted).
     pub fn release(&mut self, slot: usize) {
+        let ps = self.page_size;
         for sl in &mut self.slots[slot] {
-            self.stats.pages_allocated -= sl.pages;
+            self.stats.pages_allocated -= sl.pages(ps);
             *sl = SlotLayer::default();
         }
     }

@@ -83,6 +83,14 @@ pub struct ServerConfig {
     /// full context (`slots × layers × ceil(max_seq / page)`), so a dense
     /// model exactly fits and the DTR model's headroom IS the Fig. 6 win.
     pub max_kv_pages: usize,
+    /// Per-sequence *resident* page budget for the decode state's KV
+    /// storage (`--kv-budget-pages`): admitted slots get a bounded/paged
+    /// [`DecodeState`] whose resident pages never exceed this, with LRU
+    /// overflow spilled to disk. 0 = the unbounded resident slab. Unlike
+    /// `max_kv_pages` (an admission-control budget that *evicts*
+    /// requests), this bounds memory only — token streams are bitwise
+    /// identical either way (DESIGN.md §KV paging).
+    pub kv_budget_pages: usize,
     /// Per-sequence position cap; 0 = the backend's `max_seq`.
     pub max_seq: usize,
     /// How prompts are ingested (see [`PrefillMode`]).
@@ -107,6 +115,7 @@ impl Default for ServerConfig {
             max_queue: 4096,
             kv_page_size: 16,
             max_kv_pages: 0,
+            kv_budget_pages: 0,
             max_seq: 0,
             prefill: PrefillMode::Chunked(PREFILL_CHUNK),
             sampling: SamplingParams::greedy(),
@@ -135,8 +144,10 @@ pub enum FinishReason {
     KvExhausted,
     /// Evicted: the sequence reached the engine's position cap.
     ContextCap,
-    /// The run's step bound tripped while this request was still queued
-    /// or in flight (accounting stays closed: nothing vanishes).
+    /// Cancelled while queued or in flight — the run's step bound
+    /// tripped, or the client disconnected mid-stream
+    /// ([`Server::cancel_request`]). Accounting stays closed: nothing
+    /// vanishes.
     Cancelled,
 }
 
@@ -219,6 +230,10 @@ pub struct ServeReport {
     /// Peak pages a dense-equivalent model would have allocated for the
     /// same token stream (measured by the shadow pool, same paging).
     pub dense_pages_peak: usize,
+    /// High-water mark of *resident* KV pages in any one decode state
+    /// (`--kv-budget-pages`): with a bounded cache this never exceeds
+    /// the budget; 0 when every slot ran the unbounded resident slab.
+    pub kv_resident_pages_peak: usize,
     /// tokens_cached / (tokens_seen × layers): the token-granular KV
     /// footprint ratio vs dense (page quantization visible via pages).
     pub kv_savings_ratio: f64,
@@ -305,6 +320,10 @@ impl ServeReport {
             ("kv_pages_peak", Json::Num(self.pool.pages_peak as f64)),
             ("kv_bytes_peak", Json::Num(self.pool.bytes_peak as f64)),
             ("dense_pages_peak", Json::Num(self.dense_pages_peak as f64)),
+            (
+                "kv_resident_pages_peak",
+                Json::Num(self.kv_resident_pages_peak as f64),
+            ),
             ("kv_savings_ratio", Json::Num(self.kv_savings_ratio)),
             (
                 "weight_bytes_resident",
@@ -373,6 +392,9 @@ pub struct Server<'b> {
     registry: Registry,
     records: Vec<RequestRecord>,
     rejected: usize,
+    /// Max resident-page peak over every *released* decode state (live
+    /// states are folded in at report time).
+    kv_resident_peak: usize,
     steps: usize,
     steps_active_sum: u64,
     d_model: usize,
@@ -430,6 +452,7 @@ impl<'b> Server<'b> {
             registry: Registry::default(),
             records: Vec::new(),
             rejected: 0,
+            kv_resident_peak: 0,
             steps: 0,
             steps_active_sum: 0,
             d_model: mcfg.d_model,
@@ -541,6 +564,83 @@ impl<'b> Server<'b> {
         self.report(wall_s)
     }
 
+    /// Cancel a request by id wherever it currently lives: a queued
+    /// entry is retired without ever being admitted; a live slot is
+    /// evicted, so its decode state and every KV page it held drain
+    /// immediately. Returns false if the id is unknown (already
+    /// finished, or never submitted). Driven by the HTTP front end when
+    /// a streaming client disconnects mid-generation.
+    pub fn cancel_request(&mut self, id: u64) -> bool {
+        let now = Instant::now();
+        for slot in 0..self.cfg.slots {
+            if self.batcher.active[slot].as_ref().map(|rs| rs.req.id) == Some(id) {
+                self.evict_slot(slot, now, FinishReason::Cancelled);
+                return true;
+            }
+        }
+        if let Some(req) = self.batcher.remove_queued(id) {
+            self.records.push(RequestRecord {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                ttft_ms: 0.0,
+                latency_ms: now.duration_since(req.arrival).as_secs_f64() * 1e3,
+                finish: FinishReason::Cancelled,
+                routed_tokens: Vec::new(),
+                spec_drafted: 0,
+                spec_accepted: 0,
+            });
+            return true;
+        }
+        false
+    }
+
+    /// Cheap live-counters snapshot (the `GET /metrics` engine block):
+    /// no record clones, no histogram summaries — safe to call between
+    /// engine steps at any frequency.
+    pub fn counters_json(&self) -> Json {
+        let pool = self.pool.stats();
+        let mut resident_peak = self.kv_resident_peak;
+        for st in self.states.iter().flatten() {
+            resident_peak = resident_peak.max(st.kv.resident_pages_peak());
+        }
+        Json::from_pairs(vec![
+            ("steps", Json::Num(self.steps as f64)),
+            ("requests_finished", Json::Num(self.records.len() as f64)),
+            (
+                "completed",
+                Json::Num(
+                    self.records
+                        .iter()
+                        .filter(|r| r.finish == FinishReason::Completed)
+                        .count() as f64,
+                ),
+            ),
+            (
+                "cancelled",
+                Json::Num(
+                    self.records
+                        .iter()
+                        .filter(|r| r.finish == FinishReason::Cancelled)
+                        .count() as f64,
+                ),
+            ),
+            ("rejected", Json::Num(self.rejected as f64)),
+            (
+                "tokens_generated",
+                Json::Num(self.records.iter().map(|r| r.tokens.len()).sum::<usize>() as f64),
+            ),
+            ("queue_depth", Json::Num(self.batcher.queue_len() as f64)),
+            ("active_slots", Json::Num(self.batcher.n_active() as f64)),
+            ("kv_pages_allocated", Json::Num(pool.pages_allocated as f64)),
+            ("kv_pages_peak", Json::Num(pool.pages_peak as f64)),
+            (
+                "kv_resident_pages_peak",
+                Json::Num(resident_peak as f64),
+            ),
+        ])
+    }
+
     /// One engine iteration: admit (+ chunked prefill) → batched decode →
     /// sample → advance/recycle. Returns requests finished this step.
     pub fn step(&mut self) -> Result<usize> {
@@ -550,7 +650,17 @@ impl<'b> Server<'b> {
             // and state, so an admitted slot is always clean here.
             debug_assert!(self.states[slot].is_none());
             debug_assert_eq!(self.pool.lens(slot).iter().sum::<usize>(), 0);
-            self.states[slot] = Some(self.backend.begin_decode());
+            self.states[slot] = Some(if self.cfg.kv_budget_pages > 0 {
+                DecodeState::bounded(
+                    self.n_layers,
+                    self.d_model,
+                    self.cfg.kv_page_size,
+                    self.cfg.kv_budget_pages,
+                    None,
+                )
+            } else {
+                self.backend.begin_decode()
+            });
             let (id, prompt_len) = {
                 let rs = self.batcher.active[slot]
                     .as_ref()
@@ -968,6 +1078,9 @@ impl<'b> Server<'b> {
     /// Free a finished slot's pages and decode state (the request itself
     /// was already retired into `batcher.completed`).
     fn release_slot(&mut self, slot: usize) {
+        if let Some(st) = &self.states[slot] {
+            self.kv_resident_peak = self.kv_resident_peak.max(st.kv.resident_pages_peak());
+        }
         self.pool.release(slot);
         self.dense_shadow.release(slot);
         self.states[slot] = None;
@@ -1108,6 +1221,13 @@ impl<'b> Server<'b> {
             },
             pool,
             dense_pages_peak: dense.pages_peak,
+            kv_resident_pages_peak: {
+                let mut peak = self.kv_resident_peak;
+                for st in self.states.iter().flatten() {
+                    peak = peak.max(st.kv.resident_pages_peak());
+                }
+                peak
+            },
             kv_savings_ratio,
             weight_bytes: self.backend.weight_bytes(),
             routing: self.routing.clone(),
@@ -1412,6 +1532,69 @@ mod tests {
             rep.requests.iter().map(|r| r.finish).collect::<Vec<_>>()
         );
         assert_eq!(srv.pool.stats().pages_allocated, 0);
+    }
+
+    #[test]
+    fn bounded_kv_budget_matches_resident_streams_and_caps_pages() {
+        let be = backend();
+        let run = |kv_budget_pages| {
+            let cfg = ServerConfig {
+                slots: 2,
+                kv_page_size: 4,
+                kv_budget_pages,
+                ..Default::default()
+            };
+            let mut srv = Server::new(&be, cfg).unwrap();
+            for i in 0..4 {
+                assert!(srv.submit(req(i, 9, 6)));
+            }
+            let mut rep = srv.run_to_completion(10_000).unwrap();
+            rep.requests.sort_by_key(|r| r.id);
+            rep
+        };
+        let resident = run(0);
+        let bounded = run(6);
+        let toks = |rep: &ServeReport| {
+            rep.requests.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+        };
+        // The budget bounds memory, never what attention sees.
+        assert_eq!(toks(&bounded), toks(&resident), "streams must be bitwise equal");
+        assert_eq!(resident.kv_resident_pages_peak, 0, "slab path reports 0");
+        assert!(bounded.kv_resident_pages_peak > 0, "bounded peak must be tracked");
+        assert!(
+            bounded.kv_resident_pages_peak <= 6,
+            "resident pages exceeded the budget: {}",
+            bounded.kv_resident_pages_peak
+        );
+        let js = bounded.to_json();
+        assert!(js.path("kv_resident_pages_peak").unwrap().as_f64().unwrap() <= 6.0);
+    }
+
+    #[test]
+    fn cancel_request_drains_pages_and_records_cancelled() {
+        let be = backend();
+        let cfg = ServerConfig {
+            slots: 1,
+            ..Default::default()
+        };
+        let mut srv = Server::new(&be, cfg).unwrap();
+        assert!(srv.submit(req(0, 6, 50)));
+        assert!(srv.submit(req(1, 6, 50)));
+        // Request 0 admits and generates; request 1 waits in the queue.
+        for _ in 0..3 {
+            srv.step().unwrap();
+        }
+        assert!(srv.cancel_request(0), "live request must cancel");
+        assert_eq!(srv.pool.stats().pages_allocated, 0, "cancelled slot must drain");
+        assert!(srv.cancel_request(1), "queued request must cancel");
+        assert!(!srv.cancel_request(7), "unknown id");
+        assert!(srv.batcher.idle());
+        let rep = srv.report_now(0.0);
+        assert_eq!(rep.requests.len(), 2, "both cancellations must be recorded");
+        assert!(rep
+            .requests
+            .iter()
+            .all(|r| r.finish == FinishReason::Cancelled));
     }
 
     #[test]

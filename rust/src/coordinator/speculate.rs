@@ -363,8 +363,7 @@ mod tests {
         assert_ne!(state.position, before.position);
         state.rollback(&mark, d);
         assert_eq!(state.position, before.position);
-        assert_eq!(state.keys, before.keys);
-        assert_eq!(state.values, before.values);
+        assert_eq!(state.snapshot_kv(), before.snapshot_kv());
     }
 
     #[test]

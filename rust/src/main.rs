@@ -72,6 +72,12 @@
 //!   --metrics-jsonl m.jsonl — on serve: stream per-step and per-request
 //!                 metric rows as JSONL while the run progresses (train
 //!                 accepts it as an alias of --log, its per-step stream)
+//!   --kv-budget-pages N — on serve (both forms): cap *resident* KV
+//!                 pages per decode slot at N (page size from --page);
+//!                 LRU overflow spills to a temp file and is faulted
+//!                 back on demand. Bounds memory only — token streams
+//!                 are bitwise identical to the unbounded default
+//!                 (0 = unbounded resident slab; DESIGN.md §KV paging)
 //!
 //! Requiring the `pjrt` build + AOT artifacts (`make artifacts`):
 //!   train   --tag tiny_dtr_bilayer — train the fused AOT train_step
@@ -677,6 +683,7 @@ fn serve(args: &Args) -> Result<()> {
     let scfg = ServerConfig {
         slots: args.get_usize("slots", 4),
         kv_page_size: args.get_usize("page", 16),
+        kv_budget_pages: args.get_usize("kv-budget-pages", 0),
         prefill: if chunk == 0 {
             PrefillMode::Decode
         } else {
@@ -834,6 +841,7 @@ fn serve_listen(
         slots: args.get_usize("slots", 4),
         max_queue: args.get_usize("queue", 4096),
         kv_page_size: args.get_usize("page", 16),
+        kv_budget_pages: args.get_usize("kv-budget-pages", 0),
         prefill: if chunk == 0 {
             PrefillMode::Decode
         } else {

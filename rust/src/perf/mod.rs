@@ -60,15 +60,18 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::config::{ModelConfig, TrainConfig, Variant};
+use crate::config::{LayerKind, ModelConfig, TrainConfig, Variant};
 use crate::coordinator::{
     generate_workload, PrefillMode, SamplingParams, ServeReport, Server, ServerConfig,
     WorkloadSpec,
 };
-use crate::data::{corpus, Dataset};
+use crate::data::{corpus, needle_task, Dataset};
+use crate::runtime::backend::PREFILL_CHUNK;
 use crate::runtime::cpu::kernels;
 use crate::runtime::quant;
-use crate::runtime::{Backend, CpuBackend, CpuTrainer, QuantizedCpuBackend, Tensor, TrainBackend};
+use crate::runtime::{
+    Backend, CpuBackend, CpuTrainer, DecodeState, QuantizedCpuBackend, Tensor, TrainBackend,
+};
 use crate::telemetry;
 use crate::util::bench::{bench, print_table};
 use crate::util::json::Json;
@@ -189,6 +192,13 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         let (key, s) = http_load::http_serve_scenario(opts)?;
         scenarios.set(&key, s);
         let (key, s) = http_load::http_overload_scenario(opts)?;
+        scenarios.set(&key, s);
+    }
+    {
+        // Long-context family: native streaming chunked prefill through
+        // the page-view KV cache, bounded-vs-resident bitwise + page
+        // budget gates, cost-vs-length and routing-vs-position curves.
+        let (key, s) = longctx_scenario(opts)?;
         scenarios.set(&key, s);
     }
     let mut out = Json::obj();
@@ -1267,6 +1277,216 @@ fn telemetry_overhead_scenario(opts: &BenchOptions, variant: Variant) -> Result<
     Ok((key, sc))
 }
 
+/// The long-context family: streaming chunked prefill at native 32k
+/// lengths through the page-view KV cache ([`crate::runtime::KvCache`]),
+/// run twice per length — once on the unbounded resident slab, once on
+/// the bounded paged cache with LRU spill-to-disk eviction — with the
+/// determinism and memory gates asserted before anything is recorded:
+///
+/// * generated token streams and per-row routing telemetry bitwise
+///   identical between the bounded and resident runs (the page budget
+///   bounds *memory*, never what attention sees);
+/// * the bounded run's resident-page high-water mark within the budget
+///   while the total cached page count exceeds it (eviction genuinely
+///   engaged, not just configured);
+/// * the resident slab never pages (`resident_pages_peak == 0`).
+///
+/// Rows record the cost-vs-length curve (prefill wall clock/throughput
+/// and measured FLOPs vs the dense-equivalent — the native Fig. 3
+/// reproduction) plus the routing-fraction-vs-position curve from the
+/// prompt's per-row routing telemetry (DTR layers, eight equal-width
+/// position buckets). Quick mode sweeps seconds-scale lengths; full
+/// mode runs the native 32k tier.
+fn longctx_scenario(opts: &BenchOptions) -> Result<(String, Json)> {
+    let variant = Variant::DtrBilayer;
+    let key = format!("longctx_{}", variant.as_str());
+    let lengths: &[usize] = if opts.quick {
+        &[128, 256, 512]
+    } else {
+        &[1024, 8192, 32768]
+    };
+    let gen = if opts.quick { 8usize } else { 16 };
+    let page_rows = if opts.quick { 16usize } else { 64 };
+    let t = *opts.threads.last().unwrap();
+    // Context length is the variable under test, not model size: both
+    // modes run the xs preset with max_seq raised to the sweep maximum
+    // (RoPE is computed from absolute positions, so raising the cap is
+    // purely a config change).
+    let mut cfg = ModelConfig::preset("xs", variant);
+    cfg.max_seq = lengths.last().unwrap() + gen;
+    let mut be = CpuBackend::init(&cfg, MODEL_SEED)?;
+    be.set_threads(t);
+    let d = cfg.d_model;
+    let dtr_layers: Vec<usize> = cfg
+        .layer_kinds()
+        .iter()
+        .enumerate()
+        .filter(|(_, k)| matches!(k, LayerKind::Dtr))
+        .map(|(i, _)| i)
+        .collect();
+
+    struct LongCtxRun {
+        tokens: Vec<i32>,
+        routed: Vec<Vec<bool>>,
+        prefill_s: f64,
+        decode_s: f64,
+        flops_measured: f64,
+        flops_dense: f64,
+        flops_ratio: f64,
+    }
+
+    // Greedy argmax over logits (both runs share it, so the bitwise
+    // stream comparison is a pure cache-path comparison).
+    fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    // Streaming chunked prefill + greedy decode on the caller's state.
+    let run = |state: &mut DecodeState, prompt: &[i32]| -> Result<LongCtxRun> {
+        if let Some(c) = be.flop_counters() {
+            c.reset();
+        }
+        let t0 = Instant::now();
+        let pr = be.prefill_rows(state, prompt, PREFILL_CHUNK)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let mut logits = pr.last.logits;
+        let mut tokens = Vec::with_capacity(gen);
+        for _ in 0..gen {
+            let next = argmax(logits.as_f32());
+            tokens.push(next);
+            logits = be.decode_step(state, next)?.logits;
+        }
+        let decode_s = t0.elapsed().as_secs_f64();
+        let (flops_measured, flops_dense, flops_ratio) = match be.flop_counters() {
+            Some(c) => {
+                let fj = c.to_json();
+                (
+                    fj.path("total").and_then(Json::as_f64).unwrap_or(0.0),
+                    fj.path("dense_equiv_total").and_then(Json::as_f64).unwrap_or(0.0),
+                    fj.path("ratio_vs_dense").and_then(Json::as_f64).unwrap_or(1.0),
+                )
+            }
+            None => (0.0, 0.0, 1.0),
+        };
+        Ok(LongCtxRun {
+            tokens,
+            routed: pr.routed,
+            prefill_s,
+            decode_s,
+            flops_measured,
+            flops_dense,
+            flops_ratio,
+        })
+    };
+
+    let mut sc = Json::obj();
+    sc.set("model", Json::Str(cfg.name.clone()));
+    sc.set("layout", Json::Str(cfg.layout_string()));
+    sc.set("threads", Json::Num(t as f64));
+    sc.set("page_rows", Json::Num(page_rows as f64));
+    sc.set("gen_tokens", Json::Num(gen as f64));
+    sc.set("max_len", Json::Num(*lengths.last().unwrap() as f64));
+    let mut rows = Vec::new();
+    for &len in lengths {
+        let mut rng = Rng::new(WORKLOAD_SEED.wrapping_add(len as u64));
+        let item = needle_task(&mut rng, cfg.vocab_size, len, 16);
+        let prompt: Vec<i32> = item.tokens.iter().map(|&u| u as i32).collect();
+        // The budget must cover one layer's full working set (pinning a
+        // layer faults it fully resident) but sit well under the
+        // all-layers total, so eviction genuinely engages: dense layers
+        // alone cache ≥ 3× one layer's pages on this layout.
+        let per_layer_pages = (len + gen).div_ceil(page_rows);
+        let budget = per_layer_pages + 2;
+
+        let mut st_res = be.begin_decode();
+        let res = run(&mut st_res, &prompt)?;
+        ensure!(
+            st_res.kv.resident_pages_peak() == 0,
+            "{key}/{len}: the unbounded resident slab reported paged residency"
+        );
+        let mut st_b = DecodeState::bounded(cfg.n_layers, d, page_rows, budget, None);
+        let bnd = run(&mut st_b, &prompt)?;
+        ensure!(
+            res.tokens == bnd.tokens,
+            "{key}/{len}: bounded-cache token stream diverged from the resident slab"
+        );
+        ensure!(
+            res.routed == bnd.routed,
+            "{key}/{len}: bounded-cache routing telemetry diverged from the resident slab"
+        );
+        let peak = st_b.kv.resident_pages_peak();
+        ensure!(
+            peak > 0 && peak <= budget,
+            "{key}/{len}: resident high-water mark {peak} outside (0, {budget}]"
+        );
+        let total_pages: usize = st_b.lens(d).iter().map(|&l| l.div_ceil(page_rows)).sum();
+        ensure!(
+            total_pages > budget,
+            "{key}/{len}: {total_pages} cached pages fit the {budget}-page budget — \
+             eviction never engaged"
+        );
+        // Routing fraction vs absolute position: DTR layers only, eight
+        // equal-width buckets across the prompt.
+        let mut curve = Vec::new();
+        let n_buckets = 8usize.min(len);
+        for bkt in 0..n_buckets {
+            let start = len * bkt / n_buckets;
+            let end = len * (bkt + 1) / n_buckets;
+            let mut num = 0u64;
+            let mut den = 0u64;
+            for row in start..end {
+                for &li in &dtr_layers {
+                    num += u64::from(res.routed[row][li]);
+                    den += 1;
+                }
+            }
+            curve.push(Json::from_pairs(vec![
+                ("pos_start", Json::Num(start as f64)),
+                ("pos_end", Json::Num(end as f64)),
+                (
+                    "attn_frac",
+                    Json::Num(if den == 0 { 1.0 } else { num as f64 / den as f64 }),
+                ),
+            ]));
+        }
+        rows.push(Json::from_pairs(vec![
+            ("len", Json::Num(len as f64)),
+            ("budget_pages", Json::Num(budget as f64)),
+            ("resident_pages_peak", Json::Num(peak as f64)),
+            ("total_pages", Json::Num(total_pages as f64)),
+            ("prefill_ms", Json::Num(res.prefill_s * 1e3)),
+            (
+                "prefill_tokens_per_s",
+                Json::Num(len as f64 / res.prefill_s.max(1e-12)),
+            ),
+            ("decode_ms", Json::Num(res.decode_s * 1e3)),
+            ("bounded_prefill_ms", Json::Num(bnd.prefill_s * 1e3)),
+            ("bounded_decode_ms", Json::Num(bnd.decode_s * 1e3)),
+            ("flops_measured", Json::Num(res.flops_measured)),
+            ("flops_dense_equiv", Json::Num(res.flops_dense)),
+            ("flops_ratio_vs_dense", Json::Num(res.flops_ratio)),
+            ("routing_vs_position", Json::Arr(curve)),
+            ("bitwise_identical_bounded_vs_resident", Json::Bool(true)),
+        ]));
+        println!(
+            "[bench] {key} len={len}: prefill {:.1} ms ({:.0} tok/s), \
+             flops {:.3}x dense, resident peak {peak}/{budget} pages (total {total_pages})",
+            res.prefill_s * 1e3,
+            len as f64 / res.prefill_s.max(1e-12),
+            res.flops_ratio
+        );
+    }
+    sc.set("lengths", Json::Arr(rows));
+    Ok((key, sc))
+}
+
 /// The primary throughput metric of a scenario row for baseline diffs:
 /// the widest-thread `tokens_per_s`/`steps_per_s` when the scenario has
 /// a thread sweep, otherwise a scenario-level readout (`simd_*` family).
@@ -1634,6 +1854,38 @@ mod tests {
         assert!(ho.path("rejected_429").unwrap().as_f64().unwrap() >= 1.0);
         assert_eq!(ho.path("kv_pages_after").and_then(Json::as_f64), Some(0.0));
         assert_eq!(ho.path("accounting_closed").and_then(Json::as_bool), Some(true));
+        // the longctx family must record its budget + determinism gates
+        // and both curves for every sweep length
+        let lc = sc.path("longctx_dtr_bilayer").unwrap();
+        let rows = match lc.get("lengths") {
+            Some(Json::Arr(rows)) => rows,
+            _ => panic!("longctx lengths missing"),
+        };
+        assert!(!rows.is_empty(), "longctx sweep is empty");
+        for row in rows {
+            assert_eq!(
+                row.path("bitwise_identical_bounded_vs_resident").and_then(Json::as_bool),
+                Some(true),
+                "longctx bounded run lost bit-identity"
+            );
+            let peak = row.path("resident_pages_peak").unwrap().as_f64().unwrap();
+            let budget = row.path("budget_pages").unwrap().as_f64().unwrap();
+            let total = row.path("total_pages").unwrap().as_f64().unwrap();
+            assert!(peak > 0.0 && peak <= budget, "peak {peak} vs budget {budget}");
+            assert!(total > budget, "eviction never engaged ({total} <= {budget})");
+            assert!(row.path("flops_measured").unwrap().as_f64().unwrap() > 0.0);
+            let ratio = row.path("flops_ratio_vs_dense").unwrap().as_f64().unwrap();
+            assert!(ratio > 0.0 && ratio < 1.5, "flops ratio {ratio}");
+            let curve = match row.get("routing_vs_position") {
+                Some(Json::Arr(c)) => c,
+                _ => panic!("routing_vs_position missing"),
+            };
+            assert!(!curve.is_empty());
+            for b in curve {
+                let f = b.path("attn_frac").unwrap().as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&f), "bucket attn_frac {f}");
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,23 @@
 //! [`DecodeState`] is the host-side analogue of the decode artifact's
 //! resident KV literals: per layer, only tokens the router sent through
 //! attention are cached — the mechanism behind the paper's Fig. 6 memory
-//! savings. Dense layers cache every token.
+//! savings. Dense layers cache every token. Storage sits behind the
+//! page-view API ([`KvCache`], runtime/kv.rs): the default resident slab
+//! or a bounded/paged cache with LRU spill-to-disk eviction.
+//!
+//! # Canonical entry points vs adapters
+//!
+//! [`Backend::decode_step_routed`] is the **canonical** single-step
+//! primitive every implementation must provide; the batched hooks
+//! ([`Backend::decode_rows`], [`Backend::decode_batch`],
+//! [`Backend::prefill_rows`]) are optional overrides that must stay
+//! bit-identical to a sequential `decode_step_routed` loop. Everything
+//! else is an **adapter** with a final default implementation in terms
+//! of those: [`Backend::decode_step`] (router-mode wrapper),
+//! [`Backend::prefill_chunked`] (telemetry-discarding wrapper over
+//! `prefill_rows`), [`Backend::prefill`] and [`Backend::generate`].
+
+use std::path::PathBuf;
 
 use anyhow::{ensure, Result};
 
@@ -24,6 +40,7 @@ use crate::coordinator::sampling::{sample, SamplingParams};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::kv::KvCache;
 use super::tensor::Tensor;
 
 /// Batched forward outputs — mirrors the AOT `fwd` artifact tuple
@@ -49,25 +66,49 @@ pub struct ForwardOutput {
 pub struct DecodeState {
     /// Tokens fed so far (the next token's absolute position).
     pub position: usize,
-    /// Per-layer cached keys, `[len, H*hd]` row-major.
-    pub keys: Vec<Vec<f32>>,
-    /// Per-layer cached values, `[len, H*hd]` row-major.
-    pub values: Vec<Vec<f32>>,
+    /// Per-layer cached K/V (`[len, H*hd]` row-major) behind the
+    /// page-view API: attention reads rows only through
+    /// [`KvCache::view`], never as raw slabs.
+    pub kv: KvCache,
 }
 
 impl DecodeState {
-    /// An empty decode state for a model with `n_layers` layers.
+    /// An empty decode state for a model with `n_layers` layers, backed
+    /// by the unbounded resident slab.
     pub fn new(n_layers: usize) -> DecodeState {
         DecodeState {
             position: 0,
-            keys: vec![Vec::new(); n_layers],
-            values: vec![Vec::new(); n_layers],
+            kv: KvCache::resident(n_layers),
+        }
+    }
+
+    /// An empty decode state backed by the bounded/paged cache: at most
+    /// `budget_pages` pages (of `page_rows` rows) resident at once, LRU
+    /// overflow spilled to a file under `spill_dir` (OS temp dir when
+    /// `None`). Bitwise-identical decode to [`DecodeState::new`] — the
+    /// budget only bounds *memory*, never what attention sees.
+    pub fn bounded(
+        n_layers: usize,
+        d_model: usize,
+        page_rows: usize,
+        budget_pages: usize,
+        spill_dir: Option<PathBuf>,
+    ) -> DecodeState {
+        DecodeState {
+            position: 0,
+            kv: KvCache::bounded(n_layers, d_model, page_rows, budget_pages, spill_dir),
         }
     }
 
     /// Cached token count per layer (the artifact's `lens` row).
     pub fn lens(&self, d_model: usize) -> Vec<usize> {
-        self.keys.iter().map(|k| k.len() / d_model).collect()
+        self.kv.lens(d_model)
+    }
+
+    /// Flat per-layer `(keys, values)` copies — the equality surface for
+    /// tests and tools (spilled pages are read back; bit-exact).
+    pub fn snapshot_kv(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.kv.snapshot()
     }
 
     /// Snapshot the current extent (position + per-layer cached token
@@ -87,10 +128,7 @@ impl DecodeState {
     /// truncation is a bitwise restore of any earlier extent — the
     /// speculative-decode rejection path.
     pub fn truncate_to(&mut self, lens: &[usize], position: usize, d_model: usize) {
-        for (l, &len) in lens.iter().enumerate() {
-            self.keys[l].truncate(len * d_model);
-            self.values[l].truncate(len * d_model);
-        }
+        self.kv.truncate(lens, d_model);
         self.position = position;
     }
 
@@ -233,31 +271,31 @@ pub trait Backend {
     /// Fresh decode state for one sequence.
     fn begin_decode(&self) -> DecodeState;
 
-    /// Feed one token at the state's current position; returns next-token
-    /// logits and the per-layer routing decisions that updated the cache.
-    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput>;
-
-    /// Like [`Backend::decode_step`] but with a per-call routing
-    /// override. [`RouteOverride::Router`] must behave exactly like
-    /// `decode_step`; [`RouteOverride::ForceBypass`] runs the draft
-    /// pass of speculative decoding (every DTR layer takes the linear
-    /// bypass; router weights untouched). Draft-mode KV writes (dense
-    /// layers still cache) land in `state` like any other step —
-    /// callers roll them back with [`DecodeState::rollback`]. Backends
-    /// without a bypass-override path reject `ForceBypass`.
+    /// **Canonical decode primitive.** Feed one token at the state's
+    /// current position with a per-call routing override; returns
+    /// next-token logits and the per-layer routing decisions that
+    /// updated the cache.
+    ///
+    /// [`RouteOverride::Router`] follows the model's router (normal
+    /// decode — exactly [`Backend::decode_step`]);
+    /// [`RouteOverride::ForceBypass`] runs the draft pass of
+    /// speculative decoding (every DTR layer takes the linear bypass;
+    /// router weights untouched). Draft-mode KV writes (dense layers
+    /// still cache) land in `state` like any other step — callers roll
+    /// them back with [`DecodeState::rollback`]. Every other decode
+    /// entry point reduces to this one; the batched hooks must stay
+    /// bit-identical to a sequential loop over it.
     fn decode_step_routed(
         &self,
         state: &mut DecodeState,
         token: i32,
         route: RouteOverride,
-    ) -> Result<StepOutput> {
-        match route {
-            RouteOverride::Router => self.decode_step(state, token),
-            RouteOverride::ForceBypass => anyhow::bail!(
-                "backend {} does not support the ForceBypass routing override",
-                self.name()
-            ),
-        }
+    ) -> Result<StepOutput>;
+
+    /// Adapter: [`Backend::decode_step_routed`] pinned to
+    /// [`RouteOverride::Router`] (normal decode).
+    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
+        self.decode_step_routed(state, token, RouteOverride::Router)
     }
 
     /// Feed `tokens` to one sequence and return **every** row's step
@@ -272,7 +310,10 @@ pub trait Backend {
     /// single full-router pass.
     fn decode_rows(&self, state: &mut DecodeState, tokens: &[i32]) -> Result<Vec<StepOutput>> {
         ensure!(!tokens.is_empty(), "decode_rows needs at least one token");
-        tokens.iter().map(|&t| self.decode_step(state, t)).collect()
+        tokens
+            .iter()
+            .map(|&t| self.decode_step_routed(state, t, RouteOverride::Router))
+            .collect()
     }
 
     /// Batched multi-sequence decode: feed one token to each sequence in
@@ -299,40 +340,33 @@ pub trait Backend {
         states
             .iter_mut()
             .zip(tokens)
-            .map(|(s, &t)| self.decode_step(s, t))
+            .map(|(s, &t)| self.decode_step_routed(s, t, RouteOverride::Router))
             .collect()
     }
 
-    /// Prefill `tokens` in chunks of up to `chunk` tokens; returns the
-    /// last step's output (logits predict the token after the prompt).
+    /// Prefill like [`Backend::prefill_rows`] but report only the last
+    /// step's output (logits predict the token after the prompt) —
+    /// the adapter callers use when per-row telemetry isn't needed.
     ///
     /// Same bit-identity contract as [`Backend::decode_batch`]: the cache
     /// contents, per-layer lens, and final logits must equal a sequential
-    /// [`Backend::decode_step`] loop for any chunk size. The default
-    /// implementation is that loop; backends with batched forward kernels
-    /// override it to process whole chunks at once.
+    /// [`Backend::decode_step`] loop for any chunk size.
     fn prefill_chunked(
         &self,
         state: &mut DecodeState,
         tokens: &[i32],
         chunk: usize,
     ) -> Result<StepOutput> {
-        ensure!(!tokens.is_empty(), "prefill needs at least one token");
-        let _ = chunk;
-        let mut last = None;
-        for &t in tokens {
-            last = Some(self.decode_step(state, t)?);
-        }
-        Ok(last.unwrap())
+        Ok(self.prefill_rows(state, tokens, chunk)?.last)
     }
 
-    /// Prefill like [`Backend::prefill_chunked`] but additionally return
-    /// every prompt row's routing decision and soft score — the per-token
-    /// telemetry that plain prefill discards (it only reports the last
-    /// step). Same bit-identity contract: state/logits must equal the
-    /// sequential decode loop. The default implementation *is* that loop;
-    /// backends with batched prefill kernels override it to keep chunked
-    /// execution while collecting per-row telemetry.
+    /// Prefill `tokens` in chunks of up to `chunk` tokens, returning
+    /// every prompt row's routing decision and soft score plus the last
+    /// step's output. Same bit-identity contract: state/logits must
+    /// equal the sequential decode loop. The default implementation *is*
+    /// that loop; backends with batched prefill kernels override it to
+    /// process whole chunks at once (streaming chunked prefill — the
+    /// long-context path runs 32k+ prompts through this hook).
     fn prefill_rows(
         &self,
         state: &mut DecodeState,
@@ -345,7 +379,7 @@ pub trait Backend {
         let mut g_attn = Vec::with_capacity(tokens.len());
         let mut last = None;
         for &t in tokens {
-            let step = self.decode_step(state, t)?;
+            let step = self.decode_step_routed(state, t, RouteOverride::Router)?;
             routed.push(step.routed.clone());
             g_attn.push(step.g_attn.clone());
             last = Some(step);

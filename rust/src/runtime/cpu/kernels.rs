@@ -34,6 +34,7 @@
 
 pub mod simd;
 
+use crate::runtime::kv::KvPageRef;
 use crate::util::simd::{KernelCtx, SimdTier};
 use crate::util::threadpool::Pool;
 
@@ -575,16 +576,52 @@ pub fn decode_attention_pending(
     hd: usize,
     out: &mut [f32],
 ) {
+    let page = [KvPageRef {
+        k: cache_k,
+        v: cache_v,
+    }];
+    decode_attention_paged(
+        ctx, q, &page, pend_k, pend_v, pending, k_self, v_self, h, hd, out,
+    );
+}
+
+/// **The canonical cache-read kernel**: [`decode_attention_pending`]
+/// over the page-view API — `cache` is the layer's [`KvPageRef`] list
+/// from [`crate::runtime::KvCache::view`] (pages in append order,
+/// concatenating to the flat slab). Logits are folded page-by-page,
+/// row-by-row into one softmax in exactly the flat kernel's key order,
+/// so the result is **bit-identical** to [`decode_attention_pending`]
+/// on the concatenated rows for any page geometry — the determinism
+/// contract that lets the bounded/spilling cache keep token streams
+/// bitwise equal to the resident slab (DESIGN.md §KV paging).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attention_paged(
+    ctx: KernelCtx,
+    q: &[f32],
+    cache: &[KvPageRef<'_>],
+    pend_k: &[f32],
+    pend_v: &[f32],
+    pending: &[usize],
+    k_self: &[f32],
+    v_self: &[f32],
+    h: usize,
+    hd: usize,
+    out: &mut [f32],
+) {
     let d = h * hd;
-    let len = cache_k.len() / d;
+    let len: usize = cache.iter().map(|pg| pg.k.len() / d).sum();
     let p = pending.len();
     let scale = 1.0 / (hd as f32).sqrt();
     let mut logits = vec![0.0f32; len + p + 1];
     for head in 0..h {
         let qh = &q[head * hd..(head + 1) * hd];
-        for j in 0..len {
-            let kj = &cache_k[j * d + head * hd..j * d + (head + 1) * hd];
-            logits[j] = simd::dot_f32(ctx, qh, kj) * scale;
+        let mut j = 0usize;
+        for pg in cache {
+            for r in 0..pg.k.len() / d {
+                let kj = &pg.k[r * d + head * hd..r * d + (head + 1) * hd];
+                logits[j] = simd::dot_f32(ctx, qh, kj) * scale;
+                j += 1;
+            }
         }
         for (t, &pj) in pending.iter().enumerate() {
             let kj = &pend_k[pj * d + head * hd..pj * d + (head + 1) * hd];
@@ -598,18 +635,23 @@ pub fn decode_attention_pending(
             z += *lg;
         }
         let orow = &mut out[head * hd..(head + 1) * hd];
-        for (j, &w) in logits.iter().enumerate() {
-            let wj = w / z;
-            let vj = if j < len {
-                &cache_v[j * d + head * hd..j * d + (head + 1) * hd]
-            } else if j < len + p {
-                let pj = pending[j - len];
-                &pend_v[pj * d + head * hd..pj * d + (head + 1) * hd]
-            } else {
-                &v_self[head * hd..(head + 1) * hd]
-            };
+        let mut j = 0usize;
+        for pg in cache {
+            for r in 0..pg.v.len() / d {
+                let wj = logits[j] / z;
+                let vj = &pg.v[r * d + head * hd..r * d + (head + 1) * hd];
+                simd::axpy(ctx.tier, orow, wj, vj);
+                j += 1;
+            }
+        }
+        for t in 0..p {
+            let wj = logits[len + t] / z;
+            let pj = pending[t];
+            let vj = &pend_v[pj * d + head * hd..pj * d + (head + 1) * hd];
             simd::axpy(ctx.tier, orow, wj, vj);
         }
+        let wj = logits[len + p] / z;
+        simd::axpy(ctx.tier, orow, wj, &v_self[head * hd..(head + 1) * hd]);
     }
 }
 

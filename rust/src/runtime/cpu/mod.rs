@@ -320,12 +320,13 @@ struct RowsOutput {
 /// to the same cache see earlier ones, rows mapped to distinct caches
 /// are independent. Rows run **concurrently** — instead of waiting for
 /// its predecessors' cache appends, each row reads them straight out of
-/// the chunk K/V (`kernels::decode_attention_pending`), which visits
-/// keys in exactly the order a sequential attend-then-append loop would
-/// have, so the result (and the cache bytes appended afterwards) is
-/// bit-identical to that loop. Returns `[m, d]` context rows. Shared
-/// with the quantized backend (`runtime::quant`), whose step path is the
-/// same modulo projection kernels.
+/// the chunk K/V (`kernels::decode_attention_paged` over the cache's
+/// page views), which visits keys in exactly the order a sequential
+/// attend-then-append loop would have, so the result (and the cache
+/// bytes appended afterwards) is bit-identical to that loop. Returns
+/// `[m, d]` context rows. Shared with the quantized backend
+/// (`runtime::quant`), whose step path is the same modulo projection
+/// kernels.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_rows(
     pool: &Pool,
@@ -341,31 +342,43 @@ pub(crate) fn attend_rows(
 ) -> Vec<f32> {
     let m = rows_cache.len();
     let mut ctx = vec![0.0f32; m * d];
+    // Fault every referenced cache's layer-li pages resident (bounded
+    // caches evict LRU pages of other layers); resident slabs no-op.
+    let mut pinned = vec![false; states.len()];
+    for &c in rows_cache {
+        if !pinned[c] {
+            states[c].kv.pin_layer(li);
+            pinned[c] = true;
+        }
+    }
     {
-        // Immutable snapshot of every cache's layer-li K/V for the
-        // parallel reads; the appends below wait until all rows finish.
-        let views: Vec<(&[f32], &[f32])> = states
+        // Immutable page-view snapshot of every pinned cache's layer-li
+        // K/V for the parallel reads; the appends below wait until all
+        // rows finish. Unpinned states get an empty view (never read).
+        let views: Vec<Vec<crate::runtime::kv::KvPageRef<'_>>> = states
             .iter()
-            .map(|st| (st.keys[li].as_slice(), st.values[li].as_slice()))
+            .enumerate()
+            .map(|(c, st)| if pinned[c] { st.kv.view(li, d) } else { Vec::new() })
             .collect();
         // Chunk rows before r that share r's cache (ascending — the
         // order a sequential loop would have appended them).
         let pending: Vec<Vec<usize>> = (0..m)
             .map(|r| (0..r).filter(|&p| rows_cache[p] == rows_cache[r]).collect())
             .collect();
-        let cached_rows: usize = views.iter().map(|(ks, _)| ks.len() / d).sum();
+        let cached_rows: usize = views
+            .iter()
+            .flat_map(|pages| pages.iter().map(|pg| pg.rows(d)))
+            .sum();
         let per_row = (cached_rows / m.max(1) + m / 2 + 1) * d * 2;
         let grain = (kernels::PAR_CHUNK_FLOPS / per_row.max(1)).max(1);
         let kctx = pool.kernel_ctx();
         pool.run_rows(&mut ctx, d, grain, |r0, rows| {
             for (i, orow) in rows.chunks_mut(d).enumerate() {
                 let r = r0 + i;
-                let (cache_k, cache_v) = views[rows_cache[r]];
-                kernels::decode_attention_pending(
+                kernels::decode_attention_paged(
                     kctx,
                     &q[r * d..(r + 1) * d],
-                    cache_k,
-                    cache_v,
+                    &views[rows_cache[r]],
                     kk,
                     vv,
                     &pending[r],
@@ -379,8 +392,9 @@ pub(crate) fn attend_rows(
         });
     }
     for (r, &c) in rows_cache.iter().enumerate() {
-        states[c].keys[li].extend_from_slice(&kk[r * d..(r + 1) * d]);
-        states[c].values[li].extend_from_slice(&vv[r * d..(r + 1) * d]);
+        states[c]
+            .kv
+            .append_row(li, &kk[r * d..(r + 1) * d], &vv[r * d..(r + 1) * d]);
     }
     ctx
 }
@@ -398,7 +412,7 @@ pub(crate) fn attend_context_rows(
 ) -> u64 {
     let mut total = 0u64;
     for (r, &c) in rows_cache.iter().enumerate() {
-        let cached = states[c].keys[li].len() / d;
+        let cached = states[c].kv.len(li, d);
         let pending = rows_cache[..r].iter().filter(|&&p| p == c).count();
         total += (cached + pending + 1) as u64;
     }
@@ -971,145 +985,29 @@ impl Backend for CpuBackend {
         DecodeState::new(self.cfg.n_layers)
     }
 
-    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
-        self.decode_step_routed(state, token, RouteOverride::Router)
-    }
-
-    /// Single-row decode with a per-call routing override:
-    /// [`RouteOverride::ForceBypass`] is the speculative draft pass —
-    /// every DTR layer takes the linear bypass (router still evaluated,
-    /// its soft score still scales the bypass update); dense layers
-    /// still attend and cache.
+    /// Single-row decode via the shared row-step core (a single row is
+    /// exactly the sequential decode semantics: same kernels, same cache
+    /// appends, same position bump). [`RouteOverride::ForceBypass`] is
+    /// the speculative draft pass — every DTR layer takes the linear
+    /// bypass (router still evaluated, its soft score still scales the
+    /// bypass update); dense layers still attend and cache.
     fn decode_step_routed(
         &self,
         state: &mut DecodeState,
         token: i32,
         route: RouteOverride,
     ) -> Result<StepOutput> {
-        let cfg = &self.cfg;
-        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
-        let (heads, hd) = (cfg.n_heads, cfg.head_dim());
-        ensure!(
-            token >= 0 && (token as usize) < vocab,
-            "token id {token} out of range for vocab {vocab}"
-        );
-        // Reject before touching the caller's cache: bailing mid-layer
-        // would leave a partially-updated DecodeState behind.
-        ensure!(
-            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
-            "expert-choice routing needs the full sequence; decode supports token-choice only"
-        );
-        let pos = [state.position as f32];
-
-        let pool = &self.pool;
-        let t = token as usize;
-        let (du, ffu) = (d as u64, ff as u64);
-        let dense_eq = dense_equiv_flops(&pos, d, ff);
-        let mut x = self.weights.tok_embed[t * d..(t + 1) * d].to_vec();
-        let mut routed = Vec::with_capacity(cfg.n_layers);
-        let mut g_attn = Vec::with_capacity(cfg.n_layers);
-        for (li, lw) in self.weights.layers.iter().enumerate() {
-            self.flops.add_dense_equiv(li, dense_eq);
-            let u = self
-                .timers
-                .norm
-                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm1, RMSNORM_EPS));
-            let (mixed, is_routed, gl): (Vec<f32>, bool, f32) = match lw.kind {
-                LayerKind::Dense => {
-                    let ctx_len = state.keys[li].len() as u64 / du + 1;
-                    self.flops.add_qkvo(li, 8 * du * du);
-                    self.flops.add_attn_mix(li, 4 * du * ctx_len);
-                    let attn = self.timers.attention.time(|| {
-                        let (q, kk, vv) = kernels::qkv_rope_par(
-                            pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
-                        );
-                        let ctx = kernels::decode_attention(
-                            &q,
-                            &state.keys[li],
-                            &state.values[li],
-                            &kk,
-                            &vv,
-                            heads,
-                            hd,
-                        );
-                        let attn = kernels::matmul_par(pool, &ctx, &lw.wo, 1, d, d);
-                        state.keys[li].extend_from_slice(&kk);
-                        state.values[li].extend_from_slice(&vv);
-                        attn
-                    });
-                    (attn, true, 1.0)
-                }
-                LayerKind::Dtr => {
-                    self.flops.add_router(li, du * du + 2 * du);
-                    let g = self
-                        .timers
-                        .router
-                        .time(|| kernels::router_par(pool, &u, &lw.r_w1, &lw.r_w2, 1, d, d / 2));
-                    let go = route == RouteOverride::Router
-                        && cfg.variant != Variant::DtrSkip
-                        && g[0] > g[1];
-                    if go {
-                        let ctx_len = state.keys[li].len() as u64 / du + 1;
-                        self.flops.add_qkvo(li, 8 * du * du);
-                        self.flops.add_attn_mix(li, 4 * du * ctx_len);
-                        let attn = self.timers.attention.time(|| {
-                            let (q, kk, vv) = kernels::qkv_rope_par(
-                                pool, &u, &lw.wq, &lw.wk, &lw.wv, &pos, 1, d, heads, ROPE_THETA,
-                            );
-                            let ctx = kernels::decode_attention(
-                                &q,
-                                &state.keys[li],
-                                &state.values[li],
-                                &kk,
-                                &vv,
-                                heads,
-                                hd,
-                            );
-                            let attn = kernels::matmul_par(pool, &ctx, &lw.wo, 1, d, d);
-                            state.keys[li].extend_from_slice(&kk);
-                            state.values[li].extend_from_slice(&vv);
-                            attn
-                        });
-                        (attn.iter().map(|&a| g[0] * a).collect(), true, g[0])
-                    } else {
-                        self.flops.add_bypass(li, 4 * du * du);
-                        let byp = self
-                            .timers
-                            .bypass
-                            .time(|| kernels::bypass_par(pool, &u, &lw.wv, &lw.wo, 1, d));
-                        (byp.iter().map(|&a| g[1] * a).collect(), false, g[0])
-                    }
-                }
-                _ => bail!("unsupported layer kind in CPU backend"),
-            };
-            for (xv, mv) in x.iter_mut().zip(&mixed) {
-                *xv += mv;
-            }
-            let h2 = self
-                .timers
-                .norm
-                .time(|| kernels::rmsnorm_par(pool, &x, &lw.norm2, RMSNORM_EPS));
-            self.flops.add_mlp(li, 6 * du * ffu);
-            let mlp = self.timers.mlp.time(|| {
-                kernels::swiglu_mlp_par(pool, &h2, &lw.w_gate, &lw.w_up, &lw.w_down, 1, d, ff)
-            });
-            for (xv, mv) in x.iter_mut().zip(&mlp) {
-                *xv += mv;
-            }
-            routed.push(is_routed);
-            g_attn.push(gl);
-        }
-
-        self.flops.add_unembed(2 * du * vocab as u64);
-        let logits = self.timers.unembed.time(|| {
-            let xn = kernels::rmsnorm_par(pool, &x, &self.weights.out_norm, RMSNORM_EPS);
-            kernels::matmul_par(pool, &xn, &self.weights.unembed, 1, d, vocab)
-        });
-        state.position += 1;
+        let positions = [state.position as f32];
+        let mut slab = [&mut *state];
+        let RowsOutput {
+            logits,
+            mut routed,
+            mut g_attn,
+        } = self.step_rows(&[token], &positions, &mut slab, &[0], LogitsRows::All, route)?;
         Ok(StepOutput {
-            logits: Tensor::f32(vec![vocab], logits),
-            routed,
-            g_attn,
+            logits: Tensor::f32(vec![self.cfg.vocab_size], logits),
+            routed: routed.pop().unwrap(),
+            g_attn: g_attn.pop().unwrap(),
         })
     }
 
@@ -1206,69 +1104,12 @@ impl Backend for CpuBackend {
         Ok(outs)
     }
 
-    /// Chunked prefill over [`CpuBackend::step_rows`] with every row
-    /// mapped to the one sequence's cache (within-chunk causality comes
-    /// from row order); also skips the per-token unembed a sequential
-    /// loop pays, so prompt ingestion is markedly cheaper.
-    fn prefill_chunked(
-        &self,
-        state: &mut DecodeState,
-        tokens: &[i32],
-        chunk: usize,
-    ) -> Result<StepOutput> {
-        ensure!(!tokens.is_empty(), "prefill needs at least one token");
-        // Validate everything before touching the caller's cache (same
-        // no-partial-update guarantee as decode_step).
-        let vocab = self.cfg.vocab_size;
-        for &t in tokens {
-            ensure!(
-                t >= 0 && (t as usize) < vocab,
-                "token id {t} out of range for vocab {vocab}"
-            );
-        }
-        ensure!(
-            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
-            "expert-choice routing needs the full sequence; prefill supports token-choice only"
-        );
-        let chunk = chunk.max(1);
-        let n_chunks = tokens.len().div_ceil(chunk);
-        let mut last = None;
-        for (ci, ck) in tokens.chunks(chunk).enumerate() {
-            let positions: Vec<f32> =
-                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
-            let cache_of = vec![0usize; ck.len()];
-            let mut slab = [&mut *state];
-            // Intermediate chunks' logits are never read — skip their
-            // unembed; only the final chunk computes the last row's.
-            let mode = if ci + 1 == n_chunks {
-                LogitsRows::Last
-            } else {
-                LogitsRows::None
-            };
-            last = Some(self.step_rows(
-                ck,
-                &positions,
-                &mut slab,
-                &cache_of,
-                mode,
-                RouteOverride::Router,
-            )?);
-        }
-        let RowsOutput {
-            logits,
-            mut routed,
-            mut g_attn,
-        } = last.unwrap();
-        Ok(StepOutput {
-            logits: Tensor::f32(vec![vocab], logits),
-            routed: routed.pop().unwrap(),
-            g_attn: g_attn.pop().unwrap(),
-        })
-    }
-
-    /// Chunked prefill (same execution as [`Backend::prefill_chunked`],
-    /// bit-identical caches/logits) that keeps every chunk's per-row
-    /// routing telemetry instead of discarding all but the last row's.
+    /// Streaming chunked prefill over [`CpuBackend::step_rows`] with
+    /// every row mapped to the one sequence's cache (within-chunk
+    /// causality comes from row order); intermediate chunks skip the
+    /// unembed a sequential loop pays, so prompt ingestion is markedly
+    /// cheaper. Also serves [`Backend::prefill_chunked`] through the
+    /// trait's default adapter — one chunk loop, not two.
     fn prefill_rows(
         &self,
         state: &mut DecodeState,

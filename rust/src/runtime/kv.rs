@@ -1,0 +1,739 @@
+//! Page-view KV storage — the single surface attention reads cached K/V
+//! through.
+//!
+//! Kernels never touch raw cache rows: they receive a per-layer list of
+//! [`KvPageRef`]s (in append order) from [`KvCache::view`] and walk the
+//! pages like one contiguous slab. Two implementations sit behind the
+//! [`KvCache`] enum:
+//!
+//! * [`ResidentKv`] — today's flat `Vec<f32>` per layer, exposed as a
+//!   single page. Zero-cost and bitwise-identical to the pre-paging
+//!   layout by construction (the view *is* the slab).
+//! * [`BoundedKv`] — fixed-size pages with a resident-page budget, LRU
+//!   eviction and spill-to-disk offload. Eviction moves cold pages to a
+//!   spill file; it never drops them from attention, so the visible key
+//!   order — and therefore every logit bit — is identical to the
+//!   resident slab. `rust/tests/longctx_smoke.rs` pins this bitwise.
+//!
+//! # Determinism contract
+//!
+//! A view lists pages in append order and concatenating their rows
+//! reproduces the flat slab exactly. [`decode_attention_paged`]
+//! (rust/src/runtime/cpu/kernels.rs) folds logits in page order with a
+//! single softmax, so paged attention is bit-identical to the flat
+//! kernel for any page size, budget, or eviction history. Spilled pages
+//! round-trip through little-endian `f32` bytes — exact.
+//!
+//! # Eviction policy
+//!
+//! One global LRU clock stamps pages on every pin/append.
+//! [`KvCache::pin_layer`] faults a whole layer resident before attention
+//! reads it (attention needs the full routed prefix), evicting
+//! least-recently-used pages of *other* layers while the resident count
+//! exceeds the budget. The budget therefore bounds the high-water mark
+//! at roughly one layer's working set plus slack — memory scales with
+//! `max_layer_pages`, not `n_layers * max_layer_pages`. If a single
+//! layer alone exceeds the budget the cache keeps that layer resident
+//! (correctness over the cap) and the high-water mark records the
+//! overshoot.
+//!
+//! # Ownership
+//!
+//! Each `DecodeState` owns its `KvCache`; the spill file (created
+//! lazily under the OS temp dir) is owned by the cache and unlinked on
+//! drop. Spill I/O failures panic — attention cannot half-read a page.
+//!
+//! `KvPool` (coordinator/kv_cache.rs) stays the engine-side *accountant*
+//! — it derives page counts from the same per-layer lengths this storage
+//! reports, it does not own rows.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Distinguishes spill files of concurrently-live caches in one process.
+static SPILL_ID: AtomicU64 = AtomicU64::new(0);
+
+/// A borrowed page of cached K/V rows: `k`/`v` are row-major
+/// `[rows, d]` slices of equal length. Pages concatenate (in view
+/// order) to the flat cache slab.
+#[derive(Debug, Clone, Copy)]
+pub struct KvPageRef<'a> {
+    /// Cached key rows, `rows * d` floats.
+    pub k: &'a [f32],
+    /// Cached value rows, `rows * d` floats.
+    pub v: &'a [f32],
+}
+
+impl KvPageRef<'_> {
+    /// Number of cached rows in this page.
+    pub fn rows(&self, d: usize) -> usize {
+        debug_assert_eq!(self.k.len(), self.v.len());
+        self.k.len() / d
+    }
+}
+
+/// KV storage behind `DecodeState` — resident slab or bounded/paged.
+#[derive(Debug, Clone)]
+pub enum KvCache {
+    /// Flat per-layer slabs, always resident (the default).
+    Resident(ResidentKv),
+    /// Paged storage with an LRU resident budget and disk offload.
+    Bounded(BoundedKv),
+}
+
+impl KvCache {
+    /// Unbounded resident-slab cache (bitwise the pre-paging layout).
+    pub fn resident(n_layers: usize) -> KvCache {
+        KvCache::Resident(ResidentKv {
+            keys: vec![Vec::new(); n_layers],
+            values: vec![Vec::new(); n_layers],
+        })
+    }
+
+    /// Bounded cache: at most `budget_pages` pages resident (high-water
+    /// mark, see module docs), pages of `page_rows` rows, spill file in
+    /// `spill_dir` (OS temp dir when `None`).
+    pub fn bounded(
+        n_layers: usize,
+        d: usize,
+        page_rows: usize,
+        budget_pages: usize,
+        spill_dir: Option<PathBuf>,
+    ) -> KvCache {
+        KvCache::Bounded(BoundedKv::new(n_layers, d, page_rows, budget_pages, spill_dir))
+    }
+
+    /// Layer count.
+    pub fn n_layers(&self) -> usize {
+        match self {
+            KvCache::Resident(r) => r.keys.len(),
+            KvCache::Bounded(b) => b.layers.len(),
+        }
+    }
+
+    /// Cached rows at layer `li` (`d` = row width in floats).
+    pub fn len(&self, li: usize, d: usize) -> usize {
+        match self {
+            KvCache::Resident(r) => r.keys[li].len() / d,
+            KvCache::Bounded(b) => b.layer_rows(li),
+        }
+    }
+
+    /// Cached rows per layer.
+    pub fn lens(&self, d: usize) -> Vec<usize> {
+        (0..self.n_layers()).map(|li| self.len(li, d)).collect()
+    }
+
+    /// Append one K/V row (`d` floats each) to layer `li`.
+    pub fn append_row(&mut self, li: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), v.len());
+        match self {
+            KvCache::Resident(r) => {
+                r.keys[li].extend_from_slice(k);
+                r.values[li].extend_from_slice(v);
+            }
+            KvCache::Bounded(b) => b.append_row(li, k, v),
+        }
+    }
+
+    /// Truncate every layer to `lens[li]` rows (speculative rollback).
+    pub fn truncate(&mut self, lens: &[usize], d: usize) {
+        match self {
+            KvCache::Resident(r) => {
+                for (li, &len) in lens.iter().enumerate() {
+                    r.keys[li].truncate(len * d);
+                    r.values[li].truncate(len * d);
+                }
+            }
+            KvCache::Bounded(b) => b.truncate(lens, d),
+        }
+    }
+
+    /// Fault layer `li` fully resident ahead of an attention read,
+    /// evicting LRU pages of other layers past the budget. No-op for
+    /// the resident slab.
+    pub fn pin_layer(&mut self, li: usize) {
+        if let KvCache::Bounded(b) = self {
+            b.pin_layer(li);
+        }
+    }
+
+    /// Page views over layer `li` in append order. Every page must be
+    /// resident — call [`KvCache::pin_layer`] first on bounded caches.
+    pub fn view(&self, li: usize, d: usize) -> Vec<KvPageRef<'_>> {
+        match self {
+            KvCache::Resident(r) => {
+                debug_assert_eq!(r.keys[li].len() % d, 0);
+                vec![KvPageRef {
+                    k: &r.keys[li],
+                    v: &r.values[li],
+                }]
+            }
+            KvCache::Bounded(b) => b.view(li),
+        }
+    }
+
+    /// Flat per-layer `(keys, values)` copies — the test-equality and
+    /// migration surface (reads spilled pages back; bit-exact).
+    pub fn snapshot(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        match self {
+            KvCache::Resident(r) => r
+                .keys
+                .iter()
+                .zip(&r.values)
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            KvCache::Bounded(b) => b.snapshot(),
+        }
+    }
+
+    /// Resident-page budget (`None` for the unpaged resident slab).
+    pub fn budget_pages(&self) -> Option<usize> {
+        match self {
+            KvCache::Resident(_) => None,
+            KvCache::Bounded(b) => Some(b.budget),
+        }
+    }
+
+    /// Currently resident pages (`None` for the unpaged resident slab).
+    pub fn resident_pages(&self) -> Option<usize> {
+        match self {
+            KvCache::Resident(_) => None,
+            KvCache::Bounded(b) => Some(b.resident),
+        }
+    }
+
+    /// Resident-page high-water mark (0 for the resident slab — it has
+    /// no page accounting).
+    pub fn resident_pages_peak(&self) -> usize {
+        match self {
+            KvCache::Resident(_) => 0,
+            KvCache::Bounded(b) => b.resident_peak,
+        }
+    }
+}
+
+/// Flat per-layer K/V slabs — the pre-paging layout, one "page" per
+/// layer covering everything.
+#[derive(Debug, Clone)]
+pub struct ResidentKv {
+    keys: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+}
+
+/// Where a bounded page's rows currently live.
+#[derive(Debug)]
+enum PageData {
+    Resident { k: Vec<f32>, v: Vec<f32> },
+    Spilled { slot: u64 },
+}
+
+#[derive(Debug)]
+struct Page {
+    /// Valid rows (`<= page_rows`; the last page of a layer fills up).
+    rows: usize,
+    /// LRU stamp from the cache-wide clock.
+    last_used: u64,
+    data: PageData,
+}
+
+/// Paged KV with an LRU resident budget and spill-to-disk offload.
+#[derive(Debug)]
+pub struct BoundedKv {
+    d: usize,
+    page_rows: usize,
+    budget: usize,
+    layers: Vec<Vec<Page>>,
+    clock: u64,
+    resident: usize,
+    resident_peak: usize,
+    spill: Spill,
+}
+
+impl BoundedKv {
+    fn new(
+        n_layers: usize,
+        d: usize,
+        page_rows: usize,
+        budget_pages: usize,
+        spill_dir: Option<PathBuf>,
+    ) -> BoundedKv {
+        assert!(d > 0 && page_rows > 0, "bounded KV needs d > 0 and page_rows > 0");
+        assert!(budget_pages > 0, "bounded KV needs a budget of at least one page");
+        BoundedKv {
+            d,
+            page_rows,
+            budget: budget_pages,
+            layers: (0..n_layers).map(|_| Vec::new()).collect(),
+            clock: 0,
+            resident: 0,
+            resident_peak: 0,
+            spill: Spill::new(spill_dir, page_rows * d),
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn layer_rows(&self, li: usize) -> usize {
+        self.layers[li].iter().map(|p| p.rows).sum()
+    }
+
+    fn note_resident(&mut self, added: usize) {
+        self.resident += added;
+        self.resident_peak = self.resident_peak.max(self.resident);
+    }
+
+    /// Reload page `pi` of layer `li` if spilled, making room *first*
+    /// so the resident count never overshoots the budget.
+    fn fault_page(&mut self, li: usize, pi: usize, now: u64) {
+        self.layers[li][pi].last_used = now;
+        if let PageData::Spilled { slot } = self.layers[li][pi].data {
+            self.make_room(li);
+            let (k, v) = self.spill.read(slot, self.layers[li][pi].rows * self.d);
+            self.spill.free(slot);
+            self.layers[li][pi].data = PageData::Resident { k, v };
+            self.note_resident(1);
+        }
+    }
+
+    /// Write page `pi` of layer `li` out and drop its resident rows.
+    fn spill_page(&mut self, li: usize, pi: usize) {
+        let rows = self.layers[li][pi].rows;
+        if let PageData::Resident { k, v } =
+            std::mem::replace(&mut self.layers[li][pi].data, PageData::Spilled { slot: 0 })
+        {
+            debug_assert_eq!(k.len(), rows * self.d);
+            let slot = self.spill.alloc();
+            self.spill.write(slot, &k, &v);
+            self.layers[li][pi].data = PageData::Spilled { slot };
+            self.resident -= 1;
+        }
+    }
+
+    /// Make room for one more resident page by evicting globally-LRU
+    /// resident pages, never touching layer `keep_layer` (it is being
+    /// read or appended). Stops early if nothing outside `keep_layer`
+    /// is evictable — a layer whose own working set exceeds the budget
+    /// stays resident (correctness over the cap, see module docs).
+    fn make_room(&mut self, keep_layer: usize) {
+        while self.resident >= self.budget {
+            let mut victim: Option<(usize, usize, u64)> = None;
+            for (li, pages) in self.layers.iter().enumerate() {
+                if li == keep_layer {
+                    continue;
+                }
+                for (pi, p) in pages.iter().enumerate() {
+                    if matches!(p.data, PageData::Resident { .. })
+                        && victim.map_or(true, |(_, _, t)| p.last_used < t)
+                    {
+                        victim = Some((li, pi, p.last_used));
+                    }
+                }
+            }
+            match victim {
+                Some((li, pi, _)) => self.spill_page(li, pi),
+                None => break, // keep_layer alone exceeds the budget
+            }
+        }
+    }
+
+    fn pin_layer(&mut self, li: usize) {
+        let now = self.tick();
+        for pi in 0..self.layers[li].len() {
+            self.fault_page(li, pi, now);
+        }
+    }
+
+    fn append_row(&mut self, li: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d);
+        let now = self.tick();
+        let needs_new = match self.layers[li].last() {
+            Some(p) => p.rows >= self.page_rows,
+            None => true,
+        };
+        if needs_new {
+            self.make_room(li);
+            self.layers[li].push(Page {
+                rows: 0,
+                last_used: now,
+                data: PageData::Resident {
+                    k: Vec::with_capacity(self.page_rows * self.d),
+                    v: Vec::with_capacity(self.page_rows * self.d),
+                },
+            });
+            self.note_resident(1);
+        } else {
+            // The tail page may have been evicted since the last append
+            // (e.g. while other layers were pinned) — fault it back.
+            let pi = self.layers[li].len() - 1;
+            self.fault_page(li, pi, now);
+        }
+        let page = self.layers[li].last_mut().unwrap();
+        page.last_used = now;
+        page.rows += 1;
+        match &mut page.data {
+            PageData::Resident { k: pk, v: pv } => {
+                pk.extend_from_slice(k);
+                pv.extend_from_slice(v);
+            }
+            PageData::Spilled { .. } => unreachable!("tail page faulted above"),
+        }
+    }
+
+    fn truncate(&mut self, lens: &[usize], d: usize) {
+        debug_assert_eq!(d, self.d);
+        for (li, &target) in lens.iter().enumerate() {
+            let mut start = 0usize;
+            let mut keep = 0usize;
+            for p in &self.layers[li] {
+                if start >= target {
+                    break;
+                }
+                keep += 1;
+                start += p.rows;
+            }
+            // Drop whole pages past the target.
+            while self.layers[li].len() > keep {
+                let p = self.layers[li].pop().unwrap();
+                match p.data {
+                    PageData::Resident { .. } => self.resident -= 1,
+                    PageData::Spilled { slot } => self.spill.free(slot),
+                }
+            }
+            // Trim the now-last page; rows within a page are in append
+            // order, so a prefix cut is exact for spilled pages too
+            // (reload reads only `rows * d` floats).
+            if let Some(p) = self.layers[li].last_mut() {
+                let prior = start - p.rows;
+                let keep_rows = target - prior;
+                if keep_rows < p.rows {
+                    p.rows = keep_rows;
+                    if let PageData::Resident { k, v } = &mut p.data {
+                        k.truncate(keep_rows * self.d);
+                        v.truncate(keep_rows * self.d);
+                    }
+                }
+            }
+            debug_assert_eq!(self.layer_rows(li), target);
+        }
+    }
+
+    fn view(&self, li: usize) -> Vec<KvPageRef<'_>> {
+        self.layers[li]
+            .iter()
+            .map(|p| match &p.data {
+                PageData::Resident { k, v } => KvPageRef { k, v },
+                PageData::Spilled { .. } => {
+                    panic!("kv view: layer {li} has a spilled page — pin_layer first")
+                }
+            })
+            .collect()
+    }
+
+    fn snapshot(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.layers
+            .iter()
+            .map(|pages| {
+                let rows: usize = pages.iter().map(|p| p.rows).sum();
+                let mut ks = Vec::with_capacity(rows * self.d);
+                let mut vs = Vec::with_capacity(rows * self.d);
+                for p in pages {
+                    match &p.data {
+                        PageData::Resident { k, v } => {
+                            ks.extend_from_slice(k);
+                            vs.extend_from_slice(v);
+                        }
+                        PageData::Spilled { slot } => {
+                            let (k, v) = self.spill.read(*slot, p.rows * self.d);
+                            ks.extend_from_slice(&k);
+                            vs.extend_from_slice(&v);
+                        }
+                    }
+                }
+                (ks, vs)
+            })
+            .collect()
+    }
+}
+
+impl Clone for BoundedKv {
+    /// Deep copy, preserving the resident/spilled arrangement (spilled
+    /// pages are re-read from the source file and re-spilled into the
+    /// clone's own file).
+    fn clone(&self) -> BoundedKv {
+        let mut out = BoundedKv::new(
+            self.layers.len(),
+            self.d,
+            self.page_rows,
+            self.budget,
+            Some(self.spill.dir.clone()),
+        );
+        out.clock = self.clock;
+        for (li, pages) in self.layers.iter().enumerate() {
+            for p in pages {
+                let (data, resident) = match &p.data {
+                    PageData::Resident { k, v } => (
+                        PageData::Resident {
+                            k: k.clone(),
+                            v: v.clone(),
+                        },
+                        true,
+                    ),
+                    PageData::Spilled { slot } => {
+                        let (k, v) = self.spill.read(*slot, p.rows * self.d);
+                        let slot = out.spill.alloc();
+                        out.spill.write(slot, &k, &v);
+                        (PageData::Spilled { slot }, false)
+                    }
+                };
+                if resident {
+                    out.note_resident(1);
+                }
+                out.layers[li].push(Page {
+                    rows: p.rows,
+                    last_used: p.last_used,
+                    data,
+                });
+            }
+        }
+        out.resident_peak = self.resident_peak.max(out.resident_peak);
+        out
+    }
+}
+
+/// Lazily-created spill file: fixed-size slots (one page's K then V,
+/// padded to capacity) with a free list.
+#[derive(Debug)]
+struct Spill {
+    dir: PathBuf,
+    path: Option<PathBuf>,
+    file: Option<File>,
+    /// Per-side slot capacity in floats (`page_rows * d`).
+    slot_floats: usize,
+    free: Vec<u64>,
+    next: u64,
+}
+
+impl Spill {
+    fn new(dir: Option<PathBuf>, slot_floats: usize) -> Spill {
+        Spill {
+            dir: dir.unwrap_or_else(std::env::temp_dir),
+            path: None,
+            file: None,
+            slot_floats,
+            free: Vec::new(),
+            next: 0,
+        }
+    }
+
+    fn slot_bytes(&self) -> u64 {
+        (self.slot_floats * 2 * 4) as u64
+    }
+
+    fn alloc(&mut self) -> u64 {
+        self.free.pop().unwrap_or_else(|| {
+            let s = self.next;
+            self.next += 1;
+            s
+        })
+    }
+
+    fn free(&mut self, slot: u64) {
+        self.free.push(slot);
+    }
+
+    fn ensure_file(&mut self) -> &File {
+        if self.file.is_none() {
+            let name = format!(
+                "dtrnet-kv-{}-{}.spill",
+                std::process::id(),
+                SPILL_ID.fetch_add(1, Ordering::Relaxed)
+            );
+            let path = self.dir.join(name);
+            let file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)
+                .unwrap_or_else(|e| panic!("kv spill: create {}: {e}", path.display()));
+            self.path = Some(path);
+            self.file = Some(file);
+        }
+        self.file.as_ref().unwrap()
+    }
+
+    fn write(&mut self, slot: u64, k: &[f32], v: &[f32]) {
+        let base = slot * self.slot_bytes();
+        let v_off = base + (self.slot_floats * 4) as u64;
+        let f = self.ensure_file();
+        write_f32s(f, base, k);
+        write_f32s(f, v_off, v);
+    }
+
+    fn read(&self, slot: u64, floats: usize) -> (Vec<f32>, Vec<f32>) {
+        let f = self.file.as_ref().expect("kv spill: read before any write");
+        let base = slot * self.slot_bytes();
+        let v_off = base + (self.slot_floats * 4) as u64;
+        (read_f32s(f, base, floats), read_f32s(f, v_off, floats))
+    }
+}
+
+impl Drop for Spill {
+    fn drop(&mut self) {
+        if let Some(path) = self.path.take() {
+            self.file = None;
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+fn write_f32s(mut f: &File, off: u64, data: &[f32]) {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.seek(SeekFrom::Start(off)).expect("kv spill: seek");
+    f.write_all(&buf).expect("kv spill: write");
+}
+
+fn read_f32s(mut f: &File, off: u64, n: usize) -> Vec<f32> {
+    let mut buf = vec![0u8; n * 4];
+    f.seek(SeekFrom::Start(off)).expect("kv spill: seek");
+    f.read_exact(&mut buf).expect("kv spill: read");
+    buf.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn row(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Drive a resident and a bounded cache through the same mixed
+    /// append/pin/truncate trace and require bit-identical snapshots.
+    #[test]
+    fn bounded_matches_resident_bitwise_under_pressure() {
+        let (n_layers, d, page_rows, budget) = (3usize, 8usize, 4usize, 12usize);
+        let mut rng = Rng::new(42);
+        let mut res = KvCache::resident(n_layers);
+        let mut bnd = KvCache::bounded(n_layers, d, page_rows, budget, None);
+        for step in 0..120u64 {
+            let li = (rng.below(n_layers as u64)) as usize;
+            let (k, v) = (row(&mut rng, d), row(&mut rng, d));
+            // Interleave pins the way attention does, forcing evictions.
+            res.pin_layer(li);
+            bnd.pin_layer(li);
+            res.append_row(li, &k, &v);
+            bnd.append_row(li, &k, &v);
+            if step % 17 == 16 {
+                // Speculative-style rollback: cut every layer by up to 2.
+                let lens: Vec<usize> =
+                    res.lens(d).iter().map(|&l| l.saturating_sub(2)).collect();
+                res.truncate(&lens, d);
+                bnd.truncate(&lens, d);
+                assert_eq!(bnd.lens(d), lens);
+            }
+        }
+        assert_eq!(res.lens(d), bnd.lens(d));
+        assert_eq!(res.snapshot(), bnd.snapshot(), "paged cache diverged from slab");
+        // Pressure was real: more pages exist than the budget allows...
+        let total_pages: usize =
+            bnd.lens(d).iter().map(|l| l.div_ceil(page_rows)).sum();
+        assert!(total_pages > budget, "test did not exercise eviction");
+        // ...yet the resident high-water mark respected it (no single
+        // layer's working set exceeded the budget here).
+        assert!(
+            bnd.resident_pages_peak() <= budget,
+            "peak {} exceeded budget {budget}",
+            bnd.resident_pages_peak()
+        );
+        assert!(bnd.resident_pages_peak() >= bnd.resident_pages().unwrap());
+    }
+
+    /// Views must reproduce the flat slab row-for-row after eviction
+    /// round-trips, and pin_layer must make every page resident.
+    #[test]
+    fn pinned_view_concatenates_to_snapshot() {
+        let (n_layers, d, page_rows, budget) = (2usize, 4usize, 2usize, 2usize);
+        let mut rng = Rng::new(7);
+        let mut kv = KvCache::bounded(n_layers, d, page_rows, budget, None);
+        for _ in 0..9 {
+            for li in 0..n_layers {
+                let (k, v) = (row(&mut rng, d), row(&mut rng, d));
+                kv.pin_layer(li);
+                kv.append_row(li, &k, &v);
+            }
+        }
+        for li in 0..n_layers {
+            kv.pin_layer(li);
+            let flat = kv.snapshot()[li].clone();
+            let view = kv.view(li, d);
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            for p in &view {
+                k.extend_from_slice(p.k);
+                v.extend_from_slice(p.v);
+            }
+            assert_eq!((k, v), flat);
+            assert!(view.iter().all(|p| p.rows(d) <= page_rows));
+        }
+    }
+
+    /// Clone preserves contents (including spilled pages) bit-exactly
+    /// and writes into its own spill file.
+    #[test]
+    fn clone_preserves_spilled_pages() {
+        let (n_layers, d, page_rows, budget) = (4usize, 4usize, 2usize, 2usize);
+        let mut rng = Rng::new(11);
+        let mut kv = KvCache::bounded(n_layers, d, page_rows, budget, None);
+        for li in 0..n_layers {
+            for _ in 0..5 {
+                kv.pin_layer(li);
+                let (k, v) = (row(&mut rng, d), row(&mut rng, d));
+                kv.append_row(li, &k, &v);
+            }
+        }
+        let cl = kv.clone();
+        assert_eq!(cl.snapshot(), kv.snapshot());
+        assert_eq!(cl.lens(d), kv.lens(d));
+        // Mutating the clone must not affect the original.
+        let mut cl = cl;
+        let lens: Vec<usize> = cl.lens(d).iter().map(|&l| l / 2).collect();
+        cl.truncate(&lens, d);
+        assert_ne!(cl.lens(d), kv.lens(d));
+    }
+
+    /// Truncate must free spilled slots and handle partial-page cuts on
+    /// spilled pages (prefix reload stays exact).
+    #[test]
+    fn truncate_partial_spilled_page_is_exact() {
+        let (d, page_rows, budget) = (4usize, 4usize, 1usize);
+        let mut rng = Rng::new(3);
+        let mut res = KvCache::resident(2);
+        let mut kv = KvCache::bounded(2, d, page_rows, budget, None);
+        for _ in 0..6 {
+            for li in 0..2 {
+                let (k, v) = (row(&mut rng, d), row(&mut rng, d));
+                res.append_row(li, &k, &v);
+                kv.pin_layer(li);
+                kv.append_row(li, &k, &v);
+            }
+        }
+        // Layer 0's pages are spilled now (layer 1 was pinned last);
+        // cut mid-page without pinning first.
+        res.truncate(&[5, 2], d);
+        kv.truncate(&[5, 2], d);
+        assert_eq!(kv.snapshot(), res.snapshot());
+    }
+}

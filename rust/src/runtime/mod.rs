@@ -2,6 +2,9 @@
 //!
 //! * [`backend`] — the [`Backend`] trait: batched forward + incremental
 //!   decode with a routing-aware KV state, over host [`Tensor`]s.
+//! * [`kv`] — page-view KV storage ([`KvCache`]): the only surface
+//!   attention reads cached K/V through; resident slab or bounded/paged
+//!   with LRU spill-to-disk eviction (DESIGN.md §KV paging).
 //! * [`cpu`] — the native Rust CPU backend (always available): evaluates
 //!   the DTRNet block end-to-end with kernels mirrored from
 //!   `python/compile/kernels/ref.py`. This is the offline test substrate.
@@ -28,6 +31,7 @@ pub mod checkpoint;
 pub mod cpu;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod kv;
 pub mod manifest;
 pub mod quant;
 pub mod tensor;
@@ -37,6 +41,7 @@ pub use backend::{
     Backend, DecodeState, ForwardOutput, GenerateOutput, PrefillRows, RouteOverride, StateMark,
     StepOutput, WeightBytes,
 };
+pub use kv::{KvCache, KvPageRef};
 pub use checkpoint::Checkpoint;
 pub use cpu::{CpuBackend, RouterMode};
 pub use quant::{QuantMatrix, QuantizedCpuBackend};

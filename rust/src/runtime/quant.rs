@@ -875,13 +875,8 @@ impl Backend for QuantizedCpuBackend {
 
     /// One-token decode via the shared row-step core (a single row is
     /// exactly the sequential decode semantics: same kernels, same cache
-    /// appends, same position bump).
-    fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<StepOutput> {
-        self.decode_step_routed(state, token, RouteOverride::Router)
-    }
-
-    /// Single-row decode with a per-call routing override (mirror of the
-    /// f32 backend's override; [`RouteOverride::ForceBypass`] is the
+    /// appends, same position bump; mirror of the f32 backend's
+    /// canonical step — [`RouteOverride::ForceBypass`] is the
     /// speculative draft pass).
     fn decode_step_routed(
         &self,
@@ -989,63 +984,10 @@ impl Backend for QuantizedCpuBackend {
         Ok(outs)
     }
 
-    /// Chunked prefill (mirror of the f32 backend's override: within-chunk
-    /// causality from row order, unembed only on the final row).
-    fn prefill_chunked(
-        &self,
-        state: &mut DecodeState,
-        tokens: &[i32],
-        chunk: usize,
-    ) -> Result<StepOutput> {
-        ensure!(!tokens.is_empty(), "prefill needs at least one token");
-        let vocab = self.cfg.vocab_size;
-        for &t in tokens {
-            ensure!(
-                t >= 0 && (t as usize) < vocab,
-                "token id {t} out of range for vocab {vocab}"
-            );
-        }
-        ensure!(
-            !matches!(self.router_mode, RouterMode::ExpertChoice { .. }),
-            "expert-choice routing needs the full sequence; prefill supports token-choice only"
-        );
-        let chunk = chunk.max(1);
-        let n_chunks = tokens.len().div_ceil(chunk);
-        let mut last = None;
-        for (ci, ck) in tokens.chunks(chunk).enumerate() {
-            let positions: Vec<f32> =
-                (0..ck.len()).map(|i| (state.position + i) as f32).collect();
-            let cache_of = vec![0usize; ck.len()];
-            let mut slab = [&mut *state];
-            let mode = if ci + 1 == n_chunks {
-                LogitsRows::Last
-            } else {
-                LogitsRows::None
-            };
-            last = Some(self.step_rows(
-                ck,
-                &positions,
-                &mut slab,
-                &cache_of,
-                mode,
-                RouteOverride::Router,
-            )?);
-        }
-        let RowsOutput {
-            logits,
-            mut routed,
-            mut g_attn,
-        } = last.unwrap();
-        Ok(StepOutput {
-            logits: Tensor::f32(vec![vocab], logits),
-            routed: routed.pop().unwrap(),
-            g_attn: g_attn.pop().unwrap(),
-        })
-    }
-
-    /// Chunked prefill keeping every chunk's per-row routing telemetry
-    /// (mirror of the f32 backend's override; bit-identical to
-    /// [`Backend::prefill_chunked`] on the cache/logits side).
+    /// Streaming chunked prefill keeping every chunk's per-row routing
+    /// telemetry (mirror of the f32 backend's override; also serves
+    /// [`Backend::prefill_chunked`] through the trait's default
+    /// adapter — one chunk loop, not two).
     fn prefill_rows(
         &self,
         state: &mut DecodeState,

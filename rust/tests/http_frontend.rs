@@ -457,6 +457,116 @@ fn overload_sheds_load_with_429_and_recovers() {
 }
 
 #[test]
+fn metrics_endpoint_reports_live_counters() {
+    use dtrnet::util::json::Json;
+
+    let srv = start(scfg(), ListenConfig::default());
+    let mut c = srv.client();
+    let resp = c
+        .roundtrip(&generate_request("{\"prompt\":[1,2],\"max_new_tokens\":3}", false))
+        .expect("generate");
+    assert_eq!(resp.status, 200);
+
+    let resp = c.roundtrip(&get_request("/metrics", true)).expect("metrics");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("application/json"));
+    let text = String::from_utf8(resp.body).expect("utf-8 metrics body");
+    let js = Json::parse(&text).expect("metrics body must parse as json");
+
+    // Socket-edge block: both requests on this connection are counted
+    // (the /metrics request itself included), bytes flowed both ways.
+    assert!(js.path("net.requests").unwrap().as_f64().unwrap() >= 2.0, "{text}");
+    assert!(js.path("net.bytes_in").unwrap().as_f64().unwrap() > 0.0);
+    assert!(js.path("net.bytes_out").unwrap().as_f64().unwrap() > 0.0);
+    assert!(js.path("net.by_status").is_some(), "{text}");
+
+    // Engine block: the finished generate is visible, pages drained.
+    assert_eq!(js.path("engine.completed").unwrap().as_f64().unwrap(), 1.0, "{text}");
+    assert_eq!(js.path("engine.tokens_generated").unwrap().as_f64().unwrap(), 3.0);
+    assert_eq!(js.path("engine.kv_pages_allocated").unwrap().as_f64().unwrap(), 0.0);
+    assert!(js.path("engine.kv_pages_peak").unwrap().as_f64().unwrap() > 0.0);
+    assert!(js.path("engine.queue_depth").is_some());
+    assert!(js.path("engine.kv_resident_pages_peak").is_some());
+
+    drop(c);
+    let rep = srv.finish();
+    assert_eq!(rep.net.requests, 2);
+    assert_eq!(rep.net.status(200), 2);
+    assert_eq!(rep.engine.completed, 1);
+}
+
+#[test]
+fn client_disconnect_cancels_generation_and_drains_kv() {
+    use dtrnet::coordinator::FinishReason;
+    use dtrnet::util::json::Json;
+    use std::io::Read;
+
+    let scfg = ServerConfig {
+        slots: 1,
+        prefill: PrefillMode::Chunked(16),
+        ..Default::default()
+    };
+    let srv = start(scfg, ListenConfig::default());
+
+    // Up to a few attempts: the disconnect must land while the slot is
+    // still generating for the cancel to beat natural retirement.
+    let read_metrics = |srv: &TestServer| {
+        let mut c = srv.client();
+        let resp = c.roundtrip(&get_request("/metrics", true)).expect("metrics");
+        let text = String::from_utf8(resp.body).expect("utf-8");
+        Json::parse(&text).expect("metrics json")
+    };
+    let num = |js: &Json, p: &str| js.path(p).unwrap().as_f64().unwrap();
+
+    let mut cancelled = false;
+    'attempts: for _ in 0..3 {
+        let finished_before = num(&read_metrics(&srv), "engine.requests_finished");
+        {
+            let mut c = srv.client();
+            c.send(&generate_request(
+                "{\"prompt\":[5,6,7],\"max_new_tokens\":10000,\"stream\":true}",
+                false,
+            ))
+            .expect("stream send");
+            // Wait for generation to actually start, then vanish.
+            let mut byte = [0u8; 1];
+            c.stream().read_exact(&mut byte).expect("first stream byte");
+        } // socket drops here, mid-stream
+
+        // The engine must notice the dead sink, cancel the request, and
+        // drain its slot and pages — observable through /metrics.
+        for _ in 0..250 {
+            let js = read_metrics(&srv);
+            if num(&js, "engine.cancelled") >= 1.0 {
+                assert_eq!(num(&js, "engine.active_slots"), 0.0);
+                assert_eq!(
+                    num(&js, "engine.kv_pages_allocated"),
+                    0.0,
+                    "cancel must drain pages"
+                );
+                cancelled = true;
+                break 'attempts;
+            }
+            if num(&js, "engine.requests_finished") > finished_before {
+                // Lost the race: the request retired before the dead
+                // sink was noticed. Try again.
+                break;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+    assert!(cancelled, "disconnect must cancel the in-flight generation");
+
+    let rep = srv.finish();
+    assert!(
+        rep.engine.requests.iter().any(|r| r.finish == FinishReason::Cancelled),
+        "report must record the cancellation: {:?}",
+        rep.engine.requests.iter().map(|r| r.finish).collect::<Vec<_>>()
+    );
+    assert_eq!(rep.engine.pool.pages_allocated, 0, "KV pages must drain to idle");
+}
+
+#[test]
 fn max_requests_drains_and_exits_on_its_own() {
     let lcfg = ListenConfig {
         max_requests: 2,

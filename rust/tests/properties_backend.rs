@@ -237,8 +237,7 @@ fn prop_decode_batch_bit_identical_to_decode_step() {
         }
         for (i, (a, c)) in seq_states.iter().zip(&bat_states).enumerate() {
             assert_eq!(a.position, c.position, "seq {i} position");
-            assert_eq!(a.keys, c.keys, "seq {i} cached keys diverged");
-            assert_eq!(a.values, c.values, "seq {i} cached values diverged");
+            assert_eq!(a.snapshot_kv(), c.snapshot_kv(), "seq {i} cache diverged");
         }
     });
 }
@@ -269,8 +268,11 @@ fn prop_chunked_prefill_bit_identical_to_sequential() {
         assert_eq!(last.routed, out.routed);
         assert_eq!(last.g_attn, out.g_attn);
         assert_eq!(s_ref.position, s_chk.position);
-        assert_eq!(s_ref.keys, s_chk.keys, "chunk={chunk}: cache keys diverged");
-        assert_eq!(s_ref.values, s_chk.values, "chunk={chunk}: cache values diverged");
+        assert_eq!(
+            s_ref.snapshot_kv(),
+            s_chk.snapshot_kv(),
+            "chunk={chunk}: cache diverged"
+        );
     });
 }
 
@@ -312,8 +314,11 @@ fn prop_threaded_bit_identical_to_single_thread() {
             assert_eq!(out_s.routed, out_t.routed);
             assert_eq!(out_s.g_attn, out_t.g_attn);
             assert_eq!(st_s.position, st_t.position);
-            assert_eq!(st_s.keys, st_t.keys, "prefill cache keys diverged");
-            assert_eq!(st_s.values, st_t.values, "prefill cache values diverged");
+            assert_eq!(
+                st_s.snapshot_kv(),
+                st_t.snapshot_kv(),
+                "prefill cache diverged"
+            );
 
             // decode_batch over staggered sequences: outputs + cache bits
             let bsz = g.usize(1..4);
@@ -348,8 +353,11 @@ fn prop_threaded_bit_identical_to_single_thread() {
                 }
             }
             for (i, (ss, st)) in states_s.iter().zip(&states_t).enumerate() {
-                assert_eq!(ss.keys, st.keys, "seq {i} cache keys diverged");
-                assert_eq!(ss.values, st.values, "seq {i} cache values diverged");
+                assert_eq!(
+                    ss.snapshot_kv(),
+                    st.snapshot_kv(),
+                    "seq {i} cache diverged"
+                );
             }
         },
     );

@@ -104,8 +104,11 @@ fn prop_quant_backend_threaded_bit_identical_to_single_thread() {
             let out_t = threaded.prefill_chunked(&mut st_t, &tokens, chunk).unwrap();
             assert_eq!(out_s.logits, out_t.logits, "int8 prefill logits diverged");
             assert_eq!(out_s.routed, out_t.routed);
-            assert_eq!(st_s.keys, st_t.keys, "int8 prefill cache keys diverged");
-            assert_eq!(st_s.values, st_t.values, "int8 prefill cache values diverged");
+            assert_eq!(
+                st_s.snapshot_kv(),
+                st_t.snapshot_kv(),
+                "int8 prefill cache diverged"
+            );
 
             let bsz = g.usize(1..4);
             let mut states_s: Vec<DecodeState> = Vec::new();
@@ -138,8 +141,11 @@ fn prop_quant_backend_threaded_bit_identical_to_single_thread() {
                 }
             }
             for (i, (ss, st)) in states_s.iter().zip(&states_t).enumerate() {
-                assert_eq!(ss.keys, st.keys, "int8 seq {i} cache keys diverged");
-                assert_eq!(ss.values, st.values, "int8 seq {i} cache values diverged");
+                assert_eq!(
+                    ss.snapshot_kv(),
+                    st.snapshot_kv(),
+                    "int8 seq {i} cache diverged"
+                );
             }
         },
     );
@@ -173,8 +179,7 @@ fn prop_quant_decode_batch_bit_identical_to_decode_step() {
             }
         }
         for (i, (a, c)) in seq_states.iter().zip(&bat_states).enumerate() {
-            assert_eq!(a.keys, c.keys, "seq {i} cached keys diverged");
-            assert_eq!(a.values, c.values, "seq {i} cached values diverged");
+            assert_eq!(a.snapshot_kv(), c.snapshot_kv(), "seq {i} cache diverged");
         }
     });
 }
@@ -199,8 +204,11 @@ fn prop_quant_prefill_chunked_bit_identical_to_sequential() {
         let out = backend.prefill_chunked(&mut s_chk, &tokens, chunk).unwrap();
         assert_eq!(last.logits, out.logits, "chunk={chunk} n={n}");
         assert_eq!(last.routed, out.routed);
-        assert_eq!(s_ref.keys, s_chk.keys, "chunk={chunk}: cache keys diverged");
-        assert_eq!(s_ref.values, s_chk.values, "chunk={chunk}: cache values diverged");
+        assert_eq!(
+            s_ref.snapshot_kv(),
+            s_chk.snapshot_kv(),
+            "chunk={chunk}: cache diverged"
+        );
     });
 }
 
